@@ -1,0 +1,21 @@
+//! Reproduce the paper's full evaluation in one command: every table and
+//! figure (Table I/II, Fig. 2/3/5/6/7/8) regenerated on the GPU
+//! simulator, CSVs written under `results/`.
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper            # full sweep
+//! cargo run --release --example reproduce_paper -- --quick # small sweep
+//! ```
+
+use accel_gcn::bench::paper;
+use accel_gcn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        &argv,
+        &["out", "experiment", "seed", "node-cap", "edge-cap", "coldims", "graphs"],
+        &["quick"],
+    )?;
+    paper::run_from_args(&args)
+}

@@ -1,0 +1,26 @@
+//! Serving example: batched SpMM inference requests through the
+//! coordinator — router picks the artifact, the column batcher fuses
+//! requests (Â·[X₁ X₂] = [Â·X₁ Â·X₂]), the device thread executes, and
+//! every response is verified against the exact CPU executor.
+//!
+//! Requires artifacts: `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example serve_inference -- [artifacts/quickstart] [n_requests]
+//! ```
+
+use accel_gcn::bench::serve::run_serving;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dir = args.first().map(|s| s.as_str()).unwrap_or("artifacts/quickstart");
+    let n: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(64);
+
+    let report = run_serving(dir, n, &[16, 32, 64], 1)?;
+    anyhow::ensure!(report.verified);
+    println!(
+        "\nSERVING OK: {} requests in {} batches, {:.1} req/s",
+        report.requests, report.batches, report.requests_per_sec
+    );
+    Ok(())
+}

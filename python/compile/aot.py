@@ -1,0 +1,235 @@
+"""AOT pipeline: lower the L2/L1 computations to HLO **text** for the
+Rust PJRT runtime.
+
+Interchange is HLO text, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (the version
+the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Inputs: a `bell_spec.json` produced by `accel-gcn prepare` (shapes of
+the partitioned graph). Outputs, under --out:
+
+* `spmm_f{N}.hlo.txt`    — aggregation-only SpMM for column dim N
+* `{arch}_fwd.hlo.txt`   — full model forward (logits)
+* `{arch}_train.hlo.txt` — one SGD train step (params..., loss)
+* `params_{i}.npy`       — initial parameters
+* `manifest.json`        — flat input/output order, shapes, dtypes
+
+Python runs once at build time; the Rust binary is self-contained
+afterwards. Usage:
+    python -m compile.aot --spec ../artifacts/quickstart/bell_spec.json \
+        --out ../artifacts/quickstart
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import spmm_bell
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32", "int64": "i64"}[np.dtype(d).name]
+
+
+class SpecShapes:
+    """Shapes derived from bell_spec.json."""
+
+    def __init__(self, spec: dict):
+        self.n_rows = int(spec["n_rows"])
+        self.n_cols = int(spec["n_cols"])
+        self.buckets = [
+            (int(b["width"]), int(b["padded_rows"])) for b in spec["buckets"]
+        ]
+
+    def bucket_arg_specs(self):
+        """Flat (cols, vals, rows) ShapeDtypeStructs per bucket, plus
+        manifest entries."""
+        specs, entries = [], []
+        for width, rows in self.buckets:
+            specs += [
+                jax.ShapeDtypeStruct((rows, width), jnp.int32),
+                jax.ShapeDtypeStruct((rows, width), jnp.float32),
+                jax.ShapeDtypeStruct((rows,), jnp.int32),
+            ]
+            entries += [
+                {"name": f"bell_w{width}_cols", "shape": [rows, width], "dtype": "i32"},
+                {"name": f"bell_w{width}_vals", "shape": [rows, width], "dtype": "f32"},
+                {"name": f"bell_w{width}_rows", "shape": [rows], "dtype": "i32"},
+            ]
+        return specs, entries
+
+    def group_buckets(self, flat):
+        """Regroup a flat argument list into (cols, vals, rows) triples."""
+        return [tuple(flat[i * 3 : i * 3 + 3]) for i in range(len(self.buckets))]
+
+
+def lower_spmm(shapes: SpecShapes, coldim: int):
+    """Aggregation-only artifact: Y = Â·X for one column dimension."""
+
+    def spmm_flat(*args):
+        buckets = shapes.group_buckets(args[:-1])
+        x = args[-1]
+        return (spmm_bell.bell_spmm(buckets, x, shapes.n_rows, interpret=True),)
+
+    bspecs, bentries = shapes.bucket_arg_specs()
+    xspec = jax.ShapeDtypeStruct((shapes.n_cols, coldim), jnp.float32)
+    lowered = jax.jit(spmm_flat).lower(*bspecs, xspec)
+    inputs = bentries + [{"name": "x", "shape": [shapes.n_cols, coldim], "dtype": "f32"}]
+    outputs = [{"name": "y", "shape": [shapes.n_rows, coldim], "dtype": "f32"}]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def lower_forward(shapes: SpecShapes, cfg: M.ModelConfig, params):
+    def fwd_flat(*args):
+        n_p = len(params)
+        p = list(args[:n_p])
+        buckets = shapes.group_buckets(args[n_p:-1])
+        x = args[-1]
+        return (M.forward(p, buckets, x, cfg),)
+
+    pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    pentries = [
+        {"name": f"param_{i}", "shape": list(p.shape), "dtype": _dtype_name(p.dtype)}
+        for i, p in enumerate(params)
+    ]
+    bspecs, bentries = shapes.bucket_arg_specs()
+    xspec = jax.ShapeDtypeStruct((shapes.n_rows, cfg.in_dim), jnp.float32)
+    lowered = jax.jit(fwd_flat).lower(*pspecs, *bspecs, xspec)
+    inputs = pentries + bentries + [
+        {"name": "x", "shape": [shapes.n_rows, cfg.in_dim], "dtype": "f32"}
+    ]
+    outputs = [{"name": "logits", "shape": [shapes.n_rows, cfg.out_dim], "dtype": "f32"}]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def lower_train_step(shapes: SpecShapes, cfg: M.ModelConfig, params, lr: float):
+    step = M.make_train_step(cfg, lr)
+
+    def step_flat(*args):
+        n_p = len(params)
+        p = list(args[:n_p])
+        buckets = shapes.group_buckets(args[n_p:-2])
+        x, labels = args[-2], args[-1]
+        new_params, loss = step(p, buckets, x, labels)
+        return (*new_params, loss)
+
+    pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    pentries = [
+        {"name": f"param_{i}", "shape": list(p.shape), "dtype": _dtype_name(p.dtype)}
+        for i, p in enumerate(params)
+    ]
+    bspecs, bentries = shapes.bucket_arg_specs()
+    xspec = jax.ShapeDtypeStruct((shapes.n_rows, cfg.in_dim), jnp.float32)
+    lspec = jax.ShapeDtypeStruct((shapes.n_rows,), jnp.int32)
+    lowered = jax.jit(step_flat).lower(*pspecs, *bspecs, xspec, lspec)
+    inputs = pentries + bentries + [
+        {"name": "x", "shape": [shapes.n_rows, cfg.in_dim], "dtype": "f32"},
+        {"name": "labels", "shape": [shapes.n_rows], "dtype": "i32"},
+    ]
+    outputs = [
+        {"name": f"param_{i}", "shape": list(p.shape), "dtype": _dtype_name(p.dtype)}
+        for i, p in enumerate(params)
+    ] + [{"name": "loss", "shape": [], "dtype": "f32"}]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def save_params(params, out: pathlib.Path):
+    for i, p in enumerate(params):
+        np.save(out / f"param_{i}.npy", np.asarray(p))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", required=True, help="bell_spec.json from `accel-gcn prepare`")
+    ap.add_argument("--out", required=True, help="artifact output directory")
+    ap.add_argument("--coldims", default="16,32,64,128", help="SpMM column dims")
+    ap.add_argument("--arch", default="gcn", choices=["gcn", "sage", "gin"])
+    ap.add_argument("--in-dim", type=int, default=64)
+    ap.add_argument("--hidden-dim", type=int, default=64)
+    ap.add_argument("--out-dim", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-model", action="store_true", help="emit only SpMM artifacts")
+    args = ap.parse_args()
+
+    spec = json.loads(pathlib.Path(args.spec).read_text())
+    shapes = SpecShapes(spec)
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"n_rows": shapes.n_rows, "n_cols": shapes.n_cols, "artifacts": {}}
+
+    for coldim in [int(c) for c in args.coldims.split(",") if c.strip()]:
+        name = f"spmm_f{coldim}"
+        text, inputs, outputs = lower_spmm(shapes, coldim)
+        (out / f"{name}.hlo.txt").write_text(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+    if not args.skip_model:
+        cfg = M.ModelConfig(
+            arch=args.arch,
+            in_dim=args.in_dim,
+            hidden_dim=args.hidden_dim,
+            out_dim=args.out_dim,
+            n_layers=args.layers,
+        )
+        params = M.init_params(args.seed, cfg)
+        save_params(params, out)
+        manifest["model"] = {
+            "arch": cfg.arch,
+            "in_dim": cfg.in_dim,
+            "hidden_dim": cfg.hidden_dim,
+            "out_dim": cfg.out_dim,
+            "n_layers": cfg.n_layers,
+            "lr": args.lr,
+            "n_params": len(params),
+        }
+
+        text, inputs, outputs = lower_forward(shapes, cfg, params)
+        (out / f"{cfg.arch}_fwd.hlo.txt").write_text(text)
+        manifest["artifacts"][f"{cfg.arch}_fwd"] = {
+            "file": f"{cfg.arch}_fwd.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"wrote {cfg.arch}_fwd.hlo.txt ({len(text)} chars)")
+
+        text, inputs, outputs = lower_train_step(shapes, cfg, params, args.lr)
+        (out / f"{cfg.arch}_train.hlo.txt").write_text(text)
+        manifest["artifacts"][f"{cfg.arch}_train"] = {
+            "file": f"{cfg.arch}_train.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"wrote {cfg.arch}_train.hlo.txt ({len(text)} chars)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the SpMM kernels.
+
+Numerically defines what the Pallas kernel + scatter-add must compute.
+Everything here is straight-line jnp/numpy with no Pallas and no custom
+layouts — the simplest possible implementation, used only by pytest.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_dense_ref(csr, x: np.ndarray) -> np.ndarray:
+    """Dense reference: A·X via materialized dense A (float64 accumulate)."""
+    return (csr.to_dense().astype(np.float64) @ x.astype(np.float64)).astype(np.float32)
+
+
+def bucket_partial_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """One bucket's partial sums: gather + weighted reduce.
+
+    cols/vals: [rows, width]; x: [n_cols, f] -> [rows, f].
+    """
+    gathered = x[cols]  # [rows, width, f]
+    return jnp.einsum("rw,rwf->rf", vals, gathered)
+
+
+def bell_spmm_ref(layout, x) -> jnp.ndarray:
+    """Full BELL aggregation: per-bucket partials scatter-added by
+    destination row. The output is in the layout's (sorted) row domain."""
+    y = jnp.zeros((layout.n_rows, x.shape[1]), dtype=jnp.float32)
+    for b in layout.buckets:
+        part = bucket_partial_ref(jnp.asarray(b.cols), jnp.asarray(b.vals), jnp.asarray(x))
+        y = y.at[jnp.asarray(b.out_row)].add(part)
+    return y

@@ -1,0 +1,181 @@
+"""Layer-1 Pallas kernel: BELL-bucket SpMM partials.
+
+TPU adaptation of the Accel-GCN kernel (DESIGN.md §Hardware-Adaptation):
+
+* The **combined warp** becomes the lane dimension: the feature axis is
+  tiled into `FEAT_TILE`-wide BlockSpec blocks, so within a grid step the
+  lanes covering the columns of the dense matrix are contiguous by
+  construction — the coalescing property the paper engineers with
+  thread-id arithmetic falls out of the layout.
+* The **block-level partition** becomes the uniform bucket width: every
+  `[ROW_TILE, width]` tile is a dense gather + multiply with no per-row
+  branching, the TPU analogue of equal `warp_nzs` within a block.
+* **Shared-memory accumulation** becomes the VMEM output block: partial
+  sums for a row tile live in VMEM across the inner loop; split-row /
+  cross-bucket accumulation (the paper's global atomics) is the
+  scatter-add performed by the caller (`model.aggregate`).
+
+The kernel is lowered with `interpret=True`: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+runs anywhere (see /opt/xla-example/README.md). VMEM sizing estimates
+for a real TPU are recorded in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row tile must match partition::bucket::ROW_TILE (rust) / layout.ROW_TILE.
+ROW_TILE = 8
+# Lane tile for the feature (column) dimension — one TPU vreg row of
+# 128 lanes, the combined-warp analogue.
+FEAT_TILE = 128
+
+
+def _bucket_kernel(cols_ref, vals_ref, x_ref, o_ref):
+    """One grid step: partial sums for a [ROW_TILE, width] task tile over
+    a FEAT_TILE-wide slice of X.
+
+    cols_ref: [ROW_TILE, width] int32 — X rows to gather (pad: 0)
+    vals_ref: [ROW_TILE, width] f32   — edge weights       (pad: 0.0)
+    x_ref:    [n_cols, FT] f32        — dense feature slice
+    o_ref:    [ROW_TILE, FT] f32      — partial output tile
+    """
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    x = x_ref[...]
+    # gather: [ROW_TILE, width, FT]; zero-width padding contributes 0
+    gathered = x[cols]
+    o_ref[...] = jax.lax.dot_general(
+        vals[:, None, :],
+        gathered,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]
+
+
+def _grad_vals_kernel(cols_ref, g_ref, x_ref, o_ref):
+    """Backward kernel wrt edge values:
+    dvals[r, w] = Σ_f g[r, f] · X[cols[r, w], f] (per feature tile;
+    tiles are summed by the caller's output accumulation)."""
+    # zero the accumulator on the first feature tile's visit
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = cols_ref[...]
+    g = g_ref[...]
+    x = x_ref[...]
+    gathered = x[cols]  # [ROW_TILE, width, FT]
+    o_ref[...] += jnp.einsum("rf,rwf->rw", g, gathered)
+
+
+def _feat_tile(f: int) -> int:
+    """Feature-axis tile: FEAT_TILE when it divides f, else f whole."""
+    return FEAT_TILE if f % FEAT_TILE == 0 else f
+
+
+def _bucket_partial_impl(cols, vals, x, interpret: bool):
+    rows, width = cols.shape
+    n_cols, f = x.shape
+    assert rows % ROW_TILE == 0, f"bucket rows {rows} not a multiple of {ROW_TILE}"
+    ft = _feat_tile(f)
+    grid = (rows // ROW_TILE, f // ft)
+    return pl.pallas_call(
+        _bucket_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, width), lambda r, c: (r, 0)),
+            pl.BlockSpec((ROW_TILE, width), lambda r, c: (r, 0)),
+            pl.BlockSpec((n_cols, ft), lambda r, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, ft), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((rows, f), jnp.float32),
+        interpret=interpret,
+    )(cols, vals, x)
+
+
+def _grad_vals_impl(cols, g, x, interpret: bool):
+    rows, width = cols.shape
+    n_cols, f = x.shape
+    ft = _feat_tile(f)
+    grid = (f // ft, rows // ROW_TILE)  # feature tiles outermost: the
+    # output block revisits accumulate across them (VMEM accumulator)
+    return pl.pallas_call(
+        _grad_vals_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, width), lambda c, r: (r, 0)),
+            pl.BlockSpec((ROW_TILE, ft), lambda c, r: (r, c)),
+            pl.BlockSpec((n_cols, ft), lambda c, r: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, width), lambda c, r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        interpret=interpret,
+    )(cols, g, x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _bucket_partial(cols, vals, x, interpret):
+    return _bucket_partial_impl(cols, vals, x, interpret)
+
+
+def _bucket_partial_fwd(cols, vals, x, interpret):
+    return _bucket_partial_impl(cols, vals, x, interpret), (cols, vals, x)
+
+
+def _bucket_partial_bwd(interpret, res, g):
+    cols, vals, x = res
+    # dL/dvals via the backward Pallas kernel
+    dvals = _grad_vals_impl(cols, g, x, interpret)
+    # dL/dX: scatter-add — the transpose of the gather, the same global
+    # accumulation pattern as the forward's atomics
+    dx = jnp.zeros_like(x).at[cols].add(vals[:, :, None] * g[:, None, :])
+    return (None, dvals, dx)
+
+
+_bucket_partial.defvjp(_bucket_partial_fwd, _bucket_partial_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_partial(cols, vals, x, *, interpret: bool = True):
+    """Partial sums for one bucket: [rows, width] tasks × [n_cols, f] X
+    → [rows, f]. `rows` must be a multiple of ROW_TILE. Differentiable
+    wrt `vals` and `x` (custom VJP over the Pallas kernels)."""
+    return _bucket_partial(cols, vals, x, interpret)
+
+
+def bell_spmm(bucket_arrays, x, n_rows: int, *, interpret: bool = True):
+    """Full aggregation `Y = Â·X` over a BELL layout.
+
+    bucket_arrays: sequence of (cols, vals, out_row) triples;
+    x: [n_cols, f]; returns [n_rows, f] in the sorted row domain.
+    The scatter-add is the paper's global/shared atomic accumulation;
+    out_row ids are sorted within a bucket, which XLA's scatter handles
+    efficiently.
+    """
+    f = x.shape[1]
+    y = jnp.zeros((n_rows, f), dtype=jnp.float32)
+    for cols, vals, out_row in bucket_arrays:
+        part = bucket_partial(cols, vals, x, interpret=interpret)
+        y = y.at[out_row].add(part)
+    return y
+
+
+def vmem_estimate_bytes(width: int, n_cols: int, f: int) -> dict:
+    """Static VMEM footprint estimate per grid step for DESIGN.md §Perf —
+    interpret-mode timings are meaningless for TPU, so kernel structure
+    is evaluated by footprint: the X slice dominates and motivates
+    feature tiling; cols/vals/out tiles are tiny."""
+    ft = _feat_tile(f)
+    return {
+        "cols": ROW_TILE * width * 4,
+        "vals": ROW_TILE * width * 4,
+        "x_slice": n_cols * ft * 4,
+        "out": ROW_TILE * ft * 4,
+        "total": (ROW_TILE * width * 8) + (n_cols * ft * 4) + (ROW_TILE * ft * 4),
+    }

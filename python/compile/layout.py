@@ -1,0 +1,275 @@
+"""BELL layout construction — Python mirror of `rust/src/partition/`.
+
+Implements the paper's preprocessing (degree sorting, Algorithm 1
+partition patterns, Algorithm 2 block-level partitioning) and the BELL
+bucket export, independently of the Rust implementation. The two are
+kept honest by shared invariants (pytest here, proptest there) and by an
+integration test that replays Rust-exported layouts.
+
+Build-time only: never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+ROW_TILE = 8  # must match partition::bucket::ROW_TILE
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionParams:
+    max_block_warps: int = 12
+    max_warp_nzs: int = 32
+
+    @property
+    def deg_bound(self) -> int:
+        return self.max_block_warps * self.max_warp_nzs
+
+
+@dataclasses.dataclass
+class Csr:
+    """Minimal CSR container (float32 values)."""
+
+    n_rows: int
+    n_cols: int
+    row_ptr: np.ndarray  # int64 [n_rows+1]
+    col_idx: np.ndarray  # int32 [nnz]
+    vals: np.ndarray  # float32 [nnz]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    def degree(self, r: int) -> int:
+        return int(self.row_ptr[r + 1] - self.row_ptr[r])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr)
+
+    @staticmethod
+    def from_dense(a: np.ndarray) -> "Csr":
+        n_rows, n_cols = a.shape
+        rows, cols = np.nonzero(a)
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        row_ptr = np.zeros(n_rows + 1, dtype=np.int64)
+        np.add.at(row_ptr, rows + 1, 1)
+        row_ptr = np.cumsum(row_ptr)
+        return Csr(
+            n_rows,
+            n_cols,
+            row_ptr,
+            cols.astype(np.int32),
+            a[rows, cols].astype(np.float32),
+        )
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=np.float32)
+        for r in range(self.n_rows):
+            s, e = self.row_ptr[r], self.row_ptr[r + 1]
+            np.add.at(out[r], self.col_idx[s:e], self.vals[s:e])
+        return out
+
+    @staticmethod
+    def random(rng: np.random.Generator, n: int, avg_deg: float, heavy: bool = False) -> "Csr":
+        """Random test graph; `heavy=True` plants a hub row beyond any
+        reasonable deg_bound to exercise the split path."""
+        degs = rng.poisson(avg_deg, size=n)
+        if heavy and n > 1:
+            degs[int(rng.integers(0, n))] += int(10 * avg_deg * math.sqrt(n))
+        degs = np.minimum(degs, n)
+        row_ptr = np.zeros(n + 1, dtype=np.int64)
+        row_ptr[1:] = np.cumsum(degs)
+        cols = []
+        for d in degs:
+            cols.append(np.sort(rng.choice(n, size=d, replace=False)).astype(np.int32))
+        col_idx = np.concatenate(cols) if cols else np.zeros(0, dtype=np.int32)
+        vals = rng.standard_normal(int(row_ptr[-1])).astype(np.float32)
+        return Csr(n, n, row_ptr, col_idx, vals)
+
+
+def degree_sort(csr: Csr) -> tuple[Csr, np.ndarray, np.ndarray]:
+    """Stable ascending degree sort (paper §III-C step 1-3).
+
+    Returns (sorted_csr, perm, inv) with perm[i] = original row of sorted
+    row i.
+    """
+    degs = csr.degrees()
+    perm = np.argsort(degs, kind="stable").astype(np.int32)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(csr.n_rows, dtype=np.int32)
+    # rebuild row_ptr / payload in sorted order
+    new_degs = degs[perm]
+    row_ptr = np.zeros(csr.n_rows + 1, dtype=np.int64)
+    row_ptr[1:] = np.cumsum(new_degs)
+    col_idx = np.empty(csr.nnz, dtype=np.int32)
+    vals = np.empty(csr.nnz, dtype=np.float32)
+    for i, orig in enumerate(perm):
+        s, e = csr.row_ptr[orig], csr.row_ptr[orig + 1]
+        col_idx[row_ptr[i] : row_ptr[i] + (e - s)] = csr.col_idx[s:e]
+        vals[row_ptr[i] : row_ptr[i] + (e - s)] = csr.vals[s:e]
+    return Csr(csr.n_rows, csr.n_cols, row_ptr, col_idx, vals), perm, inv
+
+
+def relabel(csr: Csr, perm: np.ndarray, inv: np.ndarray) -> Csr:
+    """Symmetric relabeling P·A·Pᵀ (rows permuted, columns mapped)."""
+    assert csr.n_rows == csr.n_cols
+    sorted_csr, _, _ = _permute_rows(csr, perm)
+    out_cols = inv[sorted_csr.col_idx].astype(np.int32)
+    # re-sort each row by the new column ids
+    col_idx = out_cols.copy()
+    vals = sorted_csr.vals.copy()
+    for r in range(csr.n_rows):
+        s, e = sorted_csr.row_ptr[r], sorted_csr.row_ptr[r + 1]
+        order = np.argsort(col_idx[s:e], kind="stable")
+        col_idx[s:e] = col_idx[s:e][order]
+        vals[s:e] = vals[s:e][order]
+    return Csr(csr.n_rows, csr.n_cols, sorted_csr.row_ptr, col_idx, vals)
+
+
+def _permute_rows(csr: Csr, perm: np.ndarray) -> tuple[Csr, None, None]:
+    degs = csr.degrees()[perm]
+    row_ptr = np.zeros(csr.n_rows + 1, dtype=np.int64)
+    row_ptr[1:] = np.cumsum(degs)
+    col_idx = np.empty(csr.nnz, dtype=np.int32)
+    vals = np.empty(csr.nnz, dtype=np.float32)
+    for i, orig in enumerate(perm):
+        s, e = csr.row_ptr[orig], csr.row_ptr[orig + 1]
+        col_idx[row_ptr[i] : row_ptr[i] + (e - s)] = csr.col_idx[s:e]
+        vals[row_ptr[i] : row_ptr[i] + (e - s)] = csr.vals[s:e]
+    return Csr(csr.n_rows, csr.n_cols, row_ptr, col_idx, vals), None, None
+
+
+def pattern_table(params: PartitionParams) -> list[tuple[int, int, int]]:
+    """Algorithm 1: for deg in 1..=deg_bound returns
+    (block_rows, warp_nzs, warps_per_row) at index deg-1."""
+    factors = [f for f in range(1, params.max_block_warps + 1) if params.max_block_warps % f == 0]
+    table: list[tuple[int, int, int]] = []
+    i, deg = 0, 1
+    while deg <= params.deg_bound:
+        if factors[i] * params.max_warp_nzs >= deg:
+            f = factors[i]
+            table.append((params.max_block_warps // f, math.ceil(deg / f), f))
+            deg += 1
+        else:
+            i += 1
+    return table
+
+
+@dataclasses.dataclass
+class WarpTask:
+    sorted_row: int
+    nz_start: int
+    nz_len: int
+    is_split: bool
+
+
+def block_partition(sorted_csr: Csr, params: PartitionParams) -> list[WarpTask]:
+    """Algorithm 2, directly emitting warp tasks (the Rust version emits
+    int4 metadata and derives tasks; the task stream is identical)."""
+    table = pattern_table(params)
+    bound = params.deg_bound
+    tasks: list[WarpTask] = []
+    n = sorted_csr.n_rows
+    r = 0
+    while r < n:
+        deg = sorted_csr.degree(r)
+        if deg == 0:
+            r += 1
+            continue
+        if deg <= bound:
+            _, warp_nzs, _ = table[deg - 1]
+            warps_per_row = math.ceil(deg / warp_nzs)
+            start = int(sorted_csr.row_ptr[r])
+            for k in range(warps_per_row):
+                s = k * warp_nzs
+                tasks.append(WarpTask(r, start + s, min(deg - s, warp_nzs), False))
+            r += 1
+        else:
+            start = int(sorted_csr.row_ptr[r])
+            off = 0
+            while off < deg:
+                chunk = min(deg - off, bound)
+                # chunks are further divided into max_warp_nzs warps
+                s = 0
+                while s < chunk:
+                    tasks.append(
+                        WarpTask(r, start + off + s, min(chunk - s, params.max_warp_nzs), True)
+                    )
+                    s += params.max_warp_nzs
+                off += chunk
+            r += 1
+    return tasks
+
+
+@dataclasses.dataclass
+class BellBucket:
+    width: int
+    rows: int
+    padded_rows: int
+    cols: np.ndarray  # int32 [padded_rows, width]
+    vals: np.ndarray  # float32 [padded_rows, width]
+    out_row: np.ndarray  # int32 [padded_rows]
+
+
+@dataclasses.dataclass
+class BellLayout:
+    n_rows: int
+    n_cols: int
+    nnz: int
+    buckets: list[BellBucket]
+
+    def padded_nnz(self) -> int:
+        return sum(b.padded_rows * b.width for b in self.buckets)
+
+    def spec(self) -> dict:
+        return {
+            "n_rows": self.n_rows,
+            "n_cols": self.n_cols,
+            "nnz": self.nnz,
+            "row_tile": ROW_TILE,
+            "buckets": [
+                {"width": b.width, "rows": b.rows, "padded_rows": b.padded_rows}
+                for b in self.buckets
+            ],
+        }
+
+
+def next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def bell_layout(sorted_csr: Csr, params: PartitionParams) -> BellLayout:
+    """Group warp tasks into uniform-width buckets (pow2 widths)."""
+    tasks = block_partition(sorted_csr, params)
+    groups: dict[int, list[WarpTask]] = {}
+    for t in tasks:
+        groups.setdefault(next_pow2(max(t.nz_len, 1)), []).append(t)
+    buckets = []
+    for width in sorted(groups):
+        ts = groups[width]
+        rows = len(ts)
+        padded = -(-rows // ROW_TILE) * ROW_TILE
+        cols = np.zeros((padded, width), dtype=np.int32)
+        vals = np.zeros((padded, width), dtype=np.float32)
+        out_row = np.zeros(padded, dtype=np.int32)
+        for i, t in enumerate(ts):
+            out_row[i] = t.sorted_row
+            cols[i, : t.nz_len] = sorted_csr.col_idx[t.nz_start : t.nz_start + t.nz_len]
+            vals[i, : t.nz_len] = sorted_csr.vals[t.nz_start : t.nz_start + t.nz_len]
+        buckets.append(BellBucket(width, rows, padded, cols, vals, out_row))
+    return BellLayout(sorted_csr.n_rows, sorted_csr.n_cols, sorted_csr.nnz, buckets)
+
+
+def prepare(csr: Csr, params: PartitionParams | None = None) -> tuple[BellLayout, np.ndarray, np.ndarray]:
+    """Full preprocessing pipeline on a square adjacency matrix:
+    degree-sort + symmetric relabel + block partition + BELL export.
+    Returns (layout, perm, inv); the layout's row AND column space are in
+    the sorted domain (feed P·X, get P·Y)."""
+    params = params or PartitionParams()
+    _, perm, inv = degree_sort(csr)
+    rel = relabel(csr, perm, inv)
+    return bell_layout(rel, params), perm, inv

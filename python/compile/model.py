@@ -1,0 +1,142 @@
+"""Layer-2: GCN-family models in JAX, calling the Layer-1 BELL SpMM
+kernel for feature aggregation (build-time only; AOT-lowered by aot.py).
+
+The paper's target workload is the GCNConv layer (Fig. 1):
+    linear transform    Y = X W
+    feature aggregation X' = sigma(A_hat Y)
+with the aggregation executed as SpMM over the block-partitioned layout.
+GraphSAGE and GIN variants (paper SS II-A) share the same aggregation
+kernel with different combine functions.
+
+All graph tensors live in the degree-sorted, symmetrically-relabeled
+domain (see layout.prepare): feed P.X, read P.logits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import spmm_bell
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of a GCN-family node classifier."""
+
+    arch: str = "gcn"  # gcn | sage | gin
+    in_dim: int = 64
+    hidden_dim: int = 64
+    out_dim: int = 8
+    n_layers: int = 2
+    interpret: bool = True  # Pallas interpret mode (CPU PJRT)
+
+    def layer_dims(self) -> list:
+        dims = [self.in_dim] + [self.hidden_dim] * (self.n_layers - 1) + [self.out_dim]
+        return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(seed: int, cfg: ModelConfig) -> list:
+    """Flat parameter list (fixed order for the AOT manifest).
+
+    gcn:  per layer [W, b]
+    sage: per layer [W_self, W_neigh, b]
+    gin:  per layer [W1, b1, W2, b2] (2-layer MLP), eps fixed to 0
+    """
+    rng = np.random.default_rng(seed)
+    params = []
+
+    def glorot(fan_in, fan_out):
+        scale = np.sqrt(6.0 / (fan_in + fan_out))
+        return jnp.asarray(
+            rng.uniform(-scale, scale, size=(fan_in, fan_out)).astype(np.float32)
+        )
+
+    for d_in, d_out in cfg.layer_dims():
+        if cfg.arch == "gcn":
+            params += [glorot(d_in, d_out), jnp.zeros((d_out,), jnp.float32)]
+        elif cfg.arch == "sage":
+            params += [
+                glorot(d_in, d_out),
+                glorot(d_in, d_out),
+                jnp.zeros((d_out,), jnp.float32),
+            ]
+        elif cfg.arch == "gin":
+            params += [
+                glorot(d_in, d_out),
+                jnp.zeros((d_out,), jnp.float32),
+                glorot(d_out, d_out),
+                jnp.zeros((d_out,), jnp.float32),
+            ]
+        else:
+            raise ValueError(f"unknown arch {cfg.arch}")
+    return params
+
+
+def params_per_layer(arch: str) -> int:
+    return {"gcn": 2, "sage": 3, "gin": 4}[arch]
+
+
+def aggregate(buckets, h, n_rows, *, interpret=True):
+    """A_hat . h via the Layer-1 kernel (the paper's SpMM)."""
+    return spmm_bell.bell_spmm(buckets, h, n_rows, interpret=interpret)
+
+
+def forward(params, buckets, x, cfg: ModelConfig):
+    """Logits for every node. `buckets` is the BELL triple list."""
+    n_rows = x.shape[0]
+    ppl = params_per_layer(cfg.arch)
+    h = x
+    n_layers = cfg.n_layers
+    for layer in range(n_layers):
+        p = params[layer * ppl : (layer + 1) * ppl]
+        if cfg.arch == "gcn":
+            w, b = p
+            h = aggregate(buckets, h @ w, n_rows, interpret=cfg.interpret) + b
+        elif cfg.arch == "sage":
+            w_self, w_neigh, b = p
+            agg = aggregate(buckets, h, n_rows, interpret=cfg.interpret)
+            h = h @ w_self + agg @ w_neigh + b
+        elif cfg.arch == "gin":
+            w1, b1, w2, b2 = p
+            agg = aggregate(buckets, h, n_rows, interpret=cfg.interpret)
+            h = jax.nn.relu((h + agg) @ w1 + b1) @ w2 + b2
+        if layer + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy over all nodes."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def loss_fn(params, buckets, x, labels, cfg: ModelConfig):
+    return cross_entropy(forward(params, buckets, x, cfg), labels)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def make_train_step(cfg: ModelConfig, lr: float):
+    """SGD train step closure: (params, buckets, x, labels) ->
+    (new_params, loss). Lowered once by aot.py; loops in Rust."""
+
+    def step(params, buckets, x, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, buckets, x, labels, cfg)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return new_params, loss
+
+    return step
+
+
+def make_forward(cfg: ModelConfig):
+    def fwd(params, buckets, x):
+        return forward(params, buckets, x, cfg)
+
+    return fwd

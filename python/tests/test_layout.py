@@ -1,0 +1,133 @@
+"""Invariant tests for the preprocessing pipeline (layout.py):
+degree sorting, Algorithm 1/2, and the BELL export."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layout as L
+from compile.kernels import ref
+
+SMALL_PARAMS = L.PartitionParams(max_block_warps=2, max_warp_nzs=2)
+
+
+def random_csr(seed, n, avg_deg, heavy=False):
+    rng = np.random.default_rng(seed)
+    return L.Csr.random(rng, n, avg_deg, heavy=heavy)
+
+
+class TestDegreeSort:
+    def test_ascending_and_stable(self):
+        csr = random_csr(0, 50, 3.0)
+        s, perm, inv = L.degree_sort(csr)
+        degs = s.degrees()
+        assert (np.diff(degs) >= 0).all()
+        assert (inv[perm] == np.arange(50)).all()
+        # stability: equal-degree rows keep original order
+        for d in np.unique(degs):
+            rows = perm[degs == d]
+            assert (np.diff(rows) > 0).all()
+
+    def test_permutation_preserves_rows(self):
+        csr = random_csr(1, 30, 2.0)
+        s, perm, _ = L.degree_sort(csr)
+        for i, orig in enumerate(perm):
+            a = s.col_idx[s.row_ptr[i] : s.row_ptr[i + 1]]
+            b = csr.col_idx[csr.row_ptr[orig] : csr.row_ptr[orig + 1]]
+            np.testing.assert_array_equal(a, b)
+
+
+class TestPatternTable:
+    def test_fig3_config(self):
+        t = L.pattern_table(SMALL_PARAMS)
+        # deg 2 -> (block_rows 2, warp_nzs 2, 1 warp/row)
+        assert t[1] == (2, 2, 1)
+        # deg 4 = deg_bound -> (1, 2, 2): Fig. 3's BP-2
+        assert t[3] == (1, 2, 2)
+
+    @given(
+        mbw=st.sampled_from([1, 2, 3, 4, 6, 12]),
+        mwn=st.sampled_from([1, 2, 4, 8, 32]),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_invariants(self, mbw, mwn):
+        p = L.PartitionParams(mbw, mwn)
+        t = L.pattern_table(p)
+        assert len(t) == p.deg_bound
+        for deg, (block_rows, warp_nzs, wpr) in enumerate(t, start=1):
+            assert wpr * warp_nzs >= deg  # coverage
+            assert warp_nzs <= p.max_warp_nzs
+            assert block_rows * wpr == p.max_block_warps
+
+
+class TestBlockPartition:
+    @given(
+        seed=st.integers(0, 1000),
+        n=st.integers(1, 60),
+        heavy=st.booleans(),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_tasks_cover_exactly_once(self, seed, n, heavy):
+        csr = random_csr(seed, n, 3.0, heavy=heavy)
+        s, _, _ = L.degree_sort(csr)
+        tasks = L.block_partition(s, SMALL_PARAMS)
+        covered = np.zeros(s.nnz, dtype=int)
+        for t in tasks:
+            assert t.nz_len >= 1
+            assert s.row_ptr[t.sorted_row] <= t.nz_start
+            assert t.nz_start + t.nz_len <= s.row_ptr[t.sorted_row + 1]
+            covered[t.nz_start : t.nz_start + t.nz_len] += 1
+        assert (covered == 1).all()
+
+    def test_split_rows_marked(self):
+        # a row with degree far above deg_bound (4)
+        csr = random_csr(7, 20, 2.0, heavy=True)
+        s, _, _ = L.degree_sort(csr)
+        if s.degrees().max() > SMALL_PARAMS.deg_bound:
+            tasks = L.block_partition(s, SMALL_PARAMS)
+            assert any(t.is_split for t in tasks)
+
+
+class TestBellLayout:
+    @given(seed=st.integers(0, 500), n=st.integers(4, 50))
+    @settings(max_examples=20, deadline=None)
+    def test_execute_matches_dense(self, seed, n):
+        csr = random_csr(seed, n, 3.0)
+        bell, perm, inv = L.prepare(csr, SMALL_PARAMS)
+        rng = np.random.default_rng(seed + 1)
+        f = int(rng.integers(1, 9))
+        x = rng.standard_normal((n, f)).astype(np.float32)
+        got = np.asarray(ref.bell_spmm_ref(bell, x[perm]))
+        want = ref.spmm_dense_ref(csr, x)[perm]
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_widths_pow2_rows_padded(self):
+        csr = random_csr(3, 40, 4.0, heavy=True)
+        bell, _, _ = L.prepare(csr)
+        for b in bell.buckets:
+            assert b.width & (b.width - 1) == 0
+            assert b.padded_rows % L.ROW_TILE == 0
+            assert b.rows <= b.padded_rows < b.rows + L.ROW_TILE
+            # padding rows inert
+            assert (b.vals[b.rows :] == 0).all()
+
+    def test_spec_roundtrip_fields(self):
+        csr = random_csr(4, 25, 2.0)
+        bell, _, _ = L.prepare(csr)
+        spec = bell.spec()
+        assert spec["n_rows"] == 25
+        assert spec["row_tile"] == L.ROW_TILE
+        assert len(spec["buckets"]) == len(bell.buckets)
+
+
+class TestRelabel:
+    def test_symmetric_relabel_semantics(self):
+        # (P·A·Pᵀ)(P·X) == P·(A·X)
+        csr = random_csr(5, 30, 3.0)
+        s, perm, inv = L.degree_sort(csr)
+        rel = L.relabel(csr, perm, inv)
+        rng = np.random.default_rng(6)
+        x = rng.standard_normal((30, 4)).astype(np.float32)
+        got = ref.spmm_dense_ref(rel, x[perm])
+        want = ref.spmm_dense_ref(csr, x)[perm]
+        np.testing.assert_allclose(got, want, atol=1e-4)

@@ -1,0 +1,87 @@
+//! `cargo bench` entry point (criterion is unavailable offline; this is
+//! a harness=false bench binary over `util::bench`).
+//!
+//! Regenerates every paper table/figure on the simulator (writing
+//! `results/*.csv`) and runs the microbenchmarks that back the paper's
+//! complexity claims: O(n) preprocessing scaling and the hot-path
+//! executor throughputs.
+
+use accel_gcn::bench::paper::{self, SweepConfig};
+use accel_gcn::graph::datasets::{by_name, materialize, ScalePolicy};
+use accel_gcn::graph::degree::DegreeSorted;
+use accel_gcn::partition::block_level::BlockPartition;
+use accel_gcn::partition::bucket::BellLayout;
+use accel_gcn::partition::patterns::PartitionParams;
+use accel_gcn::partition::warp_level::WarpPartition;
+use accel_gcn::spmm::{spmm_block_level, spmm_warp_level};
+use accel_gcn::util::bench::{fmt_secs, time_fn, Table};
+use accel_gcn::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // cargo bench passes --bench; accept and ignore it
+    let argv: Vec<String> = argv.into_iter().filter(|a| a != "--bench").collect();
+    let args = Args::parse(&argv, &["out", "seed", "experiment"], &["quick", "skip-paper"])?;
+    let seed = args.u64_or("seed", 42)?;
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(Path::new(&out))?;
+
+    if !args.flag("skip-paper") {
+        // full paper regeneration (tables + figures + CSVs)
+        paper::run_from_args(&args)?;
+    }
+
+    // --- microbenchmarks -------------------------------------------------
+    println!("\n=== Preprocessing scaling (O(n) claim, §III-C) ===");
+    print!("{}", paper::preprocessing_scaling(seed));
+
+    println!("\n=== Hot-path executor microbench (collab-scaled, f=64) ===");
+    let policy = if args.flag("quick") { ScalePolicy::tiny() } else { ScalePolicy { node_cap: 30_000, edge_cap: 300_000 } };
+    let csr = materialize(by_name("collab").unwrap(), policy, seed);
+    let params = PartitionParams::default();
+    let ds = DegreeSorted::new(&csr);
+    let bp = BlockPartition::build(&ds.csr, params);
+    let wp = WarpPartition::build(&csr, params.max_warp_nzs);
+    let layout = BellLayout::build(&ds.csr, &bp);
+    let f = 64;
+    let x = vec![0.5f32; csr.n_rows * f];
+
+    let mut table = Table::new(&["executor", "p50", "GFLOP/s"]);
+    let flops = 2.0 * csr.nnz() as f64 * f as f64 / 1e9;
+    let m = time_fn("block_exec", 1, 0.5, || {
+        std::hint::black_box(spmm_block_level(&ds.csr, &bp, &x, f));
+    });
+    table.row(vec!["block-level (paper)".into(), fmt_secs(m.p50()), format!("{:.2}", flops / m.p50())]);
+    let m = time_fn("warp_exec", 1, 0.5, || {
+        std::hint::black_box(spmm_warp_level(&csr, &wp, &x, f));
+    });
+    table.row(vec!["warp-level (GNNAdvisor)".into(), fmt_secs(m.p50()), format!("{:.2}", flops / m.p50())]);
+    let m = time_fn("bell_exec", 1, 0.5, || {
+        std::hint::black_box(layout.execute(&x, f));
+    });
+    table.row(vec!["BELL layout".into(), fmt_secs(m.p50()), format!("{:.2}", flops / m.p50())]);
+    let m = time_fn("csr_dense", 1, 0.5, || {
+        std::hint::black_box(ds.csr.spmm_dense(&x, f));
+    });
+    table.row(vec!["CSR reference".into(), fmt_secs(m.p50()), format!("{:.2}", flops / m.p50())]);
+    print!("{}", table.render());
+
+    println!("\n=== Partitioning throughput ===");
+    let mut table = Table::new(&["stage", "p50", "edges/s (M)"]);
+    let m = time_fn("degree_sort", 1, 0.5, || {
+        std::hint::black_box(DegreeSorted::new(&csr).perm.len());
+    });
+    table.row(vec!["degree sort".into(), fmt_secs(m.p50()), format!("{:.1}", csr.nnz() as f64 / m.p50() / 1e6)]);
+    let m = time_fn("block_partition", 1, 0.5, || {
+        std::hint::black_box(BlockPartition::build(&ds.csr, params).n_blocks());
+    });
+    table.row(vec!["block partition (Alg. 2)".into(), fmt_secs(m.p50()), format!("{:.1}", csr.nnz() as f64 / m.p50() / 1e6)]);
+    let m = time_fn("bell_export", 1, 0.5, || {
+        std::hint::black_box(BellLayout::build(&ds.csr, &bp).buckets.len());
+    });
+    table.row(vec!["BELL export".into(), fmt_secs(m.p50()), format!("{:.1}", csr.nnz() as f64 / m.p50() / 1e6)]);
+    print!("{}", table.render());
+
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Reproduction harnesses.
+//!
+//! * [`paper`] — regenerates every table and figure of the paper's
+//!   evaluation (Fig. 2/3/5/6/7/8, Table I/II) on the GPU simulator,
+//!   writing CSVs under `results/` and printing paper-style tables.
+//! * [`train`] — the end-to-end training driver (EXPERIMENTS.md §E2E):
+//!   loops the AOT train-step artifact from Rust, logging the loss
+//!   curve.
+//! * [`serve`] — the serving driver: dynamic column batching over the
+//!   compiled SpMM ladder with latency/throughput metrics.
+
+pub mod paper;
+pub mod ablation;
+pub mod train;
+pub mod serve;

@@ -1,0 +1,103 @@
+//! Serving driver: synthetic inference load through the coordinator —
+//! column-batched SpMM requests against the compiled artifact ladder,
+//! with end-to-end latency/throughput reporting and response
+//! verification against the exact CPU executor.
+
+use crate::coordinator::{ColumnBatcher, Engine};
+use crate::partition::bucket::BellLayout;
+use crate::runtime::HostTensor;
+use crate::spmm::verify::allclose;
+use crate::util::rng::Pcg;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Serving run statistics.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub requests_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub verified: bool,
+}
+
+/// Serve `n_requests` random-width SpMM requests against an artifact dir.
+pub fn run_serving(dir: &str, n_requests: usize, coldims: &[usize], seed: u64) -> Result<ServeReport> {
+    let engine = Engine::start(dir)?;
+    let ladder = engine.manifest().spmm_coldims();
+    anyhow::ensure!(!ladder.is_empty(), "no spmm_f* artifacts in {dir}");
+    let n_cols = engine.manifest().n_cols;
+    println!(
+        "serving over artifact ladder {:?} (graph: {} nodes)",
+        ladder.iter().map(|(d, _)| *d).collect::<Vec<_>>(),
+        n_cols
+    );
+    for (_, name) in &ladder {
+        engine.load_artifact(name)?;
+        engine.bind_bell(name)?;
+    }
+    // reference layout for verification
+    let layout = BellLayout::load(dir).context("load BELL layout for verification")?;
+
+    let batcher = ColumnBatcher::new(ladder);
+    let mut rng = Pcg::seed_from(seed);
+    // generate the request stream
+    let widths: Vec<usize> = (0..n_requests).map(|_| *rng.choose(coldims)).collect();
+    let xs: Vec<HostTensor> = widths
+        .iter()
+        .map(|&w| {
+            HostTensor::f32(&[n_cols, w], (0..n_cols * w).map(|_| rng.f32() - 0.5).collect())
+        })
+        .collect();
+
+    let plans = batcher.plan(&widths)?;
+    println!("{} requests → {} fused batches", n_requests, plans.len());
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(plans.len());
+    let mut responses: Vec<Option<HostTensor>> = vec![None; n_requests];
+    let t0 = Instant::now();
+    for plan in &plans {
+        let member_xs: Vec<&HostTensor> = plan.members.iter().map(|&m| &xs[m]).collect();
+        let fused = ColumnBatcher::fuse(plan, &member_xs)?;
+        let tb = Instant::now();
+        let y = engine
+            .exec_sync(&plan.artifact, vec![fused])?
+            .pop()
+            .context("spmm returned nothing")?;
+        latencies.push(tb.elapsed().as_secs_f64());
+        for (i, out) in ColumnBatcher::split(plan, &widths, &y)?.into_iter().enumerate() {
+            responses[plan.members[i]] = Some(out);
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // verify a sample of responses against the exact executor
+    let mut verified = true;
+    for &i in &[0usize, n_requests / 2, n_requests - 1] {
+        let x = xs[i].as_f32()?;
+        let want = layout.execute(x, widths[i]);
+        let got = responses[i].as_ref().context("missing response")?.as_f32()?;
+        if !allclose(got, &want, 1e-3, 1e-3) {
+            verified = false;
+            eprintln!("VERIFICATION FAILED for request {i}");
+        }
+    }
+
+    let report = ServeReport {
+        requests: n_requests,
+        batches: plans.len(),
+        requests_per_sec: n_requests as f64 / elapsed,
+        p50_us: crate::util::stats::percentile(&latencies, 50.0) * 1e6,
+        p99_us: crate::util::stats::percentile(&latencies, 99.0) * 1e6,
+        verified,
+    };
+    println!(
+        "served {} requests in {:.2}s: {:.1} req/s, batch p50 {:.0} µs, p99 {:.0} µs, verified={}",
+        report.requests, elapsed, report.requests_per_sec, report.p50_us, report.p99_us, report.verified
+    );
+    println!("{}", engine.metrics.exec_latency.snapshot().render("device exec"));
+    println!("{}", engine.metrics.total_latency.snapshot().render("queue+exec"));
+    anyhow::ensure!(report.verified, "served responses failed verification");
+    Ok(report)
+}

@@ -1,0 +1,139 @@
+//! End-to-end training driver: the Rust hot loop over the AOT train-step
+//! artifact. This is the full-stack proof: Pallas kernel (L1) inside the
+//! jax model (L2), lowered once, looped from Rust via PJRT (L3) — no
+//! Python on the training path.
+
+use crate::coordinator::Engine;
+use crate::runtime::HostTensor;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub final_accuracy: f64,
+    pub steps_per_sec: f64,
+}
+
+/// Run `steps` SGD steps; logs every `log_every`. Requires the artifact
+/// dir to contain `{arch}_train` + `{arch}_fwd` + features/labels.
+pub fn run_training(dir: &str, steps: usize, log_every: usize) -> Result<TrainReport> {
+    let engine = Engine::start(dir)?;
+    let model = engine
+        .manifest()
+        .model
+        .clone()
+        .context("manifest has no model section (rerun aot.py without --skip-model)")?;
+    let train_name = format!("{}_train", model.arch);
+    let fwd_name = format!("{}_fwd", model.arch);
+
+    let x = HostTensor::load_npy(format!("{dir}/features.npy"))
+        .context("features.npy (prepare with a labeled graph)")?;
+    let labels_t = HostTensor::load_npy(format!("{dir}/labels.npy")).context("labels.npy")?;
+    let labels: Vec<i32> = labels_t.as_i32()?.to_vec();
+    let mut params = engine.manifest().load_params()?;
+
+    println!(
+        "training {}-layer {} ({} params tensors) on {} nodes, lr {}",
+        model.n_layers,
+        model.arch,
+        params.len(),
+        x.shape()[0],
+        model.lr
+    );
+
+    engine.load_artifact(&train_name)?;
+    engine.bind_bell(&train_name)?;
+    // bind the static x and labels by position (after params + bells)
+    let spec = engine.manifest().artifact(&train_name)?.clone();
+    let x_pos = spec
+        .inputs
+        .iter()
+        .position(|t| t.name == "x")
+        .context("train artifact has no `x` input")?;
+    let l_pos = spec
+        .inputs
+        .iter()
+        .position(|t| t.name == "labels")
+        .context("train artifact has no `labels` input")?;
+    engine.bind(&train_name, vec![(x_pos, x.clone()), (l_pos, labels_t)])?;
+
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let mut outputs = engine.exec_sync(&train_name, params)?;
+        let loss = outputs.pop().context("train step returned no loss")?.scalar_f32()?;
+        params = outputs;
+        losses.push(loss);
+        if step % log_every == 0 || step + 1 == steps {
+            println!("step {step:>5}  loss {loss:.4}");
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let steps_per_sec = steps as f64 / elapsed;
+
+    // final accuracy through the forward artifact
+    engine.load_artifact(&fwd_name)?;
+    engine.bind_bell(&fwd_name)?;
+    let mut fwd_inputs = params.clone();
+    fwd_inputs.push(x);
+    let logits = engine
+        .exec_sync(&fwd_name, fwd_inputs)?
+        .pop()
+        .context("fwd returned nothing")?;
+    let final_accuracy = accuracy(&logits, &labels)?;
+    println!(
+        "done: {} steps in {:.1}s ({:.1} steps/s), loss {:.4} -> {:.4}, accuracy {:.1}%",
+        steps,
+        elapsed,
+        steps_per_sec,
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.last().copied().unwrap_or(f32::NAN),
+        final_accuracy * 100.0
+    );
+    println!("{}", engine.metrics.exec_latency.snapshot().render("device exec"));
+    Ok(TrainReport { losses, final_accuracy, steps_per_sec })
+}
+
+/// Argmax accuracy of logits `[n, k]` against labels `[n]`.
+pub fn accuracy(logits: &HostTensor, labels: &[i32]) -> Result<f64> {
+    let shape = logits.shape();
+    anyhow::ensure!(shape.len() == 2 && shape[0] == labels.len(), "logit shape mismatch");
+    let k = shape[1];
+    let data = logits.as_f32()?;
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &data[i * k..(i + 1) * k];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap();
+        if pred == label {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / labels.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = HostTensor::f32(&[3, 2], vec![2.0, 1.0, 0.0, 5.0, 9.0, 1.0]);
+        let labels = vec![0, 1, 0];
+        assert_eq!(accuracy(&logits, &labels).unwrap(), 1.0);
+        let labels = vec![1, 1, 0];
+        assert!((accuracy(&logits, &labels).unwrap() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_shape_mismatch() {
+        let logits = HostTensor::f32(&[2, 2], vec![0.0; 4]);
+        assert!(accuracy(&logits, &[0, 1, 0]).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! The engine: a dedicated device thread owning the PJRT runtime.
+//!
+//! `xla::PjRtClient` and friends are `Rc`-backed, so all compilation and
+//! execution happens on one thread; front ends submit `Job`s over an
+//! mpsc channel and receive results on per-request channels. Static
+//! inputs (the BELL bucket tensors, or a frozen feature matrix) are
+//! **bound** once per artifact — the device thread keeps their literals
+//! alive and the hot path only ships the tensors that change
+//! (vLLM-style weight residency, scaled down to one CPU device).
+
+use crate::metrics::{Counter, LatencyRecorder};
+use crate::runtime::{HostTensor, Manifest, Runtime};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub requests: Counter,
+    pub errors: Counter,
+    /// device-side execute latency
+    pub exec_latency: LatencyRecorder,
+    /// enqueue → completion
+    pub total_latency: LatencyRecorder,
+}
+
+enum Job {
+    /// Compile an artifact (idempotent).
+    Load { name: String, reply: Sender<Result<()>> },
+    /// Bind static inputs at fixed positions of an artifact.
+    Bind { name: String, positions: Vec<(usize, HostTensor)>, reply: Sender<Result<()>> },
+    /// Bind all `bell_*` inputs of an artifact from the artifact dir.
+    BindBell { name: String, reply: Sender<Result<()>> },
+    /// Execute: `dynamic` fills the unbound positions in manifest order.
+    Exec {
+        name: String,
+        dynamic: Vec<HostTensor>,
+        enqueued: Instant,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the device thread.
+pub struct Engine {
+    tx: Sender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<EngineMetrics>,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Start the device thread over an artifact directory.
+    pub fn start(artifact_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let dir: PathBuf = artifact_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let metrics = Arc::new(EngineMetrics::default());
+        let (tx, rx) = channel::<Job>();
+        let thread_manifest = manifest.clone();
+        let thread_metrics = Arc::clone(&metrics);
+        let handle = std::thread::Builder::new()
+            .name("accel-gcn-device".into())
+            .spawn(move || device_loop(thread_manifest, rx, thread_metrics))
+            .expect("spawn device thread");
+        Ok(Engine { tx, handle: Some(handle), metrics, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn rpc<T>(&self, build: impl FnOnce(Sender<Result<T>>) -> Job) -> Result<T> {
+        let (reply, rx) = channel();
+        self.tx.send(build(reply)).map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))?
+    }
+
+    /// Compile an artifact on the device thread (blocking).
+    pub fn load_artifact(&self, name: &str) -> Result<()> {
+        self.rpc(|reply| Job::Load { name: name.to_string(), reply })
+    }
+
+    /// Bind static tensors at explicit input positions.
+    pub fn bind(&self, name: &str, positions: Vec<(usize, HostTensor)>) -> Result<()> {
+        self.rpc(|reply| Job::Bind { name: name.to_string(), positions, reply })
+    }
+
+    /// Bind every `bell_*` input of an artifact from the artifact dir.
+    pub fn bind_bell(&self, name: &str) -> Result<()> {
+        self.rpc(|reply| Job::BindBell { name: name.to_string(), reply })
+    }
+
+    /// Submit an execution; returns the reply channel immediately.
+    pub fn submit(&self, name: &str, dynamic: Vec<HostTensor>) -> Receiver<Result<Vec<HostTensor>>> {
+        let (reply, rx) = channel();
+        self.metrics.requests.inc();
+        let job = Job::Exec {
+            name: name.to_string(),
+            dynamic,
+            enqueued: Instant::now(),
+            reply,
+        };
+        if self.tx.send(job).is_err() {
+            // device thread gone: surface on the reply channel
+            // (rx will simply yield RecvError, handled by exec_sync)
+        }
+        rx
+    }
+
+    /// Blocking execute.
+    pub fn exec_sync(&self, name: &str, dynamic: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.submit(name, dynamic)
+            .recv()
+            .map_err(|_| anyhow!("device thread dropped request"))?
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn device_loop(manifest: Manifest, rx: Receiver<Job>, metrics: Arc<EngineMetrics>) {
+    let mut runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("device thread: failed to create PJRT client: {e:#}");
+            // drain jobs with errors
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Load { reply, .. } | Job::Bind { reply, .. } | Job::BindBell { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("no PJRT client")));
+                    }
+                    Job::Exec { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("no PJRT client")));
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    // per-artifact bound (static) input literals by position
+    let mut bound: HashMap<String, HashMap<usize, xla::Literal>> = HashMap::new();
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Load { name, reply } => {
+                let _ = reply.send(runtime.load(&manifest, &name).map(|_| ()));
+            }
+            Job::Bind { name, positions, reply } => {
+                let r = (|| -> Result<()> {
+                    runtime.load(&manifest, &name)?;
+                    let spec = manifest.artifact(&name)?;
+                    let slot = bound.entry(name.clone()).or_default();
+                    for (pos, t) in positions {
+                        let ts = spec
+                            .inputs
+                            .get(pos)
+                            .ok_or_else(|| anyhow!("{name}: no input position {pos}"))?;
+                        anyhow::ensure!(
+                            ts.matches(&t),
+                            "{name}: bind position {pos} (`{}`) shape mismatch",
+                            ts.name
+                        );
+                        slot.insert(pos, t.to_literal()?);
+                    }
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Job::BindBell { name, reply } => {
+                let r = (|| -> Result<()> {
+                    runtime.load(&manifest, &name)?;
+                    let spec = manifest.artifact(&name)?.clone();
+                    let slot = bound.entry(name.clone()).or_default();
+                    for (pos, input) in spec.inputs.iter().enumerate() {
+                        if input.name.starts_with("bell_") {
+                            let t = HostTensor::load_npy(
+                                manifest.dir.join(format!("{}.npy", input.name)),
+                            )?;
+                            anyhow::ensure!(input.matches(&t), "{}: bell shape mismatch", input.name);
+                            slot.insert(pos, t.to_literal()?);
+                        }
+                    }
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Job::Exec { name, dynamic, enqueued, reply } => {
+                let r = (|| -> Result<Vec<HostTensor>> {
+                    runtime.load(&manifest, &name)?;
+                    let spec = manifest.artifact(&name)?;
+                    let statics = bound.get(&name);
+                    // assemble: bound positions from cache, the rest from
+                    // `dynamic` in manifest order
+                    let mut dyn_iter = dynamic.iter();
+                    let mut dyn_literals: Vec<(usize, xla::Literal)> = Vec::new();
+                    for (pos, input) in spec.inputs.iter().enumerate() {
+                        if statics.map_or(false, |s| s.contains_key(&pos)) {
+                            continue;
+                        }
+                        let t = dyn_iter.next().ok_or_else(|| {
+                            anyhow!("{name}: missing dynamic input for `{}`", input.name)
+                        })?;
+                        anyhow::ensure!(
+                            input.matches(t),
+                            "{name}: dynamic input `{}` expects {:?} {}, got {:?} {}",
+                            input.name,
+                            input.shape,
+                            input.dtype,
+                            t.shape(),
+                            t.dtype_name()
+                        );
+                        dyn_literals.push((pos, t.to_literal()?));
+                    }
+                    anyhow::ensure!(
+                        dyn_iter.next().is_none(),
+                        "{name}: too many dynamic inputs"
+                    );
+                    // merge in position order
+                    let mut refs: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
+                    let mut d = 0usize;
+                    for pos in 0..spec.inputs.len() {
+                        if let Some(lit) = statics.and_then(|s| s.get(&pos)) {
+                            refs.push(lit);
+                        } else {
+                            refs.push(&dyn_literals[d].1);
+                            debug_assert_eq!(dyn_literals[d].0, pos);
+                            d += 1;
+                        }
+                    }
+                    let t0 = Instant::now();
+                    let out = runtime.execute_literals(&name, &refs)?;
+                    metrics.exec_latency.record(t0.elapsed().as_secs_f64());
+                    Ok(out)
+                })();
+                if r.is_err() {
+                    metrics.errors.inc();
+                }
+                metrics.total_latency.record(enqueued.elapsed().as_secs_f64());
+                let _ = reply.send(r);
+            }
+            Job::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! * [`state`] — `PreparedDataset`: the full preprocessing pipeline
+//!   (normalize → degree-sort → relabel → block-partition → BELL) and
+//!   its on-disk form (what `accel-gcn prepare` writes).
+//! * [`engine`] — the device thread owning the PJRT [`crate::runtime::Runtime`]
+//!   (PjRt handles are not `Send`); front ends talk to it via jobs.
+//!   Static inputs (bucket tensors, features) are *bound* once per
+//!   artifact so the hot path only uploads what changed.
+//! * [`router`] — artifact selection: smallest compiled SpMM column
+//!   width that fits a request batch.
+//! * [`batcher`] — dynamic batching: requests for the same graph are
+//!   coalesced along the dense column dimension (the paper's column-dim
+//!   traversal) up to the widest artifact, then split back per request.
+
+pub mod state;
+pub mod engine;
+pub mod router;
+pub mod batcher;
+
+pub use batcher::{BatchPlan, ColumnBatcher};
+pub use engine::{Engine, EngineMetrics};
+pub use router::pick_artifact;
+pub use state::PreparedDataset;

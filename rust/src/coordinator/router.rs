@@ -1,0 +1,52 @@
+//! Artifact routing: pick the smallest compiled SpMM column width that
+//! fits a request (or batch), padding the remainder with zero columns.
+
+use anyhow::{bail, Result};
+
+/// Choose from `available` (ascending `(coldim, artifact)` pairs, as
+/// returned by `Manifest::spmm_coldims`) the smallest artifact with
+/// `coldim ≥ want`.
+pub fn pick_artifact(available: &[(usize, String)], want: usize) -> Result<(usize, String)> {
+    debug_assert!(available.windows(2).all(|w| w[0].0 < w[1].0), "must be ascending");
+    for (dim, name) in available {
+        if *dim >= want {
+            return Ok((*dim, name.clone()));
+        }
+    }
+    bail!(
+        "no SpMM artifact fits column dim {want} (available: {:?})",
+        available.iter().map(|(d, _)| *d).collect::<Vec<_>>()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn avail() -> Vec<(usize, String)> {
+        vec![
+            (16, "spmm_f16".into()),
+            (32, "spmm_f32".into()),
+            (64, "spmm_f64".into()),
+            (128, "spmm_f128".into()),
+        ]
+    }
+
+    #[test]
+    fn exact_fit() {
+        assert_eq!(pick_artifact(&avail(), 32).unwrap().0, 32);
+    }
+
+    #[test]
+    fn rounds_up() {
+        assert_eq!(pick_artifact(&avail(), 17).unwrap().0, 32);
+        assert_eq!(pick_artifact(&avail(), 1).unwrap().0, 16);
+        assert_eq!(pick_artifact(&avail(), 100).unwrap().0, 128);
+    }
+
+    #[test]
+    fn too_wide_errors() {
+        assert!(pick_artifact(&avail(), 129).is_err());
+        assert!(pick_artifact(&[], 1).is_err());
+    }
+}

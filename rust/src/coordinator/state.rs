@@ -1,0 +1,244 @@
+//! `PreparedDataset`: the product of the full preprocessing pipeline,
+//! and its on-disk layout (written by `accel-gcn prepare`, read by the
+//! serving engine, the examples, and — for shapes — `compile/aot.py`).
+//!
+//! Pipeline: adjacency → GCN normalize → degree sort → symmetric
+//! relabel (rows *and* columns in the sorted domain, so GCN layers
+//! chain) → block-level partition → BELL export.
+//!
+//! Directory layout (all under one artifact dir):
+//! ```text
+//! graph.bin              original adjacency (pattern)
+//! graph_row_ptr.npy      relabeled Â (sorted domain) — CSR arrays
+//! graph_col_idx.npy
+//! graph_vals.npy
+//! perm.npy, inv.npy      sorted ↔ original row maps
+//! bell_spec.json         bucket shapes (consumed by aot.py)
+//! bell_w{W}_{cols,vals,rows}.npy
+//! features.npy labels.npy   (when generated with a labeled graph)
+//! dataset.json           summary + partition params
+//! ```
+
+use crate::graph::csr::Csr;
+use crate::graph::degree::DegreeSorted;
+use crate::graph::io;
+use crate::partition::block_level::BlockPartition;
+use crate::partition::bucket::BellLayout;
+use crate::partition::patterns::PartitionParams;
+use crate::util::json::Json;
+use crate::util::npy::Npy;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A fully-preprocessed graph (plus optional node features/labels).
+#[derive(Clone, Debug)]
+pub struct PreparedDataset {
+    /// Original (pattern) adjacency.
+    pub original: Csr,
+    /// Normalized, degree-sorted, relabeled Â — the SpMM operand.
+    pub sorted: Csr,
+    /// sorted row i = original row perm[i].
+    pub perm: Vec<u32>,
+    pub inv: Vec<u32>,
+    pub partition: BlockPartition,
+    pub layout: BellLayout,
+    /// Row-major [n, feat_dim] in the **sorted** domain.
+    pub features: Option<(usize, Vec<f32>)>,
+    /// Labels in the sorted domain.
+    pub labels: Option<Vec<i32>>,
+}
+
+impl PreparedDataset {
+    /// Run the full pipeline on a raw adjacency matrix.
+    pub fn prepare(adjacency: &Csr, params: PartitionParams) -> PreparedDataset {
+        let normalized = adjacency.gcn_normalize();
+        let ds = DegreeSorted::new(&normalized);
+        let sorted = normalized.relabel(&ds.perm, &ds.inv);
+        let partition = BlockPartition::build(&sorted, params);
+        // coalesce sparse buckets: fewer Pallas kernel launches in the
+        // AOT graph at negligible padding cost (SS Perf, L2)
+        let layout = BellLayout::build(&sorted, &partition).coalesce(64);
+        PreparedDataset {
+            original: adjacency.clone(),
+            sorted,
+            perm: ds.perm,
+            inv: ds.inv,
+            partition,
+            layout,
+            features: None,
+            labels: None,
+        }
+    }
+
+    /// Attach features/labels given in the **original** domain; they are
+    /// stored permuted into the sorted domain.
+    pub fn with_node_data(
+        mut self,
+        feat_dim: usize,
+        features: &[f32],
+        labels: &[u32],
+    ) -> PreparedDataset {
+        let n = self.sorted.n_rows;
+        assert_eq!(features.len(), n * feat_dim);
+        assert_eq!(labels.len(), n);
+        let mut pf = vec![0f32; n * feat_dim];
+        let mut pl = vec![0i32; n];
+        for (i, &orig) in self.perm.iter().enumerate() {
+            pf[i * feat_dim..(i + 1) * feat_dim]
+                .copy_from_slice(&features[orig as usize * feat_dim..(orig as usize + 1) * feat_dim]);
+            pl[i] = labels[orig as usize] as i32;
+        }
+        self.features = Some((feat_dim, pf));
+        self.labels = Some(pl);
+        self
+    }
+
+    /// Persist everything `aot.py` + the serving engine need.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        io::save_graph(&self.original, dir.join("graph.bin"))?;
+        // relabeled Â as npy for the python cross-check
+        let rp: Vec<i64> = self.sorted.row_ptr.iter().map(|&p| p as i64).collect();
+        Npy::from_i64(&[rp.len()], &rp).save(dir.join("graph_row_ptr.npy"))?;
+        let ci: Vec<i32> = self.sorted.col_idx.iter().map(|&c| c as i32).collect();
+        Npy::from_i32(&[ci.len()], &ci).save(dir.join("graph_col_idx.npy"))?;
+        Npy::from_f32(&[self.sorted.vals.len()], &self.sorted.vals)
+            .save(dir.join("graph_vals.npy"))?;
+        let perm: Vec<i32> = self.perm.iter().map(|&p| p as i32).collect();
+        Npy::from_i32(&[perm.len()], &perm).save(dir.join("perm.npy"))?;
+        let inv: Vec<i32> = self.inv.iter().map(|&p| p as i32).collect();
+        Npy::from_i32(&[inv.len()], &inv).save(dir.join("inv.npy"))?;
+        self.layout.save(dir)?;
+        if let Some((feat_dim, feats)) = &self.features {
+            Npy::from_f32(&[self.sorted.n_rows, *feat_dim], feats)
+                .save(dir.join("features.npy"))?;
+        }
+        if let Some(labels) = &self.labels {
+            Npy::from_i32(&[labels.len()], labels).save(dir.join("labels.npy"))?;
+        }
+        let mut summary = Json::obj();
+        summary.set("n_rows", self.sorted.n_rows);
+        summary.set("nnz", self.sorted.nnz());
+        summary.set("n_blocks", self.partition.n_blocks());
+        summary.set("n_warp_tasks", self.partition.n_warp_tasks());
+        summary.set("n_split_rows", self.partition.n_split_rows);
+        summary.set("metadata_ratio", self.partition.footprint().ratio());
+        summary.set("padding_overhead", self.layout.padding_overhead());
+        summary.set("max_block_warps", self.partition.params.max_block_warps);
+        summary.set("max_warp_nzs", self.partition.params.max_warp_nzs);
+        summary.set(
+            "feat_dim",
+            self.features.as_ref().map(|(d, _)| *d).unwrap_or(0),
+        );
+        std::fs::write(dir.join("dataset.json"), summary.to_pretty())
+            .context("write dataset.json")?;
+        Ok(())
+    }
+
+    /// Reload a prepared dataset (for serving without re-preprocessing).
+    pub fn load(dir: impl AsRef<Path>) -> Result<PreparedDataset> {
+        let dir = dir.as_ref();
+        let original = io::load_graph(dir.join("graph.bin"))?;
+        let summary = Json::parse(&std::fs::read_to_string(dir.join("dataset.json"))?)?;
+        let params = PartitionParams {
+            max_block_warps: summary.req_usize("max_block_warps")?,
+            max_warp_nzs: summary.req_usize("max_warp_nzs")?,
+        };
+        let mut prepared = PreparedDataset::prepare(&original, params);
+        // features/labels if present
+        let feat_path = dir.join("features.npy");
+        if feat_path.exists() {
+            let f = Npy::load(&feat_path)?;
+            let feat_dim = f.shape[1];
+            prepared.features = Some((feat_dim, f.to_f32()?));
+        }
+        let label_path = dir.join("labels.npy");
+        if label_path.exists() {
+            prepared.labels = Some(Npy::load(&label_path)?.to_i32()?);
+        }
+        Ok(prepared)
+    }
+
+    /// The dynamic tensors for one SpMM request in the sorted domain.
+    pub fn n_rows(&self) -> usize {
+        self.sorted.n_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::rng::Pcg;
+
+    fn random_adj(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let edges: Vec<(u32, u32, f32)> = (0..n * 4)
+            .map(|_| (rng.range(0, n) as u32, rng.range(0, n) as u32, 1.0))
+            .collect();
+        Csr::from_edges(n, n, &edges).unwrap().symmetrize()
+    }
+
+    #[test]
+    fn pipeline_preserves_spmm() {
+        let mut rng = Pcg::seed_from(5);
+        let adj = random_adj(1, 30);
+        let p = PreparedDataset::prepare(&adj, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        let f = 4;
+        let x: Vec<f32> = (0..30 * f).map(|_| rng.f32() - 0.5).collect();
+        // sorted-domain input
+        let mut px = vec![0f32; 30 * f];
+        for (i, &orig) in p.perm.iter().enumerate() {
+            px[i * f..(i + 1) * f].copy_from_slice(&x[orig as usize * f..(orig as usize + 1) * f]);
+        }
+        let got = p.layout.execute(&px, f);
+        let want_sorted = p.sorted.spmm_dense(&px, f);
+        assert_allclose(&got, &want_sorted, 1e-4, 1e-4, "layout vs sorted csr");
+        // and the sorted result matches the original-domain normalize·X
+        let norm = adj.gcn_normalize();
+        let want_orig = norm.spmm_dense(&x, f);
+        for (i, &orig) in p.perm.iter().enumerate() {
+            for k in 0..f {
+                assert!(
+                    (got[i * f + k] - want_orig[orig as usize * f + k]).abs() < 1e-4,
+                    "row {i} col {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let adj = random_adj(2, 25);
+        let mut rng = Pcg::seed_from(9);
+        let feats: Vec<f32> = (0..25 * 3).map(|_| rng.f32()).collect();
+        let labels: Vec<u32> = (0..25).map(|_| rng.range(0, 4) as u32).collect();
+        let p = PreparedDataset::prepare(&adj, PartitionParams::default())
+            .with_node_data(3, &feats, &labels);
+        let dir = std::env::temp_dir().join("accel_gcn_state_test");
+        p.save(&dir).unwrap();
+        let back = PreparedDataset::load(&dir).unwrap();
+        assert_eq!(back.sorted, p.sorted);
+        assert_eq!(back.perm, p.perm);
+        assert_eq!(back.layout, p.layout);
+        assert_eq!(back.features, p.features);
+        assert_eq!(back.labels, p.labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn node_data_permuted_consistently() {
+        let adj = random_adj(3, 15);
+        let feats: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let labels: Vec<u32> = (0..15).collect();
+        let p = PreparedDataset::prepare(&adj, PartitionParams::default())
+            .with_node_data(1, &feats, &labels);
+        let (_, pf) = p.features.as_ref().unwrap();
+        let pl = p.labels.as_ref().unwrap();
+        for i in 0..15 {
+            assert_eq!(pf[i], p.perm[i] as f32);
+            assert_eq!(pl[i], p.perm[i] as i32);
+        }
+    }
+}

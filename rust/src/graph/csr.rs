@@ -1,0 +1,382 @@
+//! Compressed Sparse Row adjacency matrix.
+//!
+//! The left operand of the paper's SpMM (`A' · Y`): `row_ptr` has
+//! `n_rows + 1` entries; row `r`'s nonzeros live at
+//! `col_idx[row_ptr[r]..row_ptr[r+1]]` with weights `vals[...]`.
+//! GCN uses the symmetrically-normalized adjacency
+//! `Â = D^{-1/2}(A+I)D^{-1/2}`, built by [`Csr::gcn_normalize`].
+
+use anyhow::{bail, Result};
+
+/// CSR sparse matrix with f32 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from an edge list (row, col, val). Duplicate edges are
+    /// summed; rows/cols outside bounds are an error.
+    pub fn from_edges(n_rows: usize, n_cols: usize, edges: &[(u32, u32, f32)]) -> Result<Csr> {
+        // counting pass
+        let mut counts = vec![0usize; n_rows + 1];
+        for &(r, c, _) in edges {
+            if r as usize >= n_rows || c as usize >= n_cols {
+                bail!("edge ({r},{c}) out of bounds {n_rows}x{n_cols}");
+            }
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..n_rows {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts;
+        let mut col_idx = vec![0u32; edges.len()];
+        let mut vals = vec![0f32; edges.len()];
+        let mut cursor = row_ptr.clone();
+        for &(r, c, v) in edges {
+            let p = cursor[r as usize];
+            col_idx[p] = c;
+            vals[p] = v;
+            cursor[r as usize] += 1;
+        }
+        let mut m = Csr { n_rows, n_cols, row_ptr, col_idx, vals };
+        m.sort_rows_and_merge_dups();
+        Ok(m)
+    }
+
+    /// Build directly from raw CSR arrays (validated).
+    pub fn from_raw(
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Result<Csr> {
+        if row_ptr.len() != n_rows + 1 {
+            bail!("row_ptr length {} != n_rows+1 {}", row_ptr.len(), n_rows + 1);
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() {
+            bail!("row_ptr endpoints invalid");
+        }
+        if col_idx.len() != vals.len() {
+            bail!("col_idx/vals length mismatch");
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            bail!("row_ptr not monotone");
+        }
+        if col_idx.iter().any(|&c| c as usize >= n_cols) {
+            bail!("column index out of bounds");
+        }
+        Ok(Csr { n_rows, n_cols, row_ptr, col_idx, vals })
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Degree (stored nonzeros) of row `r`.
+    #[inline]
+    pub fn degree(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Iterator over `(col, val)` of row `r`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let span = self.row_ptr[r]..self.row_ptr[r + 1];
+        self.col_idx[span.clone()].iter().copied().zip(self.vals[span].iter().copied())
+    }
+
+    /// Degrees of all rows.
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.n_rows).map(|r| self.degree(r)).collect()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_rows).map(|r| self.degree(r)).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows as f64
+        }
+    }
+
+    /// Sort each row's entries by column and merge duplicates (summing
+    /// values). Canonical form for comparisons and deterministic layout.
+    pub fn sort_rows_and_merge_dups(&mut self) {
+        let mut new_ptr = Vec::with_capacity(self.n_rows + 1);
+        let mut new_cols = Vec::with_capacity(self.col_idx.len());
+        let mut new_vals = Vec::with_capacity(self.vals.len());
+        new_ptr.push(0);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for r in 0..self.n_rows {
+            scratch.clear();
+            scratch.extend(self.row(r));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                new_cols.push(c);
+                new_vals.push(v);
+                i = j;
+            }
+            new_ptr.push(new_cols.len());
+        }
+        self.row_ptr = new_ptr;
+        self.col_idx = new_cols;
+        self.vals = new_vals;
+    }
+
+    /// Make the matrix pattern-symmetric: for every stored (r,c) ensure
+    /// (c,r) is stored (values averaged on collision). Requires square.
+    pub fn symmetrize(&self) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols, "symmetrize requires square");
+        let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(self.nnz() * 2);
+        for r in 0..self.n_rows {
+            for (c, v) in self.row(r) {
+                edges.push((r as u32, c, v * 0.5));
+                edges.push((c, r as u32, v * 0.5));
+            }
+        }
+        Csr::from_edges(self.n_rows, self.n_cols, &edges).expect("valid edges")
+    }
+
+    /// GCN normalization: `Â = D^{-1/2} (A + I) D^{-1/2}` where `D` is
+    /// the degree matrix of `A + I` (Kipf & Welling). Pattern values are
+    /// replaced (the input values are treated as edge indicators).
+    pub fn gcn_normalize(&self) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols, "gcn_normalize requires square");
+        let n = self.n_rows;
+        // A + I pattern
+        let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(self.nnz() + n);
+        for r in 0..n {
+            let mut has_self = false;
+            for (c, _) in self.row(r) {
+                if c as usize == r {
+                    has_self = true;
+                }
+                edges.push((r as u32, c, 1.0));
+            }
+            if !has_self {
+                edges.push((r as u32, r as u32, 1.0));
+            }
+        }
+        let with_self = Csr::from_edges(n, n, &edges).expect("valid edges");
+        let deg: Vec<f64> = (0..n).map(|r| with_self.degree(r) as f64).collect();
+        let inv_sqrt: Vec<f64> =
+            deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+        let mut out = with_self.clone();
+        for r in 0..n {
+            let span = out.row_ptr[r]..out.row_ptr[r + 1];
+            for i in span {
+                let c = out.col_idx[i] as usize;
+                out.vals[i] = (inv_sqrt[r] * inv_sqrt[c]) as f32;
+            }
+        }
+        out
+    }
+
+    /// Dense SpMM reference: `Y = A · X` where `X` is `n_cols × f`
+    /// row-major. The numeric ground truth everything else is checked
+    /// against.
+    pub fn spmm_dense(&self, x: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_cols * f, "X shape mismatch");
+        let mut y = vec![0f32; self.n_rows * f];
+        for r in 0..self.n_rows {
+            let yrow = &mut y[r * f..(r + 1) * f];
+            for (c, v) in self.row(r) {
+                let xrow = &x[c as usize * f..(c as usize + 1) * f];
+                for k in 0..f {
+                    yrow[k] += v * xrow[k];
+                }
+            }
+        }
+        y
+    }
+
+    /// Apply a row permutation: `out.row[i] = self.row[perm[i]]`.
+    pub fn permute_rows(&self, perm: &[u32]) -> Csr {
+        assert_eq!(perm.len(), self.n_rows);
+        let mut row_ptr = Vec::with_capacity(self.n_rows + 1);
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        row_ptr.push(0);
+        for &src in perm {
+            let span = self.row_ptr[src as usize]..self.row_ptr[src as usize + 1];
+            col_idx.extend_from_slice(&self.col_idx[span.clone()]);
+            vals.extend_from_slice(&self.vals[span]);
+            row_ptr.push(col_idx.len());
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, row_ptr, col_idx, vals }
+    }
+
+    /// Symmetric relabeling: node `perm[i]` becomes node `i` — rows are
+    /// permuted by `perm` and column ids are mapped through `inv`
+    /// (`inv[perm[i]] == i`). For a degree-sorted permutation this puts
+    /// both the row and column space of `P·A·Pᵀ` in the sorted domain,
+    /// so GCN layers can chain without per-layer unpermutes.
+    pub fn relabel(&self, perm: &[u32], inv: &[u32]) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols, "relabel requires square");
+        assert_eq!(perm.len(), self.n_rows);
+        let mut out = self.permute_rows(perm);
+        for c in out.col_idx.iter_mut() {
+            *c = inv[*c as usize];
+        }
+        out.sort_rows_and_merge_dups();
+        out
+    }
+
+    /// Density (nnz / (rows*cols)).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // 3x3: row0 = {0:1, 2:2}, row1 = {}, row2 = {1:3}
+        Csr::from_edges(3, 3, &[(0, 2, 2.0), (0, 0, 1.0), (2, 1, 3.0)]).unwrap()
+    }
+
+    #[test]
+    fn from_edges_sorts_columns() {
+        let m = small();
+        assert_eq!(m.row_ptr, vec![0, 2, 2, 3]);
+        assert_eq!(m.col_idx, vec![0, 2, 1]);
+        assert_eq!(m.vals, vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.degree(0), 2);
+        assert_eq!(m.degree(1), 0);
+    }
+
+    #[test]
+    fn duplicate_edges_merge() {
+        let m = Csr::from_edges(2, 2, &[(0, 1, 1.0), (0, 1, 2.5)]).unwrap();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.vals, vec![3.5]);
+    }
+
+    #[test]
+    fn out_of_bounds_edge_rejected() {
+        assert!(Csr::from_edges(2, 2, &[(0, 5, 1.0)]).is_err());
+        assert!(Csr::from_edges(2, 2, &[(7, 0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn from_raw_validates() {
+        assert!(Csr::from_raw(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).is_ok());
+        assert!(Csr::from_raw(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+        assert!(Csr::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Csr::from_raw(1, 1, vec![0, 1], vec![3], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn spmm_dense_reference() {
+        let m = small();
+        // X = I3 scaled by row: X[c] = e_c * (c+1)
+        let f = 3;
+        let mut x = vec![0f32; 9];
+        for c in 0..3 {
+            x[c * f + c] = (c + 1) as f32;
+        }
+        let y = m.spmm_dense(&x, f);
+        // row0 = 1*X[0] + 2*X[2] = [1,0,0] + [0,0,6]
+        assert_eq!(&y[0..3], &[1.0, 0.0, 6.0]);
+        assert_eq!(&y[3..6], &[0.0, 0.0, 0.0]);
+        // row2 = 3*X[1] = [0,6,0]
+        assert_eq!(&y[6..9], &[0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric_pattern() {
+        let m = Csr::from_edges(3, 3, &[(0, 1, 1.0), (2, 0, 1.0)]).unwrap();
+        let s = m.symmetrize();
+        let has = |r: usize, c: u32| s.row(r).any(|(cc, _)| cc == c);
+        assert!(has(0, 1) && has(1, 0) && has(2, 0) && has(0, 2));
+    }
+
+    #[test]
+    fn gcn_normalize_rows_and_selfloops() {
+        let m = Csr::from_edges(2, 2, &[(0, 1, 1.0), (1, 0, 1.0)]).unwrap();
+        let a = m.gcn_normalize();
+        // every node: degree 2 after self-loop; all entries 1/2
+        assert_eq!(a.nnz(), 4);
+        for r in 0..2 {
+            for (_, v) in a.row(r) {
+                assert!((v - 0.5).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gcn_normalize_isolated_node() {
+        // node 2 is isolated
+        let m = Csr::from_edges(3, 3, &[(0, 1, 1.0), (1, 0, 1.0)]).unwrap();
+        let a = m.gcn_normalize();
+        // isolated node gets a self loop with weight 1/1
+        let row2: Vec<_> = a.row(2).collect();
+        assert_eq!(row2, vec![(2, 1.0)]);
+    }
+
+    #[test]
+    fn permute_rows_moves_data() {
+        let m = small();
+        let p = m.permute_rows(&[2, 0, 1]);
+        assert_eq!(p.degree(0), 1);
+        assert_eq!(p.row(0).collect::<Vec<_>>(), vec![(1, 3.0)]);
+        assert_eq!(p.degree(1), 2);
+        assert_eq!(p.degree(2), 0);
+    }
+
+    #[test]
+    fn relabel_preserves_spmm_semantics() {
+        // (P·A·Pᵀ)·(P·X) == P·(A·X)
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::seed_from(41);
+        let n = 20;
+        let edges: Vec<(u32, u32, f32)> = (0..80)
+            .map(|_| (rng.range(0, n) as u32, rng.range(0, n) as u32, rng.f32()))
+            .collect();
+        let a = Csr::from_edges(n, n, &edges).unwrap();
+        let ds = crate::graph::degree::DegreeSorted::new(&a);
+        let rel = a.relabel(&ds.perm, &ds.inv);
+        let f = 3;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.f32()).collect();
+        // P·X
+        let mut px = vec![0f32; n * f];
+        for i in 0..n {
+            let src = ds.perm[i] as usize;
+            px[i * f..(i + 1) * f].copy_from_slice(&x[src * f..(src + 1) * f]);
+        }
+        let got = rel.spmm_dense(&px, f);
+        let want_full = a.spmm_dense(&x, f);
+        for i in 0..n {
+            let src = ds.perm[i] as usize;
+            for k in 0..f {
+                assert!((got[i * f + k] - want_full[src * f + k]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let m = small();
+        assert_eq!(m.max_degree(), 2);
+        assert!((m.avg_degree() - 1.0).abs() < 1e-12);
+        assert!((m.density() - 3.0 / 9.0).abs() < 1e-12);
+    }
+}

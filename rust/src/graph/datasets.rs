@@ -1,0 +1,225 @@
+//! The paper's 18 benchmark graphs (Table I) as synthetic dataset specs.
+//!
+//! Each spec records the published node/edge counts and the
+//! degree-distribution family used to synthesize a stand-in graph
+//! (DESIGN.md §2 documents the substitution). Because the largest graphs
+//! (PRODUCTS: 123.7M edges, Reddit: 114.6M) are far beyond what the
+//! cycle-level simulator should chew per bench iteration, specs are
+//! **scaled** by [`ScalePolicy`]: node and edge counts shrink by a common
+//! factor so the average degree — the property the paper's partitioning
+//! effects depend on — is preserved. The applied factor is reported next
+//! to every measurement in EXPERIMENTS.md.
+
+use super::csr::Csr;
+use super::generator::{self, DegreeModel};
+use crate::util::rng::Pcg;
+
+/// Qualitative family of a benchmark graph, selecting the degree model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphFamily {
+    /// Citation / social / web: power-law tail (Fig. 2 shape).
+    PowerLaw,
+    /// Dense social aggregation (Reddit, PRODUCTS, PPA): power-law with a
+    /// fatter tail and much higher average degree.
+    DenseSocial,
+    /// Union of small molecules: near-regular degree ≈ 2.
+    Molecular,
+    /// Co-purchase / RDF: lognormal moderate tail.
+    CoPurchase,
+}
+
+impl GraphFamily {
+    pub fn degree_model(self) -> DegreeModel {
+        match self {
+            GraphFamily::PowerLaw => DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.02 },
+            GraphFamily::DenseSocial => DegreeModel::PowerLaw { alpha: 1.8, dmax_frac: 0.05 },
+            GraphFamily::Molecular => DegreeModel::NearRegular { jitter: 0.25 },
+            GraphFamily::CoPurchase => DegreeModel::LogNormal { sigma: 0.9 },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphFamily::PowerLaw => "power-law",
+            GraphFamily::DenseSocial => "dense-social",
+            GraphFamily::Molecular => "molecular",
+            GraphFamily::CoPurchase => "co-purchase",
+        }
+    }
+}
+
+/// One row of the paper's Table I.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Published node count (Table I).
+    pub paper_nodes: usize,
+    /// Published edge count (Table I).
+    pub paper_edges: usize,
+    pub family: GraphFamily,
+}
+
+/// Scaling policy: shrink graphs so `nodes ≤ node_cap` and
+/// `edges ≤ edge_cap`, preserving average degree.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePolicy {
+    pub node_cap: usize,
+    pub edge_cap: usize,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        // keeps the full fig5/fig6 sweep (18 graphs × 8 coldims × 4
+        // kernels) within minutes of simulation on this machine
+        ScalePolicy { node_cap: 100_000, edge_cap: 1_500_000 }
+    }
+}
+
+impl ScalePolicy {
+    /// Tiny policy for unit tests.
+    pub fn tiny() -> Self {
+        ScalePolicy { node_cap: 2_000, edge_cap: 20_000 }
+    }
+
+    /// Common scale factor (≤ 1) for a spec.
+    pub fn factor(&self, spec: &DatasetSpec) -> f64 {
+        let fn_ = self.node_cap as f64 / spec.paper_nodes as f64;
+        let fe = self.edge_cap as f64 / spec.paper_edges as f64;
+        fn_.min(fe).min(1.0)
+    }
+
+    /// Scaled (nodes, edges) for a spec.
+    pub fn scaled(&self, spec: &DatasetSpec) -> (usize, usize) {
+        let f = self.factor(spec);
+        let n = ((spec.paper_nodes as f64 * f) as usize).max(16);
+        let e = ((spec.paper_edges as f64 * f) as usize).max(n);
+        (n, e)
+    }
+}
+
+/// Table I, verbatim counts.
+pub const TABLE1: &[DatasetSpec] = &[
+    DatasetSpec { name: "am", paper_nodes: 881_680, paper_edges: 5_668_682, family: GraphFamily::CoPurchase },
+    DatasetSpec { name: "amazon0601", paper_nodes: 403_394, paper_edges: 5_478_357, family: GraphFamily::CoPurchase },
+    DatasetSpec { name: "artist", paper_nodes: 50_515, paper_edges: 1_638_396, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "arxiv", paper_nodes: 169_343, paper_edges: 1_166_243, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "citation", paper_nodes: 2_927_963, paper_edges: 30_387_995, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "collab", paper_nodes: 235_868, paper_edges: 2_358_104, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "com-amazon", paper_nodes: 334_863, paper_edges: 1_851_744, family: GraphFamily::CoPurchase },
+    DatasetSpec { name: "ovcar-8h", paper_nodes: 1_889_542, paper_edges: 3_946_402, family: GraphFamily::Molecular },
+    DatasetSpec { name: "products", paper_nodes: 2_449_029, paper_edges: 123_718_280, family: GraphFamily::DenseSocial },
+    DatasetSpec { name: "pubmed", paper_nodes: 19_717, paper_edges: 99_203, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "ppa", paper_nodes: 576_289, paper_edges: 42_463_862, family: GraphFamily::DenseSocial },
+    DatasetSpec { name: "reddit", paper_nodes: 232_965, paper_edges: 114_615_891, family: GraphFamily::DenseSocial },
+    DatasetSpec { name: "sw-620h", paper_nodes: 1_888_584, paper_edges: 3_944_206, family: GraphFamily::Molecular },
+    DatasetSpec { name: "twitter-partial", paper_nodes: 580_768, paper_edges: 1_435_116, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "wikikg2", paper_nodes: 2_500_604, paper_edges: 16_109_182, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "yelp", paper_nodes: 716_847, paper_edges: 13_954_819, family: GraphFamily::PowerLaw },
+    DatasetSpec { name: "yeast", paper_nodes: 1_710_902, paper_edges: 3_636_546, family: GraphFamily::Molecular },
+    DatasetSpec { name: "youtube", paper_nodes: 1_138_499, paper_edges: 5_980_886, family: GraphFamily::PowerLaw },
+];
+
+/// Look up a Table I spec by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+    let lower = name.to_ascii_lowercase();
+    TABLE1.iter().find(|s| s.name == lower)
+}
+
+/// Names of all 18 graphs, Table I order.
+pub fn all_names() -> Vec<&'static str> {
+    TABLE1.iter().map(|s| s.name).collect()
+}
+
+/// Materialize a dataset: synthesize the scaled graph deterministically
+/// from `(spec.name, seed)`.
+pub fn materialize(spec: &DatasetSpec, policy: ScalePolicy, seed: u64) -> Csr {
+    let (n, e) = policy.scaled(spec);
+    // fold the name into the stream so each dataset gets its own sequence
+    let stream = spec.name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+    let mut rng = Pcg::new(seed, stream);
+    let degs = generator::degree_sequence(spec.family.degree_model(), n, e, &mut rng);
+    generator::from_degree_sequence(n, &degs, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eighteen_graphs() {
+        assert_eq!(TABLE1.len(), 18);
+        // paper ranges: nodes 19,717..=2,927,963, edges 99,203..=123,718,280
+        let min_nodes = TABLE1.iter().map(|s| s.paper_nodes).min().unwrap();
+        let max_nodes = TABLE1.iter().map(|s| s.paper_nodes).max().unwrap();
+        let max_edges = TABLE1.iter().map(|s| s.paper_edges).max().unwrap();
+        assert_eq!(min_nodes, 19_717);
+        assert_eq!(max_nodes, 2_927_963);
+        assert_eq!(max_edges, 123_718_280);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("Collab").unwrap().paper_nodes, 235_868);
+        assert_eq!(by_name("REDDIT").unwrap().paper_edges, 114_615_891);
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scaling_preserves_avg_degree() {
+        let policy = ScalePolicy::default();
+        for spec in TABLE1 {
+            let (n, e) = policy.scaled(spec);
+            assert!(n <= policy.node_cap + 16);
+            assert!(e <= policy.edge_cap.max(n) + 16);
+            let paper_avg = spec.paper_edges as f64 / spec.paper_nodes as f64;
+            let scaled_avg = e as f64 / n as f64;
+            let rel = (scaled_avg - paper_avg).abs() / paper_avg;
+            assert!(rel < 0.05, "{}: paper_avg={paper_avg:.1} scaled_avg={scaled_avg:.1}", spec.name);
+        }
+    }
+
+    #[test]
+    fn pubmed_not_scaled() {
+        // pubmed fits under the caps: factor must be 1
+        let policy = ScalePolicy::default();
+        let spec = by_name("pubmed").unwrap();
+        assert_eq!(policy.factor(spec), 1.0);
+        let (n, e) = policy.scaled(spec);
+        assert_eq!(n, 19_717);
+        assert_eq!(e, 99_203);
+    }
+
+    #[test]
+    fn materialize_deterministic_and_sized() {
+        let policy = ScalePolicy::tiny();
+        let spec = by_name("collab").unwrap();
+        let a = materialize(spec, policy, 42);
+        let b = materialize(spec, policy, 42);
+        assert_eq!(a, b);
+        let c = materialize(spec, policy, 43);
+        assert_ne!(a, c);
+        let (n, _) = policy.scaled(spec);
+        assert_eq!(a.n_rows, n);
+    }
+
+    #[test]
+    fn families_produce_expected_shapes() {
+        let policy = ScalePolicy::tiny();
+        let collab = materialize(by_name("collab").unwrap(), policy, 1);
+        let yeast = materialize(by_name("yeast").unwrap(), policy, 1);
+        // power-law: max degree many times average (Fig. 2: 66x for Collab)
+        assert!(
+            collab.max_degree() as f64 > 8.0 * collab.avg_degree(),
+            "collab max={} avg={}",
+            collab.max_degree(),
+            collab.avg_degree()
+        );
+        // molecular: max degree close to average
+        assert!(
+            (yeast.max_degree() as f64) < 6.0 * yeast.avg_degree().max(1.0),
+            "yeast max={} avg={}",
+            yeast.max_degree(),
+            yeast.avg_degree()
+        );
+    }
+}

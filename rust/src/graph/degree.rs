@@ -1,0 +1,197 @@
+//! O(n) degree sorting — the paper's first preprocessing stage (§III-C).
+//!
+//! Steps exactly as the paper describes: (1) compute each row's degree
+//! from `row_ptr` (O(n)); (2) **stable** sort rows by degree using count
+//! sort (O(n + max_deg)); (3) rebuild the row pointer array for the new
+//! order (O(n)). Stability matters: rows of equal degree keep their
+//! original relative order, which preserves whatever locality the input
+//! ordering had and makes the transform deterministic.
+
+use super::csr::Csr;
+
+/// A degree-sorted view of a CSR matrix: the permuted matrix plus the
+/// permutation metadata needed to map results back to original row ids.
+#[derive(Clone, Debug)]
+pub struct DegreeSorted {
+    /// The permuted matrix: row `i` of `csr` is row `perm[i]` of the
+    /// original. Rows are in **ascending** degree order, matching the
+    /// paper's Fig. 3 (row0, row2, then row1) so that equal-degree rows
+    /// are contiguous and long (block-splitting) rows come last.
+    pub csr: Csr,
+    /// `perm[i]` = original row id of sorted row `i`.
+    pub perm: Vec<u32>,
+    /// `inv[orig]` = position of original row `orig` in the sorted order.
+    pub inv: Vec<u32>,
+}
+
+impl DegreeSorted {
+    /// Stable count-sort of rows by degree, ascending. O(n + max_deg).
+    pub fn new(csr: &Csr) -> DegreeSorted {
+        let n = csr.n_rows;
+        let max_deg = csr.max_degree();
+        // counting pass over degrees
+        let mut counts = vec![0usize; max_deg + 2];
+        for r in 0..n {
+            counts[csr.degree(r)] += 1;
+        }
+        // prefix sums for ASCENDING degree buckets:
+        // start[d] = number of rows with degree < d
+        let mut start = vec![0usize; max_deg + 2];
+        for d in 1..=max_deg + 1 {
+            start[d] = start[d - 1] + counts[d - 1];
+        }
+        // stable scatter
+        let mut perm = vec![0u32; n];
+        let mut cursor = start;
+        for r in 0..n {
+            let d = csr.degree(r);
+            perm[cursor[d]] = r as u32;
+            cursor[d] += 1;
+        }
+        let mut inv = vec![0u32; n];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p as usize] = i as u32;
+        }
+        let sorted = csr.permute_rows(&perm);
+        DegreeSorted { csr: sorted, perm, inv }
+    }
+
+    /// Undo the permutation on a row-major dense result:
+    /// `out[perm[i]] = y[i]`.
+    pub fn unpermute_rows(&self, y: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.csr.n_rows * f);
+        let mut out = vec![0f32; y.len()];
+        for (i, &orig) in self.perm.iter().enumerate() {
+            out[orig as usize * f..(orig as usize + 1) * f]
+                .copy_from_slice(&y[i * f..(i + 1) * f]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(rng: &mut Pcg, n: usize, max_deg: usize) -> Csr {
+        let mut edges = Vec::new();
+        for r in 0..n {
+            let d = rng.range(0, max_deg + 1);
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    #[test]
+    fn sorts_ascending() {
+        let csr = Csr::from_edges(
+            4,
+            4,
+            &[(1, 0, 1.0), (1, 2, 1.0), (1, 3, 1.0), (3, 0, 1.0), (2, 1, 1.0), (2, 2, 1.0)],
+        )
+        .unwrap();
+        let ds = DegreeSorted::new(&csr);
+        let degs: Vec<usize> = (0..4).map(|r| ds.csr.degree(r)).collect();
+        assert_eq!(degs, vec![0, 1, 2, 3]);
+        assert_eq!(ds.perm, vec![0, 3, 2, 1]);
+    }
+
+    #[test]
+    fn stable_for_equal_degrees() {
+        // rows 0,1,2 all have degree 1 — order must be preserved
+        let csr =
+            Csr::from_edges(3, 3, &[(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)]).unwrap();
+        let ds = DegreeSorted::new(&csr);
+        assert_eq!(ds.perm, vec![0, 1, 2]);
+        assert_eq!(ds.csr.vals, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn inv_is_inverse_of_perm() {
+        let mut rng = Pcg::seed_from(13);
+        let csr = random_csr(&mut rng, 50, 8);
+        let ds = DegreeSorted::new(&csr);
+        for i in 0..50 {
+            assert_eq!(ds.inv[ds.perm[i] as usize] as usize, i);
+        }
+    }
+
+    #[test]
+    fn unpermute_roundtrip() {
+        let mut rng = Pcg::seed_from(29);
+        let csr = random_csr(&mut rng, 30, 5);
+        let ds = DegreeSorted::new(&csr);
+        let f = 4;
+        // y[i] = constant row = perm[i] so unpermuted out[orig] == orig
+        let mut y = vec![0f32; 30 * f];
+        for i in 0..30 {
+            for k in 0..f {
+                y[i * f + k] = ds.perm[i] as f32;
+            }
+        }
+        let out = ds.unpermute_rows(&y, f);
+        for orig in 0..30 {
+            assert_eq!(out[orig * f], orig as f32);
+        }
+    }
+
+    #[test]
+    fn prop_permutation_valid_and_sorted() {
+        proptest::check("degree_sort_valid", 0xD56, 40, |rng| {
+            let n = rng.range(1, 120);
+            let csr = random_csr(rng, n, 12);
+            let ds = DegreeSorted::new(&csr);
+            // perm is a permutation
+            let mut seen = vec![false; n];
+            for &p in &ds.perm {
+                assert!(!seen[p as usize], "dup in perm");
+                seen[p as usize] = true;
+            }
+            // ascending degrees
+            for i in 1..n {
+                assert!(ds.csr.degree(i - 1) <= ds.csr.degree(i));
+            }
+            // nnz preserved
+            assert_eq!(ds.csr.nnz(), csr.nnz());
+            // row content preserved
+            for i in 0..n {
+                let orig = ds.perm[i] as usize;
+                assert_eq!(
+                    ds.csr.row(i).collect::<Vec<_>>(),
+                    csr.row(orig).collect::<Vec<_>>()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_spmm_invariant_under_sort() {
+        proptest::check("degree_sort_spmm", 0xD57, 20, |rng| {
+            let n = rng.range(1, 60);
+            let f = rng.range(1, 9);
+            let csr = random_csr(rng, n, 6);
+            let ds = DegreeSorted::new(&csr);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let y_orig = csr.spmm_dense(&x, f);
+            let y_sorted = ds.csr.spmm_dense(&x, f);
+            let y_back = ds.unpermute_rows(&y_sorted, f);
+            for (a, b) in y_orig.iter().zip(y_back.iter()) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_single_row() {
+        let empty = Csr::from_edges(0, 0, &[]).unwrap();
+        let ds = DegreeSorted::new(&empty);
+        assert_eq!(ds.perm.len(), 0);
+        let single = Csr::from_edges(1, 1, &[(0, 0, 1.0)]).unwrap();
+        let ds = DegreeSorted::new(&single);
+        assert_eq!(ds.perm, vec![0]);
+    }
+}

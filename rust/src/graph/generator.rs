@@ -1,0 +1,345 @@
+//! Synthetic graph generators matched to the paper's dataset families.
+//!
+//! The paper's 18 graphs (Table I) come from OGB / SNAP / Network
+//! Repository / TU molecular collections. Raw downloads are unavailable
+//! here, so each dataset is synthesized to match its published node
+//! count, edge count, and the degree-distribution *family* that drives
+//! the paper's effects (power-law imbalance for social/citation/web
+//! graphs; near-regular low degree for molecular graph unions; very dense
+//! heavy tails for Reddit/PRODUCTS). See DESIGN.md §2 for why this
+//! substitution preserves the relevant behaviour.
+//!
+//! All generators are deterministic in `(spec, seed)` and O(edges).
+
+use super::csr::Csr;
+use crate::util::rng::Pcg;
+
+/// Degree-distribution family for a synthetic graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DegreeModel {
+    /// Power-law with exponent `alpha` and max degree `dmax_frac * n`:
+    /// the social/citation/web shape of Fig. 2 (Collab's max degree is
+    /// ~66× its average).
+    PowerLaw { alpha: f64, dmax_frac: f64 },
+    /// Near-regular: degree = avg ± jitter, clipped at 1 — the shape of
+    /// molecular dataset unions (OVCAR-8H, SW-620H, Yeast) where each
+    /// component is a small molecule with degree ~2.
+    NearRegular { jitter: f64 },
+    /// Lognormal degrees (σ in log space) — moderate-tail e-commerce /
+    /// co-purchase shape (amazon0601, com-amazon, am).
+    LogNormal { sigma: f64 },
+}
+
+/// Draw a degree sequence with the given model, scaled so the sum is
+/// (approximately, then exactly) `target_edges`.
+pub fn degree_sequence(
+    model: DegreeModel,
+    n: usize,
+    target_edges: usize,
+    rng: &mut Pcg,
+) -> Vec<usize> {
+    assert!(n > 0);
+    let avg = target_edges as f64 / n as f64;
+    let mut degs: Vec<f64> = match model {
+        DegreeModel::PowerLaw { alpha, dmax_frac } => {
+            let dmax = (dmax_frac * n as f64).max(8.0);
+            (0..n).map(|_| rng.power_law(alpha, 1.0, dmax)).collect()
+        }
+        DegreeModel::NearRegular { jitter } => {
+            (0..n).map(|_| (avg + rng.normal() * jitter * avg).max(1.0)).collect()
+        }
+        DegreeModel::LogNormal { sigma } => {
+            (0..n).map(|_| (rng.normal() * sigma).exp()).collect()
+        }
+    };
+    // rescale to hit the edge target, then integerize with stochastic
+    // rounding and exact repair.
+    let sum: f64 = degs.iter().sum();
+    let scale = target_edges as f64 / sum;
+    let mut idegs: Vec<usize> = degs
+        .iter_mut()
+        .map(|d| {
+            let x = *d * scale;
+            let base = x.floor();
+            let frac = x - base;
+            (base as usize) + usize::from(rng.f64() < frac)
+        })
+        .collect();
+    // exact repair: adjust random rows until the sum matches
+    let mut total: isize = idegs.iter().sum::<usize>() as isize;
+    let target = target_edges as isize;
+    while total < target {
+        let i = rng.range(0, n);
+        idegs[i] += 1;
+        total += 1;
+    }
+    while total > target {
+        let i = rng.range(0, n);
+        if idegs[i] > 0 {
+            idegs[i] -= 1;
+            total -= 1;
+        }
+    }
+    idegs
+}
+
+/// Build a graph from a degree sequence using a Chung-Lu-style stub
+/// pairing: endpoints are drawn proportional to degree, giving the
+/// degree sequence in expectation on the column side while the row side
+/// is exact. Self-loops are allowed (they are what GCN adds anyway);
+/// duplicate edges merge in CSR construction, so realized nnz can be
+/// slightly below target on dense graphs — `pad_to_target` tops the
+/// count back up.
+pub fn from_degree_sequence(n: usize, degs: &[usize], rng: &mut Pcg) -> Csr {
+    assert_eq!(degs.len(), n);
+    let nnz: usize = degs.iter().sum();
+    // alias-free endpoint sampling: cumulative stub table
+    // (sampling a uniform stub = sampling endpoint ∝ degree)
+    let mut stubs: Vec<u32> = Vec::with_capacity(nnz);
+    for (v, &d) in degs.iter().enumerate() {
+        stubs.extend(std::iter::repeat(v as u32).take(d));
+    }
+    let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(nnz);
+    for (r, &d) in degs.iter().enumerate() {
+        for _ in 0..d {
+            let c = if stubs.is_empty() {
+                rng.range(0, n) as u32
+            } else {
+                *rng.choose(&stubs)
+            };
+            edges.push((r as u32, c, 1.0));
+        }
+    }
+    let mut csr = Csr::from_edges(n, n, &edges).expect("valid generated edges");
+    pad_to_target(&mut csr, nnz, rng);
+    csr
+}
+
+/// Top up nnz to `target` by inserting random non-duplicate edges
+/// (biased toward high-degree rows to preserve shape).
+fn pad_to_target(csr: &mut Csr, target: usize, rng: &mut Pcg) {
+    let n = csr.n_rows;
+    if n == 0 {
+        return;
+    }
+    let mut extra: Vec<(u32, u32, f32)> = Vec::new();
+    let mut have = csr.nnz();
+    let mut attempts = 0usize;
+    let max_attempts = (target - have) * 20 + 100;
+    while have < target && attempts < max_attempts {
+        attempts += 1;
+        let r = rng.range(0, n);
+        let c = rng.range(0, n) as u32;
+        if csr.row(r).any(|(cc, _)| cc == c) {
+            continue;
+        }
+        extra.push((r as u32, c, 1.0));
+        have += 1;
+    }
+    if !extra.is_empty() {
+        let mut edges: Vec<(u32, u32, f32)> = extra;
+        for r in 0..n {
+            for (c, v) in csr.row(r) {
+                edges.push((r as u32, c, v));
+            }
+        }
+        *csr = Csr::from_edges(n, n, &edges).expect("valid edges");
+    }
+}
+
+/// RMAT (Kronecker) generator — alternative heavy-tail model with
+/// community structure; used by the `--generator rmat` CLI option and by
+/// tests as a structurally different source of power-law graphs.
+pub fn rmat(
+    scale: u32,
+    edges: usize,
+    (a, b, c): (f64, f64, f64),
+    rng: &mut Pcg,
+) -> Csr {
+    let n = 1usize << scale;
+    let d = 1.0 - a - b - c;
+    assert!(d >= 0.0, "rmat probabilities sum > 1");
+    let mut list = Vec::with_capacity(edges);
+    for _ in 0..edges {
+        let (mut r, mut cc) = (0usize, 0usize);
+        for level in (0..scale).rev() {
+            let p = rng.f64();
+            let (dr, dc) = if p < a {
+                (0, 0)
+            } else if p < a + b {
+                (0, 1)
+            } else if p < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            r |= dr << level;
+            cc |= dc << level;
+        }
+        list.push((r as u32, cc as u32, 1.0));
+    }
+    Csr::from_edges(n, n, &list).expect("valid rmat edges")
+}
+
+/// A small synthetic "citation network" with features and labels, used by
+/// the end-to-end GCN training example: power-law graph + planted
+/// community structure so a GCN can actually learn (features correlate
+/// with the label of a node's community).
+pub struct LabeledGraph {
+    pub csr: Csr,
+    /// row-major `n × feat_dim`
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    pub labels: Vec<u32>,
+    pub n_classes: usize,
+}
+
+pub fn labeled_communities(
+    n: usize,
+    avg_degree: f64,
+    feat_dim: usize,
+    n_classes: usize,
+    homophily: f64,
+    rng: &mut Pcg,
+) -> LabeledGraph {
+    let labels: Vec<u32> = (0..n).map(|_| rng.range(0, n_classes) as u32).collect();
+    let target_edges = (n as f64 * avg_degree) as usize;
+    let mut edges = Vec::with_capacity(target_edges);
+    // class-conditional wiring: with prob `homophily`, endpoints share a class
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); n_classes];
+    for (v, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(v as u32);
+    }
+    for _ in 0..target_edges {
+        let r = rng.range(0, n);
+        let c = if rng.f64() < homophily {
+            let peers = &by_class[labels[r] as usize];
+            *rng.choose(peers)
+        } else {
+            rng.range(0, n) as u32
+        };
+        edges.push((r as u32, c, 1.0));
+    }
+    let csr = Csr::from_edges(n, n, &edges).unwrap().symmetrize();
+    // features: class centroid + noise
+    let mut centroids = vec![0f32; n_classes * feat_dim];
+    for v in centroids.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let mut features = vec![0f32; n * feat_dim];
+    for v in 0..n {
+        let l = labels[v] as usize;
+        for k in 0..feat_dim {
+            features[v * feat_dim + k] =
+                centroids[l * feat_dim + k] + 0.8 * rng.normal() as f32;
+        }
+    }
+    LabeledGraph { csr, features, feat_dim, labels, n_classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn degree_sequence_sums_exactly() {
+        let mut rng = Pcg::seed_from(1);
+        for model in [
+            DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.1 },
+            DegreeModel::NearRegular { jitter: 0.2 },
+            DegreeModel::LogNormal { sigma: 1.0 },
+        ] {
+            let degs = degree_sequence(model, 500, 3000, &mut rng);
+            assert_eq!(degs.iter().sum::<usize>(), 3000, "{model:?}");
+        }
+    }
+
+    #[test]
+    fn power_law_has_heavy_tail() {
+        let mut rng = Pcg::seed_from(2);
+        let degs = degree_sequence(
+            DegreeModel::PowerLaw { alpha: 2.0, dmax_frac: 0.25 },
+            2000,
+            20_000,
+            &mut rng,
+        );
+        let avg = 10.0;
+        let max = *degs.iter().max().unwrap() as f64;
+        // paper Fig. 2: max degree tens of times the average
+        assert!(max > 10.0 * avg, "max={max} avg={avg}");
+    }
+
+    #[test]
+    fn near_regular_is_tight() {
+        let mut rng = Pcg::seed_from(3);
+        let degs = degree_sequence(DegreeModel::NearRegular { jitter: 0.1 }, 1000, 2080, &mut rng);
+        let max = *degs.iter().max().unwrap();
+        assert!(max <= 8, "molecular-style degrees should be tiny, max={max}");
+    }
+
+    #[test]
+    fn from_degree_sequence_row_degrees_close() {
+        let mut rng = Pcg::seed_from(4);
+        let degs = vec![5usize; 100];
+        let csr = from_degree_sequence(100, &degs, &mut rng);
+        // duplicates merge then get padded back: total preserved
+        assert_eq!(csr.nnz(), 500);
+        assert_eq!(csr.n_rows, 100);
+    }
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let mut r1 = Pcg::seed_from(5);
+        let mut r2 = Pcg::seed_from(5);
+        let a = rmat(8, 2000, (0.57, 0.19, 0.19), &mut r1);
+        let b = rmat(8, 2000, (0.57, 0.19, 0.19), &mut r2);
+        assert_eq!(a, b);
+        assert_eq!(a.n_rows, 256);
+        assert!(a.nnz() <= 2000 && a.nnz() > 1000); // duplicates merge
+    }
+
+    #[test]
+    fn labeled_graph_learnable_structure() {
+        let mut rng = Pcg::seed_from(6);
+        let g = labeled_communities(300, 8.0, 16, 4, 0.8, &mut rng);
+        assert_eq!(g.labels.len(), 300);
+        assert_eq!(g.features.len(), 300 * 16);
+        assert!(g.csr.nnz() > 0);
+        // homophily: most edges intra-class
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for r in 0..300 {
+            for (c, _) in g.csr.row(r) {
+                total += 1;
+                if g.labels[r] == g.labels[c as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(intra as f64 > 0.6 * total as f64, "intra={intra}/{total}");
+    }
+
+    #[test]
+    fn prop_generator_valid_csr() {
+        proptest::check("generator_valid", 0x6E4, 15, |rng| {
+            let n = rng.range(10, 300);
+            let e = rng.range(n, 6 * n);
+            let degs = degree_sequence(
+                DegreeModel::PowerLaw { alpha: 2.2, dmax_frac: 0.3 },
+                n,
+                e,
+                rng,
+            );
+            let csr = from_degree_sequence(n, &degs, rng);
+            // structural validity
+            assert_eq!(csr.row_ptr.len(), n + 1);
+            assert!(csr.col_idx.iter().all(|&c| (c as usize) < n));
+            // rows sorted & deduped
+            for r in 0..n {
+                let cols: Vec<u32> = csr.row(r).map(|(c, _)| c).collect();
+                assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {r} not sorted/dedup");
+            }
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! Binary graph serialization + npy tensor export.
+//!
+//! `graph.bin` format (little endian):
+//! ```text
+//! magic  "AGCN"            4 bytes
+//! version u32              (1)
+//! n_rows  u64
+//! n_cols  u64
+//! nnz     u64
+//! row_ptr u64 × (n_rows+1)
+//! col_idx u32 × nnz
+//! vals    f32 × nnz
+//! ```
+//! Written by `accel-gcn prepare`, consumed by examples and the serving
+//! coordinator so graph generation cost is paid once.
+
+use super::csr::Csr;
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"AGCN";
+const VERSION: u32 = 1;
+
+pub fn save_graph(csr: &Csr, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let f = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(csr.n_rows as u64).to_le_bytes())?;
+    w.write_all(&(csr.n_cols as u64).to_le_bytes())?;
+    w.write_all(&(csr.nnz() as u64).to_le_bytes())?;
+    for &p in &csr.row_ptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &c in &csr.col_idx {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &v in &csr.vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_graph(path: impl AsRef<Path>) -> Result<Csr> {
+    let path = path.as_ref();
+    let f = fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not an AGCN graph file");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let n_rows = read_u64(&mut r)? as usize;
+    let n_cols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+
+    let mut row_ptr = Vec::with_capacity(n_rows + 1);
+    for _ in 0..=n_rows {
+        row_ptr.push(read_u64(&mut r)? as usize);
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        col_idx.push(read_u32(&mut r)?);
+    }
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        vals.push(f32::from_le_bytes(b));
+    }
+    Csr::from_raw(n_rows, n_cols, row_ptr, col_idx, vals)
+        .with_context(|| format!("{path:?}: invalid CSR payload"))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("accel_gcn_io_test");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg::seed_from(77);
+        let edges: Vec<(u32, u32, f32)> =
+            (0..500).map(|_| (rng.range(0, 64) as u32, rng.range(0, 64) as u32, rng.f32())).collect();
+        let csr = Csr::from_edges(64, 64, &edges).unwrap();
+        let path = tmpfile("roundtrip.bin");
+        save_graph(&csr, &path).unwrap();
+        let back = load_graph(&path).unwrap();
+        assert_eq!(csr, back);
+    }
+
+    #[test]
+    fn empty_graph_roundtrip() {
+        let csr = Csr::from_edges(5, 5, &[]).unwrap();
+        let path = tmpfile("empty.bin");
+        save_graph(&csr, &path).unwrap();
+        assert_eq!(load_graph(&path).unwrap(), csr);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmpfile("bad.bin");
+        fs::write(&path, b"NOPExxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(load_graph(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let csr = Csr::from_edges(4, 4, &[(0, 1, 1.0), (2, 3, 2.0)]).unwrap();
+        let path = tmpfile("trunc.bin");
+        save_graph(&csr, &path).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_graph(&path).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph substrate: containers, generators, datasets, IO, degree sorting.
+//!
+//! The paper evaluates on 18 benchmark graphs (Table I) whose raw data we
+//! cannot download in this environment; [`generator`] synthesizes graphs
+//! matched to each dataset's published node/edge counts and family-typical
+//! degree distribution, and [`datasets`] carries the Table I specs plus
+//! the scaling rule (see DESIGN.md §2).
+
+pub mod csr;
+pub mod degree;
+pub mod generator;
+pub mod datasets;
+pub mod io;
+pub mod stats;
+
+pub use csr::Csr;
+pub use datasets::{DatasetSpec, GraphFamily};
+pub use degree::DegreeSorted;

@@ -1,0 +1,95 @@
+//! Graph statistics: degree histograms (paper Fig. 2) and the imbalance
+//! metrics the paper's motivation section cites.
+
+use super::csr::Csr;
+use crate::util::stats::{Log2Histogram, OnlineStats};
+
+/// Summary statistics for one graph.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub n_rows: usize,
+    pub nnz: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    /// max/avg — Fig. 2 notes "up to 66 times greater than the average"
+    /// for Collab.
+    pub max_over_avg: f64,
+    /// coefficient of variation of the degree distribution — the
+    /// first-order driver of warp-level workload imbalance.
+    pub degree_cv: f64,
+    pub density: f64,
+    pub empty_rows: usize,
+}
+
+pub fn graph_stats(csr: &Csr) -> GraphStats {
+    let mut stats = OnlineStats::new();
+    let mut empty = 0usize;
+    for r in 0..csr.n_rows {
+        let d = csr.degree(r);
+        if d == 0 {
+            empty += 1;
+        }
+        stats.push(d as f64);
+    }
+    let avg = csr.avg_degree();
+    GraphStats {
+        n_rows: csr.n_rows,
+        nnz: csr.nnz(),
+        avg_degree: avg,
+        max_degree: csr.max_degree(),
+        max_over_avg: if avg > 0.0 { csr.max_degree() as f64 / avg } else { 0.0 },
+        degree_cv: stats.cv(),
+        density: csr.density(),
+        empty_rows: empty,
+    }
+}
+
+/// Row-degree histogram with power-of-two buckets (Fig. 2).
+pub fn degree_histogram(csr: &Csr) -> Log2Histogram {
+    let mut h = Log2Histogram::new();
+    for r in 0..csr.n_rows {
+        h.push(csr.degree(r) as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::{by_name, materialize, ScalePolicy};
+
+    #[test]
+    fn stats_basic() {
+        let csr = Csr::from_edges(
+            4,
+            4,
+            &[(0, 1, 1.0), (0, 2, 1.0), (0, 3, 1.0), (1, 0, 1.0)],
+        )
+        .unwrap();
+        let s = graph_stats(&csr);
+        assert_eq!(s.nnz, 4);
+        assert_eq!(s.max_degree, 3);
+        assert_eq!(s.empty_rows, 2);
+        assert!((s.avg_degree - 1.0).abs() < 1e-12);
+        assert!((s.max_over_avg - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_rows() {
+        let csr = Csr::from_edges(3, 3, &[(0, 0, 1.0), (1, 0, 1.0), (1, 1, 1.0)]).unwrap();
+        let h = degree_histogram(&csr);
+        assert_eq!(h.zeros, 1);
+        assert_eq!(h.counts[0], 1); // deg 1
+        assert_eq!(h.counts[1], 1); // deg 2
+    }
+
+    #[test]
+    fn collab_shows_fig2_imbalance() {
+        // Fig. 2 motivation: Collab max degree many times the average.
+        let spec = by_name("collab").unwrap();
+        let g = materialize(spec, ScalePolicy::tiny(), 7);
+        let s = graph_stats(&g);
+        assert!(s.max_over_avg > 8.0, "max_over_avg={}", s.max_over_avg);
+        assert!(s.degree_cv > 0.5, "cv={}", s.degree_cv);
+    }
+}

@@ -1,0 +1,32 @@
+//! Accel-GCN: reproduction of "Accel-GCN: High-Performance GPU Accelerator
+//! Design for Graph Convolution Networks" (ICCAD 2023) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`graph`] — graph substrate: CSR containers, synthetic generators for
+//!   the 18 benchmark graphs, IO, O(n) degree sorting.
+//! * [`partition`] — the paper's preprocessing contribution: partition
+//!   pattern table (Alg. 1), block-level partitioning (Alg. 2), int4
+//!   metadata, the warp-level (GNNAdvisor-style) baseline, and the BELL
+//!   bucket layout consumed by the Pallas kernel.
+//! * [`spmm`] — exact CPU executors for every schedule (numeric ground
+//!   truth for the partitioners).
+//! * [`sim`] — GPU microarchitecture simulator reproducing the paper's
+//!   evaluation (warps, coalescing, shared memory, SM scheduling).
+//! * [`coordinator`] — serving engine: request router, shape-bucket
+//!   batcher, worker pool.
+//! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
+//! * [`metrics`] — counters and latency histograms.
+//! * [`util`] — zero-dependency substrates (RNG, JSON, NPY, CLI, stats,
+//!   bench harness) required by the offline build environment.
+
+pub mod util;
+pub mod graph;
+pub mod partition;
+pub mod spmm;
+pub mod sim;
+pub mod model;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;

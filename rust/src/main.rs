@@ -1,0 +1,246 @@
+//! `accel-gcn` — leader binary: preprocessing, simulation, serving,
+//! training, and paper-reproduction entry points.
+//!
+//! ```text
+//! accel-gcn prepare   --out artifacts/quickstart [--graph collab|synthetic] ...
+//! accel-gcn simulate  --graph collab --coldim 64 [--kernels accel-gcn,...]
+//! accel-gcn datasets                      # Table I summary
+//! accel-gcn stats     --graph collab      # Fig. 2-style degree histogram
+//! accel-gcn train     --artifacts artifacts/quickstart --steps 300
+//! accel-gcn serve     --artifacts artifacts/quickstart --requests 64
+//! accel-gcn bench     --out results [--experiment fig5|fig6|...]
+//! ```
+
+use accel_gcn::bench as harness;
+use accel_gcn::coordinator::PreparedDataset;
+use accel_gcn::graph::datasets::{self, ScalePolicy};
+use accel_gcn::graph::{generator, stats, Csr};
+use accel_gcn::partition::patterns::PartitionParams;
+use accel_gcn::sim::kernels::{CostModel, PreparedGraph};
+use accel_gcn::sim::{simulate_kernel, GpuConfig, KernelKind, KernelOptions};
+use accel_gcn::util::cli::Args;
+use accel_gcn::util::rng::Pcg;
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let sub = argv[0].as_str();
+    let rest = &argv[1..];
+    let r = match sub {
+        "prepare" => cmd_prepare(rest),
+        "simulate" => cmd_simulate(rest),
+        "datasets" => cmd_datasets(rest),
+        "stats" => cmd_stats(rest),
+        "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "bench" => cmd_bench(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(anyhow::anyhow!("unknown subcommand `{other}`"))
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "accel-gcn — Accel-GCN reproduction (see README.md)\n\
+         subcommands:\n\
+         \x20 prepare   --out DIR [--graph NAME|synthetic] [--nodes N] [--avg-deg D]\n\
+         \x20           [--feat-dim F] [--classes K] [--seed S]\n\
+         \x20           [--max-block-warps W] [--max-warp-nzs Z]\n\
+         \x20 simulate  --graph NAME [--coldim C] [--kernels a,b] [--seed S]\n\
+         \x20 datasets  (print Table I specs and scale factors)\n\
+         \x20 stats     --graph NAME (Fig. 2 degree histogram)\n\
+         \x20 train     --artifacts DIR [--steps N]\n\
+         \x20 serve     --artifacts DIR [--requests N] [--coldims 16,32]\n\
+         \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|all]"
+    );
+}
+
+/// Build a graph from --graph: a Table I name or `synthetic`.
+fn build_graph(args: &Args) -> Result<(String, Csr)> {
+    let name = args.str_or("graph", "synthetic");
+    let seed = args.u64_or("seed", 42)?;
+    if name != "synthetic" {
+        let spec = datasets::by_name(&name)
+            .with_context(|| format!("unknown dataset `{name}` (see `accel-gcn datasets`)"))?;
+        let policy = ScalePolicy {
+            node_cap: args.usize_or("node-cap", ScalePolicy::default().node_cap)?,
+            edge_cap: args.usize_or("edge-cap", ScalePolicy::default().edge_cap)?,
+        };
+        Ok((name, datasets::materialize(spec, policy, seed)))
+    } else {
+        let n = args.usize_or("nodes", 2708)?;
+        let avg = args.f64_or("avg-deg", 4.0)?;
+        let mut rng = Pcg::seed_from(seed);
+        let degs = generator::degree_sequence(
+            generator::DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.05 },
+            n,
+            (n as f64 * avg) as usize,
+            &mut rng,
+        );
+        Ok((name, generator::from_degree_sequence(n, &degs, &mut rng)))
+    }
+}
+
+fn cmd_prepare(rest: &[String]) -> Result<()> {
+    let args = Args::parse(
+        rest,
+        &[
+            "out", "graph", "nodes", "avg-deg", "feat-dim", "classes", "seed",
+            "max-block-warps", "max-warp-nzs", "homophily", "node-cap", "edge-cap",
+        ],
+        &["no-features"],
+    )?;
+    let out = args.get("out").context("--out is required")?.to_string();
+    let params = PartitionParams {
+        max_block_warps: args.usize_or("max-block-warps", 12)?,
+        max_warp_nzs: args.usize_or("max-warp-nzs", 32)?,
+    };
+    let seed = args.u64_or("seed", 42)?;
+
+    let prepared = if args.str_or("graph", "synthetic") == "synthetic" && !args.flag("no-features")
+    {
+        // labeled community graph for the end-to-end training example
+        let n = args.usize_or("nodes", 2708)?;
+        let feat_dim = args.usize_or("feat-dim", 64)?;
+        let classes = args.usize_or("classes", 8)?;
+        let avg = args.f64_or("avg-deg", 4.0)?;
+        let homophily = args.f64_or("homophily", 0.82)?;
+        let mut rng = Pcg::seed_from(seed);
+        let g = generator::labeled_communities(n, avg, feat_dim, classes, homophily, &mut rng);
+        println!(
+            "generated labeled graph: {} nodes, {} edges, {} classes, feat_dim {}",
+            n,
+            g.csr.nnz(),
+            classes,
+            feat_dim
+        );
+        PreparedDataset::prepare(&g.csr, params).with_node_data(feat_dim, &g.features, &g.labels)
+    } else {
+        let (name, csr) = build_graph(&args)?;
+        println!("generated `{name}`: {} nodes, {} edges", csr.n_rows, csr.nnz());
+        PreparedDataset::prepare(&csr, params)
+    };
+
+    prepared.save(&out)?;
+    println!(
+        "prepared: {} blocks, {} warp tasks, metadata ratio {:.1}%, padding overhead {:.2}x",
+        prepared.partition.n_blocks(),
+        prepared.partition.n_warp_tasks(),
+        prepared.partition.footprint().ratio() * 100.0,
+        prepared.layout.padding_overhead(),
+    );
+    println!("wrote {out}/ (bell_spec.json + tensors); next: python -m compile.aot --spec {out}/bell_spec.json --out {out}");
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["graph", "coldim", "kernels", "seed", "nodes", "avg-deg", "node-cap", "edge-cap"], &[])?;
+    let (name, csr) = build_graph(&args)?;
+    let coldim = args.usize_or("coldim", 64)?;
+    let kernel_names =
+        args.str_list_or("kernels", &["accel-gcn", "cusparse", "gnnadvisor", "graphblast"]);
+    let cfg = GpuConfig::rtx3090();
+    let cost = CostModel::default();
+    let g = PreparedGraph::new(csr, PartitionParams::default());
+    println!(
+        "graph `{name}`: {} rows, {} nnz, coldim {coldim}",
+        g.original.n_rows,
+        g.original.nnz()
+    );
+    let mut table = accel_gcn::util::bench::Table::new(&[
+        "kernel", "time (µs)", "DRAM MB", "mem-bound", "SM load CV", "blocks",
+    ]);
+    for kn in &kernel_names {
+        let kind = match kn.as_str() {
+            "accel-gcn" => KernelKind::AccelGcn,
+            "cusparse" => KernelKind::CuSparse,
+            "gnnadvisor" => KernelKind::GnnAdvisor,
+            "graphblast" => KernelKind::GraphBlast,
+            other => bail!("unknown kernel `{other}`"),
+        };
+        let r = simulate_kernel(&cfg, &cost, kind, KernelOptions::default(), &g, coldim);
+        table.row(vec![
+            r.name.clone(),
+            format!("{:.1}", r.micros),
+            format!("{:.2}", r.dram_bytes / 1e6),
+            format!("{}", r.memory_bound),
+            format!("{:.3}", r.sm_load_cv),
+            format!("{}", r.n_blocks),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_datasets(_rest: &[String]) -> Result<()> {
+    let policy = ScalePolicy::default();
+    let mut table = accel_gcn::util::bench::Table::new(&[
+        "graph", "family", "paper nodes", "paper edges", "scale", "sim nodes", "sim edges",
+    ]);
+    for spec in datasets::TABLE1 {
+        let (n, e) = policy.scaled(spec);
+        table.row(vec![
+            spec.name.to_string(),
+            spec.family.name().to_string(),
+            spec.paper_nodes.to_string(),
+            spec.paper_edges.to_string(),
+            format!("{:.4}", policy.factor(spec)),
+            n.to_string(),
+            e.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_stats(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["graph", "seed", "nodes", "avg-deg", "node-cap", "edge-cap"], &[])?;
+    let (name, csr) = build_graph(&args)?;
+    let s = stats::graph_stats(&csr);
+    println!(
+        "`{name}`: {} rows, {} nnz, avg deg {:.2}, max deg {} ({:.1}x avg), cv {:.2}, {} empty rows",
+        s.n_rows, s.nnz, s.avg_degree, s.max_degree, s.max_over_avg, s.degree_cv, s.empty_rows
+    );
+    println!("row-degree histogram (log2 buckets):");
+    print!("{}", stats::degree_histogram(&csr).ascii(48));
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["artifacts", "steps", "log-every"], &[])?;
+    let dir = args.get("artifacts").context("--artifacts is required")?.to_string();
+    let steps = args.usize_or("steps", 300)?;
+    let log_every = args.usize_or("log-every", 20)?;
+    harness::train::run_training(&dir, steps, log_every).map(|_| ())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["artifacts", "requests", "coldims", "seed"], &[])?;
+    let dir = args.get("artifacts").context("--artifacts is required")?.to_string();
+    let n_requests = args.usize_or("requests", 64)?;
+    let coldims = args.usize_list_or("coldims", &[16, 32, 64])?;
+    harness::serve::run_serving(&dir, n_requests, &coldims, args.u64_or("seed", 1)?).map(|_| ())
+}
+
+fn cmd_bench(rest: &[String]) -> Result<()> {
+    let args = Args::parse(
+        rest,
+        &["out", "experiment", "seed", "node-cap", "edge-cap", "coldims", "graphs"],
+        &["quick"],
+    )?;
+    harness::paper::run_from_args(&args)
+}

@@ -1,0 +1,130 @@
+//! Serving metrics: counters and latency recorders with percentile
+//! snapshots. Thread-safe; shared via `Arc` between the coordinator's
+//! front end and its device thread.
+
+use crate::util::stats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency recorder: stores samples (seconds), reports percentiles.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Mutex<Vec<f64>>,
+}
+
+/// Snapshot of a latency distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySnapshot {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, seconds: f64) {
+        self.samples.lock().unwrap().push(seconds);
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let samples = self.samples.lock().unwrap();
+        if samples.is_empty() {
+            return LatencySnapshot { count: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+        }
+        LatencySnapshot {
+            count: samples.len(),
+            mean: stats::mean(&samples),
+            p50: stats::percentile(&samples, 50.0),
+            p95: stats::percentile(&samples, 95.0),
+            p99: stats::percentile(&samples, 99.0),
+            max: samples.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+impl LatencySnapshot {
+    pub fn render(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={} p50={} p95={} p99={} max={}",
+            self.count,
+            crate::util::bench::fmt_secs(self.mean),
+            crate::util::bench::fmt_secs(self.p50),
+            crate::util::bench::fmt_secs(self.p95),
+            crate::util::bench::fmt_secs(self.p99),
+            crate::util::bench::fmt_secs(self.max),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        use std::sync::Arc;
+        let c = Arc::new(Counter::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64 / 1000.0);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.p50 - 0.051).abs() < 0.002);
+        assert!(s.p99 >= 0.099 - 1e-9);
+        assert_eq!(s.max, 0.1);
+        assert!(s.render("test").contains("n=100"));
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = LatencyRecorder::new().snapshot();
+        assert_eq!(s.count, 0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Model configuration mirrored with `python/compile/model.py` and the
+//! AOT manifest.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// GCN-family architecture description (parsed from manifest.json).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub arch: String,
+    pub in_dim: usize,
+    pub hidden_dim: usize,
+    pub out_dim: usize,
+    pub n_layers: usize,
+    pub lr: f64,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            arch: j.req_str("arch")?.to_string(),
+            in_dim: j.req_usize("in_dim")?,
+            hidden_dim: j.req_usize("hidden_dim")?,
+            out_dim: j.req_usize("out_dim")?,
+            n_layers: j.req_usize("n_layers")?,
+            lr: j.req_f64("lr")?,
+            n_params: j.req_usize("n_params")?,
+        })
+    }
+
+    /// Parameters per layer, mirroring model.params_per_layer.
+    pub fn params_per_layer(&self) -> usize {
+        match self.arch.as_str() {
+            "gcn" => 2,
+            "sage" => 3,
+            "gin" => 4,
+            other => panic!("unknown arch {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_from_manifest_json() {
+        let j = Json::parse(
+            r#"{"arch":"gcn","in_dim":64,"hidden_dim":64,"out_dim":8,"n_layers":2,"lr":0.05,"n_params":4}"#,
+        )
+        .unwrap();
+        let m = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m.arch, "gcn");
+        assert_eq!(m.params_per_layer(), 2);
+        assert_eq!(m.n_params, 4);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"arch":"gcn"}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! BELL (Bucketed-ELL) export — the TPU-facing product of the paper's
+//! preprocessing (DESIGN.md §Hardware-Adaptation).
+//!
+//! The block-level partition turns the graph into a list of warp tasks
+//! with uniform per-block nonzero counts. For the Pallas kernel these
+//! tasks are regrouped into **buckets of uniform padded width** (powers
+//! of two up to `max_warp_nzs`, plus one bucket per split-chunk width):
+//! bucket `b` holds dense `[rows_b, W_b]` column-index and value tiles
+//! plus a `[rows_b]` destination-row vector. The kernel computes each
+//! task's partial sum as a dense gather+multiply and the surrounding JAX
+//! code scatter-adds partials by destination row — the moral equivalent
+//! of the paper's shared-memory/global atomics.
+//!
+//! A Python mirror lives in `python/compile/layout.py`; golden-file
+//! round-trip tests keep the two in sync.
+
+use super::block_level::BlockPartition;
+use crate::graph::csr::Csr;
+use crate::util::json::Json;
+use crate::util::npy::Npy;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Rows in every bucket are padded to a multiple of this (TPU sublane
+/// tile; also keeps shapes friendly for the simulator's row tiles).
+pub const ROW_TILE: usize = 8;
+
+/// One uniform-width bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BellBucket {
+    /// Padded nonzero width (power of two).
+    pub width: usize,
+    /// Live task rows (before padding).
+    pub rows: usize,
+    /// `rows` rounded up to a multiple of [`ROW_TILE`].
+    pub padded_rows: usize,
+    /// `[padded_rows × width]` column indices; padding points at column 0.
+    pub cols: Vec<i32>,
+    /// `[padded_rows × width]` values; padding is 0.0 so it adds nothing.
+    pub vals: Vec<f32>,
+    /// `[padded_rows]` destination (degree-sorted) row ids; padding rows
+    /// carry 0 with all-zero values.
+    pub out_row: Vec<i32>,
+}
+
+/// The full layout of one partitioned graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BellLayout {
+    /// Output rows (degree-sorted domain).
+    pub n_rows: usize,
+    /// Columns of the sparse matrix = rows of the dense `X`.
+    pub n_cols: usize,
+    pub nnz: usize,
+    /// Non-empty buckets, ascending width.
+    pub buckets: Vec<BellBucket>,
+}
+
+fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+impl BellLayout {
+    /// Build from a block partition over the degree-sorted CSR.
+    pub fn build(sorted: &Csr, bp: &BlockPartition) -> BellLayout {
+        // group tasks by pow2-rounded width
+        let mut groups: BTreeMap<usize, Vec<(u32, usize, usize)>> = BTreeMap::new();
+        for t in bp.warp_tasks() {
+            let w = next_pow2(t.nz_len.max(1));
+            groups.entry(w).or_default().push((t.sorted_row, t.nz_start, t.nz_len));
+        }
+        let mut buckets = Vec::with_capacity(groups.len());
+        for (width, tasks) in groups {
+            let rows = tasks.len();
+            let padded_rows = rows.div_ceil(ROW_TILE) * ROW_TILE;
+            let mut cols = vec![0i32; padded_rows * width];
+            let mut vals = vec![0f32; padded_rows * width];
+            let mut out_row = vec![0i32; padded_rows];
+            for (i, (sorted_row, nz_start, nz_len)) in tasks.into_iter().enumerate() {
+                out_row[i] = sorted_row as i32;
+                for k in 0..nz_len {
+                    cols[i * width + k] = sorted.col_idx[nz_start + k] as i32;
+                    vals[i * width + k] = sorted.vals[nz_start + k];
+                }
+            }
+            buckets.push(BellBucket { width, rows, padded_rows, cols, vals, out_row });
+        }
+        BellLayout { n_rows: sorted.n_rows, n_cols: sorted.n_cols, nnz: sorted.nnz(), buckets }
+    }
+
+    /// Merge buckets with fewer than `min_rows` live tasks into the next
+    /// wider bucket (padding their tasks to the wider width). Fewer
+    /// buckets = fewer Pallas kernel launches per aggregation in the AOT
+    /// graph (SS Perf, L2): the widest bucket is never merged away, and
+    /// numerics are unchanged since padding slots carry zero values.
+    pub fn coalesce(mut self, min_rows: usize) -> BellLayout {
+        let mut i = 0;
+        while i + 1 < self.buckets.len() {
+            if self.buckets[i].rows < min_rows {
+                let src = self.buckets.remove(i);
+                let dst = &mut self.buckets[i];
+                let (sw, dw) = (src.width, dst.width);
+                debug_assert!(sw < dw);
+                // append src tasks, re-padded to dst width
+                let mut cols = Vec::with_capacity((dst.rows + src.rows) * dw);
+                let mut vals = Vec::with_capacity((dst.rows + src.rows) * dw);
+                let mut out_row = Vec::with_capacity(dst.rows + src.rows);
+                for r in 0..dst.rows {
+                    cols.extend_from_slice(&dst.cols[r * dw..(r + 1) * dw]);
+                    vals.extend_from_slice(&dst.vals[r * dw..(r + 1) * dw]);
+                    out_row.push(dst.out_row[r]);
+                }
+                for r in 0..src.rows {
+                    cols.extend_from_slice(&src.cols[r * sw..(r + 1) * sw]);
+                    cols.extend(std::iter::repeat(0).take(dw - sw));
+                    vals.extend_from_slice(&src.vals[r * sw..(r + 1) * sw]);
+                    vals.extend(std::iter::repeat(0.0).take(dw - sw));
+                    out_row.push(src.out_row[r]);
+                }
+                let rows = dst.rows + src.rows;
+                let padded_rows = rows.div_ceil(ROW_TILE) * ROW_TILE;
+                cols.resize(padded_rows * dw, 0);
+                vals.resize(padded_rows * dw, 0.0);
+                out_row.resize(padded_rows, 0);
+                *dst = BellBucket { width: dw, rows, padded_rows, cols, vals, out_row };
+                // stay at i: the merged bucket may still be under min_rows
+            } else {
+                i += 1;
+            }
+        }
+        self
+    }
+
+    /// Total padded slots across buckets (the kernel's FLOP volume).
+    pub fn padded_nnz(&self) -> usize {
+        self.buckets.iter().map(|b| b.padded_rows * b.width).sum()
+    }
+
+    /// Padding overhead = padded / real nonzeros.
+    pub fn padding_overhead(&self) -> f64 {
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        self.padded_nnz() as f64 / self.nnz as f64
+    }
+
+    /// Reference execution of the layout: gather + multiply + scatter-add,
+    /// exactly what the Pallas kernel + segment-sum perform. `x` is
+    /// `[n_cols × f]` row-major; the result is in the **sorted** row
+    /// domain.
+    pub fn execute(&self, x: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_cols * f, "X shape mismatch");
+        let mut y = vec![0f32; self.n_rows * f];
+        for b in &self.buckets {
+            for i in 0..b.padded_rows {
+                let dst = b.out_row[i] as usize;
+                let yrow = &mut y[dst * f..(dst + 1) * f];
+                for k in 0..b.width {
+                    let v = b.vals[i * b.width + k];
+                    if v != 0.0 {
+                        let c = b.cols[i * b.width + k] as usize;
+                        let xrow = &x[c * f..(c + 1) * f];
+                        for j in 0..f {
+                            yrow[j] += v * xrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// JSON spec consumed by `python/compile/aot.py` (shapes only).
+    pub fn spec(&self) -> Json {
+        let mut spec = Json::obj();
+        spec.set("n_rows", self.n_rows);
+        spec.set("n_cols", self.n_cols);
+        spec.set("nnz", self.nnz);
+        spec.set("row_tile", ROW_TILE);
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .map(|b| {
+                let mut o = Json::obj();
+                o.set("width", b.width).set("rows", b.rows).set("padded_rows", b.padded_rows);
+                o
+            })
+            .collect();
+        spec.set("buckets", Json::Arr(buckets));
+        spec
+    }
+
+    /// Write `spec.json` + per-bucket npy tensors into `dir`:
+    /// `bell_w{width}_{cols,vals,rows}.npy`.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("bell_spec.json"), self.spec().to_pretty())
+            .context("write bell_spec.json")?;
+        for b in &self.buckets {
+            let w = b.width;
+            Npy::from_i32(&[b.padded_rows, w], &b.cols).save(dir.join(format!("bell_w{w}_cols.npy")))?;
+            Npy::from_f32(&[b.padded_rows, w], &b.vals).save(dir.join(format!("bell_w{w}_vals.npy")))?;
+            Npy::from_i32(&[b.padded_rows], &b.out_row).save(dir.join(format!("bell_w{w}_rows.npy")))?;
+        }
+        Ok(())
+    }
+
+    /// Load a layout previously written by [`BellLayout::save`].
+    pub fn load(dir: impl AsRef<Path>) -> Result<BellLayout> {
+        let dir = dir.as_ref();
+        let spec = Json::parse(&std::fs::read_to_string(dir.join("bell_spec.json"))?)?;
+        let n_rows = spec.req_usize("n_rows")?;
+        let n_cols = spec.req_usize("n_cols")?;
+        let nnz = spec.req_usize("nnz")?;
+        let mut buckets = Vec::new();
+        for b in spec.req_arr("buckets")? {
+            let width = b.req_usize("width")?;
+            let rows = b.req_usize("rows")?;
+            let padded_rows = b.req_usize("padded_rows")?;
+            let cols = Npy::load(dir.join(format!("bell_w{width}_cols.npy")))?.to_i32()?;
+            let vals = Npy::load(dir.join(format!("bell_w{width}_vals.npy")))?.to_f32()?;
+            let out_row = Npy::load(dir.join(format!("bell_w{width}_rows.npy")))?.to_i32()?;
+            anyhow::ensure!(cols.len() == padded_rows * width, "cols shape mismatch");
+            anyhow::ensure!(vals.len() == padded_rows * width, "vals shape mismatch");
+            anyhow::ensure!(out_row.len() == padded_rows, "rows shape mismatch");
+            buckets.push(BellBucket { width, rows, padded_rows, cols, vals, out_row });
+        }
+        Ok(BellLayout { n_rows, n_cols, nnz, buckets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::degree::DegreeSorted;
+    use crate::partition::patterns::PartitionParams;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    fn random_graph(rng: &mut Pcg, n: usize, max_deg: usize) -> Csr {
+        let mut edges = Vec::new();
+        for r in 0..n {
+            let d = if rng.f64() < 0.1 { rng.range(0, max_deg + 1) } else { rng.range(0, 6) };
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    fn build_layout(csr: &Csr, params: PartitionParams) -> (Csr, BellLayout) {
+        let ds = DegreeSorted::new(csr);
+        let bp = BlockPartition::build(&ds.csr, params);
+        let layout = BellLayout::build(&ds.csr, &bp);
+        (ds.csr, layout)
+    }
+
+    #[test]
+    fn widths_are_pow2_and_sorted() {
+        let mut rng = Pcg::seed_from(3);
+        let csr = random_graph(&mut rng, 60, 50);
+        let (_, layout) = build_layout(&csr, PartitionParams { max_block_warps: 4, max_warp_nzs: 8 });
+        for w in layout.buckets.windows(2) {
+            assert!(w[0].width < w[1].width);
+        }
+        for b in &layout.buckets {
+            assert!(b.width.is_power_of_two());
+            assert_eq!(b.padded_rows % ROW_TILE, 0);
+            assert!(b.rows <= b.padded_rows && b.padded_rows < b.rows + ROW_TILE);
+        }
+    }
+
+    #[test]
+    fn execute_matches_dense_reference() {
+        let mut rng = Pcg::seed_from(4);
+        let csr = random_graph(&mut rng, 40, 30);
+        let (sorted, layout) = build_layout(&csr, PartitionParams { max_block_warps: 2, max_warp_nzs: 4 });
+        let f = 5;
+        let x: Vec<f32> = (0..40 * f).map(|_| rng.f32() - 0.5).collect();
+        let want = sorted.spmm_dense(&x, f);
+        let got = layout.execute(&x, f);
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn padding_rows_are_inert() {
+        let mut rng = Pcg::seed_from(5);
+        let csr = random_graph(&mut rng, 20, 10);
+        let (_, layout) = build_layout(&csr, PartitionParams::default());
+        for b in &layout.buckets {
+            for i in b.rows..b.padded_rows {
+                assert_eq!(b.out_row[i], 0);
+                for k in 0..b.width {
+                    assert_eq!(b.vals[i * b.width + k], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Pcg::seed_from(6);
+        let csr = random_graph(&mut rng, 30, 20);
+        let (_, layout) = build_layout(&csr, PartitionParams { max_block_warps: 4, max_warp_nzs: 4 });
+        let dir = std::env::temp_dir().join("accel_gcn_bell_test");
+        layout.save(&dir).unwrap();
+        let back = BellLayout::load(&dir).unwrap();
+        assert_eq!(layout, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spec_shape() {
+        let mut rng = Pcg::seed_from(7);
+        let csr = random_graph(&mut rng, 25, 12);
+        let (_, layout) = build_layout(&csr, PartitionParams::default());
+        let spec = layout.spec();
+        assert_eq!(spec.req_usize("n_rows").unwrap(), 25);
+        assert_eq!(spec.req_arr("buckets").unwrap().len(), layout.buckets.len());
+    }
+
+    #[test]
+    fn coalesce_preserves_numerics_and_reduces_buckets() {
+        let mut rng = Pcg::seed_from(8);
+        let csr = random_graph(&mut rng, 80, 40);
+        let (sorted, layout) = build_layout(&csr, PartitionParams::default());
+        let n_before = layout.buckets.len();
+        let merged = layout.clone().coalesce(1_000_000); // force max merging
+        assert_eq!(merged.buckets.len(), 1.min(n_before.max(1)));
+        let f = 4;
+        let x: Vec<f32> = (0..80 * f).map(|_| rng.f32() - 0.5).collect();
+        let want = sorted.spmm_dense(&x, f);
+        for l in [&layout, &merged] {
+            let got = l.execute(&x, f);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+        // moderate threshold merges only sparse buckets
+        let partial = layout.clone().coalesce(16);
+        assert!(partial.buckets.len() <= n_before);
+        for b in &partial.buckets {
+            let last = partial.buckets.last().unwrap().width;
+            assert!(b.rows >= 16 || b.width == last);
+        }
+        let got = partial.execute(&x, f);
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prop_coalesce_equals_reference() {
+        proptest::check("bell_coalesce", 0xC0A1, 15, |rng| {
+            let n = rng.range(1, 60);
+            let csr = random_graph(rng, n, 30);
+            let (sorted, layout) = build_layout(&csr, PartitionParams { max_block_warps: 4, max_warp_nzs: 8 });
+            let merged = layout.coalesce(rng.range(1, 40));
+            let f = rng.range(1, 5);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let want = sorted.spmm_dense(&x, f);
+            let got = merged.execute(&x, f);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_execute_equals_reference() {
+        proptest::check("bell_execute", 0xBE11, 20, |rng| {
+            let n = rng.range(1, 60);
+            let csr = random_graph(rng, n, 40);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 4, 12]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 8, 32]),
+            };
+            let (sorted, layout) = build_layout(&csr, params);
+            let f = rng.range(1, 7);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let want = sorted.spmm_dense(&x, f);
+            let got = layout.execute(&x, f);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_padding_overhead_bounded() {
+        // structural bound: pow2 rounding wastes < 2x within a task and
+        // row padding adds < ROW_TILE rows of `width` slots per bucket
+        proptest::check("bell_padding", 0xBE12, 15, |rng| {
+            let n = rng.range(ROW_TILE * 4, 200);
+            let csr = random_graph(rng, n, 30);
+            let (_, layout) = build_layout(&csr, PartitionParams::default());
+            let row_pad_slots: usize =
+                layout.buckets.iter().map(|b| ROW_TILE * b.width).sum();
+            assert!(
+                layout.padded_nnz() <= 2 * layout.nnz + row_pad_slots,
+                "padded={} nnz={} row_pad={}",
+                layout.padded_nnz(),
+                layout.nnz,
+                row_pad_slots
+            );
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! The int4 (128-bit) per-block metadata record and the storage
+//! accounting of Eq. 1 / Fig. 3.
+//!
+//! One record per block, shared by every warp in the block — this is the
+//! paper's metadata-compression claim: block-level partitioning needs
+//! roughly `1 / avg_warps_per_block` of the warp-level metadata (≈8% at
+//! `max_block_warps = 12`).
+
+/// 128-bit block descriptor, paper §III-C:
+/// * `deg` — degree of the rows this block covers,
+/// * `loc` — starting nonzero address (index into `col_idx`/`vals`),
+/// * `row` — starting (degree-sorted) row id,
+/// * `info` — if `deg < deg_bound`: `warp_nzs` (high 16 bits) and
+///   `block_rows` (low 16 bits); else: the nonzero count assigned to
+///   this block of a split row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockMeta {
+    pub deg: u32,
+    pub loc: u32,
+    pub row: u32,
+    pub info: u32,
+}
+
+impl BlockMeta {
+    /// Pack the pattern-path info word: `warp_nzs | block_rows`.
+    pub fn pack_info(warp_nzs: usize, block_rows: usize) -> u32 {
+        assert!(warp_nzs <= u16::MAX as usize && block_rows <= u16::MAX as usize);
+        ((warp_nzs as u32) << 16) | block_rows as u32
+    }
+
+    /// Pattern-path accessor: nonzeros per warp.
+    pub fn warp_nzs(&self) -> usize {
+        (self.info >> 16) as usize
+    }
+
+    /// Pattern-path accessor: rows handled by this block.
+    pub fn block_rows(&self) -> usize {
+        (self.info & 0xFFFF) as usize
+    }
+
+    /// Split-path accessor: nonzeros assigned to this block.
+    pub fn split_nzs(&self) -> usize {
+        self.info as usize
+    }
+
+    /// Whether this block is a chunk of a row whose degree exceeds
+    /// `deg_bound` (Algorithm 2, second branch). Rows of exactly
+    /// `deg_bound` still fit one block via the pattern path (Fig. 3).
+    pub fn is_split(&self, deg_bound: usize) -> bool {
+        self.deg as usize > deg_bound
+    }
+
+    /// Serialize to the 128-bit on-device layout (4 × u32, little end.).
+    pub fn to_words(&self) -> [u32; 4] {
+        [self.deg, self.loc, self.row, self.info]
+    }
+
+    pub fn from_words(w: [u32; 4]) -> BlockMeta {
+        BlockMeta { deg: w[0], loc: w[1], row: w[2], info: w[3] }
+    }
+}
+
+/// Metadata record size in bytes — one int4 per block (128-bit memory
+/// bus transaction, paper §III-C).
+pub const BLOCK_META_BYTES: usize = 16;
+
+/// Warp-level metadata record size: `{row, col, len}` = 96 bits padded
+/// to 128 for bus alignment (paper Fig. 3(b)).
+pub const WARP_META_BYTES: usize = 16;
+
+/// Storage accounting comparing the two schemes (Eq. 1).
+#[derive(Clone, Copy, Debug)]
+pub struct MetadataFootprint {
+    pub n_blocks: usize,
+    pub n_warp_tasks: usize,
+    pub block_level_bytes: usize,
+    pub warp_level_bytes: usize,
+}
+
+impl MetadataFootprint {
+    pub fn new(n_blocks: usize, n_warp_tasks: usize) -> Self {
+        MetadataFootprint {
+            n_blocks,
+            n_warp_tasks,
+            block_level_bytes: n_blocks * BLOCK_META_BYTES,
+            warp_level_bytes: n_warp_tasks * WARP_META_BYTES,
+        }
+    }
+
+    /// `S_B / S_W ≈ 1 / avg_warps_per_block` (Eq. 1).
+    pub fn ratio(&self) -> f64 {
+        if self.warp_level_bytes == 0 {
+            return 0.0;
+        }
+        self.block_level_bytes as f64 / self.warp_level_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_packing_roundtrip() {
+        let info = BlockMeta::pack_info(2, 2);
+        let m = BlockMeta { deg: 2, loc: 0, row: 0, info };
+        assert_eq!(m.warp_nzs(), 2);
+        assert_eq!(m.block_rows(), 2);
+    }
+
+    #[test]
+    fn fig3_bp1_bp2() {
+        // Fig. 3(c): BP-1 = {deg=2, loc=0, row=0, info=2|2},
+        //            BP-2 = {deg=4, loc=4, row=2, info=2|1}
+        let bp1 = BlockMeta { deg: 2, loc: 0, row: 0, info: BlockMeta::pack_info(2, 2) };
+        let bp2 = BlockMeta { deg: 4, loc: 4, row: 2, info: BlockMeta::pack_info(2, 1) };
+        assert_eq!(bp1.warp_nzs(), 2);
+        assert_eq!(bp1.block_rows(), 2);
+        assert_eq!(bp2.warp_nzs(), 2);
+        assert_eq!(bp2.block_rows(), 1);
+        // deg_bound = 4 in the Fig. 3 config: deg 4 still fits one block
+        assert!(!bp2.is_split(4));
+        assert!(!bp1.is_split(4));
+        assert!(BlockMeta { deg: 5, loc: 0, row: 0, info: 5 }.is_split(4));
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let m = BlockMeta { deg: 7, loc: 123, row: 5, info: BlockMeta::pack_info(3, 4) };
+        assert_eq!(BlockMeta::from_words(m.to_words()), m);
+    }
+
+    #[test]
+    fn eq1_ratio() {
+        // avg 12 warps per block → ratio ≈ 1/12 ≈ 8.3% (paper: "a mere 8%")
+        let f = MetadataFootprint::new(100, 1200);
+        assert!((f.ratio() - 1.0 / 12.0).abs() < 1e-9);
+        assert!(f.ratio() < 0.10);
+    }
+
+    #[test]
+    fn empty_footprint() {
+        let f = MetadataFootprint::new(0, 0);
+        assert_eq!(f.ratio(), 0.0);
+    }
+}

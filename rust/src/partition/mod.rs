@@ -1,0 +1,26 @@
+//! The paper's preprocessing contribution (§III-C).
+//!
+//! * [`patterns`] — Algorithm 1: the degree → `(block_rows, warp_nzs)`
+//!   partition-pattern table.
+//! * [`block_level`] — Algorithm 2: single-pass block-level partitioning
+//!   over a degree-sorted CSR, emitting one int4 metadata record per
+//!   block (and splitting rows with `deg > deg_bound` across blocks).
+//! * [`metadata`] — the 128-bit metadata encoding and the storage-ratio
+//!   accounting of Eq. 1 / Fig. 3.
+//! * [`warp_level`] — the GNNAdvisor-style fixed-size neighbour-group
+//!   baseline the paper compares against (Fig. 7).
+//! * [`bucket`] — BELL export: the paper's warp workload list regrouped
+//!   into uniform-width buckets, the layout the Pallas kernel consumes
+//!   (DESIGN.md §Hardware-Adaptation).
+
+pub mod patterns;
+pub mod block_level;
+pub mod metadata;
+pub mod warp_level;
+pub mod bucket;
+
+pub use block_level::{BlockPartition, WarpTask};
+pub use bucket::BellLayout;
+pub use metadata::BlockMeta;
+pub use patterns::{PartitionParams, PatternTable};
+pub use warp_level::WarpPartition;

@@ -1,0 +1,207 @@
+//! Algorithm 1 — "Get partition patterns".
+//!
+//! For every degree `1 ≤ deg ≤ deg_bound` (`deg_bound = max_block_warps ×
+//! max_warp_nzs`), pick the smallest factor `f` of `max_block_warps` such
+//! that `f × max_warp_nzs ≥ deg`. A row of that degree is then processed
+//! by `f` warps, each handling `warp_nzs = ceil(deg / f)` nonzeros, and a
+//! block holds `block_rows = max_block_warps / f` rows — so every block is
+//! fully populated with `max_block_warps` warps of (nearly) equal load,
+//! which is exactly the workload-balance property Fig. 4(e) illustrates.
+
+/// Tunable parameters of the partitioner. Paper defaults: a block has up
+/// to 12 warps (`max_block_warps`, the example value given with Eq. 1)
+/// and a warp handles up to 32 nonzeros.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionParams {
+    pub max_block_warps: usize,
+    pub max_warp_nzs: usize,
+}
+
+impl Default for PartitionParams {
+    fn default() -> Self {
+        PartitionParams { max_block_warps: 12, max_warp_nzs: 32 }
+    }
+}
+
+impl PartitionParams {
+    /// Maximum nonzeros a single block can absorb; rows beyond this are
+    /// split across blocks (Algorithm 2, second branch).
+    pub fn deg_bound(&self) -> usize {
+        self.max_block_warps * self.max_warp_nzs
+    }
+}
+
+/// The pattern chosen for one degree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pattern {
+    /// Rows per block (`max_block_warps / factor`).
+    pub block_rows: usize,
+    /// Nonzeros per warp (`ceil(deg / factor)`).
+    pub warp_nzs: usize,
+    /// Warps cooperating on one row (`factor`).
+    pub warps_per_row: usize,
+}
+
+/// Pattern table for degrees `1..=deg_bound` (index `deg - 1`).
+///
+/// Note: Algorithm 1's loop reads `while deg < deg_bound`, but Fig. 3's
+/// worked example partitions a row of exactly `deg_bound` nonzeros via
+/// the pattern path (BP-2: deg=4=deg_bound, info=2|1), so the intended
+/// range is inclusive — a full `deg_bound` row fits exactly one block.
+#[derive(Clone, Debug)]
+pub struct PatternTable {
+    pub params: PartitionParams,
+    patterns: Vec<Pattern>,
+}
+
+impl PatternTable {
+    /// Algorithm 1, literally: walk `deg` upward, advancing through the
+    /// sorted factors of `max_block_warps` whenever the current factor
+    /// can no longer cover `deg`.
+    pub fn build(params: PartitionParams) -> PatternTable {
+        assert!(params.max_block_warps >= 1 && params.max_warp_nzs >= 1);
+        let deg_bound = params.deg_bound();
+        let factors = factors_of(params.max_block_warps);
+        let mut patterns = Vec::with_capacity(deg_bound);
+        let mut i = 0usize;
+        let mut deg = 1usize;
+        while deg <= deg_bound {
+            if factors[i] * params.max_warp_nzs >= deg {
+                let f = factors[i];
+                patterns.push(Pattern {
+                    block_rows: params.max_block_warps / f,
+                    warp_nzs: deg.div_ceil(f),
+                    warps_per_row: f,
+                });
+                deg += 1;
+            } else {
+                i += 1;
+            }
+        }
+        PatternTable { params, patterns }
+    }
+
+    /// Pattern for a row of `deg` nonzeros, `1 ≤ deg ≤ deg_bound`.
+    pub fn get(&self, deg: usize) -> Pattern {
+        assert!(
+            deg >= 1 && deg <= self.params.deg_bound(),
+            "degree {deg} outside pattern range [1, {}]",
+            self.params.deg_bound()
+        );
+        self.patterns[deg - 1]
+    }
+
+    /// All degrees covered by the table.
+    pub fn degrees(&self) -> impl Iterator<Item = usize> {
+        1..=self.params.deg_bound()
+    }
+}
+
+/// Sorted factors of `n` (ascending), e.g. 12 → [1, 2, 3, 4, 6, 12].
+pub fn factors_of(n: usize) -> Vec<usize> {
+    let mut f: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+    f.sort_unstable();
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors() {
+        assert_eq!(factors_of(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(factors_of(1), vec![1]);
+        assert_eq!(factors_of(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn default_params_match_paper() {
+        let p = PartitionParams::default();
+        assert_eq!(p.max_block_warps, 12);
+        assert_eq!(p.deg_bound(), 384);
+    }
+
+    #[test]
+    fn fig3_example() {
+        // Fig. 3: max_block_warps = 2, max_warp_nzs = 2 → deg_bound = 4.
+        // deg 2 → factor 1: block_rows 2, warp_nzs 2 (BP-1: two rows of
+        // deg 2, each warp takes a whole row).
+        let t = PatternTable::build(PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        let p2 = t.get(2);
+        assert_eq!(p2, Pattern { block_rows: 2, warp_nzs: 2, warps_per_row: 1 });
+        // deg 3 → factor 2 (1×2 < 3): block_rows 1, warp_nzs ceil(3/2)=2
+        let p3 = t.get(3);
+        assert_eq!(p3, Pattern { block_rows: 1, warp_nzs: 2, warps_per_row: 2 });
+    }
+
+    #[test]
+    fn covers_all_degrees_below_bound() {
+        let t = PatternTable::build(PartitionParams::default());
+        for deg in t.degrees() {
+            let p = t.get(deg);
+            // invariant 1: the pattern's warps cover the row
+            assert!(
+                p.warps_per_row * p.warp_nzs >= deg,
+                "deg {deg}: {p:?} does not cover"
+            );
+            // invariant 2: warp_nzs within the cap
+            assert!(p.warp_nzs <= t.params.max_warp_nzs, "deg {deg}: {p:?}");
+            // invariant 3: block fully populated with warps
+            assert_eq!(p.block_rows * p.warps_per_row, t.params.max_block_warps);
+        }
+    }
+
+    #[test]
+    fn pattern_waste_bounded() {
+        // the chosen factor is minimal, so the *previous* factor cannot
+        // cover the degree: warp utilization is > 50% for factor steps ≤ 2x
+        let t = PatternTable::build(PartitionParams::default());
+        let factors = factors_of(12);
+        for deg in t.degrees() {
+            let p = t.get(deg);
+            let fi = factors.iter().position(|&f| f == p.warps_per_row).unwrap();
+            if fi > 0 {
+                assert!(
+                    factors[fi - 1] * t.params.max_warp_nzs < deg,
+                    "deg {deg}: factor {} not minimal",
+                    p.warps_per_row
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_warps_per_row() {
+        let t = PatternTable::build(PartitionParams::default());
+        let mut last = 0;
+        for deg in t.degrees() {
+            let w = t.get(deg).warps_per_row;
+            assert!(w >= last, "warps_per_row not monotone at deg {deg}");
+            last = w;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside pattern range")]
+    fn degree_beyond_bound_panics() {
+        let t = PatternTable::build(PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        t.get(5);
+    }
+
+    #[test]
+    fn degree_exactly_bound_is_one_full_block() {
+        // Fig. 3 BP-2: deg = deg_bound = 4 → 2 warps × 2 nzs, 1 row
+        let t = PatternTable::build(PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        assert_eq!(t.get(4), Pattern { block_rows: 1, warp_nzs: 2, warps_per_row: 2 });
+    }
+
+    #[test]
+    fn single_warp_blocks() {
+        // degenerate config: 1 warp per block
+        let t = PatternTable::build(PartitionParams { max_block_warps: 1, max_warp_nzs: 8 });
+        for deg in t.degrees() {
+            assert_eq!(t.get(deg), Pattern { block_rows: 1, warp_nzs: deg, warps_per_row: 1 });
+        }
+    }
+}

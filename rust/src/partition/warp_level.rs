@@ -1,0 +1,184 @@
+//! Warp-level partitioning — the GNNAdvisor-style baseline (Fig. 3(b),
+//! Fig. 7's comparison target).
+//!
+//! Every row is chopped into fixed-size neighbour groups (NG) of
+//! `group_size` nonzeros; each group is one warp's workload with its own
+//! `{row, col(loc), len}` metadata record (96 bits padded to 128). The
+//! fixed group size is the source of the imbalance the paper attacks:
+//! a residual group of 1 nonzero occupies a whole warp, and each warp
+//! loops over the dense column dimension alone (no combined-warp
+//! coalescing).
+
+use super::metadata::{MetadataFootprint, WARP_META_BYTES};
+use crate::graph::csr::Csr;
+
+/// One neighbour-group = one warp workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NzGroup {
+    pub row: u32,
+    /// Starting nonzero index (paper's `col` field points at the CSR
+    /// position of the group's first nonzero).
+    pub loc: u32,
+    pub len: u32,
+}
+
+/// The warp-level partition of a graph.
+#[derive(Clone, Debug)]
+pub struct WarpPartition {
+    pub group_size: usize,
+    pub groups: Vec<NzGroup>,
+    pub n_rows: usize,
+    pub nnz: usize,
+}
+
+impl WarpPartition {
+    /// GNNAdvisor's default neighbour-group size.
+    pub const DEFAULT_GROUP_SIZE: usize = 32;
+
+    /// Chop each row into `group_size` chunks. Works on any CSR (sorted
+    /// or not); the paper's Fig. 7 baseline applies it to the original
+    /// row order.
+    pub fn build(csr: &Csr, group_size: usize) -> WarpPartition {
+        assert!(group_size >= 1);
+        let mut groups = Vec::new();
+        for r in 0..csr.n_rows {
+            let start = csr.row_ptr[r];
+            let deg = csr.degree(r);
+            let mut off = 0usize;
+            while off < deg {
+                let len = (deg - off).min(group_size);
+                groups.push(NzGroup { row: r as u32, loc: (start + off) as u32, len: len as u32 });
+                off += len;
+            }
+        }
+        WarpPartition { group_size, groups, n_rows: csr.n_rows, nnz: csr.nnz() }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Metadata bytes: one padded 128-bit record per group (Fig. 3(b)).
+    pub fn metadata_bytes(&self) -> usize {
+        self.groups.len() * WARP_META_BYTES
+    }
+
+    /// Footprint comparison helper against a block partition.
+    pub fn footprint_vs(&self, block_blocks: usize) -> MetadataFootprint {
+        MetadataFootprint::new(block_blocks, self.groups.len())
+    }
+
+    /// Warp-load imbalance: coefficient of variation of group lengths.
+    /// Fixed-size grouping leaves the tail group of every row short —
+    /// on power-law graphs this is the paper's Fig. 4(d) effect.
+    pub fn load_cv(&self) -> f64 {
+        let mut stats = crate::util::stats::OnlineStats::new();
+        for g in &self.groups {
+            stats.push(g.len as f64);
+        }
+        stats.cv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn fig3b_example() {
+        // Fig. 3(b): warps manage ≤ 2 nzs; row0 deg 2, row1 deg 4, row2 deg 2
+        let csr = Csr::from_edges(
+            3,
+            5,
+            &[
+                (0, 0, 1.0),
+                (0, 1, 1.0),
+                (1, 0, 1.0),
+                (1, 2, 1.0),
+                (1, 3, 1.0),
+                (1, 4, 1.0),
+                (2, 1, 1.0),
+                (2, 3, 1.0),
+            ],
+        )
+        .unwrap();
+        let wp = WarpPartition::build(&csr, 2);
+        // WP-1: row0 loc0 len2; WP-2/WP-3: row1; WP-4: row2
+        assert_eq!(wp.groups.len(), 4);
+        assert_eq!(wp.groups[0], NzGroup { row: 0, loc: 0, len: 2 });
+        assert_eq!(wp.groups[1], NzGroup { row: 1, loc: 2, len: 2 });
+        assert_eq!(wp.groups[2], NzGroup { row: 1, loc: 4, len: 2 });
+        assert_eq!(wp.groups[3], NzGroup { row: 2, loc: 6, len: 2 });
+        // cumulative metadata: 4 × 128 bits (96 + padding), Fig. 3 text
+        assert_eq!(wp.metadata_bytes(), 64);
+    }
+
+    #[test]
+    fn residual_groups_short() {
+        let csr = Csr::from_edges(1, 5, &[(0, 0, 1.0), (0, 1, 1.0), (0, 2, 1.0)]).unwrap();
+        let wp = WarpPartition::build(&csr, 2);
+        assert_eq!(wp.groups.len(), 2);
+        assert_eq!(wp.groups[1].len, 1); // the tail group is half idle
+    }
+
+    #[test]
+    fn zero_rows_emit_nothing() {
+        let csr = Csr::from_edges(3, 3, &[(1, 0, 1.0)]).unwrap();
+        let wp = WarpPartition::build(&csr, 4);
+        assert_eq!(wp.n_groups(), 1);
+    }
+
+    #[test]
+    fn prop_groups_cover_exactly() {
+        proptest::check("warp_partition_coverage", 0xAA01, 30, |rng| {
+            let n = rng.range(1, 100);
+            let mut edges = Vec::new();
+            for r in 0..n {
+                for _ in 0..rng.range(0, 12) {
+                    edges.push((r as u32, rng.range(0, n) as u32, 1.0));
+                }
+            }
+            let csr = Csr::from_edges(n, n, &edges).unwrap();
+            let gs = *rng.choose(&[1usize, 2, 4, 32]);
+            let wp = WarpPartition::build(&csr, gs);
+            let mut covered = vec![0u8; csr.nnz()];
+            for g in &wp.groups {
+                assert!(g.len >= 1 && g.len as usize <= gs);
+                let row = g.row as usize;
+                assert!((g.loc as usize) >= csr.row_ptr[row]);
+                assert!((g.loc + g.len) as usize <= csr.row_ptr[row + 1]);
+                for i in g.loc..g.loc + g.len {
+                    covered[i as usize] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1));
+        });
+    }
+
+    #[test]
+    fn imbalance_grows_with_power_law() {
+        // on a power-law graph, fixed-size groups are less balanced than
+        // on a regular graph — the motivation for block-level partition
+        let mut rng = Pcg::seed_from(11);
+        let n = 400;
+        let pl_degs = crate::graph::generator::degree_sequence(
+            crate::graph::generator::DegreeModel::PowerLaw { alpha: 2.0, dmax_frac: 0.3 },
+            n,
+            n * 6,
+            &mut rng,
+        );
+        let pl = crate::graph::generator::from_degree_sequence(n, &pl_degs, &mut rng);
+        let reg_degs = vec![6usize; n];
+        let reg = crate::graph::generator::from_degree_sequence(n, &reg_degs, &mut rng);
+        let wp_pl = WarpPartition::build(&pl, 32);
+        let wp_reg = WarpPartition::build(&reg, 32);
+        assert!(
+            wp_pl.load_cv() > wp_reg.load_cv(),
+            "pl cv={} reg cv={}",
+            wp_pl.load_cv(),
+            wp_reg.load_cv()
+        );
+    }
+}

@@ -1,0 +1,239 @@
+//! AOT manifest parsing (`manifest.json`, written by `compile/aot.py`).
+//!
+//! The manifest pins the **flat input order** of every artifact — the
+//! contract between jax's lowering and the Rust execute path. All input
+//! assembly goes through [`ArtifactSpec::check_inputs`] so a shape or
+//! order mismatch fails loudly instead of producing garbage numerics.
+
+use crate::model::ModelConfig;
+use crate::runtime::tensor::HostTensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor in an artifact's signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+
+    pub fn matches(&self, t: &HostTensor) -> bool {
+        t.shape() == self.shape.as_slice() && t.dtype_name() == self.dtype
+    }
+}
+
+/// One compiled artifact: HLO file + signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Validate a candidate input list against the manifest order.
+    pub fn check_inputs(&self, inputs: &[&HostTensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, t) in self.inputs.iter().zip(inputs) {
+            if !spec.matches(t) {
+                bail!(
+                    "{}: input `{}` expects {:?} {}, got {:?} {}",
+                    self.name,
+                    spec.name,
+                    spec.shape,
+                    spec.dtype,
+                    t.shape(),
+                    t.dtype_name()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub model: Option<ModelConfig>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        let mut artifacts = BTreeMap::new();
+        match j.get("artifacts") {
+            Some(Json::Obj(map)) => {
+                for (name, a) in map {
+                    let inputs = a
+                        .req_arr("inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    let outputs = a
+                        .req_arr("outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    artifacts.insert(
+                        name.clone(),
+                        ArtifactSpec {
+                            name: name.clone(),
+                            file: dir.join(a.req_str("file")?),
+                            inputs,
+                            outputs,
+                        },
+                    );
+                }
+            }
+            _ => bail!("manifest has no artifacts object"),
+        }
+        let model = match j.get("model") {
+            Some(m) => Some(ModelConfig::from_json(m)?),
+            None => None,
+        };
+        Ok(Manifest {
+            dir,
+            n_rows: j.req_usize("n_rows")?,
+            n_cols: j.req_usize("n_cols")?,
+            model,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest ({:?})", self.artifacts.keys()))
+    }
+
+    /// Load the BELL bucket tensors referenced by an artifact's inputs
+    /// (every input named `bell_*` maps to `<dir>/<name>.npy`).
+    pub fn load_bell_inputs(&self, artifact: &str) -> Result<Vec<(String, HostTensor)>> {
+        let spec = self.artifact(artifact)?;
+        let mut out = Vec::new();
+        for input in &spec.inputs {
+            if input.name.starts_with("bell_") {
+                let t = HostTensor::load_npy(self.dir.join(format!("{}.npy", input.name)))?;
+                if !input.matches(&t) {
+                    bail!("bell tensor {} shape mismatch", input.name);
+                }
+                out.push((input.name.clone(), t));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load the initial parameters saved by aot.py.
+    pub fn load_params(&self) -> Result<Vec<HostTensor>> {
+        let model = self.model.as_ref().ok_or_else(|| anyhow::anyhow!("manifest has no model"))?;
+        (0..model.n_params)
+            .map(|i| HostTensor::load_npy(self.dir.join(format!("param_{i}.npy"))))
+            .collect()
+    }
+
+    /// The SpMM artifact names and their column dims, ascending.
+    pub fn spmm_coldims(&self) -> Vec<(usize, String)> {
+        let mut v: Vec<(usize, String)> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix("spmm_f").and_then(|d| d.parse::<usize>().ok()).map(|d| (d, k.clone()))
+            })
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "n_rows": 10, "n_cols": 10,
+              "model": {"arch":"gcn","in_dim":4,"hidden_dim":4,"out_dim":2,"n_layers":1,"lr":0.1,"n_params":2},
+              "artifacts": {
+                "spmm_f16": {
+                  "file": "spmm_f16.hlo.txt",
+                  "inputs": [
+                    {"name": "bell_w2_cols", "shape": [8, 2], "dtype": "i32"},
+                    {"name": "x", "shape": [10, 16], "dtype": "f32"}
+                  ],
+                  "outputs": [{"name": "y", "shape": [10, 16], "dtype": "f32"}]
+                },
+                "spmm_f64": {
+                  "file": "spmm_f64.hlo.txt",
+                  "inputs": [], "outputs": []
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let dir = std::env::temp_dir().join("accel_gcn_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_rows, 10);
+        assert_eq!(m.model.as_ref().unwrap().arch, "gcn");
+        let a = m.artifact("spmm_f16").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(m.spmm_coldims(), vec![(16, "spmm_f16".into()), (64, "spmm_f64".into())]);
+
+        let cols = HostTensor::i32(&[8, 2], vec![0; 16]);
+        let x = HostTensor::f32(&[10, 16], vec![0.0; 160]);
+        assert!(a.check_inputs(&[&cols, &x]).is_ok());
+        // wrong order
+        assert!(a.check_inputs(&[&x, &cols]).is_err());
+        // wrong arity
+        assert!(a.check_inputs(&[&cols]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let dir = std::env::temp_dir().join("accel_gcn_manifest_test2");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,114 @@
+//! `Runtime`: the PJRT CPU client + compiled-executable cache.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Artifacts lower with `return_tuple=True`, so every execution returns
+//! one tuple literal which is decomposed into the manifest's outputs.
+//!
+//! NOT `Send` (PjRt handles are `Rc`-backed): construct and use on one
+//! thread; `coordinator::engine` owns one per device thread.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// A compiled artifact plus its signature.
+pub struct Compiled {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// compile wall-time, for the perf log
+    pub compile_secs: f64,
+}
+
+/// PJRT client with an executable cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Compiled>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact from the manifest.
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<&Compiled> {
+        if !self.cache.contains_key(name) {
+            let spec = manifest.artifact(name)?.clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact `{name}`"))?;
+            let compile_secs = t0.elapsed().as_secs_f64();
+            self.cache.insert(name.to_string(), Compiled { spec, exe, compile_secs });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a loaded artifact with manifest-ordered inputs.
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let compiled = self
+            .cache
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not loaded"))?;
+        compiled.spec.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.execute_literals(name, &literals)
+    }
+
+    /// Execute with pre-built literals (used by the engine's per-graph
+    /// literal cache to avoid re-uploading static bucket tensors).
+    pub fn execute_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<HostTensor>> {
+        let compiled = self
+            .cache
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not loaded"))?;
+        let result = compiled
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("execute `{name}`"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        anyhow::ensure!(
+            parts.len() == compiled.spec.outputs.len(),
+            "`{name}`: got {} outputs, manifest says {}",
+            parts.len(),
+            compiled.spec.outputs.len()
+        );
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Is an artifact already compiled?
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    pub fn loaded_artifacts(&self) -> Vec<&str> {
+        self.cache.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+// Unit tests requiring the PJRT shared library live in
+// rust/tests/runtime_roundtrip.rs (integration), so `cargo test --lib`
+// stays fast and library-independent.

@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute
+//! from the Rust hot path. Python never runs here.
+//!
+//! * [`tensor`] — host-side tensors (`HostTensor`) bridging npy files,
+//!   in-memory data, and `xla::Literal`s.
+//! * [`artifacts`] — the AOT manifest (`manifest.json`): artifact →
+//!   ordered input/output tensor specs.
+//! * [`client`] — `Runtime`: PJRT CPU client + compiled-executable
+//!   cache, with manifest-validated execution.
+//!
+//! `xla::PjRtClient` is `Rc`-backed (not `Send`): a `Runtime` must stay
+//! on the thread that created it. The serving engine wraps it in a
+//! dedicated device thread (see `coordinator::engine`).
+
+pub mod tensor;
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use tensor::HostTensor;

@@ -1,0 +1,173 @@
+//! Host tensors: the `Send`-able currency between the coordinator's
+//! front end and the device thread, convertible to/from `xla::Literal`
+//! and `.npy` files.
+
+use crate::util::npy::{Dtype, Npy};
+use anyhow::{bail, Result};
+
+/// A dense host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "f32",
+            HostTensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is {}, not f32", self.dtype_name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is {}, not i32", self.dtype_name()),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("tensor has {} elements, not 1", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Build an `xla::Literal` (copies the data into XLA's buffer).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape().to_vec();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &dims,
+                    bytes,
+                )?
+            }
+            HostTensor::I32 { data, .. } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &dims,
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an `xla::Literal`.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    pub fn from_npy(npy: &Npy) -> Result<HostTensor> {
+        match npy.dtype {
+            Dtype::F32 => Ok(HostTensor::F32 { shape: npy.shape.clone(), data: npy.to_f32()? }),
+            Dtype::I32 => Ok(HostTensor::I32 { shape: npy.shape.clone(), data: npy.to_i32()? }),
+            Dtype::I64 => {
+                // manifest tensors are i32/f32; i64 npy (e.g. row_ptr) narrows
+                let data: Vec<i32> = npy.to_i64()?.into_iter().map(|v| v as i32).collect();
+                Ok(HostTensor::I32 { shape: npy.shape.clone(), data })
+            }
+        }
+    }
+
+    pub fn load_npy(path: impl AsRef<std::path::Path>) -> Result<HostTensor> {
+        Self::from_npy(&Npy::load(path)?)
+    }
+
+    pub fn to_npy(&self) -> Npy {
+        match self {
+            HostTensor::F32 { shape, data } => Npy::from_f32(shape, data),
+            HostTensor::I32 { shape, data } => Npy::from_i32(shape, data),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::f32(&[2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype_name(), "f32");
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn npy_roundtrip() {
+        let t = HostTensor::i32(&[4], vec![1, -2, 3, 4]);
+        let back = HostTensor::from_npy(&t.to_npy()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i64_npy_narrows() {
+        let npy = crate::util::npy::Npy::from_i64(&[2], &[7, 9]);
+        let t = HostTensor::from_npy(&npy).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[7, 9]);
+    }
+
+    #[test]
+    fn scalar() {
+        assert_eq!(HostTensor::f32(&[1], vec![3.5]).scalar_f32().unwrap(), 3.5);
+        assert!(HostTensor::f32(&[2], vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+
+    // literal round-trips are covered by the integration test
+    // rust/tests/runtime_roundtrip.rs (they need the PJRT library loaded)
+}

@@ -1,0 +1,101 @@
+//! Machine model parameters (RTX-3090 class by default, matching the
+//! paper's testbed §IV-A).
+
+/// GPU hardware parameters used by the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuConfig {
+    /// Streaming multiprocessors (3090: 82).
+    pub sms: usize,
+    /// Threads per warp.
+    pub warp_size: usize,
+    /// Warp instructions issued per cycle per SM (4 schedulers).
+    pub schedulers_per_sm: usize,
+    /// Resident warp limit per SM (occupancy ceiling).
+    pub max_warps_per_sm: usize,
+    /// Core clock, GHz (3090 boost ≈ 1.395).
+    pub clock_ghz: f64,
+    /// Aggregate DRAM bytes per core cycle (936 GB/s ÷ 1.395 GHz ≈ 671).
+    pub dram_bytes_per_cycle: f64,
+    /// L2 capacity in bytes (3090: 6 MiB).
+    pub l2_bytes: usize,
+    /// L2 line size in bytes.
+    pub l2_line: usize,
+    /// L2 associativity used by the reuse model.
+    pub l2_ways: usize,
+    /// Memory transaction sector in bytes.
+    pub sector: usize,
+    /// Shared memory per SM in bytes (3090: 128 KiB configurable).
+    pub shared_mem_per_sm: usize,
+    /// Fixed kernel launch + drain overhead in cycles.
+    pub launch_overhead_cycles: f64,
+    /// L2-hit bandwidth multiplier relative to DRAM (L2 is ~3–4× faster).
+    pub l2_bandwidth_mult: f64,
+}
+
+impl GpuConfig {
+    /// The paper's testbed: GeForce RTX 3090.
+    pub fn rtx3090() -> GpuConfig {
+        GpuConfig {
+            sms: 82,
+            warp_size: 32,
+            schedulers_per_sm: 4,
+            max_warps_per_sm: 48,
+            clock_ghz: 1.395,
+            dram_bytes_per_cycle: 671.0,
+            l2_bytes: 6 * 1024 * 1024,
+            l2_line: 128,
+            l2_ways: 16,
+            sector: 32,
+            shared_mem_per_sm: 128 * 1024,
+            launch_overhead_cycles: 4_000.0,
+            l2_bandwidth_mult: 3.5,
+        }
+    }
+
+    /// A small config for fast unit tests (keeps numbers tiny and the
+    /// imbalance effects visible with few blocks).
+    pub fn toy() -> GpuConfig {
+        GpuConfig {
+            sms: 4,
+            warp_size: 32,
+            schedulers_per_sm: 1,
+            max_warps_per_sm: 8,
+            clock_ghz: 1.0,
+            dram_bytes_per_cycle: 64.0,
+            l2_bytes: 16 * 1024,
+            l2_line: 128,
+            l2_ways: 4,
+            sector: 32,
+            shared_mem_per_sm: 16 * 1024,
+            launch_overhead_cycles: 100.0,
+            l2_bandwidth_mult: 3.5,
+        }
+    }
+
+    /// Convert cycles to microseconds at the configured clock.
+    pub fn cycles_to_us(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_ghz * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtx3090_matches_published_specs() {
+        let c = GpuConfig::rtx3090();
+        assert_eq!(c.sms, 82);
+        assert_eq!(c.l2_bytes, 6 * 1024 * 1024);
+        // 671 B/cycle × 1.395 GHz ≈ 936 GB/s
+        let bw = c.dram_bytes_per_cycle * c.clock_ghz;
+        assert!((bw - 936.0).abs() < 2.0, "bw={bw}");
+    }
+
+    #[test]
+    fn cycles_to_us() {
+        let c = GpuConfig::rtx3090();
+        let us = c.cycles_to_us(1_395_000.0);
+        assert!((us - 1000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,148 @@
+//! Trace generator for the GNNAdvisor-like baseline: fixed-size
+//! neighbour groups (warp-level partition), per-group metadata, global
+//! atomic accumulation, and — by default — the per-warp column inner
+//! loop the paper's combined warp replaces.
+//!
+//! The `combined_warp` option exists because Fig. 7 compares block-level
+//! vs warp-level partitioning *with both sides using the combined-warp
+//! strategy*; Fig. 5's GNNAdvisor bar uses the plain inner loop.
+
+use super::{price_x_gather, sector_bytes, x_cache, CostModel, KernelOptions, PreparedGraph};
+use crate::sim::config::GpuConfig;
+use crate::sim::machine::{BlockWork, KernelTrace};
+
+pub fn trace(
+    cfg: &GpuConfig,
+    cost: &CostModel,
+    graph: &PreparedGraph,
+    coldim: usize,
+    opts: KernelOptions,
+) -> KernelTrace {
+    let csr = &graph.original;
+    let wp = &graph.warp;
+    let c_tiles = CostModel::col_tiles(coldim, cfg.warp_size) as f64;
+    let row_bytes = (coldim * 4) as f64;
+    let mut cache = x_cache(cfg, coldim);
+    // groups are packed into thread blocks of max_block_warps warps, in
+    // original (unsorted) order — GNNAdvisor's launch geometry
+    let warps_per_block = graph.params.max_block_warps.max(1);
+
+    let mut blocks = Vec::with_capacity(wp.groups.len() / warps_per_block + 1);
+    for chunk in wp.groups.chunks(warps_per_block) {
+        let mut w = BlockWork::default();
+        w.issue_insts = cost.block_setup_insts;
+        for g in chunk {
+            // per-warp metadata record (the paper's Fig. 3(b) overhead)
+            w.dram_bytes += sector_bytes(cfg, 16);
+            let l = g.len as usize;
+            w.dram_bytes += sector_bytes(cfg, l * 4) * 2.0;
+            let span = g.loc as usize..(g.loc + g.len) as usize;
+            let (d, l2) = price_x_gather(&mut cache, &csr.col_idx[span], row_bytes);
+            // the per-warp column loop gathers X through partially-used
+            // cache lines (no alignment padding): fragmentation factor
+            let frag = if opts.combined_warp { 1.0 } else { cost.x_frag_gnnadvisor };
+            w.dram_bytes += d * frag;
+            w.l2_bytes += l2 * frag;
+
+            let nz = l as f64;
+            let (task_issue, task_serial) = if opts.combined_warp {
+                let per_warp = nz * cost.inst_per_nz_tile_combined + cost.warp_setup_insts;
+                (per_warp * c_tiles, per_warp)
+            } else {
+                let serial =
+                    nz * cost.inst_per_nz_tile_loop * c_tiles + cost.warp_setup_insts;
+                (serial, serial)
+            };
+            w.issue_insts += task_issue;
+            w.longest_warp_cycles = w.longest_warp_cycles.max(task_serial);
+            w.warps += if opts.combined_warp { c_tiles as usize } else { 1 };
+
+            // a group covering its whole row writes directly; partial
+            // groups (rows split across warps) need the global atomic RMW
+            let row = g.row as usize;
+            let whole_row = csr.degree(row) == l;
+            w.dram_bytes += if whole_row {
+                row_bytes
+            } else {
+                row_bytes * cost.atomic_rmw_factor
+            };
+        }
+        blocks.push(w);
+    }
+
+    let mem_efficiency =
+        if opts.combined_warp { cost.eff_combined(coldim) } else { cost.eff_gnnadvisor };
+    KernelTrace {
+        blocks,
+        mem_efficiency,
+        name: format!(
+            "gnnadvisor{}",
+            if opts.combined_warp { "(combined-warp)" } else { "" }
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::partition::patterns::PartitionParams;
+    use crate::sim::kernels::accel_gcn;
+    use crate::sim::machine::simulate;
+    use crate::util::rng::Pcg;
+
+    fn powerlaw_graph(n: usize, seed: u64) -> PreparedGraph {
+        let mut rng = Pcg::seed_from(seed);
+        let degs = crate::graph::generator::degree_sequence(
+            crate::graph::generator::DegreeModel::PowerLaw { alpha: 2.0, dmax_frac: 0.2 },
+            n,
+            n * 8,
+            &mut rng,
+        );
+        let csr = crate::graph::generator::from_degree_sequence(n, &degs, &mut rng);
+        PreparedGraph::new(csr, PartitionParams::default())
+    }
+
+    #[test]
+    fn more_metadata_traffic_than_block_level() {
+        // the paper's Eq. 1 effect shows up as extra DRAM bytes
+        let cfg = GpuConfig::rtx3090();
+        let cost = CostModel::default();
+        let g = powerlaw_graph(500, 5);
+        let t_warp = trace(&cfg, &cost, &g, 64, KernelOptions { combined_warp: true });
+        let t_block = accel_gcn::trace(&cfg, &cost, &g, 64, KernelOptions { combined_warp: true });
+        let bytes = |t: &KernelTrace| t.blocks.iter().map(|b| b.dram_bytes).sum::<f64>();
+        assert!(bytes(&t_warp) > bytes(&t_block), "{} !> {}", bytes(&t_warp), bytes(&t_block));
+    }
+
+    #[test]
+    fn slower_than_accel_on_powerlaw() {
+        let cfg = GpuConfig::rtx3090();
+        let cost = CostModel::default();
+        let g = powerlaw_graph(800, 6);
+        let warp = simulate(&cfg, &trace(&cfg, &cost, &g, 64, KernelOptions { combined_warp: false }));
+        let accel = simulate(
+            &cfg,
+            &accel_gcn::trace(&cfg, &cost, &g, 64, KernelOptions { combined_warp: true }),
+        );
+        assert!(warp.micros > accel.micros * 1.2, "warp {} vs accel {}", warp.micros, accel.micros);
+    }
+
+    #[test]
+    fn block_geometry() {
+        let mut rng = Pcg::seed_from(7);
+        let mut edges = Vec::new();
+        for r in 0..100u32 {
+            for _ in 0..rng.range(1, 5) {
+                edges.push((r, rng.range(0, 100) as u32, 1.0));
+            }
+        }
+        let g = PreparedGraph::new(
+            Csr::from_edges(100, 100, &edges).unwrap(),
+            PartitionParams::default(),
+        );
+        let t = trace(&GpuConfig::rtx3090(), &CostModel::default(), &g, 32, KernelOptions::default());
+        let expect = g.warp.n_groups().div_ceil(g.params.max_block_warps);
+        assert_eq!(t.blocks.len(), expect);
+    }
+}

@@ -1,0 +1,197 @@
+//! Block scheduling + resource model: turns a kernel trace (per-block
+//! work descriptors) into cycles.
+//!
+//! Two coupled resources, as in a roofline with a tail term:
+//! * **compute makespan** — blocks are list-scheduled onto SMs (online
+//!   least-loaded, the hardware's GigaThread behaviour); each block
+//!   contributes `max(issue_cycles, longest_warp_cycles)` to its SM.
+//!   Power-law imbalance surfaces here: one monster block pins an SM
+//!   while the rest drain.
+//! * **memory cycles** — total DRAM bytes over effective bandwidth
+//!   (peak × schedule-dependent coalescing efficiency), plus L2 traffic
+//!   over the faster L2 bandwidth.
+//!
+//! Kernel time = `max(compute_makespan, mem_cycles) + launch_overhead`.
+
+use super::config::GpuConfig;
+use crate::util::stats::OnlineStats;
+
+/// Work descriptor for one GPU thread block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockWork {
+    /// Warp-instructions issued by the whole block.
+    pub issue_insts: f64,
+    /// Serial cycles of the block's longest warp (latency floor).
+    pub longest_warp_cycles: f64,
+    /// Bytes that miss L2 and reach DRAM.
+    pub dram_bytes: f64,
+    /// Bytes served from L2.
+    pub l2_bytes: f64,
+    /// Resident warps the block occupies.
+    pub warps: usize,
+}
+
+/// A kernel execution trace: its blocks plus schedule-level memory
+/// efficiency (coalescing/alignment quality of the access pattern).
+#[derive(Clone, Debug)]
+pub struct KernelTrace {
+    pub blocks: Vec<BlockWork>,
+    /// Effective fraction of peak DRAM bandwidth this schedule achieves
+    /// (memory coalescing + alignment quality).
+    pub mem_efficiency: f64,
+    /// Human-readable label for reports.
+    pub name: String,
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub name: String,
+    pub cycles: f64,
+    pub micros: f64,
+    pub compute_makespan: f64,
+    pub mem_cycles: f64,
+    pub dram_bytes: f64,
+    pub l2_bytes: f64,
+    pub n_blocks: usize,
+    /// Coefficient of variation of per-SM compute load (imbalance).
+    pub sm_load_cv: f64,
+    /// Whether memory (true) or compute (false) bound.
+    pub memory_bound: bool,
+}
+
+/// List-schedule the trace onto the machine and price it.
+pub fn simulate(cfg: &GpuConfig, trace: &KernelTrace) -> SimResult {
+    let mut sm_load = vec![0f64; cfg.sms];
+    let mut dram_bytes = 0f64;
+    let mut l2_bytes = 0f64;
+
+    for b in &trace.blocks {
+        // block compute: issue-throughput over the SM's schedulers,
+        // floored by the longest warp's serial latency
+        let issue_cycles = b.issue_insts / cfg.schedulers_per_sm as f64;
+        let cost = issue_cycles.max(b.longest_warp_cycles);
+        // online least-loaded assignment (GigaThread engine)
+        let (idx, _) = sm_load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        sm_load[idx] += cost;
+        dram_bytes += b.dram_bytes;
+        l2_bytes += b.l2_bytes;
+    }
+
+    let compute_makespan = sm_load.iter().cloned().fold(0.0, f64::max);
+    let mut load_stats = OnlineStats::new();
+    for &l in &sm_load {
+        load_stats.push(l);
+    }
+
+    // the schedule's coalescing quality applies to the whole memory
+    // pipeline: fragmented transactions waste L2 bandwidth exactly as
+    // they waste DRAM sectors
+    let eff = trace.mem_efficiency.clamp(0.05, 1.0);
+    let dram_cycles = dram_bytes / (cfg.dram_bytes_per_cycle * eff);
+    let l2_cycles = l2_bytes / (cfg.dram_bytes_per_cycle * cfg.l2_bandwidth_mult * eff);
+    let mem_cycles = dram_cycles + l2_cycles;
+
+    let cycles = compute_makespan.max(mem_cycles) + cfg.launch_overhead_cycles;
+    SimResult {
+        name: trace.name.clone(),
+        cycles,
+        micros: cfg.cycles_to_us(cycles),
+        compute_makespan,
+        mem_cycles,
+        dram_bytes,
+        l2_bytes,
+        n_blocks: trace.blocks.len(),
+        sm_load_cv: load_stats.cv(),
+        memory_bound: mem_cycles >= compute_makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(inst: f64, warp: f64, dram: f64) -> BlockWork {
+        BlockWork { issue_insts: inst, longest_warp_cycles: warp, dram_bytes: dram, l2_bytes: 0.0, warps: 4 }
+    }
+
+    #[test]
+    fn balanced_blocks_spread_evenly() {
+        let cfg = GpuConfig::toy();
+        let trace = KernelTrace {
+            blocks: (0..8).map(|_| block(100.0, 10.0, 0.0)).collect(),
+            mem_efficiency: 1.0,
+            name: "balanced".into(),
+        };
+        let r = simulate(&cfg, &trace);
+        // 8 equal blocks on 4 SMs → 2 per SM → makespan 200 (schedulers=1)
+        assert!((r.compute_makespan - 200.0).abs() < 1e-9);
+        assert!(r.sm_load_cv < 1e-9);
+        assert!(!r.memory_bound);
+    }
+
+    #[test]
+    fn monster_block_creates_tail() {
+        let cfg = GpuConfig::toy();
+        let mut blocks: Vec<BlockWork> = (0..7).map(|_| block(10.0, 1.0, 0.0)).collect();
+        blocks.insert(0, block(10_000.0, 10_000.0, 0.0));
+        let r = simulate(&cfg, &KernelTrace { blocks, mem_efficiency: 1.0, name: "tail".into() });
+        assert!(r.compute_makespan >= 10_000.0);
+        assert!(r.sm_load_cv > 1.0, "cv={}", r.sm_load_cv);
+    }
+
+    #[test]
+    fn memory_bound_when_traffic_dominates() {
+        let cfg = GpuConfig::toy();
+        let trace = KernelTrace {
+            blocks: vec![block(10.0, 1.0, 1_000_000.0)],
+            mem_efficiency: 1.0,
+            name: "mem".into(),
+        };
+        let r = simulate(&cfg, &trace);
+        assert!(r.memory_bound);
+        assert!((r.mem_cycles - 1_000_000.0 / 64.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lower_efficiency_costs_cycles() {
+        let cfg = GpuConfig::toy();
+        let mk = |eff| KernelTrace {
+            blocks: vec![block(1.0, 1.0, 64_000.0)],
+            mem_efficiency: eff,
+            name: "eff".into(),
+        };
+        let fast = simulate(&cfg, &mk(1.0));
+        let slow = simulate(&cfg, &mk(0.5));
+        assert!(slow.cycles > fast.cycles * 1.5, "{} vs {}", slow.cycles, fast.cycles);
+    }
+
+    #[test]
+    fn l2_traffic_cheaper_than_dram() {
+        let cfg = GpuConfig::toy();
+        let dram = KernelTrace {
+            blocks: vec![block(1.0, 1.0, 64_000.0)],
+            mem_efficiency: 1.0,
+            name: "d".into(),
+        };
+        let l2 = KernelTrace {
+            blocks: vec![BlockWork { issue_insts: 1.0, longest_warp_cycles: 1.0, dram_bytes: 0.0, l2_bytes: 64_000.0, warps: 1 }],
+            mem_efficiency: 1.0,
+            name: "l".into(),
+        };
+        let rd = simulate(&cfg, &dram);
+        let rl = simulate(&cfg, &l2);
+        assert!(rl.mem_cycles < rd.mem_cycles / 2.0);
+    }
+
+    #[test]
+    fn launch_overhead_floors_empty_kernel() {
+        let cfg = GpuConfig::toy();
+        let r = simulate(&cfg, &KernelTrace { blocks: vec![], mem_efficiency: 1.0, name: "empty".into() });
+        assert_eq!(r.cycles, cfg.launch_overhead_cycles);
+    }
+}

@@ -1,0 +1,31 @@
+//! GPU microarchitecture simulator — the evaluation substrate standing in
+//! for the paper's RTX 3090 + Nsight Compute testbed (DESIGN.md §2).
+//!
+//! The simulator executes each kernel's *schedule* (the same block/warp
+//! workloads the exact executors in [`crate::spmm`] verify numerically)
+//! as a stream of per-block work descriptors, and models the first-order
+//! hardware resources the paper's techniques target:
+//!
+//! * **SM issue throughput and occupancy** — blocks are list-scheduled
+//!   onto SMs; a block's cost is its issued instructions over the warp
+//!   schedulers, floored by its longest warp → workload imbalance shows
+//!   up as makespan tail exactly as in Fig. 4(d/e).
+//! * **DRAM traffic at 32-byte sector granularity** with per-schedule
+//!   coalescing efficiency — the combined warp's contiguous thread→
+//!   address mapping vs the fragmented inner-loop traversal.
+//! * **L2 reuse** via a set-associative LRU over dense-matrix rows, fed
+//!   with each kernel's actual access order (degree-sorted or not).
+//! * **Atomics** — global read-modify-write traffic for schemes that
+//!   accumulate partial rows in global memory.
+//!
+//! Reported numbers are cycles/µs of the *model*, not the 3090; the
+//! paper comparison is made on normalized speedups (Fig. 5/7/8 style).
+
+pub mod config;
+pub mod cache;
+pub mod machine;
+pub mod kernels;
+
+pub use config::GpuConfig;
+pub use kernels::{simulate_kernel, KernelKind, KernelOptions};
+pub use machine::{simulate, BlockWork, KernelTrace, SimResult};

@@ -1,0 +1,174 @@
+//! Exact executor for the block-level partition — runs the Accel-GCN
+//! schedule literally (paper §III-D "Summary and Further Enhancement").
+//!
+//! Three accumulation levels, mirroring the kernel's cache hierarchy:
+//! 1. within a warp, threads of the combined warp cover the column
+//!    dimension (here: an inner `f`-loop over a private register row);
+//! 2. warps of a block accumulate into a **block-shared** buffer
+//!    (CUDA `atomicAdd_block` into shared memory) — one row slot per
+//!    block row;
+//! 3. split-row blocks accumulate their partial results into the global
+//!    output atomically (here: plain adds, since the executor is
+//!    sequential per row).
+//!
+//! The result must equal the dense CSR reference bit-for-bit up to f32
+//! addition reordering.
+
+use crate::graph::csr::Csr;
+use crate::partition::block_level::BlockPartition;
+
+/// Execute `Y = A_sorted · X` via the block-level schedule.
+/// `x` is `[n_cols × f]` row-major; result rows are in the sorted domain.
+pub fn spmm_block_level(sorted: &Csr, bp: &BlockPartition, x: &[f32], f: usize) -> Vec<f32> {
+    assert_eq!(x.len(), sorted.n_cols * f, "X shape mismatch");
+    assert_eq!(bp.n_rows, sorted.n_rows, "partition/graph mismatch");
+    let deg_bound = bp.params.deg_bound();
+    let mut y = vec![0f32; sorted.n_rows * f];
+
+    for (b, m) in bp.meta.iter().enumerate() {
+        if m.is_split(deg_bound) {
+            // level 3: chunk of a long row → accumulate into global y
+            let dst = m.row as usize;
+            for t in bp.block_warp_tasks(b) {
+                debug_assert!(t.needs_global_atomic);
+                let yrow = &mut y[dst * f..(dst + 1) * f];
+                for i in t.nz_start..t.nz_start + t.nz_len {
+                    let c = sorted.col_idx[i] as usize;
+                    let v = sorted.vals[i];
+                    let xrow = &x[c * f..(c + 1) * f];
+                    for k in 0..f {
+                        yrow[k] += v * xrow[k];
+                    }
+                }
+            }
+        } else {
+            // level 2: block-shared accumulator, one slot per block row
+            // (padded to the column dimension like the shared-memory
+            // array padded to a multiple of 32 in the paper)
+            let rows = m.block_rows();
+            let mut shared = vec![0f32; rows * f];
+            for t in bp.block_warp_tasks(b) {
+                let slot = (t.sorted_row - m.row) as usize;
+                let srow = &mut shared[slot * f..(slot + 1) * f];
+                for i in t.nz_start..t.nz_start + t.nz_len {
+                    let c = sorted.col_idx[i] as usize;
+                    let v = sorted.vals[i];
+                    let xrow = &x[c * f..(c + 1) * f];
+                    // level 1: combined warp covers the f columns with
+                    // contiguous lanes
+                    for k in 0..f {
+                        srow[k] += v * xrow[k];
+                    }
+                }
+            }
+            // write back shared → global (coalesced store)
+            let base = m.row as usize;
+            y[base * f..(base + rows) * f].copy_from_slice(&shared);
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::degree::DegreeSorted;
+    use crate::partition::patterns::PartitionParams;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    fn random_graph(rng: &mut Pcg, n: usize, heavy_tail: bool) -> Csr {
+        let mut edges = Vec::new();
+        for r in 0..n {
+            let d = if heavy_tail && rng.f64() < 0.05 {
+                rng.range(0, 3 * n / 2 + 2) // can exceed deg_bound for small params
+            } else {
+                rng.range(0, 8)
+            };
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let mut rng = Pcg::seed_from(21);
+        let csr = random_graph(&mut rng, 30, false);
+        let ds = DegreeSorted::new(&csr);
+        let bp = BlockPartition::build(&ds.csr, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        let f = 4;
+        let x: Vec<f32> = (0..30 * f).map(|_| rng.f32() - 0.5).collect();
+        let want = ds.csr.spmm_dense(&x, f);
+        let got = spmm_block_level(&ds.csr, &bp, &x, f);
+        assert_allclose(&got, &want, 1e-5, 1e-5, "block exec");
+    }
+
+    #[test]
+    fn split_rows_accumulate_correctly() {
+        // single row of degree 20 with bound 4: 5 chunks, all into row 0
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let edges: Vec<(u32, u32, f32)> = (0..20).map(|c| (0u32, c, (c + 1) as f32)).collect();
+        let csr = Csr::from_edges(1, 20, &edges).unwrap();
+        let bp = BlockPartition::build(&csr, params);
+        assert!(bp.meta.len() > 1);
+        let f = 2;
+        let x: Vec<f32> = (0..20 * f).map(|i| i as f32 * 0.1).collect();
+        let want = csr.spmm_dense(&x, f);
+        let got = spmm_block_level(&csr, &bp, &x, f);
+        assert_allclose(&got, &want, 1e-3, 1e-5, "split rows");
+    }
+
+    #[test]
+    fn zero_rows_stay_zero() {
+        let params = PartitionParams::default();
+        let csr = Csr::from_edges(4, 4, &[(2, 1, 3.0)]).unwrap();
+        let ds = DegreeSorted::new(&csr);
+        let bp = BlockPartition::build(&ds.csr, params);
+        let f = 3;
+        let x = vec![1.0f32; 4 * f];
+        let y = spmm_block_level(&ds.csr, &bp, &x, f);
+        // sorted order puts the deg-1 row last
+        for r in 0..3 {
+            assert_eq!(&y[r * f..(r + 1) * f], &[0.0, 0.0, 0.0], "row {r}");
+        }
+        assert_eq!(&y[3 * f..4 * f], &[3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn prop_block_exec_equals_reference() {
+        proptest::check("block_exec_vs_ref", 0x5B0C, 25, |rng| {
+            let n = rng.range(1, 70);
+            let csr = random_graph(rng, n, true);
+            let ds = DegreeSorted::new(&csr);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 3, 4, 12]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 4, 32]),
+            };
+            let bp = BlockPartition::build(&ds.csr, params);
+            let f = rng.range(1, 10);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let want = ds.csr.spmm_dense(&x, f);
+            let got = spmm_block_level(&ds.csr, &bp, &x, f);
+            assert_allclose(&got, &want, 1e-4, 1e-4, "prop block exec");
+        });
+    }
+
+    #[test]
+    fn prop_full_pipeline_unpermuted() {
+        // degree-sort → partition → execute → unpermute == plain SpMM
+        proptest::check("block_exec_pipeline", 0x5B0D, 15, |rng| {
+            let n = rng.range(1, 50);
+            let csr = random_graph(rng, n, true);
+            let ds = DegreeSorted::new(&csr);
+            let bp = BlockPartition::build(&ds.csr, PartitionParams { max_block_warps: 4, max_warp_nzs: 4 });
+            let f = rng.range(1, 6);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let got = ds.unpermute_rows(&spmm_block_level(&ds.csr, &bp, &x, f), f);
+            let want = csr.spmm_dense(&x, f);
+            assert_allclose(&got, &want, 1e-4, 1e-4, "pipeline");
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! Exact CPU executors for every partition schedule.
+//!
+//! These run the paper's schedules *literally* — block by block, warp by
+//! warp, with per-block shared accumulators and global accumulation for
+//! split rows — producing exact numerics that are checked against the
+//! dense CSR reference. They are the correctness ground truth for the
+//! partitioners and the behavioural model the GPU simulator's trace
+//! generators are built on.
+
+pub mod block_exec;
+pub mod warp_exec;
+pub mod verify;
+
+pub use block_exec::spmm_block_level;
+pub use verify::{allclose, max_abs_diff};
+pub use warp_exec::spmm_warp_level;

@@ -1,0 +1,57 @@
+//! Numeric comparison helpers shared by executor and integration tests.
+
+/// Maximum absolute element difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Elementwise |a-b| ≤ atol + rtol·|b| (numpy-style allclose).
+pub fn allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.iter().zip(b.iter()).all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+/// Panic with a helpful report if not allclose.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, context: &str) {
+    assert_eq!(a.len(), b.len(), "{context}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{context}: element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_equal() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0));
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+
+    #[test]
+    fn tolerances() {
+        assert!(allclose(&[1.0001], &[1.0], 1e-3, 0.0));
+        assert!(!allclose(&[1.01], &[1.0], 1e-3, 0.0));
+        assert!(allclose(&[100.1], &[100.0], 0.0, 1e-2));
+    }
+
+    #[test]
+    fn length_mismatch_false() {
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn assert_reports_index() {
+        assert_allclose(&[1.0, 5.0], &[1.0, 1.0], 1e-6, 0.0, "test");
+    }
+}

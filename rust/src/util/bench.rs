@@ -1,0 +1,207 @@
+//! Timing harness + table/CSV reporting (criterion stand-in).
+//!
+//! `cargo bench` runs `rust/benches/paper_benches.rs` (harness = false)
+//! which uses this module to time kernels/simulations, print
+//! paper-style tables, and write CSV series under `results/`.
+
+use super::stats;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+use std::time::Instant;
+
+/// One timed measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// wall-clock per iteration, seconds
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Time `f`, autoscaling iteration count to reach ~`target_secs` of total
+/// measurement after `warmup` calls. Returns per-iteration seconds.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, target_secs: f64, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate single-iteration cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / est).ceil() as usize).clamp(1, 10_000);
+    // take up to 20 batched samples
+    let batches = iters.min(20);
+    let per_batch = (iters / batches).max(1);
+    let mut samples = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / per_batch as f64);
+    }
+    Measurement { name: name.to_string(), samples }
+}
+
+/// Pretty fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String| {
+            for w in &widths {
+                let _ = write!(out, "+{}", "-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        line(&mut out);
+        for (c, h) in self.headers.iter().enumerate() {
+            let _ = write!(out, "| {:width$} ", h, width = widths[c]);
+        }
+        out.push_str("|\n");
+        line(&mut out);
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                let _ = write!(out, "| {:width$} ", cell, width = widths[c]);
+            }
+            out.push_str("|\n");
+        }
+        line(&mut out);
+        out
+    }
+}
+
+/// CSV writer for figure series (one file per paper figure).
+pub struct Csv {
+    buf: String,
+    ncol: usize,
+}
+
+impl Csv {
+    pub fn new(headers: &[&str]) -> Self {
+        let mut buf = String::new();
+        buf.push_str(&headers.join(","));
+        buf.push('\n');
+        Csv { buf, ncol: headers.len() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.ncol, "csv arity mismatch");
+        // quote cells containing separators
+        let encoded: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        self.buf.push_str(&encoded.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, &self.buf)?;
+        Ok(())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_returns_samples() {
+        let mut x = 0u64;
+        let m = time_fn("noop", 1, 0.01, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(!m.samples.is_empty());
+        assert!(m.mean() >= 0.0);
+        assert!(m.min() <= m.mean() * 1.0001);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["graph", "speedup"]);
+        t.row(vec!["collab".into(), "1.17".into()]);
+        t.row(vec!["am".into(), "1.45".into()]);
+        let s = t.render();
+        assert!(s.contains("| graph"));
+        assert!(s.contains("| collab"));
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["x,y".to_string(), "plain".to_string()]);
+        assert_eq!(c.as_str(), "a,b\n\"x,y\",plain\n");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(3e-9).contains("ns"));
+        assert!(fmt_secs(3e-6).contains("µs"));
+        assert!(fmt_secs(3e-3).contains("ms"));
+        assert!(fmt_secs(3.0).contains(" s"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Declarative command-line flag parsing (clap stand-in).
+//!
+//! Grammar: `accel-gcn <subcommand> [--key value]... [--flag]...`.
+//! Each subcommand declares its options; unknown flags are hard errors so
+//! typos never silently fall back to defaults in benchmark runs.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without program name / subcommand) against the
+    /// declared option names. `value_opts` take one argument;
+    /// `flag_opts` are boolean.
+    pub fn parse(
+        argv: &[String],
+        value_opts: &[&str],
+        flag_opts: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(name) = arg.strip_prefix("--") {
+                // allow --key=value
+                if let Some((k, v)) = name.split_once('=') {
+                    if value_opts.contains(&k) {
+                        out.values.insert(k.to_string(), v.to_string());
+                        i += 1;
+                        continue;
+                    }
+                    bail!("unknown option --{k}");
+                }
+                if value_opts.contains(&name) {
+                    let Some(v) = argv.get(i + 1) else {
+                        bail!("option --{name} requires a value");
+                    };
+                    out.values.insert(name.to_string(), v.clone());
+                    i += 2;
+                } else if flag_opts.contains(&name) {
+                    out.flags.push(name.to_string());
+                    i += 1;
+                } else {
+                    bail!("unknown option --{name}");
+                }
+            } else {
+                out.positional.push(arg.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: bad integer `{v}`: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: bad integer `{v}`: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: bad number `{v}`: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--coldims 16,32,64`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--{key}: bad entry `{p}`: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse a comma-separated list of strings.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(
+            &argv(&["--graph", "collab", "--verbose", "--steps", "300"]),
+            &["graph", "steps"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.get("graph"), Some("collab"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv(&["--graph=pubmed"]), &["graph"], &[]).unwrap();
+        assert_eq!(a.get("graph"), Some("pubmed"));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse(&argv(&["--bogus"]), &["graph"], &["verbose"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--graph"]), &["graph"], &[]).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&argv(&["--coldims", "16, 32,64"]), &["coldims"], &[]).unwrap();
+        assert_eq!(a.usize_list_or("coldims", &[]).unwrap(), vec![16, 32, 64]);
+        let b = Args::parse(&argv(&[]), &["coldims"], &[]).unwrap();
+        assert_eq!(b.usize_list_or("coldims", &[8]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::parse(&argv(&["run", "--graph", "am", "fast"]), &["graph"], &[]).unwrap();
+        assert_eq!(a.positional(), &["run".to_string(), "fast".to_string()]);
+    }
+}

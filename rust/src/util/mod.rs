@@ -1,0 +1,28 @@
+//! Zero-dependency substrates.
+//!
+//! The build environment is fully offline and only the `xla` crate's
+//! dependency closure is vendored, so the usual ecosystem crates
+//! (clap, serde, rand, criterion, tokio, proptest) are unavailable.
+//! This module provides the minimal, well-tested replacements the rest
+//! of the system needs:
+//!
+//! * [`rng`] — PCG-XSH-RR 64/32 PRNG with distributions (uniform,
+//!   normal, zipf/power-law) used by graph generators and property tests.
+//! * [`json`] — minimal JSON value model, parser, and writer (configs,
+//!   graph specs, benchmark outputs).
+//! * [`npy`] — NumPy `.npy` v1.0 reader/writer for `f32`/`i32`/`i64`
+//!   C-order arrays (tensor interchange with the Python compile path).
+//! * [`cli`] — declarative flag parser for the `accel-gcn` binary.
+//! * [`stats`] — online moments, percentiles, histograms.
+//! * [`bench`] — timing harness + table/CSV reporters (criterion stand-in).
+//! * [`threadpool`] — fixed worker pool over std mpsc channels.
+//! * [`proptest`] — seeded property-test driver (report failing seed).
+
+pub mod rng;
+pub mod json;
+pub mod npy;
+pub mod cli;
+pub mod stats;
+pub mod bench;
+pub mod threadpool;
+pub mod proptest;

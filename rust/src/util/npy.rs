@@ -1,0 +1,282 @@
+//! NumPy `.npy` v1.0 reader/writer for C-order arrays.
+//!
+//! Tensor interchange between the Rust preprocessing path (which emits
+//! the BELL layout of a partitioned graph) and the Python compile path
+//! (which consumes shapes/golden tensors in pytest and AOT lowering).
+//! Supports the dtypes we exchange: `f32` (`<f4`), `i32` (`<i4`),
+//! `i64` (`<i8`).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Element types supported by the interchange format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    I64,
+}
+
+impl Dtype {
+    pub fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::I32 => "<i4",
+            Dtype::I64 => "<i8",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I64 => 8,
+        }
+    }
+
+    fn from_descr(d: &str) -> Result<Dtype> {
+        match d {
+            "<f4" | "|f4" | "f4" => Ok(Dtype::F32),
+            "<i4" | "|i4" | "i4" => Ok(Dtype::I32),
+            "<i8" | "|i8" | "i8" => Ok(Dtype::I64),
+            other => bail!("unsupported npy dtype `{other}`"),
+        }
+    }
+}
+
+/// An n-dimensional array in C order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Npy {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// Raw little-endian element bytes, C order.
+    pub data: Vec<u8>,
+}
+
+impl Npy {
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Npy {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/value mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Npy { dtype: Dtype::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Npy {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/value mismatch");
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Npy { dtype: Dtype::I32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i64(shape: &[usize], values: &[i64]) -> Npy {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/value mismatch");
+        let mut data = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Npy { dtype: Dtype::I64, shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("dtype is {:?}, not f32", self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("dtype is {:?}, not i32", self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn to_i64(&self) -> Result<Vec<i64>> {
+        if self.dtype != Dtype::I64 {
+            bail!("dtype is {:?}, not i64", self.dtype);
+        }
+        Ok(self.data.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Serialize to `.npy` v1.0 bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let shape_str = match self.shape.len() {
+            1 => format!("({},)", self.shape[0]),
+            _ => format!(
+                "({})",
+                self.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+            self.dtype.descr(),
+            shape_str
+        );
+        // pad so that magic(6)+ver(2)+hlen(2)+header is a multiple of 64
+        let unpadded = 10 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        header.extend(std::iter::repeat(' ').take(pad));
+        header.push('\n');
+
+        let mut out = Vec::with_capacity(10 + header.len() + self.data.len());
+        out.extend_from_slice(b"\x93NUMPY\x01\x00");
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Parse `.npy` bytes (v1.0 or v2.0 headers).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Npy> {
+        if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+            bail!("not an npy file");
+        }
+        let major = bytes[6];
+        let (header_len, header_start) = match major {
+            1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+            2 => (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12,
+            ),
+            v => bail!("unsupported npy version {v}"),
+        };
+        let header = std::str::from_utf8(
+            bytes
+                .get(header_start..header_start + header_len)
+                .ok_or_else(|| anyhow!("truncated npy header"))?,
+        )?;
+        let descr = extract_quoted(header, "descr").ok_or_else(|| anyhow!("no descr in header"))?;
+        let dtype = Dtype::from_descr(&descr)?;
+        if header.contains("'fortran_order': True") {
+            bail!("fortran-order npy not supported");
+        }
+        let shape = extract_shape(header)?;
+        let n: usize = shape.iter().product();
+        let data_start = header_start + header_len;
+        let need = n * dtype.size();
+        let data = bytes
+            .get(data_start..data_start + need)
+            .ok_or_else(|| anyhow!("npy data truncated: need {need} bytes"))?
+            .to_vec();
+        Ok(Npy { dtype, shape, data })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Npy> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse {path:?}"))
+    }
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let idx = header.find(&format!("'{key}'"))?;
+    let rest = &header[idx..];
+    let colon = rest.find(':')?;
+    let rest = rest[colon + 1..].trim_start();
+    let quote = rest.chars().next()?;
+    if quote != '\'' && quote != '"' {
+        return None;
+    }
+    let end = rest[1..].find(quote)?;
+    Some(rest[1..1 + end].to_string())
+}
+
+fn extract_shape(header: &str) -> Result<Vec<usize>> {
+    let idx = header.find("'shape'").ok_or_else(|| anyhow!("no shape in header"))?;
+    let open = header[idx..].find('(').ok_or_else(|| anyhow!("no shape tuple"))? + idx;
+    let close = header[open..].find(')').ok_or_else(|| anyhow!("unclosed shape tuple"))? + open;
+    let inner = &header[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(part.parse::<usize>().map_err(|e| anyhow!("bad shape dim `{part}`: {e}"))?);
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let a = Npy::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        let b = Npy::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.to_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+    }
+
+    #[test]
+    fn roundtrip_i32_1d() {
+        let a = Npy::from_i32(&[4], &[-1, 0, 7, i32::MAX]);
+        let b = Npy::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.shape, vec![4]);
+        assert_eq!(b.to_i32().unwrap(), vec![-1, 0, 7, i32::MAX]);
+    }
+
+    #[test]
+    fn roundtrip_i64_scalar_dim() {
+        let a = Npy::from_i64(&[1], &[1 << 40]);
+        let b = Npy::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.to_i64().unwrap(), vec![1 << 40]);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let a = Npy::from_f32(&[3], &[0.0, 1.0, 2.0]);
+        let bytes = a.to_bytes();
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+
+    #[test]
+    fn wrong_dtype_errors() {
+        let a = Npy::from_f32(&[1], &[1.0]);
+        assert!(a.to_i32().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("accel_gcn_npy_test");
+        let path = dir.join("t.npy");
+        let a = Npy::from_i32(&[2, 2], &[1, 2, 3, 4]);
+        a.save(&path).unwrap();
+        let b = Npy::load(&path).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Npy::from_bytes(b"nope").is_err());
+    }
+}

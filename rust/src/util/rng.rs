@@ -1,0 +1,192 @@
+//! PCG-XSH-RR 64/32: small, fast, statistically solid PRNG.
+//!
+//! Deterministic across platforms — graph generation must produce the
+//! same graph for the same `(dataset, seed)` on every machine so that
+//! benchmark numbers are comparable and the Python mirror
+//! (`python/compile/layout.py`) can cross-check golden files.
+
+/// PCG-XSH-RR 64/32 generator (O'Neill 2014).
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a seed on the default stream.
+    pub fn seed_from(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` (Lemire rejection-free-ish widening method).
+    #[inline]
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        // widening multiply; slight modulo bias is irrelevant for our use
+        // but we reject the short range to keep distribution tests honest.
+        let mut m = (self.next_u32() as u64).wrapping_mul(bound as u64);
+        let mut lo = m as u32;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                m = (self.next_u32() as u64).wrapping_mul(bound as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.next_below((hi - lo) as u32) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Sample from a (truncated) power law with exponent `alpha > 1` over
+    /// `[xmin, xmax]` via inverse transform. Used to draw node degrees
+    /// with the heavy tail the paper's graphs exhibit (Fig. 2).
+    pub fn power_law(&mut self, alpha: f64, xmin: f64, xmax: f64) -> f64 {
+        debug_assert!(alpha > 1.0 && xmax > xmin && xmin > 0.0);
+        let u = self.f64();
+        let a = 1.0 - alpha;
+        let lo = xmin.powf(a);
+        let hi = xmax.powf(a);
+        (lo + u * (hi - lo)).powf(1.0 / a)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.range(0, i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Choose a random element.
+    pub fn choose<'a, T>(&mut self, slice: &'a [T]) -> &'a T {
+        &slice[self.range(0, slice.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg::seed_from(42);
+        let mut b = Pcg::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg::seed_from(1);
+        let mut b = Pcg::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut rng = Pcg::seed_from(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.next_below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut rng = Pcg::seed_from(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg::seed_from(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn power_law_bounds_and_tail() {
+        let mut rng = Pcg::seed_from(5);
+        let mut max = 0.0f64;
+        for _ in 0..10_000 {
+            let v = rng.power_law(2.1, 1.0, 1000.0);
+            assert!((1.0..=1000.0).contains(&v));
+            max = max.max(v);
+        }
+        // heavy tail: with 10k draws at alpha=2.1 we should see >100 at least once
+        assert!(max > 100.0, "max={max}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::seed_from(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

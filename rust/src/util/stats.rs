@@ -1,0 +1,274 @@
+//! Online statistics, percentiles, and histograms.
+//!
+//! Used by the serving coordinator (latency tracking), the GPU simulator
+//! (workload-balance measurements), and the bench harness.
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Coefficient of variation — the paper's workload-imbalance signal.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev() / self.mean
+        }
+    }
+}
+
+/// Percentile over a sample (nearest-rank on a sorted copy).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Geometric mean — used for cross-graph speedup aggregation exactly as
+/// speedup summaries in the paper's evaluation are (ratios compose
+/// multiplicatively).
+pub fn geomean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    (samples.iter().map(|x| x.ln()).sum::<f64>() / samples.len() as f64).exp()
+}
+
+/// Fixed-bucket histogram over `[lo, hi)` with `buckets` equal bins plus
+/// under/overflow. Used for the Fig. 2 degree histogram and latency
+/// distributions.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram { lo, hi, counts: vec![0; buckets], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[idx.min(last)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Render as an ASCII bar chart (log-scaled bars), one bucket per line.
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1) as f64;
+        let bucket_w = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let lo = self.lo + i as f64 * bucket_w;
+            let hi = lo + bucket_w;
+            let bar_len = if c == 0 {
+                0
+            } else {
+                (((c as f64).ln_1p() / max.ln_1p()) * width as f64).ceil() as usize
+            };
+            out.push_str(&format!(
+                "[{:>10.1}, {:>10.1}) {:>9} |{}\n",
+                lo,
+                hi,
+                c,
+                "#".repeat(bar_len)
+            ));
+        }
+        if self.overflow > 0 {
+            out.push_str(&format!("[{:>10.1},        inf) {:>9}\n", self.hi, self.overflow));
+        }
+        out
+    }
+}
+
+/// Logarithmically-bucketed histogram (powers of two), the natural view
+/// for power-law degree distributions (paper Fig. 2 uses log-x buckets).
+#[derive(Clone, Debug, Default)]
+pub struct Log2Histogram {
+    /// counts[i] = number of samples with floor(log2(max(x,1))) == i
+    pub counts: Vec<u64>,
+    pub zeros: u64,
+}
+
+impl Log2Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: u64) {
+        if x == 0 {
+            self.zeros += 1;
+            return;
+        }
+        let b = 63 - x.leading_zeros() as usize;
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+    }
+
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1) as f64;
+        let mut out = String::new();
+        if self.zeros > 0 {
+            out.push_str(&format!("{:>12} {:>9}\n", "deg=0", self.zeros));
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            let lo = 1u64 << i;
+            let hi = (1u64 << (i + 1)) - 1;
+            let bar = if c == 0 {
+                0
+            } else {
+                (((c as f64).ln_1p() / max.ln_1p()) * width as f64).ceil() as usize
+            };
+            out.push_str(&format!("[{:>6},{:>7}] {:>9} |{}\n", lo, hi, c, "#".repeat(bar)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 51.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let g = geomean(&[2.0, 0.5]);
+        assert!((g - 1.0).abs() < 1e-12);
+        let g2 = geomean(&[1.17, 1.17, 1.17]);
+        assert!((g2 - 1.17).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(11.0);
+        assert_eq!(h.counts, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+        assert!(h.ascii(20).lines().count() >= 10);
+    }
+
+    #[test]
+    fn log2_histogram() {
+        let mut h = Log2Histogram::new();
+        for d in [0u64, 1, 1, 2, 3, 4, 66, 1024] {
+            h.push(d);
+        }
+        assert_eq!(h.zeros, 1);
+        assert_eq!(h.counts[0], 2); // 1,1
+        assert_eq!(h.counts[1], 2); // 2,3
+        assert_eq!(h.counts[2], 1); // 4
+        assert_eq!(h.counts[6], 1); // 66
+        assert_eq!(h.counts[10], 1); // 1024
+    }
+
+    #[test]
+    fn cv_zero_for_uniform() {
+        let mut s = OnlineStats::new();
+        for _ in 0..10 {
+            s.push(3.0);
+        }
+        assert!(s.cv().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,175 @@
+//! Fixed-size worker pool over std mpsc channels (tokio stand-in).
+//!
+//! The serving coordinator and the parallel simulator both run on this:
+//! jobs are boxed closures; `scope`-style joining is provided by
+//! [`ThreadPool::run_all`] which blocks until every submitted job in the
+//! batch completes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    pending: AtomicUsize,
+    done: Mutex<()>,
+    cv: Condvar,
+}
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            done: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("accel-gcn-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let _g = shared.done.lock().unwrap();
+                                    shared.cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, shared }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        let mut g = self.shared.done.lock().unwrap();
+        while self.shared.pending.load(Ordering::Acquire) != 0 {
+            g = self.shared.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Run a batch of independent jobs to completion, collecting results
+    /// in input order.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let results: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            self.submit(move || {
+                let r = job();
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("all workers done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job completed"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A sensible default parallelism for this machine.
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<_> = (0..50).map(|i| move || i * 2).collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reusable_after_wait() {
+        let pool = ThreadPool::new(2);
+        let a = pool.run_all(vec![|| 1, || 2]);
+        let b = pool.run_all(vec![|| 3, || 4]);
+        assert_eq!((a, b), (vec![1, 2], vec![3, 4]));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| {});
+        drop(pool); // must not hang
+    }
+}

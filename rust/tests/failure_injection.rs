@@ -1,0 +1,144 @@
+//! Failure injection: corrupted artifacts, malformed inputs, and
+//! truncated files must produce clean errors — never panics, hangs, or
+//! silent garbage numerics.
+
+use accel_gcn::coordinator::{Engine, PreparedDataset};
+use accel_gcn::graph::csr::Csr;
+use accel_gcn::partition::bucket::BellLayout;
+use accel_gcn::partition::patterns::PartitionParams;
+use accel_gcn::runtime::{HostTensor, Manifest};
+use accel_gcn::util::npy::Npy;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("accel_gcn_failures").join(name);
+    fs::remove_dir_all(&dir).ok();
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_dataset() -> PreparedDataset {
+    let edges: Vec<(u32, u32, f32)> =
+        (0..60u32).map(|i| (i % 20, (i * 7 + 3) % 20, 1.0)).collect();
+    let adj = Csr::from_edges(20, 20, &edges).unwrap().symmetrize();
+    PreparedDataset::prepare(&adj, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 })
+}
+
+#[test]
+fn corrupted_bell_tensor_is_detected() {
+    let dir = tmpdir("bell_corrupt");
+    small_dataset().save(&dir).unwrap();
+    // find one bucket tensor and truncate it
+    let victim = fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .find(|e| e.file_name().to_string_lossy().ends_with("_cols.npy"))
+        .expect("a bell cols tensor exists");
+    let bytes = fs::read(victim.path()).unwrap();
+    fs::write(victim.path(), &bytes[..bytes.len() / 2]).unwrap();
+    let err = BellLayout::load(&dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("truncated") || msg.contains("mismatch") || msg.contains("parse"),
+        "unhelpful error: {msg}"
+    );
+}
+
+#[test]
+fn corrupted_spec_json_is_detected() {
+    let dir = tmpdir("spec_corrupt");
+    small_dataset().save(&dir).unwrap();
+    fs::write(dir.join("bell_spec.json"), "{ not json !").unwrap();
+    assert!(BellLayout::load(&dir).is_err());
+}
+
+#[test]
+fn missing_manifest_fields_rejected() {
+    let dir = tmpdir("manifest_fields");
+    fs::write(dir.join("manifest.json"), r#"{"artifacts": {}}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err()); // missing n_rows/n_cols
+    fs::write(dir.join("manifest.json"), r#"{"n_rows": 1, "n_cols": 1}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err()); // missing artifacts
+}
+
+#[test]
+fn engine_start_fails_cleanly_without_artifacts() {
+    let dir = tmpdir("no_artifacts");
+    assert!(Engine::start(dir.to_str().unwrap()).is_err());
+}
+
+#[test]
+fn engine_survives_corrupt_hlo() {
+    // manifest points at an artifact whose HLO file is garbage: loading
+    // must error, and the engine must stay alive for later requests
+    let dir = tmpdir("bad_hlo");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{
+          "n_rows": 4, "n_cols": 4,
+          "artifacts": {
+            "broken": {"file": "broken.hlo.txt", "inputs": [], "outputs": []}
+          }
+        }"#,
+    )
+    .unwrap();
+    fs::write(dir.join("broken.hlo.txt"), "this is not HLO text").unwrap();
+    let engine = Engine::start(dir.to_str().unwrap()).unwrap();
+    assert!(engine.load_artifact("broken").is_err());
+    assert!(engine.load_artifact("broken").is_err()); // still responsive
+    assert!(engine.exec_sync("broken", vec![]).is_err());
+}
+
+#[test]
+fn dataset_load_rejects_tampered_graph() {
+    let dir = tmpdir("graph_tamper");
+    small_dataset().save(&dir).unwrap();
+    let path = dir.join("graph.bin");
+    let mut bytes = fs::read(&path).unwrap();
+    bytes[0] ^= 0xFF; // break the magic
+    fs::write(&path, &bytes).unwrap();
+    assert!(PreparedDataset::load(&dir).is_err());
+}
+
+#[test]
+fn npy_dtype_confusion_rejected() {
+    let dir = tmpdir("dtype_confusion");
+    small_dataset().save(&dir).unwrap();
+    // overwrite a f32 tensor with an i32 one of the same shape
+    let vals = fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .find(|e| {
+            let name = e.file_name().to_string_lossy().to_string();
+            name.starts_with("bell_") && name.ends_with("_vals.npy")
+        })
+        .unwrap();
+    let old = Npy::load(vals.path()).unwrap();
+    let bogus = Npy::from_i32(&old.shape, &vec![0i32; old.len()]);
+    bogus.save(vals.path()).unwrap();
+    assert!(BellLayout::load(&dir).is_err());
+}
+
+#[test]
+fn host_tensor_shape_mismatch_panics_not_corrupts() {
+    let r = std::panic::catch_unwind(|| HostTensor::f32(&[2, 3], vec![0.0; 5]));
+    assert!(r.is_err(), "shape/data mismatch must be rejected");
+}
+
+#[test]
+fn artifacts_integration_wrong_width_rejected() {
+    let art = Path::new("artifacts/quickstart");
+    if !art.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start("artifacts/quickstart").unwrap();
+    engine.load_artifact("spmm_f16").unwrap();
+    engine.bind_bell("spmm_f16").unwrap();
+    let n = engine.manifest().n_cols;
+    // wrong column width for this artifact
+    let x = HostTensor::f32(&[n, 32], vec![0.0; n * 32]);
+    let err = engine.exec_sync("spmm_f16", vec![x]).unwrap_err();
+    assert!(format!("{err:#}").contains("expects"), "{err:#}");
+}

@@ -1,0 +1,84 @@
+//! Integration: PJRT literal round-trips and artifact execution against
+//! the exact CPU executor. Tests that need AOT artifacts skip (with a
+//! note) until `make artifacts` has run.
+
+use accel_gcn::partition::bucket::BellLayout;
+use accel_gcn::runtime::{HostTensor, Manifest, Runtime};
+use accel_gcn::spmm::verify::assert_allclose;
+use accel_gcn::util::rng::Pcg;
+use std::path::Path;
+
+const ART: &str = "artifacts/quickstart";
+
+fn artifacts_ready() -> bool {
+    Path::new(ART).join("manifest.json").exists()
+}
+
+#[test]
+fn literal_roundtrip_f32_and_i32() {
+    let t = HostTensor::f32(&[2, 3], vec![1.0, -2.5, 3.0, 4.0, 0.0, 6.5]);
+    let lit = t.to_literal().unwrap();
+    let back = HostTensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+
+    let t = HostTensor::i32(&[4], vec![i32::MIN, -1, 0, i32::MAX]);
+    let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+    assert_eq!(t, back);
+}
+
+#[test]
+fn spmm_artifact_matches_exact_executor() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(ART).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load(&manifest, "spmm_f16").unwrap();
+
+    // assemble inputs in manifest order: bell buckets then x
+    let layout = BellLayout::load(ART).unwrap();
+    let bells = manifest.load_bell_inputs("spmm_f16").unwrap();
+    let mut rng = Pcg::seed_from(99);
+    let n = manifest.n_cols;
+    let x = HostTensor::f32(&[n, 16], (0..n * 16).map(|_| rng.f32() - 0.5).collect());
+    let mut inputs: Vec<&HostTensor> = bells.iter().map(|(_, t)| t).collect();
+    inputs.push(&x);
+
+    let out = rt.execute("spmm_f16", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[manifest.n_rows, 16]);
+
+    let want = layout.execute(x.as_f32().unwrap(), 16);
+    assert_allclose(out[0].as_f32().unwrap(), &want, 1e-3, 1e-3, "PJRT vs exact executor");
+}
+
+#[test]
+fn artifact_input_validation_rejects_bad_shapes() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(ART).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load(&manifest, "spmm_f16").unwrap();
+    let bogus = HostTensor::f32(&[1, 1], vec![0.0]);
+    let inputs: Vec<&HostTensor> = vec![&bogus];
+    assert!(rt.execute("spmm_f16", &inputs).is_err());
+    assert!(rt.execute("not_an_artifact", &inputs).is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(ART).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let t0 = rt.load(&manifest, "spmm_f32").unwrap().compile_secs;
+    assert!(rt.is_loaded("spmm_f32"));
+    // second load must hit the cache (same compile_secs object)
+    let t1 = rt.load(&manifest, "spmm_f32").unwrap().compile_secs;
+    assert_eq!(t0, t1);
+}

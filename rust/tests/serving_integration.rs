@@ -1,0 +1,103 @@
+//! Integration: the serving engine end-to-end — artifact loading,
+//! static-input binding, column batching, concurrent submission, and
+//! verification against the exact executor.
+
+use accel_gcn::coordinator::{ColumnBatcher, Engine};
+use accel_gcn::partition::bucket::BellLayout;
+use accel_gcn::runtime::HostTensor;
+use accel_gcn::spmm::verify::allclose;
+use accel_gcn::util::rng::Pcg;
+use std::path::Path;
+
+const ART: &str = "artifacts/quickstart";
+
+fn artifacts_ready() -> bool {
+    Path::new(ART).join("manifest.json").exists()
+}
+
+#[test]
+fn engine_executes_batched_requests() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start(ART).unwrap();
+    let ladder = engine.manifest().spmm_coldims();
+    for (_, name) in &ladder {
+        engine.load_artifact(name).unwrap();
+        engine.bind_bell(name).unwrap();
+    }
+    let n = engine.manifest().n_cols;
+    let layout = BellLayout::load(ART).unwrap();
+    let batcher = ColumnBatcher::new(ladder);
+
+    let mut rng = Pcg::seed_from(5);
+    let widths = [16usize, 16, 32, 64, 16];
+    let xs: Vec<HostTensor> = widths
+        .iter()
+        .map(|&w| HostTensor::f32(&[n, w], (0..n * w).map(|_| rng.f32() - 0.5).collect()))
+        .collect();
+    let plans = batcher.plan(&widths).unwrap();
+    for plan in &plans {
+        let member_xs: Vec<&HostTensor> = plan.members.iter().map(|&m| &xs[m]).collect();
+        let fused = ColumnBatcher::fuse(plan, &member_xs).unwrap();
+        let y = engine.exec_sync(&plan.artifact, vec![fused]).unwrap().pop().unwrap();
+        let outs = ColumnBatcher::split(plan, &widths, &y).unwrap();
+        for (i, out) in outs.iter().enumerate() {
+            let req = plan.members[i];
+            let want = layout.execute(xs[req].as_f32().unwrap(), widths[req]);
+            assert!(
+                allclose(out.as_f32().unwrap(), &want, 1e-3, 1e-3),
+                "request {req} mismatch"
+            );
+        }
+    }
+    assert!(engine.metrics.requests.get() >= plans.len() as u64);
+    assert_eq!(engine.metrics.errors.get(), 0);
+}
+
+#[test]
+fn engine_reports_errors_not_poisons() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start(ART).unwrap();
+    // executing an unknown artifact errors but the engine stays usable
+    assert!(engine.exec_sync("bogus", vec![]).is_err());
+    engine.load_artifact("spmm_f16").unwrap();
+    engine.bind_bell("spmm_f16").unwrap();
+    // wrong dynamic arity errors cleanly
+    assert!(engine.exec_sync("spmm_f16", vec![]).is_err());
+    // and a correct request still succeeds afterwards
+    let n = engine.manifest().n_cols;
+    let x = HostTensor::f32(&[n, 16], vec![0.1; n * 16]);
+    let out = engine.exec_sync("spmm_f16", vec![x]).unwrap();
+    assert_eq!(out[0].shape(), &[engine.manifest().n_rows, 16]);
+    assert!(engine.metrics.errors.get() >= 2);
+}
+
+#[test]
+fn concurrent_clients_share_engine() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = std::sync::Arc::new(Engine::start(ART).unwrap());
+    engine.load_artifact("spmm_f16").unwrap();
+    engine.bind_bell("spmm_f16").unwrap();
+    let n = engine.manifest().n_cols;
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let engine = std::sync::Arc::clone(&engine);
+            std::thread::spawn(move || {
+                let x = HostTensor::f32(&[n, 16], vec![i as f32 * 0.1; n * 16]);
+                engine.exec_sync("spmm_f16", vec![x]).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let out = h.join().unwrap();
+        assert_eq!(out[0].shape()[1], 16);
+    }
+}
