@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, format. Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+
+# Formatting is checked but advisory for now: parts of the seed tree
+# predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
+# has been run tree-wide.
+if ! cargo fmt --check; then
+    echo "warning: rustfmt differences found (advisory, not failing CI yet)" >&2
+fi

@@ -5,22 +5,26 @@
 //! cargo run --release --example quickstart
 //! ```
 //! 1. synthesizes a Collab-like power-law graph,
-//! 2. runs degree sorting + block-level partitioning (Algorithms 1–2),
-//! 3. executes the partitioned SpMM schedule exactly and checks it
-//!    against the dense reference,
+//! 2. builds its `SpmmPlan` (degree sorting + block-level partitioning,
+//!    Algorithms 1–2) through the pipeline layer,
+//! 3. executes the partitioned SpMM schedule exactly — sequentially and
+//!    sharded across the thread pool — and checks both against the
+//!    dense reference,
 //! 4. simulates all four GPU kernels and prints the Fig. 5-style
 //!    comparison for one column dimension.
 
 use accel_gcn::graph::datasets::{by_name, materialize, ScalePolicy};
-use accel_gcn::graph::degree::DegreeSorted;
-use accel_gcn::partition::block_level::BlockPartition;
 use accel_gcn::partition::bucket::BellLayout;
 use accel_gcn::partition::patterns::PartitionParams;
-use accel_gcn::sim::kernels::{CostModel, PreparedGraph};
+use accel_gcn::pipeline::{
+    BlockLevel, CsrReference, Executor, ParallelBlockLevel, PlanCache,
+};
+use accel_gcn::sim::kernels::CostModel;
 use accel_gcn::sim::{simulate_kernel, GpuConfig, KernelKind, KernelOptions};
-use accel_gcn::spmm::{allclose, spmm_block_level};
+use accel_gcn::spmm::allclose;
 use accel_gcn::util::bench::Table;
 use accel_gcn::util::rng::Pcg;
+use accel_gcn::util::threadpool::default_parallelism;
 
 fn main() -> anyhow::Result<()> {
     // 1. a scaled-down Collab (Table I spec, power-law family)
@@ -36,43 +40,46 @@ fn main() -> anyhow::Result<()> {
         csr.max_degree() as f64 / csr.avg_degree()
     );
 
-    // 2. the paper's preprocessing
+    // 2. the paper's preprocessing, via the plan cache (a second request
+    // for the same graph would skip this work entirely)
     let params = PartitionParams::default(); // 12 warps/block, 32 nzs/warp
-    let sorted = DegreeSorted::new(&csr);
-    let bp = BlockPartition::build(&sorted.csr, params);
+    let plan = PlanCache::global().plan_for(&csr, params);
     println!(
         "block-level partition: {} blocks, {} warp tasks, {} split rows, metadata ratio {:.1}%",
-        bp.n_blocks(),
-        bp.n_warp_tasks(),
-        bp.n_split_rows,
-        bp.footprint().ratio() * 100.0
+        plan.block.n_blocks(),
+        plan.block.n_warp_tasks(),
+        plan.block.n_split_rows,
+        plan.block.footprint().ratio() * 100.0
     );
 
-    // 3. execute the schedule exactly and verify numerics
+    // 3. execute the schedule exactly and verify numerics — sequential
+    // and parallel produce the dense reference up to f32 reordering
     let f = 16;
     let mut rng = Pcg::seed_from(7);
     let x: Vec<f32> = (0..csr.n_rows * f).map(|_| rng.f32() - 0.5).collect();
-    let got = spmm_block_level(&sorted.csr, &bp, &x, f);
-    let want = sorted.csr.spmm_dense(&x, f);
+    let want = CsrReference.execute(&plan, &x, f);
+    let got = BlockLevel.execute(&plan, &x, f);
     assert!(allclose(&got, &want, 1e-3, 1e-3), "schedule numerics mismatch");
-    println!("block-level schedule == dense reference ✓");
+    let threads = default_parallelism();
+    let got_par = ParallelBlockLevel::new(threads).execute(&plan, &x, f);
+    assert!(allclose(&got_par, &want, 1e-3, 1e-3), "parallel schedule mismatch");
+    println!("block-level schedule == dense reference ✓ (sequential and {threads}-thread)");
 
-    let layout = BellLayout::build(&sorted.csr, &bp);
+    let layout = BellLayout::build(&plan.sorted.csr, &plan.block);
     println!(
         "BELL export: {} buckets, padding overhead {:.2}x",
         layout.buckets.len(),
         layout.padding_overhead()
     );
 
-    // 4. simulated kernel comparison (Fig. 5 style)
+    // 4. simulated kernel comparison (Fig. 5 style) over the same plan
     let gpu = GpuConfig::rtx3090();
     let cost = CostModel::default();
-    let g = PreparedGraph::new(csr, params);
     let mut table = Table::new(&["kernel", "sim time (µs)", "speedup vs cuSPARSE"]);
     let mut times = Vec::new();
     for kind in KernelKind::all() {
         let opts = KernelOptions { combined_warp: kind != KernelKind::GnnAdvisor };
-        let r = simulate_kernel(&gpu, &cost, kind, opts, &g, 64);
+        let r = simulate_kernel(&gpu, &cost, kind, opts, &plan, 64);
         times.push((kind.name(), r.micros));
     }
     let cusparse = times.iter().find(|(n, _)| *n == "cusparse").unwrap().1;
@@ -80,6 +87,6 @@ fn main() -> anyhow::Result<()> {
         table.row(vec![name.to_string(), format!("{us:.1}"), format!("{:.2}x", cusparse / us)]);
     }
     print!("{}", table.render());
-    println!("next: `accel-gcn prepare` + `make artifacts` + examples/train_gcn for the full stack");
+    println!("next: `accel-gcn prepare` + python -m compile.aot + examples/train_gcn for the full stack");
     Ok(())
 }

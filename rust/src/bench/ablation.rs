@@ -6,7 +6,8 @@
 
 use crate::graph::datasets::{by_name, materialize, ScalePolicy};
 use crate::partition::patterns::PartitionParams;
-use crate::sim::kernels::{CostModel, KernelKind, KernelOptions, PreparedGraph};
+use crate::pipeline::SpmmPlan;
+use crate::sim::kernels::{CostModel, KernelKind, KernelOptions};
 use crate::sim::{simulate_kernel, GpuConfig};
 use crate::util::bench::{Csv, Table};
 use anyhow::Result;
@@ -41,7 +42,7 @@ pub fn partition_param_sweep(
     for &mbw in &[1usize, 2, 4, 6, 12, 24] {
         for &mwn in &[8usize, 16, 32, 64] {
             let params = PartitionParams { max_block_warps: mbw, max_warp_nzs: mwn };
-            let g = PreparedGraph::new(csr.clone(), params);
+            let g = SpmmPlan::build(csr.clone(), params);
             let r = simulate_kernel(&gpu, &cost, KernelKind::AccelGcn, KernelOptions::default(), &g, coldim);
             let layout = crate::partition::bucket::BellLayout::build(&g.sorted.csr, &g.block);
             out.push(AblationPoint {

@@ -1,0 +1,164 @@
+//! `exec_scaling` — CPU-executor thread-scaling experiment.
+//!
+//! Sweeps the parallel block-level executor
+//! ([`crate::pipeline::spmm_block_level_parallel`]) over thread counts
+//! on the Collab stand-in (the paper's headline power-law graph) and a
+//! set of column dimensions, and writes a machine-readable
+//! `BENCH_exec_scaling.json` so successive PRs can track the hot path's
+//! parallel efficiency over time.
+//!
+//! Timing methodology: one [`SpmmPlan`] is built per graph (plan build
+//! is *not* timed — that is the point of the pipeline), the input
+//! matrix is shared via `Arc`, and each (coldim, threads) cell times
+//! the sorted-domain parallel executor with a persistent pool, p50 over
+//! [`time_fn`]'s batched samples.
+
+use crate::graph::datasets::{by_name, materialize, ScalePolicy};
+use crate::partition::patterns::PartitionParams;
+use crate::pipeline::{spmm_block_level_parallel, SpmmPlan};
+use crate::util::bench::{time_fn, Table};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Default thread sweep: serial baseline through the paper-relevant
+/// core counts.
+pub const DEFAULT_THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Default column dimensions (ends + middle of the paper's 16..128).
+pub const DEFAULT_COLDIMS: [usize; 3] = [16, 64, 128];
+
+/// One timed (graph, coldim, threads) cell.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub graph: String,
+    pub coldim: usize,
+    pub threads: usize,
+    pub micros: f64,
+    /// `t(1 thread) / t(this)` at the same (graph, coldim).
+    pub speedup_vs_1t: f64,
+}
+
+/// Run the sweep on one graph. `threads` should include 1 (the baseline
+/// for `speedup_vs_1t`; otherwise speedups are reported as 0).
+pub fn exec_scaling(
+    graph: &str,
+    coldims: &[usize],
+    threads: &[usize],
+    policy: ScalePolicy,
+    seed: u64,
+) -> Result<Vec<ScalingPoint>> {
+    let spec = by_name(graph)
+        .ok_or_else(|| anyhow::anyhow!("unknown graph `{graph}` (see `accel-gcn datasets`)"))?;
+    let csr = materialize(spec, policy, seed);
+    let n_cols = csr.n_cols;
+    let plan = Arc::new(SpmmPlan::build(csr, PartitionParams::default()));
+    let mut rng = Pcg::seed_from(seed ^ 0x5ca1ab1e);
+
+    let mut points = Vec::with_capacity(coldims.len() * threads.len());
+    for &coldim in coldims {
+        let x: Arc<Vec<f32>> =
+            Arc::new((0..n_cols * coldim).map(|_| rng.f32() - 0.5).collect());
+        // time every thread count first, then derive speedups from the
+        // 1-thread entry so the `threads` ordering doesn't matter
+        let timed: Vec<(usize, f64)> = threads
+            .iter()
+            .map(|&t| {
+                let pool = ThreadPool::new(t);
+                let m = time_fn("exec_scaling", 1, 0.25, || {
+                    std::hint::black_box(spmm_block_level_parallel(&plan, &x, coldim, &pool));
+                });
+                (t, m.p50() * 1e6)
+            })
+            .collect();
+        let base_us = timed.iter().find(|(t, _)| *t == 1).map(|(_, us)| *us);
+        for (t, micros) in timed {
+            points.push(ScalingPoint {
+                graph: graph.to_string(),
+                coldim,
+                threads: t,
+                micros,
+                speedup_vs_1t: base_us.map_or(0.0, |b| b / micros),
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Render the paper-style table.
+pub fn report(points: &[ScalingPoint]) -> String {
+    let mut table = Table::new(&["graph", "coldim", "threads", "µs (p50)", "speedup vs 1t"]);
+    for p in points {
+        table.row(vec![
+            p.graph.clone(),
+            p.coldim.to_string(),
+            p.threads.to_string(),
+            format!("{:.1}", p.micros),
+            format!("{:.2}x", p.speedup_vs_1t),
+        ]);
+    }
+    table.render()
+}
+
+/// The machine-readable form consumed by the perf-trajectory tooling.
+pub fn to_json(points: &[ScalingPoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("graph", p.graph.as_str());
+            o.set("coldim", p.coldim);
+            o.set("threads", p.threads);
+            o.set("us", p.micros);
+            o.set("speedup_vs_1t", p.speedup_vs_1t);
+            o
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("experiment", "exec_scaling");
+    doc.set("executor", "block-level-parallel");
+    doc.set("unit", "us");
+    doc.set("points", rows);
+    doc
+}
+
+/// Write `BENCH_exec_scaling.json`.
+pub fn save_json(points: &[ScalingPoint], path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(points).to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shape_and_json() {
+        let pts = exec_scaling("collab", &[16], &[1, 2], ScalePolicy::tiny(), 7).unwrap();
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.micros.is_finite() && p.micros > 0.0, "{p:?}");
+            assert!(p.speedup_vs_1t > 0.0, "{p:?}");
+        }
+        assert!((pts[0].speedup_vs_1t - 1.0).abs() < 1e-9, "1-thread baseline");
+        let json = to_json(&pts).to_pretty();
+        assert!(json.contains("exec_scaling"));
+        assert!(json.contains("speedup_vs_1t"));
+        // round-trips through our own parser
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.req_arr("points").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unknown_graph_rejected() {
+        assert!(exec_scaling("nope", &[16], &[1], ScalePolicy::tiny(), 1).is_err());
+    }
+}

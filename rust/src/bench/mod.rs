@@ -8,8 +8,11 @@
 //!   curve.
 //! * [`serve`] — the serving driver: dynamic column batching over the
 //!   compiled SpMM ladder with latency/throughput metrics.
+//! * [`exec_scaling`] — thread-scaling sweep of the parallel block-level
+//!   executor (writes `BENCH_exec_scaling.json`).
 
 pub mod paper;
 pub mod ablation;
+pub mod exec_scaling;
 pub mod train;
 pub mod serve;

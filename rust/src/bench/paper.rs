@@ -14,8 +14,8 @@
 use crate::graph::datasets::{self, ScalePolicy};
 use crate::graph::stats;
 use crate::partition::patterns::PartitionParams;
-use crate::partition::warp_level::WarpPartition;
-use crate::sim::kernels::{CostModel, KernelKind, KernelOptions, PreparedGraph};
+use crate::pipeline::SpmmPlan;
+use crate::sim::kernels::{CostModel, KernelKind, KernelOptions};
 use crate::sim::{simulate_kernel, GpuConfig};
 use crate::util::bench::{Csv, Table};
 use crate::util::cli::Args;
@@ -89,7 +89,7 @@ pub fn full_sweep(cfg: &SweepConfig) -> Vec<SweepPoint> {
             move || -> Vec<SweepPoint> {
                 let spec = datasets::by_name(&name).expect("dataset name validated");
                 let csr = datasets::materialize(spec, policy, seed);
-                let g = PreparedGraph::new(csr, PartitionParams::default());
+                let g = SpmmPlan::build(csr, PartitionParams::default());
                 coldims
                     .iter()
                     .map(|&coldim| sweep_point(&gpu, &cost, &g, &name, coldim))
@@ -103,7 +103,7 @@ pub fn full_sweep(cfg: &SweepConfig) -> Vec<SweepPoint> {
 fn sweep_point(
     gpu: &GpuConfig,
     cost: &CostModel,
-    g: &PreparedGraph,
+    g: &SpmmPlan,
     name: &str,
     coldim: usize,
 ) -> SweepPoint {
@@ -353,8 +353,8 @@ pub fn fig3(cfg: &SweepConfig, out: Option<&Path>) -> Result<String> {
     for name in &cfg.graphs {
         let spec = datasets::by_name(name).expect("valid name");
         let csr = datasets::materialize(spec, cfg.policy, cfg.seed);
-        let g = PreparedGraph::new(csr, PartitionParams::default());
-        let wp = WarpPartition::build(&g.original, PartitionParams::default().max_warp_nzs);
+        let g = SpmmPlan::build(csr, PartitionParams::default());
+        let wp = &g.warp; // same group size: the plan's warp-level baseline
         let fp = g.block.footprint();
         let warp_bytes = wp.metadata_bytes();
         let ratio = fp.block_level_bytes as f64 / warp_bytes.max(1) as f64;
@@ -387,11 +387,12 @@ pub fn fig3(cfg: &SweepConfig, out: Option<&Path>) -> Result<String> {
 }
 
 /// Preprocessing-throughput microbench backing the O(n) claim (§III-C).
+/// Times the full plan build: fingerprint + degree sort + block-level
+/// partition + warp-level baseline (includes one CSR clone per
+/// iteration, since a plan owns its matrix).
 pub fn preprocessing_scaling(seed: u64) -> String {
-    use crate::graph::degree::DegreeSorted;
-    use crate::partition::block_level::BlockPartition;
     use crate::util::bench::time_fn;
-    let mut table = Table::new(&["nodes", "nnz", "sort+partition", "ns/edge"]);
+    let mut table = Table::new(&["nodes", "nnz", "plan build", "ns/edge"]);
     for scale in [10_000usize, 40_000, 160_000] {
         let mut rng = crate::util::rng::Pcg::seed_from(seed);
         let degs = crate::graph::generator::degree_sequence(
@@ -402,9 +403,8 @@ pub fn preprocessing_scaling(seed: u64) -> String {
         );
         let csr = crate::graph::generator::from_degree_sequence(scale, &degs, &mut rng);
         let m = time_fn("prep", 1, 0.3, || {
-            let ds = DegreeSorted::new(&csr);
-            let bp = BlockPartition::build(&ds.csr, PartitionParams::default());
-            std::hint::black_box(bp.n_blocks());
+            let plan = SpmmPlan::build(csr.clone(), PartitionParams::default());
+            std::hint::black_box(plan.block.n_blocks());
         });
         table.row(vec![
             scale.to_string(),
@@ -487,6 +487,33 @@ pub fn run_from_args(args: &Args) -> Result<()> {
     }
     if arm("prep") {
         report += &format!("=== Preprocessing O(n) scaling ===\n{}\n", preprocessing_scaling(seed));
+    }
+    if arm("exec_scaling") {
+        use crate::bench::exec_scaling as es;
+        let pts = es::exec_scaling(
+            "collab",
+            &es::DEFAULT_COLDIMS,
+            &es::DEFAULT_THREADS,
+            cfg.policy,
+            seed,
+        )?;
+        // one copy in the results dir; additionally seed the
+        // perf-trajectory file at the repo root, but only when the
+        // working directory *is* the checkout (the usual `cargo run`
+        // case) — never drop stray files elsewhere, and skip the
+        // duplicate write when --out is the current directory
+        es::save_json(&pts, &out.join("BENCH_exec_scaling.json"))?;
+        let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
+        let same_dir = std::fs::canonicalize(out)
+            .and_then(|o| std::fs::canonicalize(".").map(|c| o == c))
+            .unwrap_or(false);
+        if cwd_is_repo_root && !same_dir {
+            es::save_json(&pts, Path::new("BENCH_exec_scaling.json"))?;
+        }
+        report += &format!(
+            "=== Exec scaling (parallel block-level, collab) ===\n{}(written to BENCH_exec_scaling.json)\n\n",
+            es::report(&pts)
+        );
     }
     if arm("ablation-params") || experiment == "all" {
         let pts = crate::bench::ablation::partition_param_sweep(

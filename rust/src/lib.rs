@@ -11,8 +11,15 @@
 //!   bucket layout consumed by the Pallas kernel.
 //! * [`spmm`] — exact CPU executors for every schedule (numeric ground
 //!   truth for the partitioners).
+//! * [`pipeline`] — the unified SpMM execution pipeline: cached
+//!   [`pipeline::SpmmPlan`]s (degree sort + both partitions, built once
+//!   per graph), the [`pipeline::Executor`] trait over every schedule,
+//!   and the thread-pool-parallel block-level executor. Every consumer —
+//!   binary, bench harness, simulator, coordinator — builds schedules
+//!   through this layer.
 //! * [`sim`] — GPU microarchitecture simulator reproducing the paper's
-//!   evaluation (warps, coalescing, shared memory, SM scheduling).
+//!   evaluation (warps, coalescing, shared memory, SM scheduling);
+//!   simulates plans prepared by [`pipeline`].
 //! * [`coordinator`] — serving engine: request router, shape-bucket
 //!   batcher, worker pool.
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
@@ -24,6 +31,7 @@ pub mod util;
 pub mod graph;
 pub mod partition;
 pub mod spmm;
+pub mod pipeline;
 pub mod sim;
 pub mod model;
 pub mod metrics;

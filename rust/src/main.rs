@@ -16,7 +16,8 @@ use accel_gcn::coordinator::PreparedDataset;
 use accel_gcn::graph::datasets::{self, ScalePolicy};
 use accel_gcn::graph::{generator, stats, Csr};
 use accel_gcn::partition::patterns::PartitionParams;
-use accel_gcn::sim::kernels::{CostModel, PreparedGraph};
+use accel_gcn::pipeline::SpmmPlan;
+use accel_gcn::sim::kernels::CostModel;
 use accel_gcn::sim::{simulate_kernel, GpuConfig, KernelKind, KernelOptions};
 use accel_gcn::util::cli::Args;
 use accel_gcn::util::rng::Pcg;
@@ -65,7 +66,8 @@ fn print_usage() {
          \x20 stats     --graph NAME (Fig. 2 degree histogram)\n\
          \x20 train     --artifacts DIR [--steps N]\n\
          \x20 serve     --artifacts DIR [--requests N] [--coldims 16,32]\n\
-         \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|all]"
+         \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
+         \x20           exec_scaling|all]"
     );
 }
 
@@ -155,7 +157,9 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
         args.str_list_or("kernels", &["accel-gcn", "cusparse", "gnnadvisor", "graphblast"]);
     let cfg = GpuConfig::rtx3090();
     let cost = CostModel::default();
-    let g = PreparedGraph::new(csr, PartitionParams::default());
+    // one-shot CLI run: build the plan directly (no point caching it —
+    // long-lived consumers like the coordinator use PlanCache instead)
+    let g = SpmmPlan::build(csr, PartitionParams::default());
     println!(
         "graph `{name}`: {} rows, {} nnz, coldim {coldim}",
         g.original.n_rows,

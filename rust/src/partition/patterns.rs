@@ -11,7 +11,10 @@
 /// Tunable parameters of the partitioner. Paper defaults: a block has up
 /// to 12 warps (`max_block_warps`, the example value given with Eq. 1)
 /// and a warp handles up to 32 nonzeros.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `Hash` because the params are half of the
+/// [`PlanCache`](crate::pipeline::PlanCache) key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PartitionParams {
     pub max_block_warps: usize,
     pub max_warp_nzs: usize,

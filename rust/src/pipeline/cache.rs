@@ -1,0 +1,157 @@
+//! [`PlanCache`]: memoized [`SpmmPlan`]s keyed by graph fingerprint.
+//!
+//! ## Cache-key semantics
+//!
+//! The key is `(GraphFingerprint, PartitionParams)`. The fingerprint
+//! covers the matrix dimensions, nonzero count, and a 64-bit content
+//! hash of all three CSR arrays — so a hit means "same matrix, same
+//! tunables", and the cached plan's degree sort, permutation, and both
+//! partitions are valid verbatim. Requesting the same graph with
+//! different `PartitionParams` builds (and caches) a separate plan.
+//!
+//! Plans are returned as `Arc<SpmmPlan>`: the cache and every consumer
+//! share one immutable instance, so a hit costs one fingerprint pass
+//! over the CSR (O(nnz)) instead of the full sort + partition chain.
+//!
+//! The cache never evicts; it is bounded by the number of distinct
+//! (graph, params) pairs a process touches. Long-running processes that
+//! cycle through many graphs should call [`PlanCache::clear`] (each
+//! cached plan owns two copies of the matrix: original and sorted).
+//!
+//! Concurrency: `plan_for` is callable from any thread. Plan
+//! construction happens outside the map lock, so two threads racing on
+//! the same cold key may both build; the first insert wins and both get
+//! the same `Arc` afterwards.
+
+use super::plan::{GraphFingerprint, SpmmPlan};
+use crate::graph::csr::Csr;
+use crate::partition::patterns::PartitionParams;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    fingerprint: GraphFingerprint,
+    params: PartitionParams,
+}
+
+/// Process-wide memoization of SpMM plans.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<SpmmPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The process-wide cache shared by the binary, the bench harness,
+    /// and the serving coordinator.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(PlanCache::new)
+    }
+
+    /// Get (or build) the plan for `csr` under `params`.
+    pub fn plan_for(&self, csr: &Csr, params: PartitionParams) -> Arc<SpmmPlan> {
+        let key = PlanKey { fingerprint: GraphFingerprint::of(csr), params };
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // build outside the lock: preprocessing is the expensive part
+        let plan = Arc::new(SpmmPlan::build(csr.clone(), params));
+        plan.seed_fingerprint(key.fingerprint); // already hashed for the key
+        let mut map = self.plans.lock().unwrap();
+        Arc::clone(map.entry(key).or_insert(plan))
+    }
+
+    /// Cached plan count.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits since creation; `clear` does not reset the counters.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached plan (outstanding `Arc`s stay alive).
+    pub fn clear(&self) {
+        self.plans.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(seed: u64) -> Csr {
+        let mut rng = crate::util::rng::Pcg::seed_from(seed);
+        let edges: Vec<(u32, u32, f32)> = (0..120)
+            .map(|_| (rng.range(0, 40) as u32, rng.range(0, 40) as u32, rng.f32() + 0.1))
+            .collect();
+        Csr::from_edges(40, 40, &edges).unwrap()
+    }
+
+    #[test]
+    fn second_request_hits_and_shares() {
+        let cache = PlanCache::new();
+        let g = graph(1);
+        let p1 = cache.plan_for(&g, PartitionParams::default());
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+        let p2 = cache.plan_for(&g, PartitionParams::default());
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the same plan");
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn params_are_part_of_the_key() {
+        let cache = PlanCache::new();
+        let g = graph(2);
+        let a = cache.plan_for(&g, PartitionParams::default());
+        let b = cache.plan_for(&g, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(b.params.max_block_warps, 2);
+    }
+
+    #[test]
+    fn different_graphs_miss() {
+        let cache = PlanCache::new();
+        let a = cache.plan_for(&graph(3), PartitionParams::default());
+        let b = cache.plan_for(&graph(4), PartitionParams::default());
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn clear_drops_plans_but_arcs_survive() {
+        let cache = PlanCache::new();
+        let g = graph(5);
+        let p = cache.plan_for(&g, PartitionParams::default());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(p.n_rows(), 40); // outstanding Arc still usable
+        let p2 = cache.plan_for(&g, PartitionParams::default());
+        assert!(!Arc::ptr_eq(&p, &p2), "rebuilt after clear");
+    }
+
+    #[test]
+    fn global_is_a_singleton() {
+        assert!(std::ptr::eq(PlanCache::global(), PlanCache::global()));
+    }
+}

@@ -1,0 +1,126 @@
+//! The [`Executor`] trait: one contract over every way this codebase
+//! can run `Y = A·X`.
+//!
+//! All executors consume the same [`SpmmPlan`] and agree on one
+//! convention: `x` is `[n_cols × f]` row-major in the **original**
+//! column order, and the returned `Y` is `[n_rows × f]` in the
+//! **original** row order. Executors that internally run the
+//! degree-sorted schedule (the block-level ones) unpermute before
+//! returning, so any two executors' outputs are directly comparable —
+//! up to f32 addition reordering, which is exactly what the property
+//! tests assert.
+//!
+//! Implementations:
+//! * [`CsrReference`] — the dense-traversal numeric ground truth.
+//! * [`BlockLevel`] — the paper's schedule, sequential
+//!   ([`crate::spmm::spmm_block_level`]).
+//! * [`WarpLevel`] — the GNNAdvisor-style baseline
+//!   ([`crate::spmm::spmm_warp_level`]).
+//! * [`ParallelBlockLevel`](super::parallel::ParallelBlockLevel) — the
+//!   block-level schedule sharded across the thread pool (see
+//!   [`super::parallel`]).
+
+use super::plan::SpmmPlan;
+use crate::spmm::{spmm_block_level, spmm_warp_level};
+use std::sync::Arc;
+
+/// A strategy for executing one SpMM request against a prebuilt plan.
+pub trait Executor {
+    /// Stable identifier (used in bench output and test reports).
+    fn name(&self) -> &'static str;
+
+    /// Compute `Y = A·X`. `x` is `[plan.original.n_cols × f]` row-major;
+    /// the result is `[plan.original.n_rows × f]`, original row order.
+    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32>;
+}
+
+/// Dense CSR traversal over the original matrix — the reference.
+pub struct CsrReference;
+
+impl Executor for CsrReference {
+    fn name(&self) -> &'static str {
+        "csr-reference"
+    }
+
+    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+        plan.original.spmm_dense(x, f)
+    }
+}
+
+/// The paper's block-level schedule, executed sequentially block by
+/// block (three accumulation levels, see [`crate::spmm::block_exec`]).
+pub struct BlockLevel;
+
+impl Executor for BlockLevel {
+    fn name(&self) -> &'static str {
+        "block-level"
+    }
+
+    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+        let sorted_y = spmm_block_level(&plan.sorted.csr, &plan.block, x, f);
+        plan.sorted.unpermute_rows(&sorted_y, f)
+    }
+}
+
+/// The warp-level (GNNAdvisor-style) baseline schedule.
+pub struct WarpLevel;
+
+impl Executor for WarpLevel {
+    fn name(&self) -> &'static str {
+        "warp-level"
+    }
+
+    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+        spmm_warp_level(&plan.original, &plan.warp, x, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::partition::patterns::PartitionParams;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    fn random_plan(rng: &mut Pcg, n: usize) -> Arc<SpmmPlan> {
+        let mut edges = Vec::new();
+        for r in 0..n {
+            let d = if rng.f64() < 0.06 { rng.range(0, n + 2) } else { rng.range(0, 8) };
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+            }
+        }
+        let csr = Csr::from_edges(n, n, &edges).unwrap();
+        let params = PartitionParams {
+            max_block_warps: *rng.choose(&[1usize, 2, 4, 12]),
+            max_warp_nzs: *rng.choose(&[1usize, 2, 4, 32]),
+        };
+        Arc::new(SpmmPlan::build(csr, params))
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let execs: [&dyn Executor; 3] = [&CsrReference, &BlockLevel, &WarpLevel];
+        let mut names: Vec<&str> = execs.iter().map(|e| e.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 3);
+    }
+
+    #[test]
+    fn prop_all_executors_agree_in_original_domain() {
+        proptest::check("executors_agree", 0xE8EC, 20, |rng| {
+            let n = rng.range(1, 60);
+            let plan = random_plan(rng, n);
+            let f = rng.range(1, 8);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let want = CsrReference.execute(&plan, &x, f);
+            for exec in [&BlockLevel as &dyn Executor, &WarpLevel] {
+                let got = exec.execute(&plan, &x, f);
+                assert_allclose(&got, &want, 1e-4, 1e-4, exec.name());
+            }
+        });
+    }
+}

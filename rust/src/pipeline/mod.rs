@@ -1,0 +1,44 @@
+//! Unified SpMM execution pipeline — the one road from an adjacency
+//! matrix to an executed (or simulated) schedule.
+//!
+//! Before this layer existed, every consumer hand-wired the same chain
+//! — degree sort → block-level partition → executor — and re-ran it per
+//! request. The pipeline centralizes that chain and makes it cacheable
+//! and parallel:
+//!
+//! * [`plan`] — [`SpmmPlan`]: owns the degree-sorted CSR, the
+//!   permutation, and both partitions for one graph; built once, shared
+//!   via `Arc`, immutable thereafter (see the module docs for plan
+//!   lifetime).
+//! * [`cache`] — [`PlanCache`]: memoizes plans by
+//!   [`GraphFingerprint`] + [`PartitionParams`](crate::partition::patterns::PartitionParams),
+//!   so repeated requests for the same graph skip preprocessing
+//!   entirely (see the module docs for cache-key semantics).
+//! * [`exec`] — the [`Executor`] trait unifying the CSR reference, the
+//!   sequential block-level schedule, and the warp-level baseline under
+//!   one original-domain contract.
+//! * [`parallel`] — [`ParallelBlockLevel`]: the block-level schedule
+//!   sharded across [`crate::util::threadpool::ThreadPool`], with
+//!   lock-free disjoint row writes for non-split blocks and a
+//!   deterministic post-join reduction for split rows (see the module
+//!   docs for the split-row reduction strategy).
+//!
+//! Consumers (all four former call sites route through here):
+//! * the `accel-gcn` binary (`simulate` builds its plan directly;
+//!   `prepare` reaches the cache through the coordinator),
+//! * `bench::paper` (the sweep) and `bench::exec_scaling` (the
+//!   thread-scaling experiment),
+//! * the GPU simulator (`sim::kernels::PreparedGraph` is an alias of
+//!   [`SpmmPlan`]),
+//! * the serving coordinator (`PreparedDataset::prepare` obtains its
+//!   partition from the global cache).
+
+pub mod plan;
+pub mod cache;
+pub mod exec;
+pub mod parallel;
+
+pub use cache::PlanCache;
+pub use exec::{BlockLevel, CsrReference, Executor, WarpLevel};
+pub use parallel::{spmm_block_level_parallel, ParallelBlockLevel};
+pub use plan::{GraphFingerprint, SpmmPlan};

@@ -1,0 +1,314 @@
+//! Parallel block-level SpMM: the paper's schedule sharded across the
+//! worker pool ([`crate::util::threadpool::ThreadPool`]).
+//!
+//! ## Sharding and the split-row reduction strategy
+//!
+//! Blocks are split into contiguous shards of approximately equal
+//! nonzero count (block order == ascending sorted-row order, so a shard
+//! is also a contiguous row span). Each shard executes its blocks
+//! exactly like the sequential executor, with the paper's three
+//! accumulation levels mapped onto threads as follows:
+//!
+//! 1. **Within a warp task** — the inner `f`-loop over a private
+//!    register row (unchanged).
+//! 2. **Non-split blocks** — each block accumulates into its private
+//!    block-shared buffer and owns a disjoint set of output rows, so
+//!    shards produce these rows without any synchronization and the
+//!    reduction is a plain disjoint copy ("lock-free" writes).
+//! 3. **Split rows** (`deg > deg_bound`) — a long row's chunks may land
+//!    in different shards. Each shard accumulates its chunks into a
+//!    per-shard partial buffer for that row; after `run_all` joins, the
+//!    partials are summed into the output. This mirrors the kernel's
+//!    third cache level (global `atomicAdd`) with the atomics replaced
+//!    by a deterministic post-join reduction, which keeps the result
+//!    bit-stable for a given shard layout.
+//!
+//! Shard results are combined in shard order, so the floating-point
+//! addition order matches the sequential executor's up to the shard
+//! boundaries of split rows — within the reordering tolerance the
+//! property tests assert.
+
+use super::exec::Executor;
+use super::plan::SpmmPlan;
+use crate::partition::block_level::BlockPartition;
+use crate::partition::metadata::BlockMeta;
+use crate::util::threadpool::ThreadPool;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// One shard's output: disjoint finished rows plus split-row partials.
+struct ShardOut {
+    /// `(base sorted row, rows×f buffer)` per non-split block.
+    dense: Vec<(usize, Vec<f32>)>,
+    /// `(sorted row, f partial)` per split row touched by this shard.
+    split: Vec<(usize, Vec<f32>)>,
+}
+
+/// Slice `bp`'s blocks into at most `n_shards` contiguous ranges of
+/// approximately equal nonzero count.
+fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
+    let n_blocks = bp.meta.len();
+    if n_blocks == 0 {
+        return Vec::new();
+    }
+    let n_shards = n_shards.clamp(1, n_blocks);
+    let deg_bound = bp.params.deg_bound();
+    let block_nnz = |m: &BlockMeta| -> usize {
+        if m.is_split(deg_bound) {
+            m.split_nzs()
+        } else {
+            m.deg as usize * m.block_rows()
+        }
+    };
+    let total: usize = bp.meta.iter().map(block_nnz).sum();
+    let target = total.div_ceil(n_shards).max(1);
+    let mut ranges = Vec::with_capacity(n_shards);
+    let (mut start, mut acc) = (0usize, 0usize);
+    for (b, m) in bp.meta.iter().enumerate() {
+        acc += block_nnz(m);
+        if acc >= target && ranges.len() + 1 < n_shards {
+            ranges.push(start..b + 1);
+            start = b + 1;
+            acc = 0;
+        }
+    }
+    if start < n_blocks {
+        ranges.push(start..n_blocks);
+    }
+    ranges
+}
+
+/// Execute one contiguous block range (sequential, no shared state).
+fn exec_shard(plan: &SpmmPlan, x: &[f32], f: usize, blocks: Range<usize>) -> ShardOut {
+    let sorted = &plan.sorted.csr;
+    let bp = &plan.block;
+    let deg_bound = bp.params.deg_bound();
+    let mut dense: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut split: Vec<(usize, Vec<f32>)> = Vec::new();
+    for b in blocks {
+        let m = bp.meta[b];
+        if m.is_split(deg_bound) {
+            let dst = m.row as usize;
+            // chunks of one row are contiguous in block order, so the
+            // shard keeps at most one open partial per split row
+            if split.last().map_or(true, |(r, _)| *r != dst) {
+                split.push((dst, vec![0f32; f]));
+            }
+            let buf = &mut split.last_mut().expect("just pushed").1;
+            bp.for_each_block_warp_task(b, |t| {
+                for i in t.nz_start..t.nz_start + t.nz_len {
+                    let c = sorted.col_idx[i] as usize;
+                    let v = sorted.vals[i];
+                    let xrow = &x[c * f..(c + 1) * f];
+                    for k in 0..f {
+                        buf[k] += v * xrow[k];
+                    }
+                }
+            });
+        } else {
+            // block-shared accumulator, one slot per block row
+            let rows = m.block_rows();
+            let mut shared = vec![0f32; rows * f];
+            bp.for_each_block_warp_task(b, |t| {
+                let slot = (t.sorted_row - m.row) as usize;
+                let srow = &mut shared[slot * f..(slot + 1) * f];
+                for i in t.nz_start..t.nz_start + t.nz_len {
+                    let c = sorted.col_idx[i] as usize;
+                    let v = sorted.vals[i];
+                    let xrow = &x[c * f..(c + 1) * f];
+                    for k in 0..f {
+                        srow[k] += v * xrow[k];
+                    }
+                }
+            });
+            dense.push((m.row as usize, shared));
+        }
+    }
+    ShardOut { dense, split }
+}
+
+/// Execute `Y = A_sorted · X` via the block-level schedule, sharded
+/// across `pool`. Result rows are in the **sorted** domain, exactly like
+/// [`crate::spmm::spmm_block_level`].
+///
+/// `plan` and `x` are `Arc`s because shard jobs outlive the borrow
+/// checker's view of this frame (the pool requires `'static` jobs);
+/// `run_all` joins every shard before this function returns.
+pub fn spmm_block_level_parallel(
+    plan: &Arc<SpmmPlan>,
+    x: &Arc<Vec<f32>>,
+    f: usize,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    assert_eq!(x.len(), plan.sorted.csr.n_cols * f, "X shape mismatch");
+    let jobs: Vec<_> = shard_ranges(&plan.block, pool.size())
+        .into_iter()
+        .map(|range| {
+            let plan = Arc::clone(plan);
+            let x = Arc::clone(x);
+            move || exec_shard(&plan, &x, f, range)
+        })
+        .collect();
+    let shards = pool.run_all(jobs);
+
+    let mut y = vec![0f32; plan.sorted.csr.n_rows * f];
+    for shard in shards {
+        for (base, buf) in shard.dense {
+            // disjoint rows: plain stores, no accumulation needed
+            y[base * f..base * f + buf.len()].copy_from_slice(&buf);
+        }
+        for (row, partial) in shard.split {
+            // the "global atomic" level, reduced deterministically
+            let yrow = &mut y[row * f..(row + 1) * f];
+            for k in 0..f {
+                yrow[k] += partial[k];
+            }
+        }
+    }
+    y
+}
+
+/// [`Executor`] running the block-level schedule on an owned thread
+/// pool. Construct once and reuse: workers persist across `execute`
+/// calls.
+pub struct ParallelBlockLevel {
+    pool: ThreadPool,
+}
+
+impl ParallelBlockLevel {
+    /// Spawn a pool of `threads` workers (at least 1).
+    pub fn new(threads: usize) -> ParallelBlockLevel {
+        ParallelBlockLevel { pool: ThreadPool::new(threads) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The underlying pool (for callers that already hold `Arc` inputs
+    /// and want the sorted-domain result without the executor's copies).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+impl Executor for ParallelBlockLevel {
+    fn name(&self) -> &'static str {
+        "block-level-parallel"
+    }
+
+    /// Satisfying the slice-based [`Executor`] contract costs one copy
+    /// of `x` into an `Arc` per call (the pool needs `'static` jobs).
+    /// Hot paths that already hold `Arc` inputs should call
+    /// [`spmm_block_level_parallel`] directly — the bench harnesses do.
+    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+        let x = Arc::new(x.to_vec());
+        let sorted_y = spmm_block_level_parallel(plan, &x, f, &self.pool);
+        plan.sorted.unpermute_rows(&sorted_y, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::partition::patterns::PartitionParams;
+    use crate::pipeline::exec::{BlockLevel, CsrReference};
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    fn random_plan(rng: &mut Pcg, n: usize, params: PartitionParams) -> Arc<SpmmPlan> {
+        let mut edges = Vec::new();
+        for r in 0..n {
+            let d = if rng.f64() < 0.06 {
+                rng.range(0, 3 * n / 2 + 2) // exceeds deg_bound for small params
+            } else {
+                rng.range(0, 8)
+            };
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+            }
+        }
+        Arc::new(SpmmPlan::build(Csr::from_edges(n, n, &edges).unwrap(), params))
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        proptest::check("shard_ranges_cover", 0x54A2, 20, |rng| {
+            let n = rng.range(1, 50);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 4]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 8]),
+            };
+            let plan = random_plan(rng, n, params);
+            let shards = rng.range(1, 12);
+            let ranges = shard_ranges(&plan.block, shards);
+            assert!(ranges.len() <= shards.max(1));
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "ranges must be contiguous");
+                assert!(r.end > r.start, "ranges must be non-empty");
+                next = r.end;
+            }
+            assert_eq!(next, plan.block.meta.len(), "ranges must cover all blocks");
+        });
+    }
+
+    #[test]
+    fn split_row_straddling_shards_reduces_correctly() {
+        // one row of degree 60 with deg_bound 4 → 15 split chunks spread
+        // over every shard boundary the pool can produce
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let edges: Vec<(u32, u32, f32)> = (0..60).map(|c| (0u32, c, (c % 7) as f32 - 3.0)).collect();
+        let csr = Csr::from_edges(1, 60, &edges).unwrap();
+        let plan = Arc::new(SpmmPlan::build(csr, params));
+        assert!(plan.block.meta.len() > 8, "expected many split chunks");
+        let f = 5;
+        let x: Vec<f32> = (0..60 * f).map(|i| (i as f32).sin()).collect();
+        let want = CsrReference.execute(&plan, &x, f);
+        for threads in [1usize, 3, 8] {
+            let got = ParallelBlockLevel::new(threads).execute(&plan, &x, f);
+            assert_allclose(&got, &want, 1e-4, 1e-4, "split straddle");
+        }
+    }
+
+    #[test]
+    fn prop_parallel_matches_sequential_and_reference() {
+        // the satellite property: parallel == sequential == dense
+        // reference across random graphs, thread counts, and the
+        // paper's column dimensions
+        proptest::check("parallel_block_exec", 0x9A54, 8, |rng| {
+            let n = rng.range(1, 50);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 4, 12]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 4, 32]),
+            };
+            let plan = random_plan(rng, n, params);
+            for &threads in &[1usize, 2, 8] {
+                let exec = ParallelBlockLevel::new(threads);
+                assert_eq!(exec.threads(), threads);
+                for &f in &[16usize, 64, 128] {
+                    let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+                    let got = exec.execute(&plan, &x, f);
+                    let seq = BlockLevel.execute(&plan, &x, f);
+                    let want = CsrReference.execute(&plan, &x, f);
+                    assert_allclose(&got, &seq, 1e-4, 1e-4, "parallel vs sequential");
+                    assert_allclose(&got, &want, 1e-4, 1e-4, "parallel vs reference");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn zero_and_empty_graphs() {
+        let params = PartitionParams::default();
+        let empty = Arc::new(SpmmPlan::build(Csr::from_edges(0, 0, &[]).unwrap(), params));
+        let exec = ParallelBlockLevel::new(2);
+        assert!(exec.execute(&empty, &[], 3).is_empty());
+        // all-zero rows produce an all-zero result
+        let zeros = Arc::new(SpmmPlan::build(Csr::from_edges(4, 4, &[]).unwrap(), params));
+        let y = exec.execute(&zeros, &[1.0; 12], 3);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

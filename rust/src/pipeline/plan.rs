@@ -1,0 +1,241 @@
+//! [`SpmmPlan`]: the product of the paper's preprocessing chain
+//! (degree sort → block-level partition, plus the warp-level baseline),
+//! built once per graph and reused by every consumer.
+//!
+//! ## Plan lifetime
+//!
+//! A plan owns everything derived from one adjacency matrix under one
+//! [`PartitionParams`]: the original CSR, the degree-sorted view with
+//! its permutation, the block-level partition (the paper's Algorithm 2)
+//! and the warp-level baseline partition. Building it is the *only*
+//! expensive preprocessing step in the system — O(n + nnz) — so callers
+//! hold plans in `Arc` and share them across executors, the GPU
+//! simulator, the bench harness, and the serving coordinator. A plan is
+//! immutable after construction; repeated executions of any schedule
+//! read it concurrently without synchronization.
+//!
+//! Consumers that need the same graph repeatedly go through
+//! [`PlanCache`](super::cache::PlanCache), which keys plans by
+//! [`GraphFingerprint`] + params so preprocessing is skipped entirely on
+//! a hit.
+
+use crate::graph::csr::Csr;
+use crate::graph::degree::DegreeSorted;
+use crate::partition::block_level::BlockPartition;
+use crate::partition::patterns::PartitionParams;
+use crate::partition::warp_level::WarpPartition;
+use std::sync::OnceLock;
+
+/// Cheap identity of a CSR matrix: dimensions, nonzero count, and a
+/// 64-bit FNV-1a content hash over `row_ptr`/`col_idx`/`vals`.
+///
+/// Two graphs with the same fingerprint are treated as identical by the
+/// [`PlanCache`](super::cache::PlanCache); the structural fields make
+/// accidental collisions require a full 64-bit hash collision *between
+/// equal-shape graphs*, which we accept (the cache is an optimization —
+/// a collision would be astronomically unlikely, not silently frequent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GraphFingerprint {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    pub content_hash: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_word(mut h: u64, w: u64) -> u64 {
+    // fold the word in 8-bit steps (FNV-1a over little-endian bytes)
+    for shift in (0..64).step_by(8) {
+        h ^= (w >> shift) & 0xff;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl GraphFingerprint {
+    /// Fingerprint a CSR matrix (one linear pass over its arrays).
+    pub fn of(csr: &Csr) -> GraphFingerprint {
+        let mut h = FNV_OFFSET;
+        h = fnv_word(h, csr.n_rows as u64);
+        h = fnv_word(h, csr.n_cols as u64);
+        for &p in &csr.row_ptr {
+            h = fnv_word(h, p as u64);
+        }
+        for &c in &csr.col_idx {
+            h = fnv_word(h, c as u64);
+        }
+        for &v in &csr.vals {
+            h = fnv_word(h, v.to_bits() as u64);
+        }
+        GraphFingerprint {
+            n_rows: csr.n_rows,
+            n_cols: csr.n_cols,
+            nnz: csr.nnz(),
+            content_hash: h,
+        }
+    }
+}
+
+/// A fully-preprocessed SpMM execution plan for one graph.
+///
+/// Field layout is the contract every schedule consumer programs
+/// against (the GPU simulator's `PreparedGraph` is an alias of this
+/// type):
+///
+/// * `original` — the adjacency exactly as given (original row/column
+///   ids). The warp-level baseline and the CSR reference run here.
+/// * `sorted` — the degree-sorted view: `sorted.csr` has rows permuted
+///   ascending by degree (columns unchanged), `sorted.perm`/`sorted.inv`
+///   map between domains.
+/// * `block` — Algorithm 2's block-level partition of `sorted.csr`.
+/// * `warp` — the GNNAdvisor-style fixed-size neighbour groups over
+///   `original` (the paper's Fig. 7 comparison target).
+#[derive(Clone, Debug)]
+pub struct SpmmPlan {
+    pub original: Csr,
+    pub sorted: DegreeSorted,
+    pub block: BlockPartition,
+    pub warp: WarpPartition,
+    pub params: PartitionParams,
+    /// Lazily computed (only cache lookups need it); see
+    /// [`SpmmPlan::fingerprint`].
+    fingerprint: OnceLock<GraphFingerprint>,
+}
+
+impl SpmmPlan {
+    /// Run the preprocessing chain: degree sort → block-level partition
+    /// → warp-level baseline. The fingerprint is *not* computed here —
+    /// it is derived on first [`SpmmPlan::fingerprint`] call, so
+    /// direct-build callers never pay the O(nnz) hash.
+    ///
+    /// The warp-level baseline is built eagerly even though only the
+    /// simulator and the fig. 3/7 experiments read it — a deliberate
+    /// trade (one extra O(nnz) pass per plan) to keep `warp` a plain
+    /// field the trace generators can borrow. Revisit if coordinator
+    /// cold-prepare latency ever matters.
+    pub fn build(csr: Csr, params: PartitionParams) -> SpmmPlan {
+        let sorted = DegreeSorted::new(&csr);
+        let block = BlockPartition::build(&sorted.csr, params);
+        let warp = WarpPartition::build(&csr, params.max_warp_nzs);
+        SpmmPlan { original: csr, sorted, block, warp, params, fingerprint: OnceLock::new() }
+    }
+
+    /// The graph's fingerprint, computed on first use and cached.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        *self.fingerprint.get_or_init(|| GraphFingerprint::of(&self.original))
+    }
+
+    /// Seed the fingerprint cell when the caller already computed it
+    /// (the [`PlanCache`](super::cache::PlanCache) hashes the graph for
+    /// its key before building). A no-op if already set.
+    pub(crate) fn seed_fingerprint(&self, fp: GraphFingerprint) {
+        let _ = self.fingerprint.set(fp);
+    }
+
+    /// Alias of [`SpmmPlan::build`] kept for the simulator's historical
+    /// `PreparedGraph::new` call sites.
+    pub fn new(csr: Csr, params: PartitionParams) -> SpmmPlan {
+        SpmmPlan::build(csr, params)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.original.n_rows
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.original.nnz()
+    }
+
+    /// The symmetrically relabeled matrix `P·A·Pᵀ`: rows *and* columns
+    /// in the sorted domain, so GCN layers chain without per-layer
+    /// unpermutes (what the serving coordinator executes).
+    ///
+    /// Row degrees — and therefore `row_ptr` — are identical to
+    /// `sorted.csr`'s, so [`SpmmPlan::block`] is a valid partition of
+    /// the relabeled matrix too: block metadata only reads `row_ptr`.
+    pub fn relabeled(&self) -> Csr {
+        let rel = self.original.relabel(&self.sorted.perm, &self.sorted.inv);
+        // a release-mode assert: the serving coordinator pairs this
+        // matrix with `block` built from `sorted.csr`, so a silent
+        // structure mismatch would mean wrong numerics (O(n) check,
+        // negligible next to the O(nnz) relabel itself)
+        assert_eq!(
+            rel.row_ptr, self.sorted.csr.row_ptr,
+            "relabel must preserve the sorted row structure"
+        );
+        rel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)]; // ≥ 1 nonzero always
+        for r in 0..n {
+            for _ in 0..rng.range(0, 9) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    #[test]
+    fn build_is_consistent() {
+        let csr = random_csr(3, 50);
+        let plan = SpmmPlan::build(csr.clone(), PartitionParams::default());
+        assert_eq!(plan.original, csr);
+        assert_eq!(plan.n_rows(), 50);
+        assert_eq!(plan.nnz(), csr.nnz());
+        assert_eq!(plan.block.n_rows, 50);
+        assert_eq!(plan.warp.nnz, csr.nnz());
+        assert_eq!(plan.fingerprint(), GraphFingerprint::of(&csr));
+        assert_eq!(plan.fingerprint(), plan.fingerprint(), "stable across calls");
+        for r in 1..50 {
+            assert!(plan.sorted.csr.degree(r - 1) <= plan.sorted.csr.degree(r));
+        }
+    }
+
+    #[test]
+    fn fingerprint_detects_value_change() {
+        let a = random_csr(4, 30);
+        let mut b = a.clone();
+        assert_eq!(GraphFingerprint::of(&a), GraphFingerprint::of(&b));
+        b.vals[0] += 1.0;
+        assert_ne!(GraphFingerprint::of(&a), GraphFingerprint::of(&b));
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_structure() {
+        let a = Csr::from_edges(2, 2, &[(0, 0, 1.0)]).unwrap();
+        let b = Csr::from_edges(2, 2, &[(1, 1, 1.0)]).unwrap();
+        assert_ne!(GraphFingerprint::of(&a), GraphFingerprint::of(&b));
+    }
+
+    #[test]
+    fn relabeled_preserves_row_structure_and_semantics() {
+        let csr = random_csr(9, 40);
+        let plan = SpmmPlan::build(csr.clone(), PartitionParams::default());
+        let rel = plan.relabeled();
+        assert_eq!(rel.row_ptr, plan.sorted.csr.row_ptr);
+        // (P·A·Pᵀ)·(P·X) == P·(A·X)
+        let f = 3;
+        let mut rng = Pcg::seed_from(10);
+        let x: Vec<f32> = (0..40 * f).map(|_| rng.f32() - 0.5).collect();
+        let mut px = vec![0f32; 40 * f];
+        for (i, &orig) in plan.sorted.perm.iter().enumerate() {
+            px[i * f..(i + 1) * f]
+                .copy_from_slice(&x[orig as usize * f..(orig as usize + 1) * f]);
+        }
+        let got = plan.sorted.unpermute_rows(&rel.spmm_dense(&px, f), f);
+        let want = csr.spmm_dense(&x, f);
+        assert_allclose(&got, &want, 1e-4, 1e-4, "relabeled semantics");
+    }
+}

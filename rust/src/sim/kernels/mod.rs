@@ -19,11 +19,6 @@ pub mod csr_adaptive;
 use super::cache::LruCache;
 use super::config::GpuConfig;
 use super::machine::{simulate, KernelTrace, SimResult};
-use crate::graph::csr::Csr;
-use crate::graph::degree::DegreeSorted;
-use crate::partition::block_level::BlockPartition;
-use crate::partition::patterns::PartitionParams;
-use crate::partition::warp_level::WarpPartition;
 
 /// Which kernel to simulate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -180,23 +175,11 @@ impl CostModel {
 
 /// A graph with both partitions prebuilt — construct once, simulate
 /// every kernel × column dimension from it.
-#[derive(Clone, Debug)]
-pub struct PreparedGraph {
-    pub original: Csr,
-    pub sorted: DegreeSorted,
-    pub block: BlockPartition,
-    pub warp: WarpPartition,
-    pub params: PartitionParams,
-}
-
-impl PreparedGraph {
-    pub fn new(csr: Csr, params: PartitionParams) -> PreparedGraph {
-        let sorted = DegreeSorted::new(&csr);
-        let block = BlockPartition::build(&sorted.csr, params);
-        let warp = WarpPartition::build(&csr, params.max_warp_nzs);
-        PreparedGraph { original: csr, sorted, block, warp, params }
-    }
-}
+///
+/// This is the pipeline's [`SpmmPlan`](crate::pipeline::SpmmPlan): the
+/// trace generators consume the exact same plan the CPU executors run,
+/// so simulated and executed schedules can never drift apart.
+pub use crate::pipeline::SpmmPlan as PreparedGraph;
 
 /// Shared helper: price the X-row gather of a nonzero run through the
 /// L2 model. Returns (dram_bytes, l2_bytes).
@@ -251,6 +234,7 @@ pub fn simulate_kernel(
 mod tests {
     use super::*;
     use crate::graph::datasets::{by_name, materialize, ScalePolicy};
+    use crate::partition::patterns::PartitionParams;
 
     fn prepared(name: &str) -> PreparedGraph {
         let csr = materialize(by_name(name).unwrap(), ScalePolicy::tiny(), 42);

@@ -8,8 +8,11 @@ use accel_gcn::graph::datasets::{by_name, materialize, ScalePolicy};
 use accel_gcn::graph::generator;
 use accel_gcn::partition::bucket::BellLayout;
 use accel_gcn::partition::patterns::PartitionParams;
-use accel_gcn::spmm::verify::assert_allclose;
+use accel_gcn::pipeline::{
+    BlockLevel, CsrReference, Executor, ParallelBlockLevel, PlanCache, WarpLevel,
+};
 use accel_gcn::spmm::spmm_block_level;
+use accel_gcn::spmm::verify::assert_allclose;
 use accel_gcn::util::rng::Pcg;
 
 #[test]
@@ -27,6 +30,50 @@ fn table1_graph_through_full_pipeline() {
     let from_dense = p.sorted.spmm_dense(&x, f);
     assert_allclose(&from_layout, &from_dense, 1e-3, 1e-3, "layout vs dense");
     assert_allclose(&from_executor, &from_dense, 1e-3, 1e-3, "executor vs dense");
+}
+
+#[test]
+fn plan_cache_and_every_executor_agree_on_a_table1_graph() {
+    // one plan from the cache drives all four executors; a second
+    // request for the same graph is a cache hit returning the same plan
+    let csr = materialize(by_name("collab").unwrap(), ScalePolicy::tiny(), 5);
+    let cache = PlanCache::new();
+    let plan = cache.plan_for(&csr, PartitionParams::default());
+    let again = cache.plan_for(&csr, PartitionParams::default());
+    assert!(std::sync::Arc::ptr_eq(&plan, &again), "second request must hit");
+    assert_eq!(cache.hits(), 1);
+
+    let f = 8;
+    let mut rng = Pcg::seed_from(23);
+    let x: Vec<f32> = (0..csr.n_cols * f).map(|_| rng.f32() - 0.5).collect();
+    let want = CsrReference.execute(&plan, &x, f);
+    let executors: Vec<Box<dyn Executor>> = vec![
+        Box::new(BlockLevel),
+        Box::new(WarpLevel),
+        Box::new(ParallelBlockLevel::new(4)),
+    ];
+    for exec in &executors {
+        let got = exec.execute(&plan, &x, f);
+        assert_allclose(&got, &want, 1e-3, 1e-3, exec.name());
+    }
+}
+
+#[test]
+fn prepared_dataset_prepare_hits_global_plan_cache() {
+    // the coordinator's preprocessing goes through the global cache:
+    // preparing the same adjacency twice reuses the plan
+    let mut rng = Pcg::seed_from(41);
+    let g = generator::labeled_communities(60, 5.0, 4, 3, 0.8, &mut rng);
+    let params = PartitionParams { max_block_warps: 4, max_warp_nzs: 8 };
+    let hits_before = PlanCache::global().hits();
+    let a = PreparedDataset::prepare(&g.csr, params);
+    let b = PreparedDataset::prepare(&g.csr, params);
+    assert!(
+        PlanCache::global().hits() > hits_before,
+        "second prepare must reuse the cached plan"
+    );
+    assert_eq!(a.sorted, b.sorted);
+    assert_eq!(a.perm, b.perm);
 }
 
 #[test]

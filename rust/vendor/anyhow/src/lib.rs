@@ -1,0 +1,219 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no vendored registry,
+//! so this crate re-implements the small surface the workspace actually
+//! uses: [`Error`] (a context chain), [`Result`], the [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Semantics match upstream where it matters:
+//!
+//! * `{e}` displays the outermost message; `{e:#}` displays the whole
+//!   chain joined with `": "` (upstream's alternate formatting).
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its source chain.
+//! * [`Error`] intentionally does **not** implement `std::error::Error`
+//!   (same as upstream), which is what keeps the blanket `From` image
+//!   coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error: a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` by default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Push a higher-level context message onto the chain.
+    pub fn context(mut self, message: impl fmt::Display) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // upstream prints the message plus a "Caused by" list; a single
+        // joined line carries the same information for test failures
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn StdError + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Error::from(io_err()).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too large: {x}");
+            ensure!(x != 3);
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too large: 12");
+        assert!(format!("{}", f(3).unwrap_err()).contains("condition failed"));
+        assert!(f(5).is_err());
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let o: Option<u8> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let r: Result<u8> = Err(Error::msg("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+}

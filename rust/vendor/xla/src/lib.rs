@@ -1,0 +1,276 @@
+//! Offline stand-in for the `xla` (PJRT) Rust bindings.
+//!
+//! The real crate wraps libpjrt + XLA; neither is available in this
+//! build environment. This stub keeps the exact API surface
+//! `runtime::{tensor, client}` and `coordinator::engine` compile
+//! against, with honest runtime behaviour:
+//!
+//! * [`Literal`] is fully functional — host round-trips (create from
+//!   untyped bytes, read back as `f32`/`i32`, shape queries) work, so
+//!   everything up to device execution is testable.
+//! * [`PjRtClient::cpu`] succeeds (it owns no device), but
+//!   [`PjRtClient::compile`] returns an error: artifact execution
+//!   requires the real PJRT library. The integration tests that need it
+//!   already skip when no AOT artifacts are present.
+//! * Client/executable types carry an `Rc` so they are `!Send`, matching
+//!   the real bindings — `coordinator::engine`'s single-device-thread
+//!   design is enforced by the type system even under the stub.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml` (the `xla` path dependency).
+
+use std::error::Error as StdError;
+use std::fmt;
+use std::rc::Rc;
+
+/// Stub error type (`std::error::Error`, so callers' `anyhow` contexts
+/// apply unchanged).
+#[derive(Debug)]
+pub struct Error(String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl StdError for Error {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// XLA element types (the subset the workspace stores, plus enough
+/// variants that dtype dispatch stays a genuine match).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::U8 => 1,
+            ElementType::S32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Rust scalar ↔ XLA element type binding for [`Literal::to_vec`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes(bytes.try_into().expect("4 bytes"))
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(bytes: &[u8]) -> i32 {
+        i32::from_le_bytes(bytes.try_into().expect("4 bytes"))
+    }
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side literal: shape + little-endian element bytes, or a tuple
+/// of literals (what executable results decompose into).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build an array literal from raw bytes (row-major).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.size() != data.len() {
+            return err(format!(
+                "untyped data is {} bytes, shape {:?} of {:?} needs {}",
+                data.len(),
+                dims,
+                ty,
+                n * ty.size()
+            ));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return err("literal is a tuple, not an array");
+        }
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return err("literal is a tuple, not an array");
+        }
+        if self.ty != T::TY {
+            return err(format!("literal is {:?}, requested {:?}", self.ty, T::TY));
+        }
+        let size = self.ty.size();
+        Ok(self.data.chunks_exact(size).map(T::from_le_bytes).collect())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(parts) => Ok(parts.clone()),
+            None => err("literal is an array, not a tuple"),
+        }
+    }
+}
+
+/// Parsed HLO module text. The stub only retains the text; compilation
+/// is where the stub stops.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(HloModuleProto { text }),
+            Err(e) => err(format!("read HLO text {path}: {e}")),
+        }
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: () }
+    }
+}
+
+const NO_PJRT: &str =
+    "PJRT is unavailable in this offline build (xla is the in-tree stub; see rust/vendor/xla)";
+
+/// PJRT client handle. `!Send` like the real bindings (`Rc`-backed).
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Succeeds — literal plumbing needs no device;
+    /// only [`PjRtClient::compile`] requires the real library.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: Rc::new(()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(NO_PJRT)
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(NO_PJRT)
+    }
+}
+
+/// A device buffer (never constructed by the stub).
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+
+    #[test]
+    fn shape_size_validated() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 7])
+            .is_err());
+    }
+
+    #[test]
+    fn client_exists_but_compile_fails() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: String::new() });
+        assert!(c.compile(&comp).is_err());
+    }
+}
