@@ -6,6 +6,12 @@ cd "$(dirname "$0")"
 cargo build --release
 cargo test -q
 
+# Serve-native smoke: the multi-tenant serving path end-to-end on a
+# small synthetic load, with every response verified against the exact
+# CPU executor (fails the build on any mismatch).
+cargo run --release --bin accel-gcn -- serve-native \
+    --requests 64 --tenants 2 --nodes 200 --threads 2 --seed 7
+
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
 # has been run tree-wide.

@@ -10,9 +10,14 @@
 //!   compiled SpMM ladder with latency/throughput metrics.
 //! * [`exec_scaling`] — thread-scaling sweep of the parallel block-level
 //!   executor (writes `BENCH_exec_scaling.json`).
+//! * [`serve_native`] — open-loop load generation against the native
+//!   serving subsystem ([`crate::serve`]): fusion factor, throughput,
+//!   and tail latency across thread counts and ladder widths (writes
+//!   `BENCH_serve_native.json`).
 
 pub mod paper;
 pub mod ablation;
 pub mod exec_scaling;
 pub mod train;
 pub mod serve;
+pub mod serve_native;

@@ -427,6 +427,23 @@ fn unique_graphs(points: &[SweepPoint]) -> Vec<String> {
 }
 
 /// CLI entry: `accel-gcn bench [--experiment X] [--out DIR] [--quick]`.
+/// Write a perf-trajectory JSON into the results dir, plus a copy at
+/// the repo root — but only when the working directory *is* the
+/// checkout (the usual `cargo run` case): never drop stray files
+/// elsewhere, and skip the duplicate write when `--out` is the current
+/// directory.
+fn save_bench_json(out: &Path, filename: &str, save: impl Fn(&Path) -> Result<()>) -> Result<()> {
+    save(&out.join(filename))?;
+    let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
+    let same_dir = std::fs::canonicalize(out)
+        .and_then(|o| std::fs::canonicalize(".").map(|c| o == c))
+        .unwrap_or(false);
+    if cwd_is_repo_root && !same_dir {
+        save(Path::new(filename))?;
+    }
+    Ok(())
+}
+
 pub fn run_from_args(args: &Args) -> Result<()> {
     let out_dir = args.str_or("out", "results");
     let out = Path::new(&out_dir);
@@ -497,22 +514,24 @@ pub fn run_from_args(args: &Args) -> Result<()> {
             cfg.policy,
             seed,
         )?;
-        // one copy in the results dir; additionally seed the
-        // perf-trajectory file at the repo root, but only when the
-        // working directory *is* the checkout (the usual `cargo run`
-        // case) — never drop stray files elsewhere, and skip the
-        // duplicate write when --out is the current directory
-        es::save_json(&pts, &out.join("BENCH_exec_scaling.json"))?;
-        let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
-        let same_dir = std::fs::canonicalize(out)
-            .and_then(|o| std::fs::canonicalize(".").map(|c| o == c))
-            .unwrap_or(false);
-        if cwd_is_repo_root && !same_dir {
-            es::save_json(&pts, Path::new("BENCH_exec_scaling.json"))?;
-        }
+        save_bench_json(out, "BENCH_exec_scaling.json", |p| es::save_json(&pts, p))?;
         report += &format!(
             "=== Exec scaling (parallel block-level, collab) ===\n{}(written to BENCH_exec_scaling.json)\n\n",
             es::report(&pts)
+        );
+    }
+    if arm("serve_native") {
+        use crate::bench::serve_native as sn;
+        let load = sn::LoadConfig {
+            nodes: if args.flag("quick") { 60 } else { 300 },
+            seed,
+            ..sn::LoadConfig::default()
+        };
+        let pts = sn::run_sweep(&load, &[1, 2, 4])?;
+        save_bench_json(out, "BENCH_serve_native.json", |p| sn::save_json(&pts, p))?;
+        report += &format!(
+            "=== Serve native (multi-tenant, column-fused) ===\n{}(written to BENCH_serve_native.json)\n\n",
+            sn::report(&pts)
         );
     }
     if arm("ablation-params") || experiment == "all" {

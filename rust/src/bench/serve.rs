@@ -40,7 +40,7 @@ pub fn run_serving(dir: &str, n_requests: usize, coldims: &[usize], seed: u64) -
     // reference layout for verification
     let layout = BellLayout::load(dir).context("load BELL layout for verification")?;
 
-    let batcher = ColumnBatcher::new(ladder);
+    let batcher = ColumnBatcher::new(ladder)?;
     let mut rng = Pcg::seed_from(seed);
     // generate the request stream
     let widths: Vec<usize> = (0..n_requests).map(|_| *rng.choose(coldims)).collect();

@@ -1,0 +1,356 @@
+//! `serve_native` — open-loop load generation against the native
+//! serving subsystem ([`crate::serve`]).
+//!
+//! The generator registers several synthetic power-law tenants, builds
+//! one GCN model per tenant, then fires a burst of mixed-width SpMM and
+//! GCN requests **without waiting for completions** (open loop: the
+//! arrival process is independent of service). The server drains the
+//! backlog in fused rounds; the report captures requests/sec, the
+//! batch-fusion factor (requests amortized per sparse traversal), and
+//! p50/p99 end-to-end latency — swept across thread counts and ladder
+//! widths, written to `BENCH_serve_native.json` so successive PRs can
+//! track the serving path.
+//!
+//! Every response is (optionally but by default) verified against the
+//! exact CPU executor — the bench doubles as the serving path's
+//! end-to-end correctness check in CI.
+
+use crate::graph::generator::{self, DegreeModel};
+use crate::graph::Csr;
+use crate::model::ModelConfig;
+use crate::runtime::HostTensor;
+use crate::serve::{reference_forward, GcnModel, ServeConfig, ServeMetrics, Server};
+use crate::spmm::verify::allclose;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One load-generation run's shape.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Resident graphs (tenants); sizes are staggered around `nodes`.
+    pub tenants: usize,
+    pub nodes: usize,
+    pub avg_deg: f64,
+    pub requests: usize,
+    pub threads: usize,
+    /// Virtual width ladder for the server's column batcher.
+    pub ladder: Vec<usize>,
+    /// Every k-th request is a full GCN forward pass (0 = SpMM only).
+    pub gcn_every: usize,
+    pub seed: u64,
+    /// Check every response against the exact CPU executor.
+    pub verify: bool,
+}
+
+impl Default for LoadConfig {
+    fn default() -> LoadConfig {
+        LoadConfig {
+            tenants: 2,
+            nodes: 300,
+            avg_deg: 6.0,
+            requests: 64,
+            threads: 4,
+            ladder: vec![32, 64, 128],
+            gcn_every: 3,
+            seed: 42,
+            verify: true,
+        }
+    }
+}
+
+/// One measured (threads, ladder) cell.
+#[derive(Clone, Debug)]
+pub struct ServeNativePoint {
+    pub threads: usize,
+    pub ladder_max: usize,
+    pub tenants: usize,
+    pub requests: usize,
+    pub batches: u64,
+    /// Mean requests fused per executed batch (> 1 ⇒ traversals amortized).
+    pub fusion_factor: f64,
+    pub requests_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub verified: bool,
+}
+
+/// Synthetic power-law tenant graphs, sizes staggered so the tenants
+/// are genuinely distinct.
+fn tenant_graphs(cfg: &LoadConfig) -> Vec<Csr> {
+    (0..cfg.tenants)
+        .map(|t| {
+            let n = cfg.nodes + t * cfg.nodes / 4;
+            let mut rng = Pcg::seed_from(cfg.seed.wrapping_add(t as u64 * 7919));
+            let degs = generator::degree_sequence(
+                DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.1 },
+                n,
+                (n as f64 * cfg.avg_deg) as usize,
+                &mut rng,
+            );
+            generator::from_degree_sequence(n, &degs, &mut rng)
+        })
+        .collect()
+}
+
+/// Run one open-loop burst and measure it.
+pub fn run_once(cfg: &LoadConfig) -> Result<ServeNativePoint> {
+    run_once_with_metrics(cfg).map(|(p, _)| p)
+}
+
+/// [`run_once`], additionally handing back the server's metrics (the
+/// `serve-native` subcommand prints the per-stage breakdown from them).
+pub fn run_once_with_metrics(cfg: &LoadConfig) -> Result<(ServeNativePoint, Arc<ServeMetrics>)> {
+    anyhow::ensure!(cfg.tenants >= 1, "need at least one tenant");
+    anyhow::ensure!(cfg.requests >= 1, "need at least one request");
+    let graphs = tenant_graphs(cfg);
+    let server = Server::start(ServeConfig {
+        threads: cfg.threads,
+        queue_capacity: cfg.requests + 8,
+        ladder: cfg.ladder.clone(),
+        ..ServeConfig::default()
+    })?;
+    let handles: Vec<_> = graphs
+        .iter()
+        .enumerate()
+        .map(|(t, g)| server.register_graph(&format!("tenant-{t}"), g))
+        .collect::<Result<_>>()?;
+    let max_w = server.max_width();
+    let narrowest = *cfg.ladder.iter().min().expect("ladder validated non-empty");
+    let in_dim = narrowest.min(32);
+    let models: Vec<Arc<GcnModel>> = (0..cfg.tenants)
+        .map(|t| {
+            Arc::new(GcnModel::random(
+                ModelConfig::gcn(in_dim, in_dim, 8, 2),
+                cfg.seed.wrapping_add(t as u64),
+            ))
+        })
+        .collect();
+
+    // generate the request stream up front (generation is not timed)
+    let mut rng = Pcg::seed_from(cfg.seed ^ 0x0bea_7e55);
+    enum Gen {
+        Spmm { t: usize, x: HostTensor },
+        Gcn { t: usize, x: HostTensor },
+    }
+    let stream: Vec<Gen> = (0..cfg.requests)
+        .map(|i| {
+            let t = rng.range(0, cfg.tenants);
+            let n = graphs[t].n_rows;
+            if cfg.gcn_every > 0 && i % cfg.gcn_every == 0 {
+                let x = HostTensor::f32(
+                    &[n, in_dim],
+                    (0..n * in_dim).map(|_| rng.f32() - 0.5).collect(),
+                );
+                Gen::Gcn { t, x }
+            } else {
+                let lo = (max_w / 8).max(1);
+                let hi = (max_w / 2 + 1).max(lo + 1);
+                let w = rng.range(lo, hi);
+                let x =
+                    HostTensor::f32(&[n, w], (0..n * w).map(|_| rng.f32() - 0.5).collect());
+                Gen::Spmm { t, x }
+            }
+        })
+        .collect();
+    let expected: Vec<Option<Vec<f32>>> = if cfg.verify {
+        stream
+            .iter()
+            .map(|g| match g {
+                Gen::Spmm { t, x } => Some(
+                    graphs[*t].spmm_dense(x.as_f32().expect("f32 stream"), x.shape()[1]),
+                ),
+                Gen::Gcn { t, x } => Some(reference_forward(
+                    &graphs[*t],
+                    &models[*t],
+                    x.as_f32().expect("f32 stream"),
+                )),
+            })
+            .collect()
+    } else {
+        stream.iter().map(|_| None).collect()
+    };
+
+    // open loop: the whole burst arrives before any completion is
+    // observed (pause holds the worker so the arrival process is
+    // independent of service even for the first requests)
+    server.pause();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = stream
+        .iter()
+        .map(|g| match g {
+            Gen::Spmm { t, x } => server.submit_spmm(handles[*t], x.clone()),
+            Gen::Gcn { t, x } => server.submit_gcn(handles[*t], Arc::clone(&models[*t]), x.clone()),
+        })
+        .collect::<Result<_>>()?;
+    server.resume();
+    let mut responses = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        responses.push(
+            rxs[i].recv().map_err(|_| anyhow::anyhow!("server dropped request {i}"))??,
+        );
+    }
+    // stop the clock before verification: the sequential exact-executor
+    // comparison must not flatten the measured thread-scaling signal
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut verified = true;
+    for (i, resp) in responses.iter().enumerate() {
+        if let Some(want) = &expected[i] {
+            if !allclose(resp.y.as_f32()?, want, 1e-3, 1e-3) {
+                verified = false;
+                eprintln!("VERIFICATION FAILED for request {i}");
+            }
+        }
+    }
+    anyhow::ensure!(!cfg.verify || verified, "serve_native responses failed verification");
+
+    let m = Arc::clone(server.metrics());
+    let total = m.total.snapshot();
+    let point = ServeNativePoint {
+        threads: cfg.threads,
+        ladder_max: max_w,
+        tenants: cfg.tenants,
+        requests: cfg.requests,
+        batches: m.batches.get(),
+        fusion_factor: m.fusion_factor(),
+        requests_per_sec: cfg.requests as f64 / elapsed,
+        p50_us: total.p50 * 1e6,
+        p99_us: total.p99 * 1e6,
+        verified: cfg.verify,
+    };
+    Ok((point, m))
+}
+
+/// Sweep thread counts × ladder prefixes (wider ladders admit wider
+/// fused batches, so the fusion factor should grow along that axis).
+pub fn run_sweep(cfg: &LoadConfig, threads: &[usize]) -> Result<Vec<ServeNativePoint>> {
+    let mut points = Vec::new();
+    for cut in 1..=cfg.ladder.len() {
+        for &t in threads {
+            let cell = LoadConfig {
+                threads: t,
+                ladder: cfg.ladder[..cut].to_vec(),
+                ..cfg.clone()
+            };
+            points.push(run_once(&cell)?);
+        }
+    }
+    Ok(points)
+}
+
+/// Paper-style stdout table.
+pub fn report(points: &[ServeNativePoint]) -> String {
+    let mut table = Table::new(&[
+        "threads", "ladder max", "tenants", "requests", "batches", "fusion", "req/s",
+        "p50 µs", "p99 µs", "verified",
+    ]);
+    for p in points {
+        table.row(vec![
+            p.threads.to_string(),
+            p.ladder_max.to_string(),
+            p.tenants.to_string(),
+            p.requests.to_string(),
+            p.batches.to_string(),
+            format!("{:.2}", p.fusion_factor),
+            format!("{:.1}", p.requests_per_sec),
+            format!("{:.0}", p.p50_us),
+            format!("{:.0}", p.p99_us),
+            p.verified.to_string(),
+        ]);
+    }
+    table.render()
+}
+
+/// The machine-readable form consumed by the perf-trajectory tooling.
+pub fn to_json(points: &[ServeNativePoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("threads", p.threads);
+            o.set("ladder_max", p.ladder_max);
+            o.set("tenants", p.tenants);
+            o.set("requests", p.requests);
+            o.set("batches", p.batches as usize);
+            o.set("fusion_factor", p.fusion_factor);
+            o.set("rps", p.requests_per_sec);
+            o.set("p50_us", p.p50_us);
+            o.set("p99_us", p.p99_us);
+            o.set("verified", p.verified);
+            o
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("experiment", "serve_native");
+    doc.set("executor", "serve/block-level-parallel");
+    doc.set("points", rows);
+    doc
+}
+
+/// Write `BENCH_serve_native.json`.
+pub fn save_json(points: &[ServeNativePoint], path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(points).to_pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> LoadConfig {
+        LoadConfig {
+            tenants: 2,
+            nodes: 40,
+            requests: 16,
+            threads: 2,
+            ladder: vec![16, 32, 64],
+            ..LoadConfig::default()
+        }
+    }
+
+    #[test]
+    fn burst_run_verifies_and_fuses() {
+        let p = run_once(&tiny()).unwrap();
+        assert!(p.verified);
+        assert_eq!(p.requests, 16);
+        assert!(p.batches >= 1);
+        assert!(
+            p.fusion_factor > 1.0,
+            "a paused burst against a 64-wide ladder must fuse (factor {:.2})",
+            p.fusion_factor
+        );
+        assert!(p.requests_per_sec > 0.0);
+        assert!(p.p50_us >= 0.0 && p.p99_us >= p.p50_us);
+    }
+
+    #[test]
+    fn sweep_and_json_roundtrip() {
+        let cfg = LoadConfig { ladder: vec![16, 64], ..tiny() };
+        let pts = run_sweep(&cfg, &[1, 2]).unwrap();
+        assert_eq!(pts.len(), 4, "2 ladder prefixes × 2 thread counts");
+        assert!(pts.iter().all(|p| p.verified));
+        // a burst round can never need more batches than requests
+        assert!(pts.iter().all(|p| p.fusion_factor >= 1.0));
+        let json = to_json(&pts).to_pretty();
+        assert!(json.contains("serve_native"));
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.req_arr("points").unwrap().len(), 4);
+        assert!(report(&pts).contains("fusion"));
+    }
+
+    #[test]
+    fn spmm_only_stream() {
+        let p = run_once(&LoadConfig { gcn_every: 0, ..tiny() }).unwrap();
+        assert!(p.verified);
+    }
+}

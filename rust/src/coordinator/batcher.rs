@@ -9,6 +9,12 @@
 //!
 //! The batcher plans greedily: it packs requests in arrival order while
 //! the combined width fits the widest compiled artifact.
+//!
+//! Two request paths share this planning logic: the PJRT coordinator
+//! (`bench::serve`), whose ladder comes from the compiled-artifact
+//! manifest, and the native serve subsystem ([`crate::serve`]), which
+//! has no artifacts and plans against a **virtual** ladder built from
+//! config widths ([`ColumnBatcher::from_widths`]).
 
 use super::router::pick_artifact;
 use crate::runtime::HostTensor;
@@ -35,10 +41,34 @@ pub struct ColumnBatcher {
 }
 
 impl ColumnBatcher {
-    pub fn new(ladder: Vec<(usize, String)>) -> ColumnBatcher {
-        assert!(!ladder.is_empty(), "no SpMM artifacts");
+    /// Build a batcher over `(coldim, artifact)` pairs. The ladder is
+    /// sorted here and strictly-ascending widths are enforced for real
+    /// (not just `debug_assert`ed): a misordered or duplicated manifest
+    /// must never silently route a batch to a too-small artifact in
+    /// release builds.
+    pub fn new(mut ladder: Vec<(usize, String)>) -> Result<ColumnBatcher> {
+        anyhow::ensure!(!ladder.is_empty(), "no SpMM artifacts");
+        ladder.sort_by_key(|(w, _)| *w);
+        for pair in ladder.windows(2) {
+            anyhow::ensure!(
+                pair[0].0 < pair[1].0,
+                "duplicate ladder width {} (artifacts `{}` and `{}`)",
+                pair[0].0,
+                pair[0].1,
+                pair[1].1
+            );
+        }
+        anyhow::ensure!(ladder[0].0 > 0, "ladder width must be positive");
         let max_width = ladder.last().unwrap().0;
-        ColumnBatcher { ladder, max_width }
+        Ok(ColumnBatcher { ladder, max_width })
+    }
+
+    /// A batcher over a **virtual** ladder: no compiled artifacts, just
+    /// the configured widths (the native serve path). Entries are named
+    /// `virtual_w{width}` so `BatchPlan::artifact` stays meaningful in
+    /// logs and metrics.
+    pub fn from_widths(widths: &[usize]) -> Result<ColumnBatcher> {
+        ColumnBatcher::new(widths.iter().map(|&w| (w, format!("virtual_w{w}"))).collect())
     }
 
     /// Greedily plan batches over the pending request widths, in order.
@@ -118,6 +148,7 @@ impl ColumnBatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest;
 
     fn ladder() -> Vec<(usize, String)> {
         vec![
@@ -129,8 +160,39 @@ mod tests {
     }
 
     #[test]
+    fn misordered_ladder_is_sorted_duplicates_rejected() {
+        // a manifest listing artifacts out of order must still route
+        // correctly (sorted in `new`, not just debug_asserted)
+        let shuffled = vec![
+            (64, "spmm_f64".to_string()),
+            (16, "spmm_f16".to_string()),
+            (128, "spmm_f128".to_string()),
+            (32, "spmm_f32".to_string()),
+        ];
+        let b = ColumnBatcher::new(shuffled).unwrap();
+        assert_eq!(b.max_width, 128);
+        let plans = b.plan(&[17]).unwrap();
+        assert_eq!(plans[0].artifact, "spmm_f32", "must not route to a too-small artifact");
+
+        let dup = vec![(16, "a".to_string()), (16, "b".to_string())];
+        assert!(ColumnBatcher::new(dup).is_err());
+        assert!(ColumnBatcher::new(Vec::new()).is_err());
+        assert!(ColumnBatcher::new(vec![(0, "zero".to_string())]).is_err());
+    }
+
+    #[test]
+    fn virtual_ladder_from_widths() {
+        let b = ColumnBatcher::from_widths(&[64, 16, 32]).unwrap();
+        assert_eq!(b.max_width, 64);
+        let plans = b.plan(&[20]).unwrap();
+        assert_eq!(plans[0].artifact, "virtual_w32");
+        assert!(ColumnBatcher::from_widths(&[]).is_err());
+        assert!(ColumnBatcher::from_widths(&[8, 8]).is_err());
+    }
+
+    #[test]
     fn packs_up_to_max() {
-        let b = ColumnBatcher::new(ladder());
+        let b = ColumnBatcher::new(ladder()).unwrap();
         let plans = b.plan(&[16, 16, 32, 64, 16]).unwrap();
         // 16+16+32+64 = 128 fits; then 16
         assert_eq!(plans.len(), 2);
@@ -142,7 +204,7 @@ mod tests {
 
     #[test]
     fn rounds_up_to_ladder() {
-        let b = ColumnBatcher::new(ladder());
+        let b = ColumnBatcher::new(ladder()).unwrap();
         let plans = b.plan(&[16, 17]).unwrap();
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].width, 33);
@@ -151,14 +213,14 @@ mod tests {
 
     #[test]
     fn oversize_request_rejected() {
-        let b = ColumnBatcher::new(ladder());
+        let b = ColumnBatcher::new(ladder()).unwrap();
         assert!(b.plan(&[129]).is_err());
         assert!(b.plan(&[0]).is_err());
     }
 
     #[test]
     fn fuse_split_roundtrip() {
-        let b = ColumnBatcher::new(ladder());
+        let b = ColumnBatcher::new(ladder()).unwrap();
         let widths = [16usize, 32];
         let plans = b.plan(&widths).unwrap();
         assert_eq!(plans.len(), 1);
@@ -181,8 +243,58 @@ mod tests {
     }
 
     #[test]
+    fn prop_plan_fuse_split_roundtrips_every_request() {
+        // every request's columns must survive plan → fuse → split
+        // exactly, for random ladders and random width mixes, and every
+        // request must appear in exactly one batch
+        proptest::check("batcher_roundtrip", 0xBA7C, 30, |rng| {
+            // random strictly-ascending ladder
+            let mut widths: Vec<usize> = Vec::new();
+            let mut w = 0usize;
+            for _ in 0..rng.range(1, 5) {
+                w += rng.range(1, 40);
+                widths.push(w);
+            }
+            let b = ColumnBatcher::from_widths(&widths).unwrap();
+            let n = rng.range(1, 12);
+            let req_widths: Vec<usize> =
+                (0..rng.range(1, 14)).map(|_| rng.range(1, b.max_width + 1)).collect();
+            let xs: Vec<HostTensor> = req_widths
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| {
+                    HostTensor::f32(
+                        &[n, c],
+                        (0..n * c).map(|k| (i * 10_000 + k) as f32).collect(),
+                    )
+                })
+                .collect();
+            let plans = b.plan(&req_widths).unwrap();
+            let mut seen = vec![0usize; req_widths.len()];
+            for plan in &plans {
+                assert!(plan.width <= plan.artifact_width);
+                assert!(plan.artifact_width <= b.max_width);
+                assert_eq!(
+                    plan.width,
+                    plan.members.iter().map(|&m| req_widths[m]).sum::<usize>()
+                );
+                let member_xs: Vec<&HostTensor> =
+                    plan.members.iter().map(|&m| &xs[m]).collect();
+                let fused = ColumnBatcher::fuse(plan, &member_xs).unwrap();
+                // identity "execution": what goes in must come back out
+                let outs = ColumnBatcher::split(plan, &req_widths, &fused).unwrap();
+                for (slot, &m) in plan.members.iter().enumerate() {
+                    assert_eq!(outs[slot], xs[m], "request {m} columns corrupted");
+                    seen[m] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "each request in exactly one batch: {seen:?}");
+        });
+    }
+
+    #[test]
     fn many_small_requests_batch_tightly() {
-        let b = ColumnBatcher::new(ladder());
+        let b = ColumnBatcher::new(ladder()).unwrap();
         let widths = vec![16usize; 9];
         let plans = b.plan(&widths).unwrap();
         assert_eq!(plans.len(), 2);

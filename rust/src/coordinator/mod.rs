@@ -12,6 +12,9 @@
 //! * [`batcher`] — dynamic batching: requests for the same graph are
 //!   coalesced along the dense column dimension (the paper's column-dim
 //!   traversal) up to the widest artifact, then split back per request.
+//!   The planning logic is shared with the native serve subsystem
+//!   ([`crate::serve`]), which batches against a virtual width ladder
+//!   instead of compiled artifacts.
 
 pub mod state;
 pub mod engine;

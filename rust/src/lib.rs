@@ -20,8 +20,11 @@
 //! * [`sim`] — GPU microarchitecture simulator reproducing the paper's
 //!   evaluation (warps, coalescing, shared memory, SM scheduling);
 //!   simulates plans prepared by [`pipeline`].
-//! * [`coordinator`] — serving engine: request router, shape-bucket
-//!   batcher, worker pool.
+//! * [`coordinator`] — PJRT serving engine: request router, shape-bucket
+//!   batcher, worker pool (requires compiled artifacts).
+//! * [`serve`] — native serving subsystem: multi-tenant bounded-queue
+//!   server executing column-fused SpMM/GCN batches through
+//!   [`pipeline`] on CPU — the request path that works offline.
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
 //! * [`metrics`] — counters and latency histograms.
 //! * [`util`] — zero-dependency substrates (RNG, JSON, NPY, CLI, stats,
@@ -37,4 +40,5 @@ pub mod model;
 pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod bench;

@@ -6,9 +6,10 @@
 //! accel-gcn simulate  --graph collab --coldim 64 [--kernels accel-gcn,...]
 //! accel-gcn datasets                      # Table I summary
 //! accel-gcn stats     --graph collab      # Fig. 2-style degree histogram
-//! accel-gcn train     --artifacts artifacts/quickstart --steps 300
-//! accel-gcn serve     --artifacts artifacts/quickstart --requests 64
-//! accel-gcn bench     --out results [--experiment fig5|fig6|...]
+//! accel-gcn train        --artifacts artifacts/quickstart --steps 300
+//! accel-gcn serve        --artifacts artifacts/quickstart --requests 64
+//! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
+//! accel-gcn bench        --out results [--experiment fig5|fig6|...]
 //! ```
 
 use accel_gcn::bench as harness;
@@ -38,6 +39,7 @@ fn main() {
         "stats" => cmd_stats(rest),
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
+        "serve-native" => cmd_serve_native(rest),
         "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -66,8 +68,11 @@ fn print_usage() {
          \x20 stats     --graph NAME (Fig. 2 degree histogram)\n\
          \x20 train     --artifacts DIR [--steps N]\n\
          \x20 serve     --artifacts DIR [--requests N] [--coldims 16,32]\n\
+         \x20 serve-native [--requests N] [--tenants K] [--nodes N] [--avg-deg D]\n\
+         \x20           [--threads T] [--ladder 32,64,128] [--gcn-every K] [--seed S]\n\
+         \x20           [--no-verify]  (multi-tenant CPU serving, no artifacts needed)\n\
          \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
-         \x20           exec_scaling|all]"
+         \x20           exec_scaling|serve_native|all]"
     );
 }
 
@@ -238,6 +243,38 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let n_requests = args.usize_or("requests", 64)?;
     let coldims = args.usize_list_or("coldims", &[16, 32, 64])?;
     harness::serve::run_serving(&dir, n_requests, &coldims, args.u64_or("seed", 1)?).map(|_| ())
+}
+
+fn cmd_serve_native(rest: &[String]) -> Result<()> {
+    let args = Args::parse(
+        rest,
+        &["requests", "tenants", "nodes", "avg-deg", "threads", "ladder", "gcn-every", "seed"],
+        &["no-verify"],
+    )?;
+    let defaults = harness::serve_native::LoadConfig::default();
+    let cfg = harness::serve_native::LoadConfig {
+        tenants: args.usize_or("tenants", defaults.tenants)?,
+        nodes: args.usize_or("nodes", defaults.nodes)?,
+        avg_deg: args.f64_or("avg-deg", defaults.avg_deg)?,
+        requests: args.usize_or("requests", defaults.requests)?,
+        threads: args.usize_or("threads", defaults.threads)?,
+        ladder: args.usize_list_or("ladder", &defaults.ladder)?,
+        gcn_every: args.usize_or("gcn-every", defaults.gcn_every)?,
+        seed: args.u64_or("seed", defaults.seed)?,
+        verify: !args.flag("no-verify"),
+    };
+    println!(
+        "serve-native: {} requests, {} tenants (~{} nodes each), {} threads, ladder {:?}, verify={}",
+        cfg.requests, cfg.tenants, cfg.nodes, cfg.threads, cfg.ladder, cfg.verify
+    );
+    let (point, metrics) = harness::serve_native::run_once_with_metrics(&cfg)?;
+    print!("{}", harness::serve_native::report(std::slice::from_ref(&point)));
+    print!("{}", metrics.render());
+    println!(
+        "served {} requests across {} resident graphs: {:.1} req/s, fusion factor {:.2}, verified={}",
+        point.requests, point.tenants, point.requests_per_sec, point.fusion_factor, point.verified
+    );
+    Ok(())
 }
 
 fn cmd_bench(rest: &[String]) -> Result<()> {

@@ -1,9 +1,11 @@
-//! Serving metrics: counters and latency recorders with percentile
-//! snapshots. Thread-safe; shared via `Arc` between the coordinator's
-//! front end and its device thread.
+//! Serving metrics: counters, gauges, and latency recorders with
+//! percentile snapshots. Thread-safe; shared via `Arc` between the
+//! coordinator's front end and its device thread, and between the native
+//! serve subsystem's submitters and worker loop.
 
+use crate::util::rng::Pcg;
 use crate::util::stats;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Monotonic event counter.
@@ -28,10 +30,65 @@ impl Counter {
     }
 }
 
-/// Latency recorder: stores samples (seconds), reports percentiles.
+/// Instantaneous level (e.g. queue depth): settable, signed so transient
+/// dips below zero under racing inc/dec never wrap.
 #[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Default reservoir size: large enough that percentiles over a bench run
+/// are exact, small enough that a server recording forever stays flat.
+pub const DEFAULT_RESERVOIR_CAPACITY: usize = 4096;
+
+#[derive(Debug)]
+struct ReservoirInner {
+    /// Uniform sample of everything seen (Vitter's Algorithm R); exact
+    /// while `seen <= capacity`.
+    samples: Vec<f64>,
+    seen: u64,
+    sum: f64,
+    max: f64,
+    rng: Pcg,
+}
+
+/// Latency recorder: bounded-memory reservoir of samples (seconds),
+/// reports percentiles.
+///
+/// `count`, `mean`, and `max` are exact over every recorded sample;
+/// `p50`/`p95`/`p99` are exact until `capacity` samples have been seen
+/// and computed over a uniform reservoir sample thereafter — so a
+/// long-running server's recorder neither grows nor goes stale.
+#[derive(Debug)]
 pub struct LatencyRecorder {
-    samples: Mutex<Vec<f64>>,
+    capacity: usize,
+    inner: Mutex<ReservoirInner>,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_RESERVOIR_CAPACITY)
+    }
 }
 
 /// Snapshot of a latency distribution.
@@ -50,22 +107,56 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// A recorder keeping at most `capacity` samples (≥ 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        LatencyRecorder {
+            capacity,
+            inner: Mutex::new(ReservoirInner {
+                samples: Vec::new(),
+                seen: 0,
+                sum: 0.0,
+                max: 0.0,
+                rng: Pcg::seed_from(0x1a7e_4ec0),
+            }),
+        }
+    }
+
     pub fn record(&self, seconds: f64) {
-        self.samples.lock().unwrap().push(seconds);
+        let mut g = self.inner.lock().unwrap();
+        g.seen += 1;
+        g.sum += seconds;
+        if seconds > g.max {
+            g.max = seconds;
+        }
+        if g.samples.len() < self.capacity {
+            g.samples.push(seconds);
+        } else {
+            // Algorithm R: keep with probability capacity / seen
+            let j = (g.rng.next_u64() % g.seen) as usize;
+            if j < self.capacity {
+                g.samples[j] = seconds;
+            }
+        }
+    }
+
+    /// Samples currently held (≤ capacity); exposed for memory tests.
+    pub fn reservoir_len(&self) -> usize {
+        self.inner.lock().unwrap().samples.len()
     }
 
     pub fn snapshot(&self) -> LatencySnapshot {
-        let samples = self.samples.lock().unwrap();
-        if samples.is_empty() {
+        let g = self.inner.lock().unwrap();
+        if g.seen == 0 {
             return LatencySnapshot { count: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
         }
         LatencySnapshot {
-            count: samples.len(),
-            mean: stats::mean(&samples),
-            p50: stats::percentile(&samples, 50.0),
-            p95: stats::percentile(&samples, 95.0),
-            p99: stats::percentile(&samples, 99.0),
-            max: samples.iter().cloned().fold(0.0, f64::max),
+            count: g.seen as usize,
+            mean: g.sum / g.seen as f64,
+            p50: stats::percentile(&g.samples, 50.0),
+            p95: stats::percentile(&g.samples, 95.0),
+            p99: stats::percentile(&g.samples, 99.0),
+            max: g.max,
         }
     }
 }
@@ -109,6 +200,19 @@ mod tests {
     }
 
     #[test]
+    fn gauge_levels() {
+        let g = Gauge::new();
+        g.set(5);
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 4);
+        g.set(0);
+        g.dec();
+        assert_eq!(g.get(), -1, "signed: no wraparound under racing dec");
+    }
+
+    #[test]
     fn latency_percentiles() {
         let r = LatencyRecorder::new();
         for i in 1..=100 {
@@ -126,5 +230,38 @@ mod tests {
     fn empty_snapshot() {
         let s = LatencyRecorder::new().snapshot();
         assert_eq!(s.count, 0);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let cap = 64;
+        let r = LatencyRecorder::with_capacity(cap);
+        let n = 50_000u64;
+        for i in 0..n {
+            r.record(i as f64);
+        }
+        assert_eq!(r.reservoir_len(), cap, "memory must not grow past capacity");
+        let s = r.snapshot();
+        // exact statistics survive sampling
+        assert_eq!(s.count, n as usize);
+        assert_eq!(s.max, (n - 1) as f64);
+        assert!((s.mean - (n - 1) as f64 / 2.0).abs() < 1e-6);
+        // percentile estimates come from a uniform sample of the ramp
+        // (deterministic seed, so these bounds are stable, not flaky)
+        assert!(s.p50 > 0.2 * n as f64 && s.p50 < 0.8 * n as f64, "p50={}", s.p50);
+        assert!(s.p99 > 0.8 * n as f64, "p99={}", s.p99);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "percentiles ordered");
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        let r = LatencyRecorder::with_capacity(1000);
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        let s = r.snapshot();
+        assert!((s.p50 - 51.0).abs() < 1.5, "exact nearest-rank while under capacity");
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.count, 100);
     }
 }

@@ -17,6 +17,34 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// A GCN stack description built directly from dimensions (the
+    /// native serve path has no manifest.json to parse). `n_layers ≥ 1`;
+    /// a 1-layer model maps `in_dim → out_dim` directly.
+    pub fn gcn(in_dim: usize, hidden_dim: usize, out_dim: usize, n_layers: usize) -> ModelConfig {
+        assert!(n_layers >= 1, "GCN needs at least one layer");
+        assert!(in_dim > 0 && hidden_dim > 0 && out_dim > 0, "dims must be positive");
+        ModelConfig {
+            arch: "gcn".to_string(),
+            in_dim,
+            hidden_dim,
+            out_dim,
+            n_layers,
+            lr: 0.0,
+            n_params: 2 * n_layers,
+        }
+    }
+
+    /// `(in, out)` dimensions of every layer in the stack.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        (0..self.n_layers)
+            .map(|l| {
+                let din = if l == 0 { self.in_dim } else { self.hidden_dim };
+                let dout = if l + 1 == self.n_layers { self.out_dim } else { self.hidden_dim };
+                (din, dout)
+            })
+            .collect()
+    }
+
     pub fn from_json(j: &Json) -> Result<ModelConfig> {
         Ok(ModelConfig {
             arch: j.req_str("arch")?.to_string(),
@@ -60,5 +88,16 @@ mod tests {
     fn rejects_missing_fields() {
         let j = Json::parse(r#"{"arch":"gcn"}"#).unwrap();
         assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn gcn_layer_dims_chain() {
+        let m = ModelConfig::gcn(64, 32, 8, 3);
+        assert_eq!(m.layer_dims(), vec![(64, 32), (32, 32), (32, 8)]);
+        assert_eq!(m.params_per_layer(), 2);
+        let one = ModelConfig::gcn(16, 99, 4, 1);
+        assert_eq!(one.layer_dims(), vec![(16, 4)]);
+        let two = ModelConfig::gcn(16, 8, 4, 2);
+        assert_eq!(two.layer_dims(), vec![(16, 8), (8, 4)]);
     }
 }

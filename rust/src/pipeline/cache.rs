@@ -13,15 +13,20 @@
 //! share one immutable instance, so a hit costs one fingerprint pass
 //! over the CSR (O(nnz)) instead of the full sort + partition chain.
 //!
-//! The cache never evicts; it is bounded by the number of distinct
-//! (graph, params) pairs a process touches. Long-running processes that
-//! cycle through many graphs should call [`PlanCache::clear`] (each
-//! cached plan owns two copies of the matrix: original and sorted).
+//! The default cache never evicts; it is bounded by the number of
+//! distinct (graph, params) pairs a process touches. Long-running
+//! processes that cycle through many graphs should either call
+//! [`PlanCache::clear`] or use a capacity-bounded cache
+//! ([`PlanCache::bounded`]) which evicts the least-recently-used plan
+//! once `capacity` plans are resident — the policy the native serve
+//! subsystem relies on for multi-tenancy (each cached plan owns two
+//! copies of the matrix: original and sorted).
 //!
 //! Concurrency: `plan_for` is callable from any thread. Plan
 //! construction happens outside the map lock, so two threads racing on
 //! the same cold key may both build; the first insert wins and both get
-//! the same `Arc` afterwards.
+//! the same `Arc` afterwards. Eviction only drops the cache's `Arc`:
+//! consumers holding a plan keep it alive.
 
 use super::plan::{GraphFingerprint, SpmmPlan};
 use crate::graph::csr::Csr;
@@ -36,17 +41,34 @@ struct PlanKey {
     params: PartitionParams,
 }
 
+#[derive(Debug)]
+struct Entry {
+    plan: Arc<SpmmPlan>,
+    /// Logical timestamp of the last `plan_for` touching this entry.
+    last_used: u64,
+}
+
 /// Process-wide memoization of SpMM plans.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<PlanKey, Arc<SpmmPlan>>>,
+    plans: Mutex<HashMap<PlanKey, Entry>>,
+    /// `None` = unbounded (the historical default).
+    capacity: Option<usize>,
+    clock: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// A cache holding at most `capacity` plans (≥ 1), evicting the
+    /// least-recently-used entry on overflow.
+    pub fn bounded(capacity: usize) -> PlanCache {
+        PlanCache { capacity: Some(capacity.max(1)), ..PlanCache::default() }
     }
 
     /// The process-wide cache shared by the binary, the bench harness,
@@ -58,17 +80,52 @@ impl PlanCache {
 
     /// Get (or build) the plan for `csr` under `params`.
     pub fn plan_for(&self, csr: &Csr, params: PartitionParams) -> Arc<SpmmPlan> {
-        let key = PlanKey { fingerprint: GraphFingerprint::of(csr), params };
-        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+        self.plan_for_keyed(GraphFingerprint::of(csr), csr, params)
+    }
+
+    /// [`PlanCache::plan_for`] with a caller-supplied fingerprint,
+    /// skipping the O(nnz) hash on every lookup. The caller promises
+    /// `fingerprint == GraphFingerprint::of(csr)` — the serve registry
+    /// computes it once at registration, turning the steady-state hot
+    /// path into a plain map probe.
+    pub fn plan_for_keyed(
+        &self,
+        fingerprint: GraphFingerprint,
+        csr: &Csr,
+        params: PartitionParams,
+    ) -> Arc<SpmmPlan> {
+        let key = PlanKey { fingerprint, params };
+        let now = self.clock.fetch_add(1, Ordering::Relaxed);
+        if let Some(entry) = self.plans.lock().unwrap().get_mut(&key) {
+            entry.last_used = now;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(plan);
+            return Arc::clone(&entry.plan);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         // build outside the lock: preprocessing is the expensive part
         let plan = Arc::new(SpmmPlan::build(csr.clone(), params));
         plan.seed_fingerprint(key.fingerprint); // already hashed for the key
         let mut map = self.plans.lock().unwrap();
-        Arc::clone(map.entry(key).or_insert(plan))
+        let plan =
+            Arc::clone(&map.entry(key).or_insert(Entry { plan, last_used: now }).plan);
+        if let Some(cap) = self.capacity {
+            while map.len() > cap {
+                // O(len) scan; bounded caches are small by construction
+                let lru = map
+                    .iter()
+                    .filter(|(k, _)| **k != key) // never evict what we just returned
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k);
+                match lru {
+                    Some(k) => {
+                        map.remove(&k);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break, // capacity 1 and only the fresh key resident
+                }
+            }
+        }
+        plan
     }
 
     /// Cached plan count.
@@ -87,6 +144,11 @@ impl PlanCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Plans evicted by the LRU policy (always 0 for unbounded caches).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Drop every cached plan (outstanding `Arc`s stay alive).
@@ -153,5 +215,49 @@ mod tests {
     #[test]
     fn global_is_a_singleton() {
         assert!(std::ptr::eq(PlanCache::global(), PlanCache::global()));
+    }
+
+    #[test]
+    fn bounded_evicts_least_recently_used() {
+        let cache = PlanCache::bounded(2);
+        let (g1, g2, g3) = (graph(10), graph(11), graph(12));
+        let params = PartitionParams::default();
+        cache.plan_for(&g1, params);
+        cache.plan_for(&g2, params);
+        cache.plan_for(&g1, params); // touch g1: g2 becomes LRU
+        let before_g1 = cache.misses();
+        cache.plan_for(&g3, params); // overflow: evicts g2
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        cache.plan_for(&g1, params); // still resident
+        assert_eq!(cache.misses(), before_g1 + 1, "g1 must hit after g3's insert");
+        cache.plan_for(&g2, params); // evicted: rebuilds (and evicts again)
+        assert_eq!(cache.misses(), before_g1 + 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn bounded_capacity_one_keeps_latest() {
+        let cache = PlanCache::bounded(1);
+        let params = PartitionParams::default();
+        let a = cache.plan_for(&graph(20), params);
+        let b = cache.plan_for(&graph(21), params);
+        assert_eq!(cache.len(), 1);
+        assert!(!Arc::ptr_eq(&a, &b));
+        // the evicted Arc stays usable
+        assert_eq!(a.n_rows(), 40);
+        // latest entry hits
+        let b2 = cache.plan_for(&graph(21), params);
+        assert!(Arc::ptr_eq(&b, &b2));
+    }
+
+    #[test]
+    fn unbounded_never_evicts() {
+        let cache = PlanCache::new();
+        for seed in 0..10 {
+            cache.plan_for(&graph(30 + seed), PartitionParams::default());
+        }
+        assert_eq!(cache.len(), 10);
+        assert_eq!(cache.evictions(), 0);
     }
 }

@@ -31,7 +31,10 @@
 //! * the GPU simulator (`sim::kernels::PreparedGraph` is an alias of
 //!   [`SpmmPlan`]),
 //! * the serving coordinator (`PreparedDataset::prepare` obtains its
-//!   partition from the global cache).
+//!   partition from the global cache),
+//! * the native serve subsystem (`serve::Server`'s worker executes
+//!   every fused batch through a **bounded** [`PlanCache`] and the
+//!   parallel executor; see [`crate::serve`]).
 
 pub mod plan;
 pub mod cache;

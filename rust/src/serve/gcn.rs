@@ -1,0 +1,330 @@
+//! Multi-layer GCN forward execution for the native serving path.
+//!
+//! A [`GcnModel`] is the dense half of a GCN stack (per-layer weight
+//! matrix + bias, dims from [`ModelConfig`]); [`GcnForward`] chains
+//! `SpMM → X·W + b → ReLU` per layer **in the relabeled domain**
+//! (DESIGN §2), so consecutive layers compose with zero per-layer
+//! unpermutes, and fuses all members of a batch into one wide SpMM per
+//! layer — Accel-GCN's column-dimension insight applied across
+//! concurrent requests instead of across lanes.
+
+use crate::graph::csr::Csr;
+use crate::model::ModelConfig;
+use crate::pipeline::{spmm_block_level_parallel, SpmmPlan};
+use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Dense parameters of a GCN stack. Weights are row-major
+/// `[d_in × d_out]` per layer; immutable after construction and shared
+/// across requests via `Arc` (the `Arc` pointer doubles as the batch
+/// grouping key in the server).
+#[derive(Debug, Clone)]
+pub struct GcnModel {
+    pub config: ModelConfig,
+    /// `weights[l]` is `[dims[l].0 × dims[l].1]`, row-major.
+    pub weights: Vec<Vec<f32>>,
+    /// `biases[l]` is `[dims[l].1]`.
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl GcnModel {
+    /// Seeded Glorot-style random init (deterministic across machines,
+    /// like everything in this tree).
+    pub fn random(config: ModelConfig, seed: u64) -> GcnModel {
+        let mut rng = Pcg::seed_from(seed ^ 0x6c0d_e1);
+        let dims = config.layer_dims();
+        let mut weights = Vec::with_capacity(dims.len());
+        let mut biases = Vec::with_capacity(dims.len());
+        for &(din, dout) in &dims {
+            let scale = (2.0 / (din + dout) as f64).sqrt() as f32;
+            weights.push((0..din * dout).map(|_| (rng.f32() - 0.5) * 2.0 * scale).collect());
+            biases.push((0..dout).map(|_| (rng.f32() - 0.5) * 0.1).collect());
+        }
+        GcnModel { config, weights, biases }
+    }
+
+    /// `(in, out)` dims per layer.
+    pub fn dims(&self) -> Vec<(usize, usize)> {
+        self.config.layer_dims()
+    }
+
+    /// The widest per-member column count any layer feeds into SpMM —
+    /// what the batcher must budget per member when packing a fused
+    /// GCN batch against the width ladder.
+    pub fn max_width(&self) -> usize {
+        self.dims().iter().map(|&(din, _)| din).max().unwrap_or(0)
+    }
+}
+
+/// `out = x · w + b`, optionally ReLU-clamped. `x` is `[rows × din]`
+/// row-major, `w` is `[din × dout]` row-major.
+fn affine_rows(x: &[f32], rows: usize, din: usize, w: &[f32], dout: usize, b: &[f32], relu: bool) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    let mut out = vec![0f32; rows * dout];
+    for r in 0..rows {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        orow.copy_from_slice(b);
+        let xrow = &x[r * din..(r + 1) * din];
+        // k-outer ordering: the inner j-loop streams one w row (cache-friendly)
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            for j in 0..dout {
+                orow[j] += xv * wrow[j];
+            }
+        }
+        if relu {
+            for v in orow.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parallel `x · w + b` over the worker pool: rows are chunked, each
+/// chunk runs [`affine_rows`], results concatenate in row order.
+pub fn dense_affine_parallel(
+    pool: &ThreadPool,
+    x: &Arc<Vec<f32>>,
+    rows: usize,
+    din: usize,
+    model: &Arc<GcnModel>,
+    layer: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let threads = pool.size().max(1);
+    let chunk = rows.div_ceil(threads).max(1);
+    let jobs: Vec<_> = (0..rows)
+        .step_by(chunk)
+        .map(|lo| {
+            let hi = (lo + chunk).min(rows);
+            let x = Arc::clone(x);
+            let model = Arc::clone(model);
+            move || {
+                let dout = model.dims()[layer].1;
+                affine_rows(
+                    &x[lo * din..hi * din],
+                    hi - lo,
+                    din,
+                    &model.weights[layer],
+                    dout,
+                    &model.biases[layer],
+                    relu,
+                )
+            }
+        })
+        .collect();
+    pool.run_all(jobs).concat()
+}
+
+/// Run the parallel block-level SpMM for a plan built **from** a
+/// relabeled adjacency, returning the result in that same domain.
+///
+/// The relabeled matrix's rows already ascend by degree, so the plan's
+/// internal degree sort is the identity and the sorted-domain result of
+/// [`spmm_block_level_parallel`] *is* the relabeled-domain result. The
+/// identity check is O(n) — free next to the O(nnz·f) SpMM — and the
+/// fallback keeps this correct even for a plan that was built from a
+/// non-relabeled matrix.
+pub fn spmm_relabeled(plan: &Arc<SpmmPlan>, x: &Arc<Vec<f32>>, f: usize, pool: &ThreadPool) -> Vec<f32> {
+    let y = spmm_block_level_parallel(plan, x, f, pool);
+    let identity = plan.sorted.perm.iter().enumerate().all(|(i, &p)| p as usize == i);
+    if identity {
+        y
+    } else {
+        plan.sorted.unpermute_rows(&y, f)
+    }
+}
+
+/// Timings of one fused forward pass, for the per-stage recorders.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ForwardTimings {
+    pub spmm_secs: f64,
+    pub dense_secs: f64,
+}
+
+/// The GCN layer stack bound to one relabeled-domain plan and pool.
+pub struct GcnForward<'a> {
+    pub plan: &'a Arc<SpmmPlan>,
+    pub pool: &'a ThreadPool,
+}
+
+impl GcnForward<'_> {
+    /// Forward `k` member feature matrices (each `[n × in_dim]`,
+    /// **relabeled** row order) through the stack as one fused batch:
+    /// each layer concatenates the members column-wise, runs a single
+    /// wide SpMM, splits, and applies the dense affine per member
+    /// (ReLU on all but the last layer). Returns per-member
+    /// `[n × out_dim]` matrices, still in the relabeled domain.
+    pub fn forward(&self, model: &Arc<GcnModel>, xs: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, ForwardTimings)> {
+        let n = self.plan.n_rows();
+        let k = xs.len();
+        anyhow::ensure!(k > 0, "empty GCN batch");
+        let dims = model.dims();
+        let mut hs = xs;
+        let mut t = ForwardTimings::default();
+        for (l, &(din, dout)) in dims.iter().enumerate() {
+            for h in &hs {
+                anyhow::ensure!(h.len() == n * din, "layer {l}: member shape mismatch");
+            }
+            // fuse: Â·[H₁ … Hₖ] in one traversal of the adjacency
+            let width = k * din;
+            let mut fused = vec![0f32; n * width];
+            for (m, h) in hs.iter().enumerate() {
+                for r in 0..n {
+                    fused[r * width + m * din..r * width + (m + 1) * din]
+                        .copy_from_slice(&h[r * din..(r + 1) * din]);
+                }
+            }
+            let fused = Arc::new(fused);
+            let t0 = Instant::now();
+            let agg = spmm_relabeled(self.plan, &fused, width, self.pool);
+            t.spmm_secs += t0.elapsed().as_secs_f64();
+            // split + dense per member
+            let t1 = Instant::now();
+            let relu = l + 1 < dims.len();
+            let mut next = Vec::with_capacity(k);
+            for m in 0..k {
+                let mut part = vec![0f32; n * din];
+                for r in 0..n {
+                    part[r * din..(r + 1) * din]
+                        .copy_from_slice(&agg[r * width + m * din..r * width + (m + 1) * din]);
+                }
+                let part = Arc::new(part);
+                next.push(dense_affine_parallel(self.pool, &part, n, din, model, l, relu));
+                debug_assert_eq!(next.last().unwrap().len(), n * dout);
+            }
+            t.dense_secs += t1.elapsed().as_secs_f64();
+            hs = next;
+        }
+        Ok((hs, t))
+    }
+}
+
+/// Numeric ground truth: the same stack executed with the dense CSR
+/// traversal in the **original** domain (what serve responses are
+/// verified against).
+pub fn reference_forward(csr: &Csr, model: &GcnModel, x: &[f32]) -> Vec<f32> {
+    let mut h = x.to_vec();
+    let dims = model.dims();
+    for (l, &(din, dout)) in dims.iter().enumerate() {
+        let agg = csr.spmm_dense(&h, din);
+        h = affine_rows(
+            &agg,
+            csr.n_rows,
+            din,
+            &model.weights[l],
+            dout,
+            &model.biases[l],
+            l + 1 < dims.len(),
+        );
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::patterns::PartitionParams;
+    use crate::serve::registry::GraphRegistry;
+    use crate::spmm::verify::assert_allclose;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            for _ in 0..rng.range(0, 7) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    #[test]
+    fn model_shapes() {
+        let m = GcnModel::random(ModelConfig::gcn(16, 8, 4, 3), 1);
+        assert_eq!(m.weights.len(), 3);
+        assert_eq!(m.weights[0].len(), 16 * 8);
+        assert_eq!(m.weights[1].len(), 8 * 8);
+        assert_eq!(m.weights[2].len(), 8 * 4);
+        assert_eq!(m.biases[2].len(), 4);
+        assert_eq!(m.max_width(), 16);
+    }
+
+    #[test]
+    fn affine_matches_hand_computation() {
+        // x = [[1, 2]], w = [[1, 0], [0, -1]], b = [10, 10]
+        let out = affine_rows(&[1.0, 2.0], 1, 2, &[1.0, 0.0, 0.0, -1.0], 2, &[10.0, 10.0], false);
+        assert_eq!(out, vec![11.0, 8.0]);
+        let relu = affine_rows(&[1.0, 2.0], 1, 2, &[1.0, 0.0, 0.0, -1.0], 2, &[0.0, 0.0], true);
+        assert_eq!(relu, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn parallel_affine_matches_sequential() {
+        let model = Arc::new(GcnModel::random(ModelConfig::gcn(6, 5, 3, 2), 2));
+        let rows = 37;
+        let mut rng = Pcg::seed_from(3);
+        let x: Vec<f32> = (0..rows * 6).map(|_| rng.f32() - 0.5).collect();
+        let want = affine_rows(&x, rows, 6, &model.weights[0], 5, &model.biases[0], true);
+        let pool = ThreadPool::new(4);
+        let got = dense_affine_parallel(&pool, &Arc::new(x), rows, 6, &model, 0, true);
+        assert_allclose(&got, &want, 1e-5, 1e-5, "parallel affine");
+    }
+
+    #[test]
+    fn fused_forward_matches_reference_per_member() {
+        let csr = random_csr(7, 45);
+        let model =
+            Arc::new(GcnModel::random(ModelConfig::gcn(8, 6, 3, 2), 11));
+        let reg = GraphRegistry::new();
+        let h = reg.register("g", &csr).unwrap();
+        let entry = reg.get(h).unwrap();
+        let plan =
+            Arc::new(SpmmPlan::build((*entry.relabeled).clone(), PartitionParams::default()));
+        let pool = ThreadPool::new(3);
+        let fw = GcnForward { plan: &plan, pool: &pool };
+
+        let mut rng = Pcg::seed_from(5);
+        let xs: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..45 * 8).map(|_| rng.f32() - 0.5).collect()).collect();
+        let xs_rel: Vec<Vec<f32>> = xs.iter().map(|x| entry.permute_rows(x, 8)).collect();
+        let (outs, timings) = fw.forward(&model, xs_rel).unwrap();
+        assert!(timings.spmm_secs >= 0.0 && timings.dense_secs >= 0.0);
+        for (m, out_rel) in outs.iter().enumerate() {
+            let got = entry.unpermute_rows(out_rel, 3);
+            let want = reference_forward(&csr, &model, &xs[m]);
+            assert_allclose(&got, &want, 1e-3, 1e-3, "fused member vs reference");
+        }
+    }
+
+    #[test]
+    fn spmm_relabeled_identity_domain() {
+        let csr = random_csr(9, 30);
+        let reg = GraphRegistry::new();
+        let entry = reg.get(reg.register("g", &csr).unwrap()).unwrap();
+        let plan =
+            Arc::new(SpmmPlan::build((*entry.relabeled).clone(), PartitionParams::default()));
+        // identity invariant: sorting an already-sorted matrix is a no-op
+        assert!(plan.sorted.perm.iter().enumerate().all(|(i, &p)| p as usize == i));
+        let f = 4;
+        let mut rng = Pcg::seed_from(17);
+        let x: Vec<f32> = (0..30 * f).map(|_| rng.f32() - 0.5).collect();
+        let x_rel = Arc::new(entry.permute_rows(&x, f));
+        let pool = ThreadPool::new(2);
+        let y_rel = spmm_relabeled(&plan, &x_rel, f, &pool);
+        let got = entry.unpermute_rows(&y_rel, f);
+        let want = csr.spmm_dense(&x, f);
+        assert_allclose(&got, &want, 1e-4, 1e-4, "relabeled spmm");
+    }
+}

@@ -1,0 +1,93 @@
+//! Serve-subsystem metrics: queue depth, batch occupancy, and
+//! per-stage latency recorders — all built on [`crate::metrics`]
+//! primitives (bounded reservoirs, so a server that runs forever holds
+//! constant memory).
+
+use crate::metrics::{Counter, Gauge, LatencyRecorder};
+
+/// Shared between submitters (front edge) and the worker loop.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Accepted into the queue.
+    pub submitted: Counter,
+    /// Bounced off a full queue.
+    pub rejected: Counter,
+    /// Replied successfully.
+    pub completed: Counter,
+    /// Replied with an error.
+    pub errors: Counter,
+    /// Fused batches executed.
+    pub batches: Counter,
+    /// Requests carried by those batches (occupancy numerator).
+    pub fused_requests: Counter,
+    /// Pending requests right now.
+    pub queue_depth: Gauge,
+    /// submit → worker pickup.
+    pub queue_wait: LatencyRecorder,
+    /// sparse traversal stage (per fused batch).
+    pub spmm_stage: LatencyRecorder,
+    /// dense affine stage (per fused batch; GCN requests only).
+    pub dense_stage: LatencyRecorder,
+    /// submit → reply.
+    pub total: LatencyRecorder,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Mean requests fused per executed batch (> 1 means the column
+    /// batcher is amortizing traversals across requests).
+    pub fn fusion_factor(&self) -> f64 {
+        let batches = self.batches.get();
+        if batches == 0 {
+            return 0.0;
+        }
+        self.fused_requests.get() as f64 / batches as f64
+    }
+
+    /// Multi-line human report (the `serve-native` subcommand's footer).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests: submitted={} rejected={} completed={} errors={} queue_depth={}\n",
+            self.submitted.get(),
+            self.rejected.get(),
+            self.completed.get(),
+            self.errors.get(),
+            self.queue_depth.get(),
+        ));
+        s.push_str(&format!(
+            "batches: {} executed, fusion factor {:.2} requests/batch\n",
+            self.batches.get(),
+            self.fusion_factor(),
+        ));
+        s.push_str(&format!("{}\n", self.queue_wait.snapshot().render("queue wait")));
+        s.push_str(&format!("{}\n", self.spmm_stage.snapshot().render("spmm stage")));
+        s.push_str(&format!("{}\n", self.dense_stage.snapshot().render("dense stage")));
+        s.push_str(&format!("{}\n", self.total.snapshot().render("total")));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_factor_and_render() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.fusion_factor(), 0.0, "no batches yet");
+        m.batches.add(2);
+        m.fused_requests.add(7);
+        assert!((m.fusion_factor() - 3.5).abs() < 1e-12);
+        m.submitted.add(7);
+        m.completed.add(7);
+        m.queue_depth.set(0);
+        m.total.record(0.001);
+        let r = m.render();
+        assert!(r.contains("fusion factor 3.50"));
+        assert!(r.contains("submitted=7"));
+    }
+}

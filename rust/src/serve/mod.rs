@@ -1,0 +1,35 @@
+//! Native serving subsystem — multi-tenant GCN inference, end-to-end on
+//! CPU, with no PJRT dependency.
+//!
+//! The [`coordinator`](crate::coordinator) routes requests through
+//! compiled PJRT artifacts and therefore cannot execute anything when
+//! the runtime is the offline stub. This layer is the other half of the
+//! story: the **same** column-dimension batching (Accel-GCN §IV's
+//! combined-warp insight lifted to whole requests, planned by the
+//! shared [`ColumnBatcher`](crate::coordinator::ColumnBatcher) against
+//! a *virtual* width ladder) executed through the PR-1 pipeline —
+//! cached [`SpmmPlan`](crate::pipeline::SpmmPlan)s and the parallel
+//! block-level executor — so `accel-gcn serve-native` serves real
+//! traffic offline.
+//!
+//! * [`registry`] — multi-tenant graph residency: handles, relabeled
+//!   adjacencies (DESIGN §2), ingress/egress permutations.
+//! * [`gcn`] — the multi-layer forward stack ([`GcnForward`]): fused
+//!   `SpMM → X·W + b → ReLU` per layer, chained in the relabeled
+//!   domain with zero per-layer unpermutes.
+//! * [`server`] — bounded queue + worker loop + batch fusion; see the
+//!   module docs for the queue/worker/eviction semantics.
+//! * [`metrics`] — queue depth, batch occupancy, per-stage latency.
+//!
+//! Load-generation and reporting live in
+//! [`bench::serve_native`](crate::bench::serve_native).
+
+pub mod gcn;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+
+pub use gcn::{reference_forward, GcnForward, GcnModel};
+pub use metrics::ServeMetrics;
+pub use registry::{GraphHandle, GraphRegistry};
+pub use server::{Payload, Request, Response, ServeConfig, Server};

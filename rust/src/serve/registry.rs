@@ -1,0 +1,182 @@
+//! Multi-tenant graph residency: handles, relabeled adjacencies, and
+//! the permutation metadata needed at the serving edge.
+//!
+//! A registered graph is preprocessed **once** into the relabeled domain
+//! (DESIGN §2: rows *and* columns permuted ascending by degree,
+//! `P·A·Pᵀ`). Requests enter in the original node order; the server
+//! permutes feature rows at ingress, chains every layer in the relabeled
+//! domain with zero per-layer unpermutes, and unpermutes once at egress.
+//!
+//! The registry deliberately does **not** own `SpmmPlan`s: plans live in
+//! the server's bounded [`PlanCache`](crate::pipeline::PlanCache), so a
+//! tenant that goes cold can have its partition evicted and rebuilt on
+//! demand while its (smaller) CSR stays resident here.
+
+use crate::graph::csr::Csr;
+use crate::graph::degree::DegreeSorted;
+use crate::pipeline::GraphFingerprint;
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Mutex};
+
+/// Opaque ticket for a registered graph; cheap to copy into requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GraphHandle(pub(crate) u32);
+
+/// One resident graph: the relabeled adjacency plus edge permutations.
+#[derive(Debug)]
+pub struct GraphEntry {
+    pub name: String,
+    /// Node count (requests must carry `[n, c]` features).
+    pub n: usize,
+    /// `P·A·Pᵀ` — what the serving path executes. Its degree order is
+    /// already ascending, so a plan built from it has an identity
+    /// sort permutation and executes natively in this domain.
+    pub relabeled: Arc<Csr>,
+    /// Fingerprint of `relabeled`, hashed once at registration so the
+    /// worker's per-round plan lookups skip the O(nnz) pass
+    /// ([`PlanCache::plan_for_keyed`](crate::pipeline::PlanCache::plan_for_keyed)).
+    pub fingerprint: GraphFingerprint,
+    /// `perm[i]` = original row id of relabeled row `i`.
+    pub perm: Vec<u32>,
+}
+
+impl GraphEntry {
+    /// Ingress: reorder feature rows into the relabeled domain
+    /// (`out[i] = x[perm[i]]`).
+    pub fn permute_rows(&self, x: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n * f, "feature shape mismatch");
+        let mut out = vec![0f32; x.len()];
+        for (i, &orig) in self.perm.iter().enumerate() {
+            let o = orig as usize;
+            out[i * f..(i + 1) * f].copy_from_slice(&x[o * f..(o + 1) * f]);
+        }
+        out
+    }
+
+    /// Egress: reorder result rows back to the original node order
+    /// (`out[perm[i]] = y[i]`).
+    pub fn unpermute_rows(&self, y: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.n * f, "result shape mismatch");
+        let mut out = vec![0f32; y.len()];
+        for (i, &orig) in self.perm.iter().enumerate() {
+            let o = orig as usize;
+            out[o * f..(o + 1) * f].copy_from_slice(&y[i * f..(i + 1) * f]);
+        }
+        out
+    }
+}
+
+/// Handle-indexed table of resident graphs. Registration is rare and
+/// mutex-guarded; lookups clone an `Arc`.
+#[derive(Debug, Default)]
+pub struct GraphRegistry {
+    entries: Mutex<Vec<Arc<GraphEntry>>>,
+}
+
+impl GraphRegistry {
+    pub fn new() -> GraphRegistry {
+        GraphRegistry::default()
+    }
+
+    /// Preprocess `csr` into the relabeled domain and make it resident.
+    /// Square adjacencies only (GCN propagation).
+    pub fn register(&self, name: &str, csr: &Csr) -> Result<GraphHandle> {
+        anyhow::ensure!(
+            csr.n_rows == csr.n_cols,
+            "adjacency must be square, got {}x{}",
+            csr.n_rows,
+            csr.n_cols
+        );
+        let sorted = DegreeSorted::new(csr);
+        let relabeled = Arc::new(csr.relabel(&sorted.perm, &sorted.inv));
+        let fingerprint = GraphFingerprint::of(&relabeled);
+        let entry = Arc::new(GraphEntry {
+            name: name.to_string(),
+            n: csr.n_rows,
+            relabeled,
+            fingerprint,
+            perm: sorted.perm,
+        });
+        let mut entries = self.entries.lock().unwrap();
+        let handle = GraphHandle(entries.len() as u32);
+        entries.push(entry);
+        Ok(handle)
+    }
+
+    pub fn get(&self, handle: GraphHandle) -> Result<Arc<GraphEntry>> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(handle.0 as usize)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown graph handle {:?}", handle))
+    }
+
+    /// Number of resident graphs.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            for _ in 0..rng.range(0, 7) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let reg = GraphRegistry::new();
+        let a = reg.register("a", &random_csr(1, 20)).unwrap();
+        let b = reg.register("b", &random_csr(2, 30)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get(a).unwrap().n, 20);
+        assert_eq!(reg.get(b).unwrap().name, "b");
+        assert!(reg.get(GraphHandle(7)).is_err());
+    }
+
+    #[test]
+    fn rejects_rectangular() {
+        let reg = GraphRegistry::new();
+        let rect = Csr::from_edges(2, 3, &[(0, 2, 1.0)]).unwrap();
+        assert!(reg.register("rect", &rect).is_err());
+    }
+
+    #[test]
+    fn permute_unpermute_roundtrip() {
+        let reg = GraphRegistry::new();
+        let h = reg.register("g", &random_csr(3, 25)).unwrap();
+        let e = reg.get(h).unwrap();
+        let f = 3;
+        let x: Vec<f32> = (0..25 * f).map(|i| i as f32).collect();
+        let back = e.unpermute_rows(&e.permute_rows(&x, f), f);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn relabeled_degrees_ascend() {
+        // the invariant the serve executor relies on: a plan built from
+        // `relabeled` sorts with the identity permutation
+        let reg = GraphRegistry::new();
+        let h = reg.register("g", &random_csr(4, 40)).unwrap();
+        let e = reg.get(h).unwrap();
+        for r in 1..e.n {
+            assert!(e.relabeled.degree(r - 1) <= e.relabeled.degree(r));
+        }
+    }
+}

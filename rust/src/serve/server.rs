@@ -1,0 +1,721 @@
+//! The native serving engine: bounded request queue + worker loop over
+//! the parallel SpMM pipeline. No PJRT, no compiled artifacts — the
+//! whole request path executes on CPU through the cached
+//! [`SpmmPlan`](crate::pipeline::SpmmPlan) and the block-level parallel
+//! executor.
+//!
+//! ## Queue / worker semantics
+//!
+//! * [`Server::submit`] validates the request against the resident
+//!   graph, then enqueues it if the bounded queue has room (a full
+//!   queue rejects immediately — back-pressure instead of unbounded
+//!   buffering) and returns a per-request reply channel.
+//! * One worker thread drains **everything** pending per round, groups
+//!   requests by `(graph, model)`, plans column fusion per group with
+//!   the shared [`ColumnBatcher`] against the configured virtual width
+//!   ladder, executes each fused batch, splits, and replies. Requests
+//!   that arrive while a round is executing coalesce into the next
+//!   round — exactly how load spikes turn into wider (cheaper per
+//!   request) batches.
+//! * Plans come from a **bounded** [`PlanCache`] (LRU), so many graphs
+//!   can be resident with preprocessing memory capped; evicted tenants
+//!   rebuild on their next batch.
+//! * Shutdown (drop) is graceful: the worker drains what is queued,
+//!   replies, then exits.
+//!
+//! ## Domains
+//!
+//! Everything between ingress and egress runs in the relabeled domain
+//! (DESIGN §2): fusion permutes feature rows while copying members into
+//! the fused matrix, layers chain with zero per-layer unpermutes, and
+//! the split back to per-request tensors unpermutes while copying out.
+
+use super::gcn::{spmm_relabeled, GcnForward, GcnModel};
+use super::metrics::ServeMetrics;
+use super::registry::{GraphEntry, GraphHandle, GraphRegistry};
+use crate::coordinator::ColumnBatcher;
+use crate::graph::csr::Csr;
+use crate::partition::patterns::PartitionParams;
+use crate::pipeline::PlanCache;
+use crate::runtime::HostTensor;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Native-serving configuration (the ladder is virtual: plain widths,
+/// no compiled artifacts behind them).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Workers in the SpMM/dense execution pool.
+    pub threads: usize,
+    /// Pending-request bound; submits beyond it are rejected.
+    pub queue_capacity: usize,
+    /// Virtual width ladder (ascending after validation); the widest
+    /// rung caps fused batch width.
+    pub ladder: Vec<usize>,
+    /// Partition tunables for plans built on behalf of tenants.
+    pub params: PartitionParams,
+    /// Max resident `SpmmPlan`s (LRU-evicted beyond this).
+    pub plan_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            threads: 4,
+            queue_capacity: 1024,
+            ladder: vec![32, 64, 128],
+            params: PartitionParams::default(),
+            plan_capacity: 8,
+        }
+    }
+}
+
+/// What a request asks the server to compute.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// `Y = Â·X` (one SpMM against the tenant's adjacency).
+    Spmm { x: HostTensor },
+    /// Full multi-layer GCN forward pass under `model`.
+    Gcn { model: Arc<GcnModel>, x: HostTensor },
+}
+
+/// A queued inference request against a resident graph.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub graph: GraphHandle,
+    pub payload: Payload,
+}
+
+/// A completed request: result rows in the **original** node order.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub y: HostTensor,
+}
+
+struct Pending {
+    graph: GraphHandle,
+    payload: Payload,
+    reply: Sender<Result<Response>>,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    pending: Vec<Pending>,
+    paused: bool,
+    shutdown: bool,
+}
+
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// Handle to the native serving engine; dropping it shuts the worker
+/// down gracefully (queued requests are still served).
+pub struct Server {
+    registry: Arc<GraphRegistry>,
+    shared: Arc<SharedQueue>,
+    metrics: Arc<ServeMetrics>,
+    queue_capacity: usize,
+    max_width: usize,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Validate the config and start the worker loop.
+    pub fn start(config: ServeConfig) -> Result<Server> {
+        let batcher = ColumnBatcher::from_widths(&config.ladder)?;
+        anyhow::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
+        let mut server = Server::front_end(&batcher, &config);
+        let shared = Arc::clone(&server.shared);
+        let registry = Arc::clone(&server.registry);
+        let metrics = Arc::clone(&server.metrics);
+        let worker = std::thread::Builder::new()
+            .name("accel-gcn-serve".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(config.threads);
+                let cache = PlanCache::bounded(config.plan_capacity);
+                worker_loop(shared, registry, metrics, batcher, pool, cache, config.params);
+            })
+            .expect("spawn serve worker");
+        server.worker = Some(worker);
+        Ok(server)
+    }
+
+    /// The front-end half alone (no worker thread) — used by tests that
+    /// need deterministic queue states.
+    fn front_end(batcher: &ColumnBatcher, config: &ServeConfig) -> Server {
+        Server {
+            registry: Arc::new(GraphRegistry::new()),
+            shared: Arc::new(SharedQueue {
+                state: Mutex::new(QueueState {
+                    pending: Vec::new(),
+                    paused: false,
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+            }),
+            metrics: Arc::new(ServeMetrics::new()),
+            queue_capacity: config.queue_capacity,
+            max_width: batcher.max_width,
+            worker: None,
+        }
+    }
+
+    #[cfg(test)]
+    fn start_without_worker(config: ServeConfig) -> Result<Server> {
+        let batcher = ColumnBatcher::from_widths(&config.ladder)?;
+        anyhow::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
+        Ok(Server::front_end(&batcher, &config))
+    }
+
+    /// Make a graph resident and get its handle.
+    pub fn register_graph(&self, name: &str, csr: &Csr) -> Result<GraphHandle> {
+        self.registry.register(name, csr)
+    }
+
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    /// Widest fused batch the ladder supports.
+    pub fn max_width(&self) -> usize {
+        self.max_width
+    }
+
+    /// Resident graph count.
+    pub fn resident_graphs(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Hold the worker between rounds: submissions keep queueing (and
+    /// will fuse into one wide round on [`Server::resume`]), nothing
+    /// executes. Shutdown overrides a pause — queued work still drains.
+    pub fn pause(&self) {
+        self.shared.state.lock().unwrap().paused = true;
+    }
+
+    /// Release a [`Server::pause`]; the worker drains the backlog as
+    /// one round.
+    pub fn resume(&self) {
+        self.shared.state.lock().unwrap().paused = false;
+        self.shared.cv.notify_all();
+    }
+
+    /// Validate and enqueue; returns the reply channel. Errors on shape
+    /// mismatch, widths the ladder cannot carry, a full queue, or a
+    /// server that is shutting down.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        // a dead worker (e.g. a panic in a batch) must not silently
+        // accept requests that will never be served
+        if self.worker.as_ref().is_some_and(|h| h.is_finished()) {
+            self.metrics.rejected.inc();
+            return Err(anyhow!("serve worker is not running"));
+        }
+        let entry = self.registry.get(req.graph)?;
+        if let Err(e) = self.validate(&entry, &req.payload) {
+            self.metrics.rejected.inc();
+            return Err(e);
+        }
+        let (reply, rx) = channel();
+        let pending = Pending {
+            graph: req.graph,
+            payload: req.payload,
+            reply,
+            enqueued: Instant::now(),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                self.metrics.rejected.inc();
+                return Err(anyhow!("server is shutting down"));
+            }
+            if st.pending.len() >= self.queue_capacity {
+                self.metrics.rejected.inc();
+                return Err(anyhow!(
+                    "queue full ({} pending, capacity {})",
+                    st.pending.len(),
+                    self.queue_capacity
+                ));
+            }
+            st.pending.push(pending);
+            self.metrics.queue_depth.set(st.pending.len() as i64);
+        }
+        self.metrics.submitted.inc();
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Convenience: submit a single SpMM request.
+    pub fn submit_spmm(&self, graph: GraphHandle, x: HostTensor) -> Result<Receiver<Result<Response>>> {
+        self.submit(Request { graph, payload: Payload::Spmm { x } })
+    }
+
+    /// Convenience: submit a GCN forward-pass request.
+    pub fn submit_gcn(
+        &self,
+        graph: GraphHandle,
+        model: Arc<GcnModel>,
+        x: HostTensor,
+    ) -> Result<Receiver<Result<Response>>> {
+        self.submit(Request { graph, payload: Payload::Gcn { model, x } })
+    }
+
+    fn validate(&self, entry: &GraphEntry, payload: &Payload) -> Result<()> {
+        let x = match payload {
+            Payload::Spmm { x } | Payload::Gcn { x, .. } => x,
+        };
+        anyhow::ensure!(
+            x.shape().len() == 2 && x.shape()[0] == entry.n,
+            "features must be [{} × c], got {:?}",
+            entry.n,
+            x.shape()
+        );
+        anyhow::ensure!(x.as_f32().is_ok(), "features must be f32");
+        let w = x.shape()[1];
+        match payload {
+            Payload::Spmm { .. } => {
+                anyhow::ensure!(
+                    w > 0 && w <= self.max_width,
+                    "request width {w} outside ladder (max {})",
+                    self.max_width
+                );
+            }
+            Payload::Gcn { model, .. } => {
+                anyhow::ensure!(
+                    w == model.config.in_dim,
+                    "GCN features must be [n × in_dim={}], got width {w}",
+                    model.config.in_dim
+                );
+                anyhow::ensure!(
+                    model.max_width() > 0 && model.max_width() <= self.max_width,
+                    "model width {} exceeds ladder max {}",
+                    model.max_width(),
+                    self.max_width
+                );
+                // fields are public: reject parameter/config mismatches
+                // here, where they can error, instead of panicking (and
+                // killing) the worker thread mid-batch
+                let dims = model.dims();
+                anyhow::ensure!(
+                    model.weights.len() == dims.len() && model.biases.len() == dims.len(),
+                    "model has {} weight / {} bias layers, config declares {}",
+                    model.weights.len(),
+                    model.biases.len(),
+                    dims.len()
+                );
+                for (l, &(din, dout)) in dims.iter().enumerate() {
+                    anyhow::ensure!(
+                        model.weights[l].len() == din * dout && model.biases[l].len() == dout,
+                        "layer {l} parameters are not [{din}×{dout}] + [{dout}]"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// worker side
+
+fn worker_loop(
+    shared: Arc<SharedQueue>,
+    registry: Arc<GraphRegistry>,
+    metrics: Arc<ServeMetrics>,
+    batcher: ColumnBatcher,
+    pool: ThreadPool,
+    cache: PlanCache,
+    params: PartitionParams,
+) {
+    loop {
+        let round: Vec<Pending> = {
+            let mut st = shared.state.lock().unwrap();
+            while (st.pending.is_empty() || st.paused) && !st.shutdown {
+                st = shared.cv.wait(st).unwrap();
+            }
+            if st.pending.is_empty() {
+                return; // shutdown with an empty queue
+            }
+            let drained = std::mem::take(&mut st.pending);
+            metrics.queue_depth.set(0);
+            drained
+        };
+        let picked_up = Instant::now();
+        for p in &round {
+            metrics.queue_wait.record(picked_up.duration_since(p.enqueued).as_secs_f64());
+        }
+        // group by tenant (and, for GCN, by model identity); BTreeMap
+        // keys make the processing order deterministic
+        let mut spmm_groups: BTreeMap<GraphHandle, Vec<Pending>> = BTreeMap::new();
+        let mut gcn_groups: BTreeMap<(GraphHandle, usize), Vec<Pending>> = BTreeMap::new();
+        for p in round {
+            match &p.payload {
+                Payload::Spmm { .. } => spmm_groups.entry(p.graph).or_default().push(p),
+                Payload::Gcn { model, .. } => {
+                    let key = (p.graph, Arc::as_ptr(model) as usize);
+                    gcn_groups.entry(key).or_default().push(p);
+                }
+            }
+        }
+        for (graph, group) in spmm_groups {
+            run_spmm_group(graph, group, &registry, &metrics, &batcher, &pool, &cache, params);
+        }
+        for ((graph, _), group) in gcn_groups {
+            run_gcn_group(graph, group, &registry, &metrics, &batcher, &pool, &cache, params);
+        }
+    }
+}
+
+/// Reply to every member of a failed group (anyhow errors don't clone;
+/// each member gets the formatted chain).
+fn fail_group(group: Vec<Pending>, metrics: &ServeMetrics, e: &anyhow::Error) {
+    for p in group {
+        metrics.errors.inc();
+        metrics.total.record(p.enqueued.elapsed().as_secs_f64());
+        let _ = p.reply.send(Err(anyhow!("{e:#}")));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_spmm_group(
+    graph: GraphHandle,
+    group: Vec<Pending>,
+    registry: &GraphRegistry,
+    metrics: &ServeMetrics,
+    batcher: &ColumnBatcher,
+    pool: &ThreadPool,
+    cache: &PlanCache,
+    params: PartitionParams,
+) {
+    let entry = match registry.get(graph) {
+        Ok(e) => e,
+        Err(e) => return fail_group(group, metrics, &e),
+    };
+    let widths: Vec<usize> = group.iter().map(Pending::payload_width).collect();
+    let plans = match batcher.plan(&widths) {
+        Ok(p) => p,
+        Err(e) => return fail_group(group, metrics, &e),
+    };
+    let plan = cache.plan_for_keyed(entry.fingerprint, &entry.relabeled, params);
+    let n = entry.n;
+    let mut members: Vec<Option<Pending>> = group.into_iter().map(Some).collect();
+    for bp in &plans {
+        // fuse: copy member columns into the padded fused matrix while
+        // permuting rows into the relabeled domain (single pass)
+        let aw = bp.artifact_width;
+        let mut fused = vec![0f32; n * aw];
+        let mut col = 0usize;
+        let mut widths = Vec::with_capacity(bp.members.len());
+        for &m in &bp.members {
+            let p = members[m].as_ref().expect("each request fused once");
+            let x = match &p.payload {
+                Payload::Spmm { x } => x.as_f32().expect("validated at submit"),
+                Payload::Gcn { .. } => unreachable!("spmm group"),
+            };
+            let c = p.payload_width();
+            for (i, &orig) in entry.perm.iter().enumerate() {
+                let o = orig as usize;
+                fused[i * aw + col..i * aw + col + c].copy_from_slice(&x[o * c..(o + 1) * c]);
+            }
+            widths.push(c);
+            col += c;
+        }
+        let fused = Arc::new(fused);
+        let t0 = Instant::now();
+        let y = spmm_relabeled(&plan, &fused, aw, pool);
+        metrics.spmm_stage.record(t0.elapsed().as_secs_f64());
+        metrics.batches.inc();
+        metrics.fused_requests.add(bp.members.len() as u64);
+        // split: copy each member's columns back out, unpermuting rows
+        // to the original node order
+        let mut col = 0usize;
+        for (slot, &m) in bp.members.iter().enumerate() {
+            let c = widths[slot];
+            let mut out = vec![0f32; n * c];
+            for (i, &orig) in entry.perm.iter().enumerate() {
+                let o = orig as usize;
+                out[o * c..(o + 1) * c].copy_from_slice(&y[i * aw + col..i * aw + col + c]);
+            }
+            col += c;
+            let p = members[m].take().expect("each request split once");
+            metrics.completed.inc();
+            metrics.total.record(p.enqueued.elapsed().as_secs_f64());
+            let _ = p.reply.send(Ok(Response { y: HostTensor::f32(&[n, c], out) }));
+        }
+    }
+    debug_assert!(members.iter().all(Option::is_none), "every member replied");
+}
+
+impl Pending {
+    fn payload_width(&self) -> usize {
+        match &self.payload {
+            Payload::Spmm { x } | Payload::Gcn { x, .. } => x.shape()[1],
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_gcn_group(
+    graph: GraphHandle,
+    group: Vec<Pending>,
+    registry: &GraphRegistry,
+    metrics: &ServeMetrics,
+    batcher: &ColumnBatcher,
+    pool: &ThreadPool,
+    cache: &PlanCache,
+    params: PartitionParams,
+) {
+    let model = match &group[0].payload {
+        Payload::Gcn { model, .. } => Arc::clone(model),
+        Payload::Spmm { .. } => unreachable!("gcn group"),
+    };
+    let entry = match registry.get(graph) {
+        Ok(e) => e,
+        Err(e) => return fail_group(group, metrics, &e),
+    };
+    // pack members so that k · max_layer_width fits the ladder: the
+    // batcher plans over each member's *widest* layer, which bounds
+    // every per-layer fused width in the stack
+    let budget: Vec<usize> = vec![model.max_width(); group.len()];
+    let plans = match batcher.plan(&budget) {
+        Ok(p) => p,
+        Err(e) => return fail_group(group, metrics, &e),
+    };
+    let plan = cache.plan_for_keyed(entry.fingerprint, &entry.relabeled, params);
+    let in_dim = model.config.in_dim;
+    let out_dim = model.config.out_dim;
+    let n = entry.n;
+    let mut members: Vec<Option<Pending>> = group.into_iter().map(Some).collect();
+    for bp in &plans {
+        let xs_rel: Vec<Vec<f32>> = bp
+            .members
+            .iter()
+            .map(|&m| {
+                let p = members[m].as_ref().expect("each request forwarded once");
+                let x = match &p.payload {
+                    Payload::Gcn { x, .. } => x.as_f32().expect("validated at submit"),
+                    Payload::Spmm { .. } => unreachable!("gcn group"),
+                };
+                entry.permute_rows(x, in_dim)
+            })
+            .collect();
+        let fw = GcnForward { plan: &plan, pool };
+        match fw.forward(&model, xs_rel) {
+            Ok((outs, timings)) => {
+                metrics.spmm_stage.record(timings.spmm_secs);
+                metrics.dense_stage.record(timings.dense_secs);
+                metrics.batches.inc();
+                metrics.fused_requests.add(bp.members.len() as u64);
+                for (slot, &m) in bp.members.iter().enumerate() {
+                    let out = entry.unpermute_rows(&outs[slot], out_dim);
+                    let p = members[m].take().expect("each request replied once");
+                    metrics.completed.inc();
+                    metrics.total.record(p.enqueued.elapsed().as_secs_f64());
+                    let _ = p
+                        .reply
+                        .send(Ok(Response { y: HostTensor::f32(&[n, out_dim], out) }));
+                }
+            }
+            Err(e) => {
+                let failed: Vec<Pending> =
+                    bp.members.iter().filter_map(|&m| members[m].take()).collect();
+                fail_group(failed, metrics, &e);
+            }
+        }
+    }
+    debug_assert!(members.iter().all(Option::is_none), "every member replied");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::serve::gcn::reference_forward;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            let d = if rng.f64() < 0.05 { rng.range(0, n) } else { rng.range(0, 7) };
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    fn features(rng: &mut Pcg, n: usize, c: usize) -> HostTensor {
+        HostTensor::f32(&[n, c], (0..n * c).map(|_| rng.f32() - 0.5).collect())
+    }
+
+    /// The serve-level satellite property: batched-parallel serving
+    /// matches the sequential exact executor for every response, across
+    /// two resident graphs and mixed request kinds/widths.
+    #[test]
+    fn mixed_load_matches_exact_executor() {
+        let server = Server::start(ServeConfig {
+            threads: 2,
+            ladder: vec![16, 32, 64],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g1 = random_csr(1, 40);
+        let g2 = random_csr(2, 25);
+        let h1 = server.register_graph("g1", &g1).unwrap();
+        let h2 = server.register_graph("g2", &g2).unwrap();
+        assert_eq!(server.resident_graphs(), 2);
+        let m1 = Arc::new(GcnModel::random(ModelConfig::gcn(8, 6, 3, 2), 7));
+        let m2 = Arc::new(GcnModel::random(ModelConfig::gcn(4, 4, 2, 3), 8));
+
+        let mut rng = Pcg::seed_from(99);
+        let mut expected: Vec<Vec<f32>> = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..36 {
+            let (csr, h, n) = if i % 3 == 0 { (&g2, h2, 25) } else { (&g1, h1, 40) };
+            if i % 4 == 3 {
+                let (model, hh, csr2, n2) =
+                    if i % 3 == 0 { (&m2, h2, &g2, 25) } else { (&m1, h1, &g1, 40) };
+                let x = features(&mut rng, n2, model.config.in_dim);
+                expected.push(reference_forward(csr2, model, x.as_f32().unwrap()));
+                rxs.push(server.submit_gcn(hh, Arc::clone(model), x).unwrap());
+            } else {
+                let w = *rng.choose(&[4usize, 8, 16, 24, 48]);
+                let x = features(&mut rng, n, w);
+                expected.push(csr.spmm_dense(x.as_f32().unwrap(), w));
+                rxs.push(server.submit_spmm(h, x).unwrap());
+            }
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("worker alive").expect("request served");
+            assert_allclose(
+                resp.y.as_f32().unwrap(),
+                &expected[i],
+                1e-3,
+                1e-3,
+                &format!("response {i}"),
+            );
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed.get(), 36);
+        assert_eq!(m.errors.get(), 0);
+        assert!(m.batches.get() > 0);
+        assert!(m.total.snapshot().count >= 36);
+    }
+
+    #[test]
+    fn burst_fuses_requests_into_fewer_batches() {
+        // pause the worker, stack a burst, resume: the whole backlog
+        // drains as one round and must fuse into a single 128-wide batch
+        let server = Server::start(ServeConfig {
+            threads: 1,
+            ladder: vec![128],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(3, 30);
+        let h = server.register_graph("g", &g).unwrap();
+        let mut rng = Pcg::seed_from(5);
+        server.pause();
+        let rxs: Vec<_> = (0..16)
+            .map(|_| server.submit_spmm(h, features(&mut rng, 30, 8)).unwrap())
+            .collect();
+        server.resume();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed.get(), 16);
+        assert_eq!(m.batches.get(), 1, "16×8 columns fit one 128-wide batch exactly");
+        assert!((m.fusion_factor() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let server = Server::start_without_worker(ServeConfig {
+            queue_capacity: 2,
+            ladder: vec![32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let h = server.register_graph("g", &random_csr(4, 10)).unwrap();
+        let mut rng = Pcg::seed_from(6);
+        let _a = server.submit_spmm(h, features(&mut rng, 10, 8)).unwrap();
+        let _b = server.submit_spmm(h, features(&mut rng, 10, 8)).unwrap();
+        let err = server.submit_spmm(h, features(&mut rng, 10, 8)).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert_eq!(server.metrics().rejected.get(), 1);
+        assert_eq!(server.metrics().queue_depth.get(), 2);
+    }
+
+    #[test]
+    fn invalid_submissions_rejected() {
+        let server = Server::start_without_worker(ServeConfig {
+            ladder: vec![16, 32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let h = server.register_graph("g", &random_csr(5, 12)).unwrap();
+        let mut rng = Pcg::seed_from(7);
+        // width over the ladder
+        assert!(server.submit_spmm(h, features(&mut rng, 12, 33)).is_err());
+        // wrong node count
+        assert!(server.submit_spmm(h, features(&mut rng, 11, 8)).is_err());
+        // i32 payload
+        let bad = HostTensor::i32(&[12, 4], vec![0; 48]);
+        assert!(server.submit_spmm(h, bad).is_err());
+        // unknown handle
+        assert!(server.submit_spmm(GraphHandle(9), features(&mut rng, 12, 8)).is_err());
+        // GCN whose hidden layer cannot fit the ladder
+        let wide = Arc::new(GcnModel::random(ModelConfig::gcn(16, 64, 4, 2), 1));
+        assert!(server.submit_gcn(h, wide, features(&mut rng, 12, 16)).is_err());
+        // GCN with mismatched in_dim
+        let m = Arc::new(GcnModel::random(ModelConfig::gcn(16, 8, 4, 2), 2));
+        assert!(server.submit_gcn(h, m, features(&mut rng, 12, 8)).is_err());
+        // model whose public fields disagree with its config: must be
+        // rejected at submit, not panic the worker mid-batch
+        let mut broken = GcnModel::random(ModelConfig::gcn(16, 8, 4, 2), 3);
+        broken.weights.pop();
+        assert!(server.submit_gcn(h, Arc::new(broken), features(&mut rng, 12, 16)).is_err());
+        assert_eq!(server.metrics().rejected.get(), 6, "unknown handle precedes validation");
+    }
+
+    #[test]
+    fn shutdown_serves_queued_requests() {
+        let server = Server::start(ServeConfig {
+            threads: 1,
+            ladder: vec![64],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(8, 20);
+        let h = server.register_graph("g", &g).unwrap();
+        let mut rng = Pcg::seed_from(8);
+        let rxs: Vec<_> = (0..6)
+            .map(|_| server.submit_spmm(h, features(&mut rng, 20, 16)).unwrap())
+            .collect();
+        drop(server); // graceful: queued work is drained before the worker exits
+        for rx in rxs {
+            assert!(rx.recv().expect("reply delivered before shutdown").is_ok());
+        }
+    }
+}

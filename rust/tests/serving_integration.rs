@@ -29,7 +29,7 @@ fn engine_executes_batched_requests() {
     }
     let n = engine.manifest().n_cols;
     let layout = BellLayout::load(ART).unwrap();
-    let batcher = ColumnBatcher::new(ladder);
+    let batcher = ColumnBatcher::new(ladder).unwrap();
 
     let mut rng = Pcg::seed_from(5);
     let widths = [16usize, 16, 32, 64, 16];
