@@ -12,6 +12,18 @@ cargo test -q
 cargo run --release --bin accel-gcn -- serve-native \
     --requests 64 --tenants 2 --nodes 200 --threads 2 --seed 7
 
+# Delta smoke: stream update batches against a generated graph; every
+# incrementally patched plan is checked bit-for-bit against a
+# from-scratch rebuild and against the dense SpMM reference (the
+# command exits nonzero on any divergence).
+cargo run --release --bin accel-gcn -- update-demo \
+    --nodes 1500 --batches 6 --batch-size 48 --threads 2 --seed 7
+
+# Short delta_update bench in check mode: patch-vs-replan sweep with
+# per-batch verification baked in (bench fails if any cell diverges).
+cargo run --release --bin accel-gcn -- bench --experiment delta_update --quick \
+    --out results-ci-delta
+
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
 # has been run tree-wide.

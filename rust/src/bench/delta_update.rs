@@ -1,0 +1,329 @@
+//! `delta_update` — incremental plan maintenance vs full replanning.
+//!
+//! For each (degree-skew α, update-batch size) cell: generate a
+//! power-law graph, build its [`SpmmPlan`], then stream update batches
+//! through a [`DeltaGraph`] and measure, per batch,
+//!
+//! * **patch** — [`patch_plan`]: incremental permutation merge +
+//!   dirty-bucket metadata rebuild,
+//! * **replan** — `SpmmPlan::build` on the updated matrix from scratch,
+//! * **post-update SpMM** — parallel block-level execution on the
+//!   patched plan (the serving hot path after a swap).
+//!
+//! Every batch is verified: the patched plan must equal the from-scratch
+//! rebuild field-for-field *and* its SpMM output must match the dense
+//! reference — the bench doubles as the delta path's end-to-end check
+//! in CI. Written to `BENCH_delta_update.json` so successive PRs can
+//! track the update path.
+
+use crate::delta::{patch_plan, DeltaGraph, EdgeUpdate};
+use crate::graph::generator::{self, DegreeModel};
+use crate::graph::Csr;
+use crate::partition::patterns::PartitionParams;
+use crate::pipeline::{spmm_block_level_parallel, SpmmPlan};
+use crate::spmm::verify::allclose;
+use crate::util::bench::{time_fn, Table};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Sweep shape.
+#[derive(Clone, Debug)]
+pub struct DeltaConfig {
+    pub nodes: usize,
+    pub avg_deg: f64,
+    /// Power-law exponents, one graph regime per value (smaller α =
+    /// heavier skew).
+    pub skews: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    /// Batches streamed (and timed) per cell; times are p50 over these.
+    pub batches_per_cell: usize,
+    /// Column dimension of the post-update SpMM measurement.
+    pub coldim: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl DeltaConfig {
+    /// The full sweep the `bench` subcommand runs.
+    pub fn paper(seed: u64) -> DeltaConfig {
+        DeltaConfig {
+            nodes: 3000,
+            avg_deg: 8.0,
+            skews: vec![1.8, 2.2, 2.7],
+            batch_sizes: vec![8, 64, 512],
+            batches_per_cell: 5,
+            coldim: 64,
+            threads: 4,
+            seed,
+        }
+    }
+
+    /// Reduced sweep for CI check mode / unit tests.
+    pub fn quick(seed: u64) -> DeltaConfig {
+        DeltaConfig {
+            nodes: 1200,
+            avg_deg: 8.0,
+            skews: vec![2.0],
+            batch_sizes: vec![4, 64],
+            batches_per_cell: 3,
+            coldim: 32,
+            threads: 2,
+            seed,
+        }
+    }
+}
+
+/// One measured (skew, batch size) cell.
+#[derive(Clone, Debug)]
+pub struct DeltaPoint {
+    pub alpha: f64,
+    pub batch_size: usize,
+    pub nodes: usize,
+    pub nnz: usize,
+    /// p50 over the cell's batches, µs.
+    pub patch_us: f64,
+    pub replan_us: f64,
+    /// `replan / patch` (> 1 ⇒ patching wins).
+    pub speedup: f64,
+    /// Post-update SpMM p50 on the patched plan, µs.
+    pub spmm_us: f64,
+    /// Mean fraction of block-metadata records reused per patch.
+    pub meta_reuse_frac: f64,
+    /// Mean rows whose degree changed per batch.
+    pub rows_moved_mean: f64,
+    /// Every batch's patched plan equaled the rebuild and matched the
+    /// dense SpMM reference.
+    pub verified: bool,
+}
+
+/// A mixed insert/delete batch against the current matrix: ~half
+/// deletions of existing edges, the rest random insertions. Shared
+/// with the `update-demo` subcommand.
+pub fn random_batch(cur: &Csr, k: usize, rng: &mut Pcg) -> Vec<EdgeUpdate> {
+    (0..k)
+        .map(|_| {
+            let n = cur.n_rows;
+            if rng.f64() < 0.5 && cur.nnz() > 0 {
+                let r = rng.range(0, n);
+                if cur.degree(r) > 0 {
+                    let i = cur.row_ptr[r] + rng.range(0, cur.degree(r));
+                    return EdgeUpdate::Delete { row: r as u32, col: cur.col_idx[i] };
+                }
+            }
+            EdgeUpdate::Insert {
+                row: rng.range(0, n) as u32,
+                col: rng.range(0, n) as u32,
+                val: rng.f32() + 0.1,
+            }
+        })
+        .collect()
+}
+
+fn p50(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Structural equality of the patched plan against the from-scratch
+/// rebuild (the acceptance criterion, checked on every batch).
+fn plans_equal(patched: &SpmmPlan, rebuilt: &SpmmPlan) -> bool {
+    patched.sorted.perm == rebuilt.sorted.perm
+        && patched.sorted.csr == rebuilt.sorted.csr
+        && patched.block.meta == rebuilt.block.meta
+        && patched.block.n_split_rows == rebuilt.block.n_split_rows
+        && patched.warp.groups == rebuilt.warp.groups
+}
+
+/// Run the sweep.
+pub fn run(cfg: &DeltaConfig) -> Result<Vec<DeltaPoint>> {
+    anyhow::ensure!(cfg.batches_per_cell >= 1, "need at least one batch per cell");
+    let params = PartitionParams::default();
+    let pool = ThreadPool::new(cfg.threads);
+    let mut points = Vec::with_capacity(cfg.skews.len() * cfg.batch_sizes.len());
+    for &alpha in &cfg.skews {
+        for &batch_size in &cfg.batch_sizes {
+            let mut rng = Pcg::seed_from(
+                cfg.seed ^ (alpha.to_bits().rotate_left(17)) ^ batch_size as u64,
+            );
+            let degs = generator::degree_sequence(
+                DegreeModel::PowerLaw { alpha, dmax_frac: 0.1 },
+                cfg.nodes,
+                (cfg.nodes as f64 * cfg.avg_deg) as usize,
+                &mut rng,
+            );
+            let base = generator::from_degree_sequence(cfg.nodes, &degs, &mut rng);
+            let nnz0 = base.nnz();
+            let mut delta = DeltaGraph::new(base.clone());
+            let mut plan = Arc::new(SpmmPlan::build(base, params));
+            let (mut patch_times, mut replan_times) = (Vec::new(), Vec::new());
+            let (mut reuse_sum, mut moved_sum) = (0.0f64, 0.0f64);
+            let mut verified = true;
+            for _ in 0..cfg.batches_per_cell {
+                let batch = random_batch(&delta.snapshot(), batch_size, &mut rng);
+                let report = delta.apply(&batch)?;
+                let new_csr = delta.snapshot();
+
+                let t0 = std::time::Instant::now();
+                let (patched, stats) = patch_plan(&plan, new_csr.clone(), &report.changes)?;
+                patch_times.push(t0.elapsed().as_secs_f64() * 1e6);
+
+                let t1 = std::time::Instant::now();
+                let rebuilt = SpmmPlan::build(new_csr.clone(), params);
+                replan_times.push(t1.elapsed().as_secs_f64() * 1e6);
+
+                reuse_sum += stats.reuse_frac();
+                moved_sum += stats.rows_moved as f64;
+                verified &= plans_equal(&patched, &rebuilt);
+                plan = Arc::new(patched);
+                // numeric check against the dense reference
+                let f = cfg.coldim.min(8); // keep the verify pass cheap
+                let x: Arc<Vec<f32>> =
+                    Arc::new((0..cfg.nodes * f).map(|_| rng.f32() - 0.5).collect());
+                let y = plan
+                    .sorted
+                    .unpermute_rows(&spmm_block_level_parallel(&plan, &x, f, &pool), f);
+                verified &= allclose(&y, &new_csr.spmm_dense(&x, f), 1e-3, 1e-3);
+            }
+            // post-update SpMM throughput on the final patched plan
+            let x: Arc<Vec<f32>> =
+                Arc::new((0..cfg.nodes * cfg.coldim).map(|_| rng.f32() - 0.5).collect());
+            let m = time_fn("delta_spmm", 1, 0.05, || {
+                std::hint::black_box(spmm_block_level_parallel(&plan, &x, cfg.coldim, &pool));
+            });
+            let (patch_us, replan_us) = (p50(patch_times), p50(replan_times));
+            points.push(DeltaPoint {
+                alpha,
+                batch_size,
+                nodes: cfg.nodes,
+                nnz: nnz0,
+                patch_us,
+                replan_us,
+                speedup: replan_us / patch_us.max(1e-9),
+                spmm_us: m.p50() * 1e6,
+                meta_reuse_frac: reuse_sum / cfg.batches_per_cell as f64,
+                rows_moved_mean: moved_sum / cfg.batches_per_cell as f64,
+                verified,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Paper-style stdout table.
+pub fn report(points: &[DeltaPoint]) -> String {
+    let mut table = Table::new(&[
+        "alpha", "batch", "nnz", "patch µs", "replan µs", "speedup", "spmm µs", "meta reuse",
+        "rows moved", "verified",
+    ]);
+    for p in points {
+        table.row(vec![
+            format!("{:.1}", p.alpha),
+            p.batch_size.to_string(),
+            p.nnz.to_string(),
+            format!("{:.1}", p.patch_us),
+            format!("{:.1}", p.replan_us),
+            format!("{:.2}x", p.speedup),
+            format!("{:.1}", p.spmm_us),
+            format!("{:.1}%", p.meta_reuse_frac * 100.0),
+            format!("{:.1}", p.rows_moved_mean),
+            p.verified.to_string(),
+        ]);
+    }
+    table.render()
+}
+
+/// The machine-readable form consumed by the perf-trajectory tooling.
+pub fn to_json(points: &[DeltaPoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("alpha", p.alpha);
+            o.set("batch_size", p.batch_size);
+            o.set("nodes", p.nodes);
+            o.set("nnz", p.nnz);
+            o.set("patch_us", p.patch_us);
+            o.set("replan_us", p.replan_us);
+            o.set("speedup", p.speedup);
+            o.set("spmm_us", p.spmm_us);
+            o.set("meta_reuse_frac", p.meta_reuse_frac);
+            o.set("rows_moved_mean", p.rows_moved_mean);
+            o.set("verified", p.verified);
+            o
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("experiment", "delta_update");
+    doc.set("executor", "delta/patch-vs-replan");
+    doc.set("unit", "us");
+    doc.set("points", rows);
+    doc
+}
+
+/// Write `BENCH_delta_update.json`.
+pub fn save_json(points: &[DeltaPoint], path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(points).to_pretty())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_verifies_and_reports() {
+        let pts = run(&DeltaConfig::quick(7)).unwrap();
+        assert_eq!(pts.len(), 2, "1 skew × 2 batch sizes");
+        for p in &pts {
+            assert!(p.verified, "{p:?}");
+            assert!(p.patch_us > 0.0 && p.replan_us > 0.0 && p.spmm_us > 0.0, "{p:?}");
+            assert!(p.meta_reuse_frac >= 0.0 && p.meta_reuse_frac <= 1.0);
+        }
+        // The patch-beats-replan claim is asserted structurally here and
+        // only sanity-bounded on wall clock: this test runs in debug
+        // mode on shared CI runners, where a strict `speedup > 1`
+        // p50-of-3 comparison of microsecond-scale work would be flaky.
+        // The release-mode bench run reports the real speedup in
+        // BENCH_delta_update.json.
+        let small = pts.iter().find(|p| p.batch_size == 4).unwrap();
+        let large = pts.iter().find(|p| p.batch_size == 64).unwrap();
+        assert!(
+            small.speedup > 0.5,
+            "patch ({:.1}µs) grossly slower than replan ({:.1}µs)",
+            small.patch_us,
+            small.replan_us
+        );
+        // structural evidence the patch does less work: a 4-op batch
+        // dirties at most 8 degree buckets, so some metadata survives,
+        // and it can never move more rows than it has ops
+        assert!(small.meta_reuse_frac > 0.0, "reuse {:.2}", small.meta_reuse_frac);
+        assert!(small.rows_moved_mean <= 4.0, "moved {:.1}", small.rows_moved_mean);
+        assert!(
+            small.rows_moved_mean < large.rows_moved_mean,
+            "larger batches must move more rows ({:.1} vs {:.1})",
+            small.rows_moved_mean,
+            large.rows_moved_mean
+        );
+        let json = to_json(&pts).to_pretty();
+        assert!(json.contains("delta_update"));
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.req_arr("points").unwrap().len(), 2);
+        assert!(report(&pts).contains("speedup"));
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let cfg = DeltaConfig { batches_per_cell: 0, ..DeltaConfig::quick(1) };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -14,9 +14,13 @@
 //!   serving subsystem ([`crate::serve`]): fusion factor, throughput,
 //!   and tail latency across thread counts and ladder widths (writes
 //!   `BENCH_serve_native.json`).
+//! * [`delta_update`] — incremental plan maintenance vs full replanning
+//!   across update-batch sizes × degree-skew regimes, with every batch
+//!   verified bit-for-bit (writes `BENCH_delta_update.json`).
 
 pub mod paper;
 pub mod ablation;
+pub mod delta_update;
 pub mod exec_scaling;
 pub mod train;
 pub mod serve;

@@ -1,6 +1,6 @@
 //! Paper-evaluation harness: one regenerator per table/figure.
 //!
-//! Experiment index (DESIGN.md §5):
+//! Experiment index (DESIGN.md §1):
 //! * `table1` — dataset specs + measured properties of the synthesized
 //!   stand-ins (scale factors reported).
 //! * `fig2`   — Collab row-degree histogram.
@@ -532,6 +532,24 @@ pub fn run_from_args(args: &Args) -> Result<()> {
         report += &format!(
             "=== Serve native (multi-tenant, column-fused) ===\n{}(written to BENCH_serve_native.json)\n\n",
             sn::report(&pts)
+        );
+    }
+    if arm("delta_update") {
+        use crate::bench::delta_update as du;
+        let cfg = if args.flag("quick") {
+            du::DeltaConfig::quick(seed)
+        } else {
+            du::DeltaConfig::paper(seed)
+        };
+        let pts = du::run(&cfg)?;
+        anyhow::ensure!(
+            pts.iter().all(|p| p.verified),
+            "delta_update: a patched plan diverged from the from-scratch rebuild"
+        );
+        save_bench_json(out, "BENCH_delta_update.json", |p| du::save_json(&pts, p))?;
+        report += &format!(
+            "=== Delta update (patch vs full replan) ===\n{}(written to BENCH_delta_update.json)\n\n",
+            du::report(&pts)
         );
     }
     if arm("ablation-params") || experiment == "all" {

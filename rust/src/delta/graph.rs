@@ -1,0 +1,549 @@
+//! [`DeltaGraph`]: batched edge insertions/deletions layered over an
+//! immutable base [`Csr`].
+//!
+//! ## Overlay / compaction model
+//!
+//! The base CSR is never mutated in place. Updates are staged into a
+//! per-row overlay (`row → col → Some(weight) | None`), where `Some`
+//! is an upsert (insert, or overwrite of an existing weight) and `None`
+//! is a deletion of an edge present in the base. Reads merge the base
+//! row with its overlay on the fly, so the effective matrix is always
+//! well-defined without rewriting the CSR arrays per batch.
+//!
+//! When the overlay grows past `compact_frac × base.nnz()` staged
+//! cells, [`DeltaGraph::apply`] rewrites the base CSR from the merged
+//! view and clears the overlay — the same "preprocessing must stay
+//! cheap relative to execution" trade the paper makes for degree
+//! sorting, applied to graph evolution: small batches stay O(batch),
+//! and the O(nnz) rewrite is amortized over many batches.
+//!
+//! Every [`DeltaGraph::apply`] returns the [`RowChange`] set (old and
+//! new effective degree per touched row) that
+//! [`patch_plan`](super::patch::patch_plan) consumes to rebuild only
+//! the dirty degree buckets of an existing
+//! [`SpmmPlan`](crate::pipeline::SpmmPlan).
+
+use crate::graph::csr::Csr;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One staged topology change. `Insert` is an upsert: inserting an
+/// edge that already exists replaces its weight. `Delete` of an absent
+/// edge is a no-op.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeUpdate {
+    Insert { row: u32, col: u32, val: f32 },
+    Delete { row: u32, col: u32 },
+}
+
+impl EdgeUpdate {
+    pub fn row(&self) -> u32 {
+        match self {
+            EdgeUpdate::Insert { row, .. } | EdgeUpdate::Delete { row, .. } => *row,
+        }
+    }
+
+    pub fn col(&self) -> u32 {
+        match self {
+            EdgeUpdate::Insert { col, .. } | EdgeUpdate::Delete { col, .. } => *col,
+        }
+    }
+}
+
+/// One row whose effective adjacency changed in a batch: its degree
+/// before and after. Rows with `old_deg == new_deg` changed content
+/// (weights or column set of equal size) but keep their position in the
+/// degree-sorted order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowChange {
+    pub row: u32,
+    pub old_deg: usize,
+    pub new_deg: usize,
+}
+
+/// What one [`DeltaGraph::apply`] did.
+#[derive(Clone, Debug)]
+pub struct ApplyReport {
+    /// Rows touched by this batch, ascending by row id, with effective
+    /// degrees before and after the batch.
+    pub changes: Vec<RowChange>,
+    /// Updates staged by this batch (== the batch length).
+    pub staged_ops: usize,
+    /// Whether this apply crossed the compaction threshold and rewrote
+    /// the base CSR.
+    pub compacted: bool,
+    /// Overlay cells resident after the apply (0 right after a
+    /// compaction).
+    pub overlay_cells: usize,
+}
+
+/// Per-row staged changes: `col → Some(weight)` upsert, `None` delete.
+type RowOverlay = BTreeMap<u32, Option<f32>>;
+
+/// A CSR matrix plus staged edge updates (see module docs).
+#[derive(Clone, Debug)]
+pub struct DeltaGraph {
+    base: Csr,
+    overlay: BTreeMap<u32, RowOverlay>,
+    /// Total staged cells across rows (the compaction trigger).
+    overlay_cells: usize,
+    /// Effective nnz minus base nnz.
+    nnz_delta: i64,
+    compact_frac: f64,
+    /// Base rewrites performed so far.
+    pub compactions: u64,
+}
+
+/// Default compaction trigger: rewrite once the overlay holds more
+/// than a quarter of the base's nonzeros.
+pub const DEFAULT_COMPACT_FRAC: f64 = 0.25;
+
+impl DeltaGraph {
+    /// Wrap `base` with the default compaction threshold.
+    pub fn new(base: Csr) -> DeltaGraph {
+        DeltaGraph::with_threshold(base, DEFAULT_COMPACT_FRAC)
+    }
+
+    /// Wrap `base`, compacting once `overlay_cells > frac × base.nnz()`.
+    /// `frac <= 0` compacts on every apply; very large `frac`
+    /// effectively disables compaction.
+    pub fn with_threshold(base: Csr, frac: f64) -> DeltaGraph {
+        DeltaGraph {
+            base,
+            overlay: BTreeMap::new(),
+            overlay_cells: 0,
+            nnz_delta: 0,
+            compact_frac: frac,
+            compactions: 0,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.base.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.base.n_cols
+    }
+
+    /// Effective stored nonzeros (base plus staged inserts minus staged
+    /// deletes).
+    pub fn nnz(&self) -> usize {
+        (self.base.nnz() as i64 + self.nnz_delta) as usize
+    }
+
+    /// Staged overlay cells.
+    pub fn overlay_len(&self) -> usize {
+        self.overlay_cells
+    }
+
+    /// The immutable base snapshot (most recently compacted CSR).
+    pub fn base(&self) -> &Csr {
+        &self.base
+    }
+
+    /// Whether the base stores edge `(r, c)`.
+    fn base_has(&self, r: u32, c: u32) -> bool {
+        let span = self.base.row_ptr[r as usize]..self.base.row_ptr[r as usize + 1];
+        self.base.col_idx[span].binary_search(&c).is_ok()
+    }
+
+    /// Effective degree of row `r` (base merged with overlay).
+    pub fn degree(&self, r: usize) -> usize {
+        let mut d = self.base.degree(r) as i64;
+        if let Some(row) = self.overlay.get(&(r as u32)) {
+            for (&c, cell) in row {
+                match cell {
+                    // upsert of a column absent from the base adds one
+                    Some(_) if !self.base_has(r as u32, c) => d += 1,
+                    // deletes are only staged for base-present columns
+                    None => d -= 1,
+                    _ => {}
+                }
+            }
+        }
+        d as usize
+    }
+
+    /// Effective row `r` as sorted `(col, val)` pairs.
+    pub fn effective_row(&self, r: usize) -> Vec<(u32, f32)> {
+        let mut out = Vec::with_capacity(self.base.degree(r));
+        self.merge_row_into(r, &mut |c, v| out.push((c, v)));
+        out
+    }
+
+    /// Two-pointer merge of base row `r` with its overlay, ascending by
+    /// column; staged deletes suppress base entries, staged upserts
+    /// replace or extend them.
+    fn merge_row_into(&self, r: usize, emit: &mut impl FnMut(u32, f32)) {
+        let span = self.base.row_ptr[r]..self.base.row_ptr[r + 1];
+        let cols = &self.base.col_idx[span.clone()];
+        let vals = &self.base.vals[span];
+        match self.overlay.get(&(r as u32)) {
+            None => {
+                for (&c, &v) in cols.iter().zip(vals) {
+                    emit(c, v);
+                }
+            }
+            Some(ov) => {
+                let mut i = 0usize;
+                let mut it = ov.iter().peekable();
+                loop {
+                    match (cols.get(i), it.peek()) {
+                        (Some(&bc), Some(&(&oc, cell))) => {
+                            if bc < oc {
+                                emit(bc, vals[i]);
+                                i += 1;
+                            } else if bc > oc {
+                                if let Some(v) = cell {
+                                    emit(oc, *v);
+                                }
+                                it.next();
+                            } else {
+                                // overlay wins on collision (upsert or delete)
+                                if let Some(v) = cell {
+                                    emit(bc, *v);
+                                }
+                                i += 1;
+                                it.next();
+                            }
+                        }
+                        (Some(&bc), None) => {
+                            emit(bc, vals[i]);
+                            i += 1;
+                        }
+                        (None, Some(&(&oc, cell))) => {
+                            if let Some(v) = cell {
+                                emit(oc, *v);
+                            }
+                            it.next();
+                        }
+                        (None, None) => break,
+                    }
+                }
+            }
+        }
+    }
+
+    /// The current effective matrix as a standalone canonical CSR
+    /// (sorted columns, no duplicates). O(nnz + overlay).
+    pub fn snapshot(&self) -> Csr {
+        if self.overlay.is_empty() {
+            return self.base.clone();
+        }
+        let n = self.base.n_rows;
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        row_ptr.push(0);
+        for r in 0..n {
+            self.merge_row_into(r, &mut |c, v| {
+                col_idx.push(c);
+                vals.push(v);
+            });
+            row_ptr.push(col_idx.len());
+        }
+        Csr { n_rows: n, n_cols: self.base.n_cols, row_ptr, col_idx, vals }
+    }
+
+    /// Rewrite the base CSR from the merged view and clear the overlay.
+    pub fn compact(&mut self) {
+        if self.overlay.is_empty() {
+            return;
+        }
+        self.base = self.snapshot();
+        self.overlay.clear();
+        self.overlay_cells = 0;
+        self.nnz_delta = 0;
+        self.compactions += 1;
+    }
+
+    /// Stage one update batch; compacts afterwards if the overlay
+    /// crossed the threshold. Errors on out-of-bounds endpoints (the
+    /// batch is rejected atomically — nothing is staged).
+    pub fn apply(&mut self, updates: &[EdgeUpdate]) -> Result<ApplyReport> {
+        for u in updates {
+            let (r, c) = (u.row() as usize, u.col() as usize);
+            if r >= self.base.n_rows || c >= self.base.n_cols {
+                bail!(
+                    "update ({r},{c}) out of bounds {}x{}",
+                    self.base.n_rows,
+                    self.base.n_cols
+                );
+            }
+        }
+        // effective degrees before staging, one entry per touched row
+        let mut old_degs: BTreeMap<u32, usize> = BTreeMap::new();
+        for u in updates {
+            let r = u.row();
+            old_degs.entry(r).or_insert_with(|| self.degree(r as usize));
+        }
+        for u in updates {
+            self.stage(*u);
+        }
+        let changes: Vec<RowChange> = old_degs
+            .into_iter()
+            .map(|(row, old_deg)| RowChange { row, old_deg, new_deg: self.degree(row as usize) })
+            .collect();
+        let threshold = self.compact_frac * self.base.nnz().max(1) as f64;
+        let compacted = self.overlay_cells as f64 > threshold;
+        if compacted {
+            self.compact();
+        }
+        Ok(ApplyReport {
+            changes,
+            staged_ops: updates.len(),
+            compacted,
+            overlay_cells: self.overlay_cells,
+        })
+    }
+
+    fn stage(&mut self, u: EdgeUpdate) {
+        let (r, c) = (u.row(), u.col());
+        let base_has = self.base_has(r, c);
+        let row = self.overlay.entry(r).or_default();
+        match u {
+            EdgeUpdate::Insert { val, .. } => {
+                let prev = row.insert(c, Some(val));
+                match prev {
+                    Some(_) => {} // re-staged cell: cell count unchanged
+                    None => self.overlay_cells += 1,
+                }
+                // effectively present before? (staged Some, or base and not staged-deleted)
+                let was_present = matches!(prev, Some(Some(_))) || (prev.is_none() && base_has);
+                if !was_present {
+                    self.nnz_delta += 1;
+                }
+            }
+            EdgeUpdate::Delete { .. } => {
+                if base_has {
+                    let prev = row.insert(c, None);
+                    match prev {
+                        Some(_) => {}
+                        None => self.overlay_cells += 1,
+                    }
+                    let was_present = !matches!(prev, Some(None));
+                    if was_present {
+                        self.nnz_delta -= 1;
+                    }
+                } else {
+                    // delete of a non-base edge: cancel any staged insert
+                    // (a staged `None` cell cannot exist here — deletes
+                    // are only staged for base-present columns)
+                    if let Some(Some(_)) = row.remove(&c) {
+                        self.overlay_cells -= 1;
+                        self.nnz_delta -= 1;
+                    }
+                }
+                if row.is_empty() {
+                    self.overlay.remove(&r);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn base() -> Csr {
+        // 4x4: row0 = {0:1, 2:2}, row1 = {1:3}, row2 = {}, row3 = {0:4, 1:5, 3:6}
+        Csr::from_edges(
+            4,
+            4,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (3, 0, 4.0), (3, 1, 5.0), (3, 3, 6.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn insert_new_edge() {
+        let mut dg = DeltaGraph::new(base());
+        let rep = dg.apply(&[EdgeUpdate::Insert { row: 2, col: 3, val: 9.0 }]).unwrap();
+        assert_eq!(rep.changes, vec![RowChange { row: 2, old_deg: 0, new_deg: 1 }]);
+        assert_eq!(dg.nnz(), 7);
+        assert_eq!(dg.degree(2), 1);
+        assert_eq!(dg.effective_row(2), vec![(3, 9.0)]);
+    }
+
+    #[test]
+    fn insert_overwrites_existing_weight() {
+        let mut dg = DeltaGraph::new(base());
+        let rep = dg.apply(&[EdgeUpdate::Insert { row: 0, col: 2, val: 7.5 }]).unwrap();
+        assert_eq!(rep.changes, vec![RowChange { row: 0, old_deg: 2, new_deg: 2 }]);
+        assert_eq!(dg.nnz(), 6, "upsert of an existing edge keeps nnz");
+        assert_eq!(dg.effective_row(0), vec![(0, 1.0), (2, 7.5)]);
+    }
+
+    #[test]
+    fn delete_existing_and_absent() {
+        let mut dg = DeltaGraph::new(base());
+        let rep = dg
+            .apply(&[
+                EdgeUpdate::Delete { row: 3, col: 1 },
+                EdgeUpdate::Delete { row: 2, col: 2 }, // absent: no-op
+            ])
+            .unwrap();
+        assert_eq!(dg.nnz(), 5);
+        assert_eq!(dg.degree(3), 2);
+        assert_eq!(dg.effective_row(3), vec![(0, 4.0), (3, 6.0)]);
+        // both rows are reported touched (the no-op row with equal degrees)
+        assert_eq!(rep.changes.len(), 2);
+        assert_eq!(rep.changes[0], RowChange { row: 2, old_deg: 0, new_deg: 0 });
+    }
+
+    #[test]
+    fn insert_then_delete_cancels() {
+        let mut dg = DeltaGraph::with_threshold(base(), 1e9);
+        dg.apply(&[EdgeUpdate::Insert { row: 2, col: 0, val: 1.0 }]).unwrap();
+        dg.apply(&[EdgeUpdate::Delete { row: 2, col: 0 }]).unwrap();
+        assert_eq!(dg.nnz(), 6);
+        assert_eq!(dg.overlay_len(), 0, "cancelled cell is dropped");
+        assert_eq!(dg.effective_row(2), vec![]);
+    }
+
+    #[test]
+    fn delete_then_insert_restores() {
+        let mut dg = DeltaGraph::with_threshold(base(), 1e9);
+        dg.apply(&[EdgeUpdate::Delete { row: 0, col: 0 }]).unwrap();
+        assert_eq!(dg.nnz(), 5);
+        dg.apply(&[EdgeUpdate::Insert { row: 0, col: 0, val: 2.0 }]).unwrap();
+        assert_eq!(dg.nnz(), 6);
+        assert_eq!(dg.effective_row(0), vec![(0, 2.0), (2, 2.0)]);
+    }
+
+    #[test]
+    fn snapshot_matches_expected_matrix() {
+        let mut dg = DeltaGraph::with_threshold(base(), 1e9);
+        dg.apply(&[
+            EdgeUpdate::Insert { row: 2, col: 1, val: 8.0 },
+            EdgeUpdate::Delete { row: 3, col: 3 },
+            EdgeUpdate::Insert { row: 0, col: 2, val: -1.0 },
+        ])
+        .unwrap();
+        let want = Csr::from_edges(
+            4,
+            4,
+            &[(0, 0, 1.0), (0, 2, -1.0), (1, 1, 3.0), (2, 1, 8.0), (3, 0, 4.0), (3, 1, 5.0)],
+        )
+        .unwrap();
+        assert_eq!(dg.snapshot(), want);
+        assert_eq!(dg.nnz(), want.nnz());
+    }
+
+    #[test]
+    fn compaction_triggers_and_preserves_matrix() {
+        // threshold 0.25 over 6 nnz → compacts when overlay > 1.5 cells
+        let mut dg = DeltaGraph::new(base());
+        let r1 = dg.apply(&[EdgeUpdate::Insert { row: 2, col: 0, val: 1.0 }]).unwrap();
+        assert!(!r1.compacted);
+        let before = dg.snapshot();
+        let r2 = dg
+            .apply(&[
+                EdgeUpdate::Insert { row: 2, col: 1, val: 2.0 },
+                EdgeUpdate::Delete { row: 0, col: 0 },
+            ])
+            .unwrap();
+        assert!(r2.compacted);
+        assert_eq!(r2.overlay_cells, 0);
+        assert_eq!(dg.compactions, 1);
+        assert_eq!(dg.overlay_len(), 0);
+        // compaction is invisible to the effective matrix
+        let mut want_edges = vec![(2u32, 0u32, 1.0f32), (2, 1, 2.0)];
+        for r in 0..4 {
+            for (c, v) in before.row(r) {
+                if !(r == 0 && c == 0) && !(r == 2 && c == 0) {
+                    want_edges.push((r as u32, c, v));
+                }
+            }
+        }
+        let want = Csr::from_edges(4, 4, &want_edges).unwrap();
+        assert_eq!(dg.snapshot(), want);
+        assert_eq!(dg.base(), &want, "base rewritten in place");
+    }
+
+    #[test]
+    fn out_of_bounds_rejected_atomically() {
+        let mut dg = DeltaGraph::new(base());
+        let err = dg.apply(&[
+            EdgeUpdate::Insert { row: 0, col: 1, val: 1.0 },
+            EdgeUpdate::Insert { row: 9, col: 0, val: 1.0 },
+        ]);
+        assert!(err.is_err());
+        assert_eq!(dg.overlay_len(), 0, "failed batch stages nothing");
+        assert_eq!(dg.snapshot(), base());
+    }
+
+    #[test]
+    fn prop_random_batches_match_reference() {
+        // staged view == matrix rebuilt from scratch after every batch
+        crate::util::proptest::check("delta_graph_reference", 0xDE17A, 25, |rng| {
+            let n = rng.range(1, 30);
+            let mut edges = Vec::new();
+            for r in 0..n {
+                for _ in 0..rng.range(0, 6) {
+                    edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+                }
+            }
+            let base = Csr::from_edges(n, n, &edges).unwrap();
+            let frac = *rng.choose(&[0.05, 0.5, 1e9]);
+            let mut dg = DeltaGraph::with_threshold(base.clone(), frac);
+            let mut reference = base;
+            for _ in 0..rng.range(1, 5) {
+                let batch: Vec<EdgeUpdate> = (0..rng.range(1, 12))
+                    .map(|_| random_update(rng, &reference))
+                    .collect();
+                let rep = dg.apply(&batch).unwrap();
+                reference = apply_reference(&reference, &batch);
+                let snap = dg.snapshot();
+                assert_eq!(snap, reference);
+                assert_eq!(dg.nnz(), reference.nnz());
+                for ch in &rep.changes {
+                    assert_eq!(ch.new_deg, reference.degree(ch.row as usize));
+                }
+            }
+        });
+    }
+
+    fn random_update(rng: &mut Pcg, cur: &Csr) -> EdgeUpdate {
+        let n = cur.n_rows;
+        if rng.f64() < 0.5 && cur.nnz() > 0 {
+            // delete a (probably) existing edge
+            let r = rng.range(0, n);
+            if cur.degree(r) > 0 {
+                let k = rng.range(0, cur.degree(r));
+                let c = cur.col_idx[cur.row_ptr[r] + k];
+                return EdgeUpdate::Delete { row: r as u32, col: c };
+            }
+        }
+        EdgeUpdate::Insert {
+            row: rng.range(0, n) as u32,
+            col: rng.range(0, n) as u32,
+            val: rng.f32() + 0.1,
+        }
+    }
+
+    /// Oracle: replay updates against a dense map and rebuild.
+    fn apply_reference(csr: &Csr, updates: &[EdgeUpdate]) -> Csr {
+        let mut map: BTreeMap<(u32, u32), f32> = BTreeMap::new();
+        for r in 0..csr.n_rows {
+            for (c, v) in csr.row(r) {
+                map.insert((r as u32, c), v);
+            }
+        }
+        for u in updates {
+            match *u {
+                EdgeUpdate::Insert { row, col, val } => {
+                    map.insert((row, col), val);
+                }
+                EdgeUpdate::Delete { row, col } => {
+                    map.remove(&(row, col));
+                }
+            }
+        }
+        let edges: Vec<(u32, u32, f32)> = map.into_iter().map(|((r, c), v)| (r, c, v)).collect();
+        Csr::from_edges(csr.n_rows, csr.n_cols, &edges).unwrap()
+    }
+}

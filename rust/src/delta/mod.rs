@@ -1,0 +1,33 @@
+//! Dynamic graphs: batched edge updates with incremental plan
+//! maintenance.
+//!
+//! Accel-GCN keeps preprocessing lightweight precisely so it stays
+//! negligible next to execution — but a *frozen* pipeline still pays
+//! the whole degree-sort → partition chain again for any topology
+//! change. This subsystem makes graph evolution first-class:
+//!
+//! * [`graph`] — [`DeltaGraph`]: batched insertions/deletions staged in
+//!   a per-row overlay over an immutable base CSR, with threshold
+//!   compaction (see the module docs for the overlay semantics).
+//! * [`patch`] — [`patch_plan`] / [`patch_identity_plan`]: rebuild only
+//!   the degree buckets an update batch dirtied, structurally reusing
+//!   every untouched block-metadata record and bulk-copying untouched
+//!   sorted rows — validated bit-for-bit against
+//!   [`SpmmPlan::build`](crate::pipeline::SpmmPlan::build).
+//!
+//! Consumers:
+//! * [`pipeline::PlanCache`](crate::pipeline::PlanCache) gained
+//!   per-key [`invalidate`](crate::pipeline::PlanCache::invalidate) and
+//!   a [`refresh`](crate::pipeline::PlanCache::refresh) path that swaps
+//!   a stale entry for a patched plan.
+//! * [`serve`](crate::serve): tenants accept an `UpdateGraph` request
+//!   kind; entries are epoch-versioned so in-flight requests finish on
+//!   the old epoch while new requests pick up the patched plan.
+//! * `bench --experiment delta_update` measures patch-vs-full-replan
+//!   speedup across update-batch sizes × degree-skew regimes.
+
+pub mod graph;
+pub mod patch;
+
+pub use graph::{ApplyReport, DeltaGraph, EdgeUpdate, RowChange, DEFAULT_COMPACT_FRAC};
+pub use patch::{incremental_perm, invert_perm, patch_identity_plan, patch_plan, PatchStats};

@@ -1,0 +1,671 @@
+//! Incremental [`SpmmPlan`] maintenance: rebuild only what an update
+//! batch dirtied, reuse the rest **bit-for-bit**.
+//!
+//! ## Why a patch can be exact
+//!
+//! Every stage of the preprocessing chain is deterministic and local in
+//! the degree-sorted domain:
+//!
+//! * The degree sort is a *stable* count sort, so the sorted order is
+//!   fully determined by the degree multiset: within one degree bucket,
+//!   rows appear in ascending original id. An update batch that changes
+//!   the degrees of `k` rows therefore only reshuffles the buckets those
+//!   degrees touch — every other row keeps its position, and
+//!   [`incremental_perm`] reproduces the from-scratch permutation with a
+//!   `O(affected + k log k)` merge instead of a full re-sort.
+//! * Block metadata (Algorithm 2) never spans a degree boundary, and
+//!   within a bucket every `loc` is `bucket_nz_start + offset` — so an
+//!   untouched bucket's records are the from-scratch records shifted by
+//!   two constants (`row` by the bucket's new start row, `loc` by its
+//!   new nonzero offset). [`patch_plan`] copies those records and runs
+//!   Algorithm 2 only over buckets whose membership changed.
+//! * The sorted CSR arrays of untouched rows are verbatim slices of the
+//!   old sorted arrays; the splice coalesces consecutive unmoved rows
+//!   into single bulk copies (one `memcpy` per surviving bucket run)
+//!   instead of the per-row gather a full `permute_rows` pays.
+//!
+//! The tests assert *equality* (not closeness) of the patched plan's
+//! permutation, sorted CSR, and block metadata against
+//! [`SpmmPlan::build`] on the updated matrix — the patch is an
+//! optimization, never a semantic fork.
+
+use super::graph::RowChange;
+use crate::graph::csr::Csr;
+use crate::graph::degree::DegreeSorted;
+use crate::partition::block_level::BlockPartition;
+use crate::partition::metadata::BlockMeta;
+use crate::partition::patterns::{PartitionParams, PatternTable};
+use crate::partition::warp_level::WarpPartition;
+use crate::pipeline::{GraphFingerprint, SpmmPlan};
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+
+/// What a patch rebuilt vs reused.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PatchStats {
+    /// Rows whose adjacency content changed.
+    pub rows_changed: usize,
+    /// Subset whose degree changed (these move in the sorted order).
+    pub rows_moved: usize,
+    /// Block-metadata records copied from the old plan (shifted).
+    pub blocks_reused: usize,
+    /// Block-metadata records re-derived via Algorithm 2.
+    pub blocks_rebuilt: usize,
+    pub nnz_before: usize,
+    pub nnz_after: usize,
+}
+
+impl PatchStats {
+    /// Fraction of block metadata reused structurally.
+    pub fn reuse_frac(&self) -> f64 {
+        let total = self.blocks_reused + self.blocks_rebuilt;
+        if total == 0 {
+            return 1.0;
+        }
+        self.blocks_reused as f64 / total as f64
+    }
+}
+
+/// First index in `0..n` for which `pred` flips to false (degrees are
+/// ascending, so bucket boundaries binary-search).
+fn partition_point(n: usize, pred: impl Fn(usize) -> bool) -> usize {
+    let (mut lo, mut hi) = (0usize, n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// The incremental degree re-bucketing step: produce the stable
+/// degree-sort permutation of the updated graph from the old
+/// permutation plus the per-row degree changes, re-sorting only the
+/// affected degree range.
+///
+/// `old_sorted_row_ptr` is the old *sorted* row pointer (its ascending
+/// diffs are the old degrees). Exactness argument in the module docs;
+/// the property tests compare against [`DegreeSorted::new`].
+pub fn incremental_perm(
+    old_perm: &[u32],
+    old_sorted_row_ptr: &[usize],
+    changes: &[RowChange],
+) -> Vec<u32> {
+    let moved: Vec<&RowChange> = changes.iter().filter(|c| c.old_deg != c.new_deg).collect();
+    if moved.is_empty() {
+        return old_perm.to_vec();
+    }
+    let n = old_perm.len();
+    let old_deg_at = |i: usize| old_sorted_row_ptr[i + 1] - old_sorted_row_ptr[i];
+    let lo = moved.iter().map(|c| c.old_deg.min(c.new_deg)).min().unwrap();
+    let hi = moved.iter().map(|c| c.old_deg.max(c.new_deg)).max().unwrap();
+    // [p, s) = the affected degree range in both old and new orders:
+    // the degree multiset outside [lo, hi] is unchanged, so both
+    // boundaries are shared
+    let p = partition_point(n, |i| old_deg_at(i) < lo);
+    let s = partition_point(n, |i| old_deg_at(i) <= hi);
+    let mut moved_rows: Vec<u32> = moved.iter().map(|c| c.row).collect();
+    moved_rows.sort_unstable();
+    // rows entering the merge, ascending by (new_deg, original id) —
+    // exactly the stable count sort's key
+    let mut incoming: Vec<(usize, u32)> = moved.iter().map(|c| (c.new_deg, c.row)).collect();
+    incoming.sort_unstable();
+
+    let mut out = Vec::with_capacity(n);
+    out.extend_from_slice(&old_perm[..p]);
+    let mut it = incoming.into_iter().peekable();
+    for i in p..s {
+        let r = old_perm[i];
+        if moved_rows.binary_search(&r).is_ok() {
+            continue; // re-inserted from `incoming` at its new position
+        }
+        let key = (old_deg_at(i), r); // unchanged row: old key == new key
+        while let Some(&(nd, nr)) = it.peek() {
+            if (nd, nr) < key {
+                out.push(nr);
+                it.next();
+            } else {
+                break;
+            }
+        }
+        out.push(r);
+    }
+    for (_, nr) in it {
+        out.push(nr);
+    }
+    out.extend_from_slice(&old_perm[s..]);
+    debug_assert_eq!(out.len(), n);
+    out
+}
+
+/// `inv[perm[i]] == i`. Shared with the serve registry's update path.
+pub fn invert_perm(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as u32;
+    }
+    inv
+}
+
+/// Build the new sorted CSR by splicing: unmoved, content-clean rows
+/// are bulk-copied from the old sorted arrays (runs of consecutive
+/// survivors coalesce into single copies); dirty rows are taken from
+/// `new_csr`.
+fn splice_sorted(
+    old: &SpmmPlan,
+    new_csr: &Csr,
+    perm_new: &[u32],
+    dirty_rows: &[u32], // ascending original ids with changed content
+) -> Csr {
+    let n = new_csr.n_rows;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    row_ptr.push(0usize);
+    let mut total = 0usize;
+    for &r in perm_new {
+        total += new_csr.degree(r as usize);
+        row_ptr.push(total);
+    }
+    let mut col_idx: Vec<u32> = Vec::with_capacity(total);
+    let mut vals: Vec<f32> = Vec::with_capacity(total);
+    let old_csr = &old.sorted.csr;
+    let inv_old = &old.sorted.inv;
+
+    fn flush(cols: &mut Vec<u32>, vals: &mut Vec<f32>, src: &Csr, run: &mut Option<(usize, usize)>) {
+        if let Some((s, e)) = run.take() {
+            cols.extend_from_slice(&src.col_idx[s..e]);
+            vals.extend_from_slice(&src.vals[s..e]);
+        }
+    }
+
+    let mut run: Option<(usize, usize)> = None;
+    for &r in perm_new {
+        if dirty_rows.binary_search(&r).is_err() {
+            let j = inv_old[r as usize] as usize;
+            let (s, e) = (old_csr.row_ptr[j], old_csr.row_ptr[j + 1]);
+            match run {
+                Some((rs, re)) if re == s => run = Some((rs, e)),
+                _ => {
+                    flush(&mut col_idx, &mut vals, old_csr, &mut run);
+                    run = Some((s, e));
+                }
+            }
+        } else {
+            flush(&mut col_idx, &mut vals, old_csr, &mut run);
+            let span = new_csr.row_ptr[r as usize]..new_csr.row_ptr[r as usize + 1];
+            col_idx.extend_from_slice(&new_csr.col_idx[span.clone()]);
+            vals.extend_from_slice(&new_csr.vals[span]);
+        }
+    }
+    flush(&mut col_idx, &mut vals, old_csr, &mut run);
+    debug_assert_eq!(col_idx.len(), total);
+    Csr { n_rows: n, n_cols: new_csr.n_cols, row_ptr, col_idx, vals }
+}
+
+/// One degree bucket's span in the old metadata vector.
+struct OldBucket {
+    meta_lo: usize,
+    meta_hi: usize,
+    start_row: u32,
+    nz_start: u32,
+}
+
+/// Rebuild the block partition of `new_sorted`, copying (shifted) the
+/// metadata of every degree bucket not in `changed_degs` and running
+/// Algorithm 2 only over changed buckets. Returns the partition plus
+/// (reused, rebuilt) record counts.
+fn patch_block_partition(
+    old: &BlockPartition,
+    new_sorted: &Csr,
+    changed_degs: &BTreeSet<usize>,
+    params: PartitionParams,
+) -> (BlockPartition, usize, usize) {
+    debug_assert_eq!(old.params, params, "patch must keep the partition tunables");
+    // index the old metadata by degree: records are ascending by row,
+    // so each degree's records are one contiguous slice
+    let mut old_buckets: Vec<(u32, OldBucket)> = Vec::new();
+    let mut i = 0usize;
+    while i < old.meta.len() {
+        let d = old.meta[i].deg;
+        let mut j = i + 1;
+        while j < old.meta.len() && old.meta[j].deg == d {
+            j += 1;
+        }
+        old_buckets.push((
+            d,
+            OldBucket {
+                meta_lo: i,
+                meta_hi: j,
+                start_row: old.meta[i].row,
+                nz_start: old.meta[i].loc,
+            },
+        ));
+        i = j;
+    }
+
+    let n = new_sorted.n_rows;
+    let deg_bound = params.deg_bound();
+    let table = PatternTable::build(params);
+    let deg_at = |i: usize| new_sorted.row_ptr[i + 1] - new_sorted.row_ptr[i];
+    let mut meta: Vec<BlockMeta> = Vec::with_capacity(old.meta.len());
+    let (mut reused, mut rebuilt) = (0usize, 0usize);
+
+    let mut r = 0usize;
+    while r < n {
+        let d = deg_at(r);
+        let mut end = r + 1;
+        while end < n && deg_at(end) == d {
+            end += 1;
+        }
+        if d == 0 {
+            r = end; // zero rows produce no metadata
+            continue;
+        }
+        let reusable = !changed_degs.contains(&d);
+        if reusable {
+            if let Ok(k) = old_buckets.binary_search_by_key(&(d as u32), |(deg, _)| *deg) {
+                let b = &old_buckets[k].1;
+                let row_shift = r as i64 - b.start_row as i64;
+                let loc_shift = new_sorted.row_ptr[r] as i64 - b.nz_start as i64;
+                for m in &old.meta[b.meta_lo..b.meta_hi] {
+                    meta.push(BlockMeta {
+                        deg: m.deg,
+                        loc: (m.loc as i64 + loc_shift) as u32,
+                        row: (m.row as i64 + row_shift) as u32,
+                        info: m.info,
+                    });
+                }
+                reused += b.meta_hi - b.meta_lo;
+                r = end;
+                continue;
+            }
+            // an unchanged degree absent from the old index cannot gain
+            // rows; fall through defensively rather than panic
+        }
+        rebuilt += emit_bucket(&mut meta, &table, deg_bound, new_sorted, d, r, end);
+        r = end;
+    }
+
+    // degrees ascend, so split rows are exactly the tail past deg_bound
+    let n_split_rows = n - partition_point(n, |i| deg_at(i) <= deg_bound);
+    (
+        BlockPartition {
+            params,
+            meta,
+            n_rows: n,
+            nnz: new_sorted.nnz(),
+            n_split_rows,
+        },
+        reused,
+        rebuilt,
+    )
+}
+
+/// Algorithm 2 restricted to one degree bucket `[r, end)` — mirrors
+/// [`BlockPartition::build`]'s two branches record-for-record.
+fn emit_bucket(
+    meta: &mut Vec<BlockMeta>,
+    table: &PatternTable,
+    deg_bound: usize,
+    sorted: &Csr,
+    d: usize,
+    r: usize,
+    end: usize,
+) -> usize {
+    let start_len = meta.len();
+    if d <= deg_bound {
+        let pattern = table.get(d);
+        let mut rows_remaining = end - r;
+        let mut row = r;
+        while rows_remaining > 0 {
+            let take = rows_remaining.min(pattern.block_rows);
+            meta.push(BlockMeta {
+                deg: d as u32,
+                loc: sorted.row_ptr[row] as u32,
+                row: row as u32,
+                info: BlockMeta::pack_info(pattern.warp_nzs, take),
+            });
+            row += take;
+            rows_remaining -= take;
+        }
+    } else {
+        for rr in r..end {
+            let mut deg_remaining = d;
+            let mut loc = sorted.row_ptr[rr];
+            while deg_remaining > 0 {
+                let take = deg_remaining.min(deg_bound);
+                meta.push(BlockMeta { deg: d as u32, loc: loc as u32, row: rr as u32, info: take as u32 });
+                loc += take;
+                deg_remaining -= take;
+            }
+        }
+    }
+    meta.len() - start_len
+}
+
+/// Validate that `changes` is consistent with both endpoints of the
+/// patch (`old` plan state and `new` matrix). O(k).
+fn check_changes(old_original: &Csr, new_original: &Csr, changes: &[RowChange]) -> Result<()> {
+    ensure!(
+        old_original.n_rows == new_original.n_rows && old_original.n_cols == new_original.n_cols,
+        "patch cannot change matrix shape ({}x{} -> {}x{})",
+        old_original.n_rows,
+        old_original.n_cols,
+        new_original.n_rows,
+        new_original.n_cols
+    );
+    for c in changes {
+        ensure!((c.row as usize) < old_original.n_rows, "change row {} out of bounds", c.row);
+        ensure!(
+            old_original.degree(c.row as usize) == c.old_deg,
+            "change row {}: old_deg {} does not match the plan's matrix ({})",
+            c.row,
+            c.old_deg,
+            old_original.degree(c.row as usize)
+        );
+        ensure!(
+            new_original.degree(c.row as usize) == c.new_deg,
+            "change row {}: new_deg {} does not match the updated matrix ({})",
+            c.row,
+            c.new_deg,
+            new_original.degree(c.row as usize)
+        );
+    }
+    Ok(())
+}
+
+fn changed_degree_set(changes: &[RowChange]) -> BTreeSet<usize> {
+    changes
+        .iter()
+        .filter(|c| c.old_deg != c.new_deg)
+        .flat_map(|c| [c.old_deg, c.new_deg])
+        .collect()
+}
+
+fn sorted_dirty_rows(changes: &[RowChange]) -> Vec<u32> {
+    let mut rows: Vec<u32> = changes.iter().map(|c| c.row).collect();
+    rows.sort_unstable();
+    rows.dedup();
+    rows
+}
+
+/// Patch an [`SpmmPlan`] for an updated matrix. `changes` must describe
+/// exactly the rows whose adjacency differs between `old.original` and
+/// `new_original` (what [`DeltaGraph::apply`](super::DeltaGraph::apply)
+/// reports); rows outside `changes` are assumed — and in tests
+/// verified — to be identical.
+///
+/// The result is equal (same permutation, same sorted CSR, same block
+/// metadata) to `SpmmPlan::build(new_original, old.params)`.
+pub fn patch_plan(
+    old: &SpmmPlan,
+    new_original: Csr,
+    changes: &[RowChange],
+) -> Result<(SpmmPlan, PatchStats)> {
+    check_changes(&old.original, &new_original, changes)?;
+    let params = old.params;
+    let perm_new = incremental_perm(&old.sorted.perm, &old.sorted.csr.row_ptr, changes);
+    let inv_new = invert_perm(&perm_new);
+    let dirty = sorted_dirty_rows(changes);
+    let sorted_csr = splice_sorted(old, &new_original, &perm_new, &dirty);
+    let changed_degs = changed_degree_set(changes);
+    let (block, reused, rebuilt) =
+        patch_block_partition(&old.block, &sorted_csr, &changed_degs, params);
+    let warp = WarpPartition::build(&new_original, params.max_warp_nzs);
+    let stats = PatchStats {
+        rows_changed: dirty.len(),
+        rows_moved: changes.iter().filter(|c| c.old_deg != c.new_deg).count(),
+        blocks_reused: reused,
+        blocks_rebuilt: rebuilt,
+        nnz_before: old.nnz(),
+        nnz_after: new_original.nnz(),
+    };
+    let sorted = DegreeSorted { csr: sorted_csr, perm: perm_new, inv: inv_new };
+    Ok((SpmmPlan::from_parts(new_original, sorted, block, warp, params), stats))
+}
+
+/// Patch a plan built from a **relabeled** matrix (identity degree
+/// sort — the native-serving case, see `serve::registry`). The caller
+/// supplies the already-relabeled updated matrix; only the block
+/// metadata is patched structurally (the identity sort makes the
+/// "sorted" arrays the matrix itself), and the known fingerprint is
+/// seeded so the plan cache never re-hashes it.
+pub fn patch_identity_plan(
+    old: &SpmmPlan,
+    relabeled_new: &Csr,
+    changes: &[RowChange],
+    fingerprint: Option<GraphFingerprint>,
+) -> Result<(SpmmPlan, PatchStats)> {
+    let n = relabeled_new.n_rows;
+    ensure!(
+        old.n_rows() == n && old.original.n_cols == relabeled_new.n_cols,
+        "identity patch cannot change matrix shape"
+    );
+    ensure!(
+        old.sorted.perm.iter().enumerate().all(|(i, &p)| p as usize == i),
+        "patch_identity_plan requires an identity-sorted plan"
+    );
+    debug_assert!(
+        (1..n).all(|r| relabeled_new.degree(r - 1) <= relabeled_new.degree(r)),
+        "relabeled matrix must be degree-ascending"
+    );
+    let params = old.params;
+    let changed_degs = changed_degree_set(changes);
+    let (block, reused, rebuilt) =
+        patch_block_partition(&old.block, relabeled_new, &changed_degs, params);
+    let warp = WarpPartition::build(relabeled_new, params.max_warp_nzs);
+    let identity: Vec<u32> = (0..n as u32).collect();
+    let sorted = DegreeSorted {
+        csr: relabeled_new.clone(),
+        perm: identity.clone(),
+        inv: identity,
+    };
+    let stats = PatchStats {
+        rows_changed: sorted_dirty_rows(changes).len(),
+        rows_moved: changes.iter().filter(|c| c.old_deg != c.new_deg).count(),
+        blocks_reused: reused,
+        blocks_rebuilt: rebuilt,
+        nnz_before: old.nnz(),
+        nnz_after: relabeled_new.nnz(),
+    };
+    let plan = SpmmPlan::from_parts(relabeled_new.clone(), sorted, block, warp, params);
+    if let Some(fp) = fingerprint {
+        plan.seed_fingerprint(fp);
+    }
+    Ok((plan, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::graph::{DeltaGraph, EdgeUpdate};
+    use crate::pipeline::spmm_block_level_parallel;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+    use crate::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+
+    fn random_csr(rng: &mut Pcg, n: usize, heavy_frac: f64) -> Csr {
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            let d = if rng.f64() < heavy_frac { rng.range(0, n) } else { rng.range(0, 7) };
+            for _ in 0..d {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    fn random_batch(rng: &mut Pcg, cur: &Csr, k: usize) -> Vec<EdgeUpdate> {
+        (0..k)
+            .map(|_| {
+                let n = cur.n_rows;
+                if rng.f64() < 0.45 {
+                    let r = rng.range(0, n);
+                    if cur.degree(r) > 0 {
+                        let i = cur.row_ptr[r] + rng.range(0, cur.degree(r));
+                        return EdgeUpdate::Delete { row: r as u32, col: cur.col_idx[i] };
+                    }
+                }
+                EdgeUpdate::Insert {
+                    row: rng.range(0, n) as u32,
+                    col: rng.range(0, n) as u32,
+                    val: rng.f32() + 0.1,
+                }
+            })
+            .collect()
+    }
+
+    fn assert_plans_identical(patched: &SpmmPlan, rebuilt: &SpmmPlan) {
+        assert_eq!(patched.sorted.perm, rebuilt.sorted.perm, "permutation");
+        assert_eq!(patched.sorted.inv, rebuilt.sorted.inv, "inverse permutation");
+        assert_eq!(patched.sorted.csr, rebuilt.sorted.csr, "sorted CSR");
+        assert_eq!(patched.block.meta, rebuilt.block.meta, "block metadata");
+        assert_eq!(patched.block.n_split_rows, rebuilt.block.n_split_rows, "split rows");
+        assert_eq!(patched.block.nnz, rebuilt.block.nnz);
+        assert_eq!(patched.warp.groups, rebuilt.warp.groups, "warp groups");
+        assert_eq!(patched.original, rebuilt.original, "original CSR");
+    }
+
+    #[test]
+    fn prop_incremental_perm_matches_full_sort() {
+        proptest::check("delta_incremental_perm", 0x9E12B, 30, |rng| {
+            let n = rng.range(2, 80);
+            let base = random_csr(rng, n, 0.08);
+            let mut dg = DeltaGraph::with_threshold(base.clone(), 1e9);
+            let old = DegreeSorted::new(&base);
+            let batch = random_batch(rng, &base, rng.range(1, 14));
+            let rep = dg.apply(&batch).unwrap();
+            let new_csr = dg.snapshot();
+            let perm = incremental_perm(&old.perm, &old.csr.row_ptr, &rep.changes);
+            assert_eq!(perm, DegreeSorted::new(&new_csr).perm);
+        });
+    }
+
+    #[test]
+    fn prop_patched_plan_identical_to_rebuild() {
+        proptest::check("delta_patch_bitexact", 0xB17EC, 20, |rng| {
+            let n = rng.range(2, 70);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 4, 12]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 8, 32]),
+            };
+            let base = random_csr(rng, n, 0.08);
+            let mut dg = DeltaGraph::with_threshold(base.clone(), *rng.choose(&[0.05, 1e9]));
+            let mut plan = SpmmPlan::build(base, params);
+            for _ in 0..rng.range(1, 4) {
+                let batch = random_batch(rng, &dg.snapshot(), rng.range(1, 10));
+                let rep = dg.apply(&batch).unwrap();
+                let new_csr = dg.snapshot();
+                let (patched, stats) = patch_plan(&plan, new_csr.clone(), &rep.changes).unwrap();
+                let rebuilt = SpmmPlan::build(new_csr, params);
+                assert_plans_identical(&patched, &rebuilt);
+                assert_eq!(stats.blocks_reused + stats.blocks_rebuilt, rebuilt.block.meta.len());
+                plan = patched; // chain: next batch patches the patched plan
+            }
+        });
+    }
+
+    /// The satellite property: for random base graphs × random
+    /// insert/delete batches, DeltaGraph compaction + PlanPatch produce
+    /// a plan whose SpMM output matches both the from-scratch plan and
+    /// `Csr::spmm_dense`, across thread counts {1, 2, 8}.
+    #[test]
+    fn prop_patched_spmm_matches_dense_and_rebuild() {
+        proptest::check("delta_patch_spmm", 0x5B33D, 8, |rng| {
+            let n = rng.range(2, 50);
+            let base = random_csr(rng, n, 0.1);
+            // small threshold so compaction paths are exercised
+            let mut dg = DeltaGraph::with_threshold(base.clone(), 0.1);
+            let mut plan = Arc::new(SpmmPlan::build(base, PartitionParams::default()));
+            for _ in 0..2 {
+                let batch = random_batch(rng, &dg.snapshot(), rng.range(1, 12));
+                let rep = dg.apply(&batch).unwrap();
+                let new_csr = dg.snapshot();
+                let (patched, _) = patch_plan(&plan, new_csr.clone(), &rep.changes).unwrap();
+                let patched = Arc::new(patched);
+                let rebuilt = Arc::new(SpmmPlan::build(new_csr.clone(), PartitionParams::default()));
+                let f = rng.range(1, 6);
+                let x: Arc<Vec<f32>> =
+                    Arc::new((0..n * f).map(|_| rng.f32() - 0.5).collect());
+                let want = new_csr.spmm_dense(&x, f);
+                for &threads in &[1usize, 2, 8] {
+                    let pool = ThreadPool::new(threads);
+                    let got = patched
+                        .sorted
+                        .unpermute_rows(&spmm_block_level_parallel(&patched, &x, f, &pool), f);
+                    let reb = rebuilt
+                        .sorted
+                        .unpermute_rows(&spmm_block_level_parallel(&rebuilt, &x, f, &pool), f);
+                    assert_allclose(&got, &want, 1e-4, 1e-4, "patched vs dense");
+                    assert_allclose(&got, &reb, 1e-5, 1e-5, "patched vs rebuilt");
+                }
+                plan = patched;
+            }
+        });
+    }
+
+    #[test]
+    fn empty_batch_patch_is_identity() {
+        let mut rng = Pcg::seed_from(7);
+        let base = random_csr(&mut rng, 40, 0.1);
+        let plan = SpmmPlan::build(base.clone(), PartitionParams::default());
+        let (patched, stats) = patch_plan(&plan, base, &[]).unwrap();
+        assert_plans_identical(&patched, &plan);
+        assert_eq!(stats.rows_changed, 0);
+        assert_eq!(stats.blocks_rebuilt, 0);
+        assert!((stats.reuse_frac() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_only_change_reuses_all_metadata() {
+        // overwrite an existing edge's weight: no degree changes, so
+        // every metadata record must be structurally reused
+        let mut rng = Pcg::seed_from(8);
+        let base = random_csr(&mut rng, 30, 0.1);
+        let (r, c) = (0u32, base.col_idx[0]);
+        let mut dg = DeltaGraph::with_threshold(base.clone(), 1e9);
+        let rep = dg.apply(&[EdgeUpdate::Insert { row: r, col: c, val: 99.0 }]).unwrap();
+        let plan = SpmmPlan::build(base, PartitionParams::default());
+        let new_csr = dg.snapshot();
+        let (patched, stats) = patch_plan(&plan, new_csr.clone(), &rep.changes).unwrap();
+        assert_eq!(stats.rows_moved, 0);
+        assert_eq!(stats.blocks_rebuilt, 0);
+        assert_plans_identical(&patched, &SpmmPlan::build(new_csr, PartitionParams::default()));
+    }
+
+    #[test]
+    fn stale_changes_rejected() {
+        let mut rng = Pcg::seed_from(9);
+        let base = random_csr(&mut rng, 20, 0.0);
+        let plan = SpmmPlan::build(base.clone(), PartitionParams::default());
+        // claim row 0 went from degree 5 to 6 — inconsistent with both
+        let bogus = [RowChange { row: 0, old_deg: plan.original.degree(0) + 1, new_deg: 6 }];
+        assert!(patch_plan(&plan, base, &bogus).is_err());
+    }
+
+    #[test]
+    fn prop_identity_patch_matches_rebuild() {
+        proptest::check("delta_identity_patch", 0x1DE47, 12, |rng| {
+            let n = rng.range(2, 50);
+            let base = random_csr(rng, n, 0.1);
+            let mut dg = DeltaGraph::with_threshold(base.clone(), 1e9);
+            // relabeled old matrix + identity plan (the serve shape)
+            let ds = DegreeSorted::new(&base);
+            let relabeled_old = base.relabel(&ds.perm, &ds.inv);
+            let plan = SpmmPlan::build(relabeled_old, PartitionParams::default());
+            let batch = random_batch(rng, &base, rng.range(1, 10));
+            let rep = dg.apply(&batch).unwrap();
+            let new_csr = dg.snapshot();
+            let ds_new = DegreeSorted::new(&new_csr);
+            let relabeled_new = new_csr.relabel(&ds_new.perm, &ds_new.inv);
+            let (patched, _) =
+                patch_identity_plan(&plan, &relabeled_new, &rep.changes, None).unwrap();
+            let rebuilt = SpmmPlan::build(relabeled_new, PartitionParams::default());
+            assert_plans_identical(&patched, &rebuilt);
+        });
+    }
+}

@@ -13,6 +13,10 @@
 //! ```
 //! Written by `accel-gcn prepare`, consumed by examples and the serving
 //! coordinator so graph generation cost is paid once.
+//!
+//! Also provides a plain-text edge-list loader ([`load_edge_list`],
+//! SNAP style) so real-world graph dumps can feed the delta benchmarks
+//! and `update-demo` without converting to the binary format first.
 
 use super::csr::Csr;
 use anyhow::{bail, Context, Result};
@@ -84,6 +88,91 @@ pub fn load_graph(path: impl AsRef<Path>) -> Result<Csr> {
         .with_context(|| format!("{path:?}: invalid CSR payload"))
 }
 
+/// Options for the plain-text edge-list loader.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeListOptions {
+    /// Treat node ids as 1-based (many published edge lists are);
+    /// every id is shifted down by one and id 0 is rejected.
+    pub one_based: bool,
+    /// Weight assigned to 2-column lines.
+    pub default_weight: f32,
+    /// Node count override. `None` infers `max id + 1` — pass a value
+    /// when trailing isolated nodes matter.
+    pub n_nodes: Option<usize>,
+}
+
+impl Default for EdgeListOptions {
+    fn default() -> EdgeListOptions {
+        EdgeListOptions { one_based: false, default_weight: 1.0, n_nodes: None }
+    }
+}
+
+/// Parse a SNAP-style edge list: one `src dst [weight]` per line,
+/// whitespace-separated, `#` comment lines and blank lines ignored.
+/// Duplicate edges sum their weights (the [`Csr::from_edges`]
+/// convention). The result is a square `n × n` matrix.
+pub fn parse_edge_list(text: &str, opts: EdgeListOptions) -> Result<Csr> {
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    let mut max_id = 0u64;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (src, dst) = match (it.next(), it.next()) {
+            (Some(s), Some(d)) => (s, d),
+            _ => bail!("line {}: expected `src dst [weight]`, got {raw:?}", lineno + 1),
+        };
+        let weight = match it.next() {
+            Some(w) => w
+                .parse::<f32>()
+                .with_context(|| format!("line {}: bad weight {w:?}", lineno + 1))?,
+            None => opts.default_weight,
+        };
+        if let Some(extra) = it.next() {
+            bail!("line {}: trailing token {extra:?}", lineno + 1);
+        }
+        let parse_id = |tok: &str| -> Result<u64> {
+            let id = tok
+                .parse::<u64>()
+                .with_context(|| format!("line {}: bad node id {tok:?}", lineno + 1))?;
+            if opts.one_based {
+                if id == 0 {
+                    bail!("line {}: id 0 in a 1-based edge list", lineno + 1);
+                }
+                Ok(id - 1)
+            } else {
+                Ok(id)
+            }
+        };
+        let (s, d) = (parse_id(src)?, parse_id(dst)?);
+        if s > u32::MAX as u64 || d > u32::MAX as u64 {
+            bail!("line {}: node id exceeds u32 range", lineno + 1);
+        }
+        max_id = max_id.max(s).max(d);
+        edges.push((s as u32, d as u32, weight));
+    }
+    let inferred = if edges.is_empty() { 0 } else { max_id as usize + 1 };
+    let n = match opts.n_nodes {
+        Some(n) => {
+            if n < inferred {
+                bail!("--n-nodes {n} smaller than max node id + 1 ({inferred})");
+            }
+            n
+        }
+        None => inferred,
+    };
+    Csr::from_edges(n, n, &edges)
+}
+
+/// [`parse_edge_list`] from a file.
+pub fn load_edge_list(path: impl AsRef<Path>, opts: EdgeListOptions) -> Result<Csr> {
+    let path = path.as_ref();
+    let text = fs::read_to_string(path).with_context(|| format!("open {path:?}"))?;
+    parse_edge_list(&text, opts).with_context(|| format!("parse edge list {path:?}"))
+}
+
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -142,5 +231,74 @@ mod tests {
         let bytes = fs::read(&path).unwrap();
         fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
         assert!(load_graph(&path).is_err());
+    }
+
+    #[test]
+    fn edge_list_basic_with_comments_and_weights() {
+        let text = "\
+# SNAP-style comment
+# src dst
+0 1
+1 2 0.5
+
+2 0 2.0
+";
+        let csr = parse_edge_list(text, EdgeListOptions::default()).unwrap();
+        assert_eq!(csr.n_rows, 3);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(1, 1.0)]);
+        assert_eq!(csr.row(1).collect::<Vec<_>>(), vec![(2, 0.5)]);
+        assert_eq!(csr.row(2).collect::<Vec<_>>(), vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn edge_list_one_based_ids() {
+        let opts = EdgeListOptions { one_based: true, ..EdgeListOptions::default() };
+        let csr = parse_edge_list("1 2\n3 1\n", opts).unwrap();
+        assert_eq!(csr.n_rows, 3);
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(1, 1.0)]);
+        assert_eq!(csr.row(2).collect::<Vec<_>>(), vec![(0, 1.0)]);
+        // id 0 is illegal in 1-based mode
+        assert!(parse_edge_list("0 1\n", opts).is_err());
+    }
+
+    #[test]
+    fn edge_list_duplicates_sum() {
+        let csr = parse_edge_list("0 1 1.0\n0 1 2.5\n", EdgeListOptions::default()).unwrap();
+        assert_eq!(csr.nnz(), 1);
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(1, 3.5)]);
+    }
+
+    #[test]
+    fn edge_list_node_count_override() {
+        let opts = EdgeListOptions { n_nodes: Some(10), ..EdgeListOptions::default() };
+        let csr = parse_edge_list("0 1\n", opts).unwrap();
+        assert_eq!(csr.n_rows, 10, "trailing isolated nodes preserved");
+        // override below max id + 1 is an error
+        let tight = EdgeListOptions { n_nodes: Some(1), ..EdgeListOptions::default() };
+        assert!(parse_edge_list("0 1\n", tight).is_err());
+    }
+
+    #[test]
+    fn edge_list_malformed_lines_error_with_lineno() {
+        let e = parse_edge_list("0 1\nnot-a-line\n", EdgeListOptions::default()).unwrap_err();
+        assert!(format!("{e:#}").contains("line 2"), "{e:#}");
+        let e = parse_edge_list("0 1 2.0 extra\n", EdgeListOptions::default()).unwrap_err();
+        assert!(format!("{e:#}").contains("trailing"), "{e:#}");
+        let e = parse_edge_list("0 x\n", EdgeListOptions::default()).unwrap_err();
+        assert!(format!("{e:#}").contains("bad node id"), "{e:#}");
+        let e = parse_edge_list("0 1 nope\n", EdgeListOptions::default()).unwrap_err();
+        assert!(format!("{e:#}").contains("bad weight"), "{e:#}");
+    }
+
+    #[test]
+    fn edge_list_empty_and_file_roundtrip() {
+        let empty = parse_edge_list("# nothing\n", EdgeListOptions::default()).unwrap();
+        assert_eq!(empty.n_rows, 0);
+        let path = tmpfile("edges.txt");
+        fs::write(&path, "0 1\n1 0\n").unwrap();
+        let csr = load_edge_list(&path, EdgeListOptions::default()).unwrap();
+        assert_eq!(csr.nnz(), 2);
+        assert!(load_edge_list(tmpfile("missing.txt"), EdgeListOptions::default()).is_err());
     }
 }

@@ -22,9 +22,14 @@
 //!   simulates plans prepared by [`pipeline`].
 //! * [`coordinator`] — PJRT serving engine: request router, shape-bucket
 //!   batcher, worker pool (requires compiled artifacts).
+//! * [`delta`] — dynamic graphs: batched edge updates over an immutable
+//!   base CSR ([`delta::DeltaGraph`]) and incremental plan maintenance
+//!   ([`delta::patch_plan`]) that rebuilds only dirty degree buckets,
+//!   bit-for-bit equal to a from-scratch rebuild.
 //! * [`serve`] — native serving subsystem: multi-tenant bounded-queue
 //!   server executing column-fused SpMM/GCN batches through
-//!   [`pipeline`] on CPU — the request path that works offline.
+//!   [`pipeline`] on CPU — the request path that works offline. Tenants
+//!   accept `UpdateGraph` requests with epoch-versioned plan swaps.
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
 //! * [`metrics`] — counters and latency histograms.
 //! * [`util`] — zero-dependency substrates (RNG, JSON, NPY, CLI, stats,
@@ -35,6 +40,7 @@ pub mod graph;
 pub mod partition;
 pub mod spmm;
 pub mod pipeline;
+pub mod delta;
 pub mod sim;
 pub mod model;
 pub mod metrics;

@@ -9,7 +9,8 @@
 //! accel-gcn train        --artifacts artifacts/quickstart --steps 300
 //! accel-gcn serve        --artifacts artifacts/quickstart --requests 64
 //! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
-//! accel-gcn bench        --out results [--experiment fig5|fig6|...]
+//! accel-gcn update-demo  --batches 8 --batch-size 64 [--edge-list graph.txt]
+//! accel-gcn bench        --out results [--experiment fig5|fig6|...|delta_update]
 //! ```
 
 use accel_gcn::bench as harness;
@@ -40,6 +41,7 @@ fn main() {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
         "serve-native" => cmd_serve_native(rest),
+        "update-demo" => cmd_update_demo(rest),
         "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -71,8 +73,12 @@ fn print_usage() {
          \x20 serve-native [--requests N] [--tenants K] [--nodes N] [--avg-deg D]\n\
          \x20           [--threads T] [--ladder 32,64,128] [--gcn-every K] [--seed S]\n\
          \x20           [--no-verify]  (multi-tenant CPU serving, no artifacts needed)\n\
+         \x20 update-demo [--nodes N] [--avg-deg D] [--batches B] [--batch-size K]\n\
+         \x20           [--edge-list PATH [--one-based]] [--threads T] [--seed S]\n\
+         \x20           (stream edge-update batches; patch plans incrementally,\n\
+         \x20           verify each patch against a from-scratch rebuild)\n\
          \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
-         \x20           exec_scaling|serve_native|all]"
+         \x20           exec_scaling|serve_native|delta_update|all] [--quick]"
     );
 }
 
@@ -273,6 +279,109 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
     println!(
         "served {} requests across {} resident graphs: {:.1} req/s, fusion factor {:.2}, verified={}",
         point.requests, point.tenants, point.requests_per_sec, point.fusion_factor, point.verified
+    );
+    Ok(())
+}
+
+/// Stream edge-update batches against a graph, patching its plan
+/// incrementally and verifying every patch against a from-scratch
+/// rebuild — the delta subsystem's end-to-end demo and CI smoke
+/// (exits nonzero on any divergence).
+fn cmd_update_demo(rest: &[String]) -> Result<()> {
+    use accel_gcn::bench::delta_update::random_batch;
+    use accel_gcn::delta::{patch_plan, DeltaGraph};
+    use accel_gcn::graph::io::{load_edge_list, EdgeListOptions};
+    use accel_gcn::pipeline::spmm_block_level_parallel;
+    use accel_gcn::spmm::verify::allclose;
+    use accel_gcn::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+
+    let args = Args::parse(
+        rest,
+        &["nodes", "avg-deg", "batches", "batch-size", "seed", "edge-list", "threads"],
+        &["one-based"],
+    )?;
+    let seed = args.u64_or("seed", 42)?;
+    let batches = args.usize_or("batches", 8)?;
+    let batch_size = args.usize_or("batch-size", 64)?;
+    let threads = args.usize_or("threads", 4)?;
+    let csr = match args.get("edge-list") {
+        Some(path) => {
+            let opts = EdgeListOptions { one_based: args.flag("one-based"), ..Default::default() };
+            let g = load_edge_list(path, opts)?;
+            println!("loaded `{path}`: {} nodes, {} edges", g.n_rows, g.nnz());
+            g
+        }
+        None => {
+            let n = args.usize_or("nodes", 2000)?;
+            let avg = args.f64_or("avg-deg", 8.0)?;
+            let mut rng = Pcg::seed_from(seed);
+            let degs = generator::degree_sequence(
+                generator::DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.1 },
+                n,
+                (n as f64 * avg) as usize,
+                &mut rng,
+            );
+            let g = generator::from_degree_sequence(n, &degs, &mut rng);
+            println!("generated power-law graph: {} nodes, {} edges", n, g.nnz());
+            g
+        }
+    };
+    anyhow::ensure!(csr.n_rows > 0, "update-demo needs a non-empty graph");
+    let n = csr.n_rows;
+    let params = PartitionParams::default();
+    let pool = ThreadPool::new(threads);
+    let mut rng = Pcg::seed_from(seed ^ 0xde17a);
+    let mut delta = DeltaGraph::new(csr.clone());
+    let mut plan = Arc::new(SpmmPlan::build(csr, params));
+    let (mut patch_total, mut replan_total) = (0.0f64, 0.0f64);
+    for b in 0..batches {
+        let batch = random_batch(&delta.snapshot(), batch_size, &mut rng);
+        let report = delta.apply(&batch)?;
+        let new_csr = delta.snapshot();
+        let t0 = std::time::Instant::now();
+        let (patched, stats) = patch_plan(&plan, new_csr.clone(), &report.changes)?;
+        let patch_us = t0.elapsed().as_secs_f64() * 1e6;
+        let t1 = std::time::Instant::now();
+        let rebuilt = SpmmPlan::build(new_csr.clone(), params);
+        let replan_us = t1.elapsed().as_secs_f64() * 1e6;
+        // the acceptance check: patched plan == from-scratch rebuild
+        let identical = patched.sorted.perm == rebuilt.sorted.perm
+            && patched.sorted.csr == rebuilt.sorted.csr
+            && patched.block.meta == rebuilt.block.meta
+            && patched.warp.groups == rebuilt.warp.groups;
+        anyhow::ensure!(identical, "batch {b}: patched plan diverged from rebuild");
+        plan = Arc::new(patched);
+        let f = 16;
+        let x: Arc<Vec<f32>> = Arc::new((0..n * f).map(|_| rng.f32() - 0.5).collect());
+        let y = plan.sorted.unpermute_rows(&spmm_block_level_parallel(&plan, &x, f, &pool), f);
+        anyhow::ensure!(
+            allclose(&y, &new_csr.spmm_dense(&x, f), 1e-3, 1e-3),
+            "batch {b}: patched SpMM diverged from the dense reference"
+        );
+        patch_total += patch_us;
+        replan_total += replan_us;
+        println!(
+            "batch {b}: {} ops, {} rows changed ({} moved), nnz {} -> {}, \
+             meta reuse {:.1}%, patch {:.0}µs vs replan {:.0}µs ({:.2}x){}",
+            report.staged_ops,
+            stats.rows_changed,
+            stats.rows_moved,
+            stats.nnz_before,
+            stats.nnz_after,
+            stats.reuse_frac() * 100.0,
+            patch_us,
+            replan_us,
+            replan_us / patch_us.max(1e-9),
+            if report.compacted { ", compacted" } else { "" },
+        );
+    }
+    println!(
+        "all {batches} batches verified (plan == rebuild, SpMM == dense); \
+         total patch {:.0}µs vs replan {:.0}µs ({:.2}x)",
+        patch_total,
+        replan_total,
+        replan_total / patch_total.max(1e-9),
     );
     Ok(())
 }

@@ -52,6 +52,13 @@ impl Gauge {
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Ratchet the gauge up to `v` (no-op if already higher) — for
+    /// high-water levels like "highest tenant epoch" where plain `set`
+    /// would regress under interleaved writers.
+    pub fn set_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -210,6 +217,9 @@ mod tests {
         g.set(0);
         g.dec();
         assert_eq!(g.get(), -1, "signed: no wraparound under racing dec");
+        g.set_max(5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5, "set_max never regresses");
     }
 
     #[test]

@@ -27,6 +27,15 @@
 //! the same cold key may both build; the first insert wins and both get
 //! the same `Arc` afterwards. Eviction only drops the cache's `Arc`:
 //! consumers holding a plan keep it alive.
+//!
+//! Dynamic graphs: when a resident graph's topology changes its
+//! fingerprint changes with it, so the stale plan would sit in the
+//! cache forever (unbounded) or squat an LRU slot (bounded).
+//! [`PlanCache::invalidate`] drops exactly one `(graph, params)` entry,
+//! and [`PlanCache::refresh`] atomically replaces a stale entry with an
+//! incrementally patched plan under its new fingerprint — the delta
+//! subsystem's epoch-swap path (see [`crate::delta`]). Both are counted
+//! in [`PlanCache::invalidations`] alongside hits/misses/evictions.
 
 use super::plan::{GraphFingerprint, SpmmPlan};
 use crate::graph::csr::Csr;
@@ -35,10 +44,14 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+/// The full cache key: one graph identity under one set of partition
+/// tunables. Public so the delta subsystem can invalidate/refresh a
+/// specific resident plan ([`PlanCache::invalidate`],
+/// [`PlanCache::refresh`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-struct PlanKey {
-    fingerprint: GraphFingerprint,
-    params: PartitionParams,
+pub struct GraphKey {
+    pub fingerprint: GraphFingerprint,
+    pub params: PartitionParams,
 }
 
 #[derive(Debug)]
@@ -51,13 +64,14 @@ struct Entry {
 /// Process-wide memoization of SpMM plans.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<PlanKey, Entry>>,
+    plans: Mutex<HashMap<GraphKey, Entry>>,
     /// `None` = unbounded (the historical default).
     capacity: Option<usize>,
     clock: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    invalidations: AtomicU64,
 }
 
 impl PlanCache {
@@ -94,7 +108,7 @@ impl PlanCache {
         csr: &Csr,
         params: PartitionParams,
     ) -> Arc<SpmmPlan> {
-        let key = PlanKey { fingerprint, params };
+        let key = GraphKey { fingerprint, params };
         let now = self.clock.fetch_add(1, Ordering::Relaxed);
         if let Some(entry) = self.plans.lock().unwrap().get_mut(&key) {
             entry.last_used = now;
@@ -108,12 +122,19 @@ impl PlanCache {
         let mut map = self.plans.lock().unwrap();
         let plan =
             Arc::clone(&map.entry(key).or_insert(Entry { plan, last_used: now }).plan);
+        self.enforce_capacity(&mut map, &key);
+        plan
+    }
+
+    /// Evict least-recently-used entries (never `keep`) until the map
+    /// fits the configured capacity.
+    fn enforce_capacity(&self, map: &mut HashMap<GraphKey, Entry>, keep: &GraphKey) {
         if let Some(cap) = self.capacity {
             while map.len() > cap {
                 // O(len) scan; bounded caches are small by construction
                 let lru = map
                     .iter()
-                    .filter(|(k, _)| **k != key) // never evict what we just returned
+                    .filter(|(k, _)| *k != keep) // never evict what we just returned
                     .min_by_key(|(_, e)| e.last_used)
                     .map(|(k, _)| *k);
                 match lru {
@@ -125,7 +146,48 @@ impl PlanCache {
                 }
             }
         }
-        plan
+    }
+
+    /// The resident plan for `key`, if any, without building on a miss.
+    /// Refreshes the entry's LRU position but touches no hit/miss
+    /// counters (this is the delta path's introspection probe, not a
+    /// serving lookup).
+    pub fn peek(&self, key: &GraphKey) -> Option<Arc<SpmmPlan>> {
+        let now = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.plans.lock().unwrap();
+        map.get_mut(key).map(|e| {
+            e.last_used = now;
+            Arc::clone(&e.plan)
+        })
+    }
+
+    /// Drop the plan cached under exactly `key`. Returns whether a plan
+    /// was resident (and therefore dropped); counted in
+    /// [`PlanCache::invalidations`]. Unlike [`PlanCache::clear`], other
+    /// tenants' plans are untouched.
+    pub fn invalidate(&self, key: &GraphKey) -> bool {
+        let dropped = self.plans.lock().unwrap().remove(key).is_some();
+        if dropped {
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
+        dropped
+    }
+
+    /// Replace the plan cached under `old` with `plan`, keyed by the
+    /// plan's own fingerprint under the same params — the delta
+    /// subsystem's patch path: the old graph's entry is invalidated (if
+    /// resident) and the patched plan becomes immediately servable
+    /// without a build-on-miss. Returns the new key.
+    pub fn refresh(&self, old: &GraphKey, plan: Arc<SpmmPlan>) -> GraphKey {
+        let key = GraphKey { fingerprint: plan.fingerprint(), params: old.params };
+        let now = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.plans.lock().unwrap();
+        if old != &key && map.remove(old).is_some() {
+            self.invalidations.fetch_add(1, Ordering::Relaxed);
+        }
+        map.insert(key, Entry { plan, last_used: now });
+        self.enforce_capacity(&mut map, &key);
+        key
     }
 
     /// Cached plan count.
@@ -149,6 +211,12 @@ impl PlanCache {
     /// Plans evicted by the LRU policy (always 0 for unbounded caches).
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Plans dropped by [`PlanCache::invalidate`] or displaced by
+    /// [`PlanCache::refresh`].
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
     }
 
     /// Drop every cached plan (outstanding `Arc`s stay alive).
@@ -259,5 +327,73 @@ mod tests {
         }
         assert_eq!(cache.len(), 10);
         assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn invalidate_drops_one_key_only() {
+        let cache = PlanCache::new();
+        let (g1, g2) = (graph(40), graph(41));
+        let params = PartitionParams::default();
+        let p1 = cache.plan_for(&g1, params);
+        cache.plan_for(&g2, params);
+        let key = GraphKey { fingerprint: p1.fingerprint(), params };
+        assert!(cache.invalidate(&key), "resident plan must be dropped");
+        assert_eq!(cache.len(), 1, "other tenant untouched");
+        assert_eq!(cache.invalidations(), 1);
+        assert!(!cache.invalidate(&key), "second invalidate finds nothing");
+        assert_eq!(cache.invalidations(), 1, "no-op invalidate not counted");
+        // the dropped graph rebuilds on its next request
+        let before = cache.misses();
+        cache.plan_for(&g1, params);
+        assert_eq!(cache.misses(), before + 1);
+    }
+
+    #[test]
+    fn peek_returns_resident_without_building() {
+        let cache = PlanCache::new();
+        let g = graph(42);
+        let params = PartitionParams::default();
+        let key = GraphKey { fingerprint: GraphFingerprint::of(&g), params };
+        assert!(cache.peek(&key).is_none(), "peek must not build");
+        assert_eq!((cache.len(), cache.misses()), (0, 0));
+        let p = cache.plan_for(&g, params);
+        let peeked = cache.peek(&key).expect("resident after plan_for");
+        assert!(Arc::ptr_eq(&p, &peeked));
+        assert_eq!(cache.hits(), 0, "peek leaves the hit counter alone");
+    }
+
+    #[test]
+    fn refresh_swaps_stale_entry_for_patched_plan() {
+        let cache = PlanCache::new();
+        let (g_old, g_new) = (graph(50), graph(51));
+        let params = PartitionParams::default();
+        let old_plan = cache.plan_for(&g_old, params);
+        let old_key = GraphKey { fingerprint: old_plan.fingerprint(), params };
+        let patched = Arc::new(crate::pipeline::SpmmPlan::build(g_new.clone(), params));
+        let new_key = cache.refresh(&old_key, Arc::clone(&patched));
+        assert_eq!(new_key.fingerprint, GraphFingerprint::of(&g_new));
+        assert_eq!(cache.len(), 1, "old entry displaced, new resident");
+        assert_eq!(cache.invalidations(), 1);
+        assert!(cache.peek(&old_key).is_none());
+        // the refreshed plan serves without a rebuild
+        let before = cache.misses();
+        let got = cache.plan_for(&g_new, params);
+        assert!(Arc::ptr_eq(&got, &patched));
+        assert_eq!(cache.misses(), before, "refresh pre-warmed the new key");
+    }
+
+    #[test]
+    fn refresh_respects_capacity() {
+        let cache = PlanCache::bounded(2);
+        let params = PartitionParams::default();
+        cache.plan_for(&graph(60), params);
+        cache.plan_for(&graph(61), params);
+        // refresh under a key that was never resident: plain insert + LRU
+        let phantom = GraphKey { fingerprint: GraphFingerprint::of(&graph(62)), params };
+        let plan = Arc::new(crate::pipeline::SpmmPlan::build(graph(63), params));
+        cache.refresh(&phantom, plan);
+        assert_eq!(cache.len(), 2, "capacity still enforced after refresh");
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.invalidations(), 0, "phantom key displaced nothing");
     }
 }

@@ -41,7 +41,7 @@ pub mod cache;
 pub mod exec;
 pub mod parallel;
 
-pub use cache::PlanCache;
+pub use cache::{GraphKey, PlanCache};
 pub use exec::{BlockLevel, CsrReference, Executor, WarpLevel};
 pub use parallel::{spmm_block_level_parallel, ParallelBlockLevel};
 pub use plan::{GraphFingerprint, SpmmPlan};

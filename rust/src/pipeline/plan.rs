@@ -141,6 +141,24 @@ impl SpmmPlan {
         SpmmPlan::build(csr, params)
     }
 
+    /// Assemble a plan from parts computed incrementally (the delta
+    /// subsystem's [`patch_plan`](crate::delta::patch_plan)). The caller
+    /// promises the parts are mutually consistent — i.e. exactly what
+    /// [`SpmmPlan::build`] would have produced for `original` — which
+    /// the delta property tests assert field-for-field.
+    pub(crate) fn from_parts(
+        original: Csr,
+        sorted: DegreeSorted,
+        block: BlockPartition,
+        warp: WarpPartition,
+        params: PartitionParams,
+    ) -> SpmmPlan {
+        debug_assert_eq!(sorted.csr.n_rows, original.n_rows);
+        debug_assert_eq!(block.n_rows, original.n_rows);
+        debug_assert_eq!(block.nnz, original.nnz());
+        SpmmPlan { original, sorted, block, warp, params, fingerprint: OnceLock::new() }
+    }
+
     pub fn n_rows(&self) -> usize {
         self.original.n_rows
     }

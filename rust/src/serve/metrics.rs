@@ -30,6 +30,14 @@ pub struct ServeMetrics {
     pub dense_stage: LatencyRecorder,
     /// submit → reply.
     pub total: LatencyRecorder,
+    /// `UpdateGraph` requests applied.
+    pub updates: Counter,
+    /// Epoch swaps published to tenants (one per applied update).
+    pub plan_swaps: Counter,
+    /// Registry swap + plan patch time per update.
+    pub patch_latency: LatencyRecorder,
+    /// Highest epoch any tenant has reached.
+    pub epoch: Gauge,
 }
 
 impl ServeMetrics {
@@ -63,9 +71,16 @@ impl ServeMetrics {
             self.batches.get(),
             self.fusion_factor(),
         ));
+        s.push_str(&format!(
+            "updates: {} applied, {} plan swaps, epoch {}\n",
+            self.updates.get(),
+            self.plan_swaps.get(),
+            self.epoch.get(),
+        ));
         s.push_str(&format!("{}\n", self.queue_wait.snapshot().render("queue wait")));
         s.push_str(&format!("{}\n", self.spmm_stage.snapshot().render("spmm stage")));
         s.push_str(&format!("{}\n", self.dense_stage.snapshot().render("dense stage")));
+        s.push_str(&format!("{}\n", self.patch_latency.snapshot().render("plan patch")));
         s.push_str(&format!("{}\n", self.total.snapshot().render("total")));
         s
     }
@@ -89,5 +104,18 @@ mod tests {
         let r = m.render();
         assert!(r.contains("fusion factor 3.50"));
         assert!(r.contains("submitted=7"));
+    }
+
+    #[test]
+    fn update_path_metrics_render() {
+        let m = ServeMetrics::new();
+        m.updates.add(3);
+        m.plan_swaps.add(3);
+        m.epoch.set(3);
+        m.patch_latency.record(0.002);
+        let r = m.render();
+        assert!(r.contains("updates: 3 applied, 3 plan swaps, epoch 3"), "{r}");
+        assert!(r.contains("plan patch"), "{r}");
+        assert_eq!(m.patch_latency.snapshot().count, 1);
     }
 }

@@ -13,16 +13,25 @@
 //! traffic offline.
 //!
 //! * [`registry`] — multi-tenant graph residency: handles, relabeled
-//!   adjacencies (DESIGN §2), ingress/egress permutations.
+//!   adjacencies (DESIGN §2), ingress/egress permutations — now
+//!   **epoch-versioned**: tenants evolve via edge-update batches, and
+//!   each update swaps in an immutable next-epoch entry.
 //! * [`gcn`] — the multi-layer forward stack ([`GcnForward`]): fused
 //!   `SpMM → X·W + b → ReLU` per layer, chained in the relabeled
 //!   domain with zero per-layer unpermutes.
-//! * [`server`] — bounded queue + worker loop + batch fusion; see the
-//!   module docs for the queue/worker/eviction semantics.
-//! * [`metrics`] — queue depth, batch occupancy, per-stage latency.
+//! * [`server`] — bounded queue + worker loop + batch fusion, plus the
+//!   `UpdateGraph` request kind: updates apply after each round's
+//!   compute groups, cached plans are *patched* (not rebuilt) via
+//!   [`crate::delta`], in-flight requests finish on the epoch they
+//!   captured at submit; see the module docs for the
+//!   queue/worker/epoch semantics.
+//! * [`metrics`] — queue depth, batch occupancy, per-stage latency,
+//!   plan-swap count and patch latency.
 //!
 //! Load-generation and reporting live in
-//! [`bench::serve_native`](crate::bench::serve_native).
+//! [`bench::serve_native`](crate::bench::serve_native); the dynamic
+//! update path is measured by
+//! [`bench::delta_update`](crate::bench::delta_update).
 
 pub mod gcn;
 pub mod metrics;
@@ -31,5 +40,5 @@ pub mod server;
 
 pub use gcn::{reference_forward, GcnForward, GcnModel};
 pub use metrics::ServeMetrics;
-pub use registry::{GraphHandle, GraphRegistry};
-pub use server::{Payload, Request, Response, ServeConfig, Server};
+pub use registry::{GraphEntry, GraphHandle, GraphRegistry, GraphUpdate};
+pub use server::{Payload, Request, Response, ServeConfig, Server, UpdateReport};

@@ -1,5 +1,6 @@
-//! Multi-tenant graph residency: handles, relabeled adjacencies, and
-//! the permutation metadata needed at the serving edge.
+//! Multi-tenant graph residency: handles, relabeled adjacencies, the
+//! permutation metadata needed at the serving edge — and, since the
+//! delta subsystem, **epoch-versioned** tenant state.
 //!
 //! A registered graph is preprocessed **once** into the relabeled domain
 //! (DESIGN §2: rows *and* columns permuted ascending by degree,
@@ -7,11 +8,26 @@
 //! permutes feature rows at ingress, chains every layer in the relabeled
 //! domain with zero per-layer unpermutes, and unpermutes once at egress.
 //!
+//! ## Epochs
+//!
+//! Each tenant's visible state is one immutable [`GraphEntry`] behind a
+//! briefly-held mutex; [`GraphRegistry::update`] applies an edge-update
+//! batch to the tenant's [`DeltaGraph`], derives the next entry
+//! (epoch + 1) with an *incremental* degree re-sort, and swaps the
+//! `Arc` pointer. Readers never wait on update computation: the heavy
+//! work happens under the per-tenant `delta` lock, the swap under the
+//! `current` lock is a pointer store. A request that captured the old
+//! `Arc` keeps executing against the old epoch — entries are immutable
+//! and self-contained.
+//!
 //! The registry deliberately does **not** own `SpmmPlan`s: plans live in
 //! the server's bounded [`PlanCache`](crate::pipeline::PlanCache), so a
 //! tenant that goes cold can have its partition evicted and rebuilt on
-//! demand while its (smaller) CSR stays resident here.
+//! demand while its (smaller) CSR stays resident here. Updates return
+//! the old/new entry pair plus the [`RowChange`] set so the server can
+//! patch the cached plan (see `server::apply_update`).
 
+use crate::delta::{incremental_perm, invert_perm, DeltaGraph, EdgeUpdate, RowChange};
 use crate::graph::csr::Csr;
 use crate::graph::degree::DegreeSorted;
 use crate::pipeline::GraphFingerprint;
@@ -22,7 +38,9 @@ use std::sync::{Arc, Mutex};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct GraphHandle(pub(crate) u32);
 
-/// One resident graph: the relabeled adjacency plus edge permutations.
+/// One resident graph *version*: the relabeled adjacency plus edge
+/// permutations, tagged with the epoch that produced it. Immutable —
+/// updates produce a fresh entry and swap the tenant pointer.
 #[derive(Debug)]
 pub struct GraphEntry {
     pub name: String,
@@ -38,6 +56,10 @@ pub struct GraphEntry {
     pub fingerprint: GraphFingerprint,
     /// `perm[i]` = original row id of relabeled row `i`.
     pub perm: Vec<u32>,
+    /// `inv[orig]` = relabeled position of original row `orig`.
+    pub inv: Vec<u32>,
+    /// 0 at registration; +1 per applied update batch.
+    pub epoch: u64,
 }
 
 impl GraphEntry {
@@ -66,11 +88,40 @@ impl GraphEntry {
     }
 }
 
+/// What one [`GraphRegistry::update`] produced — everything the server
+/// needs to patch the cached plan and report the swap.
+#[derive(Debug)]
+pub struct GraphUpdate {
+    /// The entry requests captured before the swap (old epoch).
+    pub old: Arc<GraphEntry>,
+    /// The freshly swapped-in entry (old epoch + 1).
+    pub new: Arc<GraphEntry>,
+    /// Rows whose adjacency changed, with old/new degrees (original
+    /// node ids) — the input to plan patching.
+    pub changes: Vec<RowChange>,
+    /// Updates staged by the batch.
+    pub staged_ops: usize,
+    /// Whether the tenant's delta overlay crossed its compaction
+    /// threshold and rewrote its base CSR.
+    pub compacted: bool,
+}
+
+/// One tenant: the evolving original-domain graph plus the currently
+/// visible entry. Two locks so readers never wait on update compute
+/// (see module docs).
+struct TenantState {
+    name: String,
+    /// Original-domain evolving graph; held for the whole update.
+    delta: Mutex<DeltaGraph>,
+    /// The visible entry; held only for pointer clone/store.
+    current: Mutex<Arc<GraphEntry>>,
+}
+
 /// Handle-indexed table of resident graphs. Registration is rare and
-/// mutex-guarded; lookups clone an `Arc`.
-#[derive(Debug, Default)]
+/// mutex-guarded; lookups clone two `Arc`s.
+#[derive(Default)]
 pub struct GraphRegistry {
-    entries: Mutex<Vec<Arc<GraphEntry>>>,
+    entries: Mutex<Vec<Arc<TenantState>>>,
 }
 
 impl GraphRegistry {
@@ -78,8 +129,8 @@ impl GraphRegistry {
         GraphRegistry::default()
     }
 
-    /// Preprocess `csr` into the relabeled domain and make it resident.
-    /// Square adjacencies only (GCN propagation).
+    /// Preprocess `csr` into the relabeled domain and make it resident
+    /// at epoch 0. Square adjacencies only (GCN propagation).
     pub fn register(&self, name: &str, csr: &Csr) -> Result<GraphHandle> {
         anyhow::ensure!(
             csr.n_rows == csr.n_cols,
@@ -96,20 +147,70 @@ impl GraphRegistry {
             relabeled,
             fingerprint,
             perm: sorted.perm,
+            inv: sorted.inv,
+            epoch: 0,
+        });
+        let tenant = Arc::new(TenantState {
+            name: name.to_string(),
+            delta: Mutex::new(DeltaGraph::new(csr.clone())),
+            current: Mutex::new(entry),
         });
         let mut entries = self.entries.lock().unwrap();
         let handle = GraphHandle(entries.len() as u32);
-        entries.push(entry);
+        entries.push(tenant);
         Ok(handle)
     }
 
-    pub fn get(&self, handle: GraphHandle) -> Result<Arc<GraphEntry>> {
+    fn tenant(&self, handle: GraphHandle) -> Result<Arc<TenantState>> {
         self.entries
             .lock()
             .unwrap()
             .get(handle.0 as usize)
             .cloned()
             .ok_or_else(|| anyhow!("unknown graph handle {:?}", handle))
+    }
+
+    /// The tenant's currently visible entry.
+    pub fn get(&self, handle: GraphHandle) -> Result<Arc<GraphEntry>> {
+        let t = self.tenant(handle)?;
+        let entry = t.current.lock().unwrap().clone();
+        Ok(entry)
+    }
+
+    /// Apply an edge-update batch to a tenant and swap in the next
+    /// epoch's entry. Concurrent updates to the same tenant serialize
+    /// on its delta lock; readers only contend on the final pointer
+    /// swap. Errors (out-of-bounds updates) leave the tenant untouched.
+    pub fn update(&self, handle: GraphHandle, updates: &[EdgeUpdate]) -> Result<GraphUpdate> {
+        let t = self.tenant(handle)?;
+        let mut delta = t.delta.lock().unwrap();
+        let old = t.current.lock().unwrap().clone();
+        let report = delta.apply(updates)?;
+        let new_csr = delta.snapshot();
+        // incremental degree re-bucketing: only rows whose degree
+        // changed move; the relabeled row structure doubles as the old
+        // sorted row pointer
+        let perm = incremental_perm(&old.perm, &old.relabeled.row_ptr, &report.changes);
+        let inv = invert_perm(&perm);
+        let relabeled = Arc::new(relabel_sorted(&new_csr, &perm, &inv));
+        let fingerprint = GraphFingerprint::of(&relabeled);
+        let entry = Arc::new(GraphEntry {
+            name: t.name.clone(),
+            n: old.n,
+            relabeled,
+            fingerprint,
+            perm,
+            inv,
+            epoch: old.epoch + 1,
+        });
+        *t.current.lock().unwrap() = Arc::clone(&entry);
+        Ok(GraphUpdate {
+            old,
+            new: entry,
+            changes: report.changes,
+            staged_ops: report.staged_ops,
+            compacted: report.compacted,
+        })
     }
 
     /// Number of resident graphs.
@@ -120,6 +221,55 @@ impl GraphRegistry {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+impl std::fmt::Debug for GraphRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphRegistry").field("tenants", &self.len()).finish()
+    }
+}
+
+/// `P·A·Pᵀ` given a known sort permutation: rows gathered through
+/// `perm`, columns mapped through `inv`, each row re-sorted by its new
+/// column ids only when the mapping disturbed its order. Equal to
+/// [`Csr::relabel`] (the mapping is bijective, so no duplicates can
+/// arise) without the full canonicalization pass.
+fn relabel_sorted(csr: &Csr, perm: &[u32], inv: &[u32]) -> Csr {
+    let n = csr.n_rows;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col_idx: Vec<u32> = Vec::with_capacity(csr.nnz());
+    let mut vals: Vec<f32> = Vec::with_capacity(csr.nnz());
+    row_ptr.push(0usize);
+    let mut scratch: Vec<(u32, f32)> = Vec::new();
+    for &src in perm {
+        let start = col_idx.len();
+        let mut ascending = true;
+        for (c, v) in csr.row(src as usize) {
+            let mapped = inv[c as usize];
+            if ascending {
+                if col_idx.len() > start && *col_idx.last().unwrap() > mapped {
+                    ascending = false;
+                } else {
+                    col_idx.push(mapped);
+                    vals.push(v);
+                    continue;
+                }
+            }
+            col_idx.push(mapped);
+            vals.push(v);
+        }
+        if !ascending {
+            scratch.clear();
+            scratch.extend(col_idx[start..].iter().copied().zip(vals[start..].iter().copied()));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            for (k, &(c, v)) in scratch.iter().enumerate() {
+                col_idx[start + k] = c;
+                vals[start + k] = v;
+            }
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr { n_rows: n, n_cols: csr.n_cols, row_ptr, col_idx, vals }
 }
 
 #[cfg(test)]
@@ -147,6 +297,7 @@ mod tests {
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.get(a).unwrap().n, 20);
         assert_eq!(reg.get(b).unwrap().name, "b");
+        assert_eq!(reg.get(a).unwrap().epoch, 0);
         assert!(reg.get(GraphHandle(7)).is_err());
     }
 
@@ -166,6 +317,9 @@ mod tests {
         let x: Vec<f32> = (0..25 * f).map(|i| i as f32).collect();
         let back = e.unpermute_rows(&e.permute_rows(&x, f), f);
         assert_eq!(back, x);
+        for (orig, &pos) in e.inv.iter().enumerate() {
+            assert_eq!(e.perm[pos as usize] as usize, orig, "inv inverts perm");
+        }
     }
 
     #[test]
@@ -178,5 +332,64 @@ mod tests {
         for r in 1..e.n {
             assert!(e.relabeled.degree(r - 1) <= e.relabeled.degree(r));
         }
+    }
+
+    #[test]
+    fn update_bumps_epoch_and_matches_fresh_registration() {
+        let reg = GraphRegistry::new();
+        let base = random_csr(5, 35);
+        let h = reg.register("g", &base).unwrap();
+        let mut rng = Pcg::seed_from(17);
+        let mut cur = base;
+        for round in 1..=3u64 {
+            let batch: Vec<EdgeUpdate> = (0..6)
+                .map(|_| EdgeUpdate::Insert {
+                    row: rng.range(0, 35) as u32,
+                    col: rng.range(0, 35) as u32,
+                    val: rng.f32() + 0.1,
+                })
+                .collect();
+            let up = reg.update(h, &batch).unwrap();
+            assert_eq!(up.new.epoch, round);
+            assert_eq!(up.old.epoch, round - 1);
+            assert_eq!(up.staged_ops, 6);
+            // oracle: register the updated matrix fresh and compare
+            let mut dg = crate::delta::DeltaGraph::new(cur.clone());
+            dg.apply(&batch).unwrap();
+            cur = dg.snapshot();
+            let oracle = GraphRegistry::new();
+            let oh = oracle.register("o", &cur).unwrap();
+            let want = oracle.get(oh).unwrap();
+            let got = reg.get(h).unwrap();
+            assert_eq!(got.perm, want.perm, "incremental perm == fresh sort");
+            assert_eq!(*got.relabeled, *want.relabeled, "relabeled matrices equal");
+            assert_eq!(got.fingerprint, want.fingerprint);
+        }
+    }
+
+    #[test]
+    fn old_entry_survives_update_untouched() {
+        let reg = GraphRegistry::new();
+        let base = random_csr(6, 20);
+        let h = reg.register("g", &base).unwrap();
+        let old = reg.get(h).unwrap();
+        let old_fp = old.fingerprint;
+        reg.update(h, &[EdgeUpdate::Insert { row: 0, col: 19, val: 5.0 }]).unwrap();
+        // the captured Arc still describes epoch 0
+        assert_eq!(old.epoch, 0);
+        assert_eq!(old.fingerprint, old_fp);
+        let new = reg.get(h).unwrap();
+        assert_eq!(new.epoch, 1);
+        assert_ne!(new.fingerprint, old_fp, "topology change must re-fingerprint");
+    }
+
+    #[test]
+    fn update_rejects_out_of_bounds_and_keeps_epoch() {
+        let reg = GraphRegistry::new();
+        let h = reg.register("g", &random_csr(7, 10)).unwrap();
+        let err = reg.update(h, &[EdgeUpdate::Insert { row: 99, col: 0, val: 1.0 }]);
+        assert!(err.is_err());
+        assert_eq!(reg.get(h).unwrap().epoch, 0, "failed update swaps nothing");
+        assert!(reg.update(GraphHandle(9), &[]).is_err(), "unknown handle");
     }
 }

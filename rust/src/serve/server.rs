@@ -11,17 +11,32 @@
 //!   queue rejects immediately — back-pressure instead of unbounded
 //!   buffering) and returns a per-request reply channel.
 //! * One worker thread drains **everything** pending per round, groups
-//!   requests by `(graph, model)`, plans column fusion per group with
-//!   the shared [`ColumnBatcher`] against the configured virtual width
-//!   ladder, executes each fused batch, splits, and replies. Requests
-//!   that arrive while a round is executing coalesce into the next
-//!   round — exactly how load spikes turn into wider (cheaper per
+//!   requests by `(graph, epoch, model)`, plans column fusion per group
+//!   with the shared [`ColumnBatcher`] against the configured virtual
+//!   width ladder, executes each fused batch, splits, and replies.
+//!   Requests that arrive while a round is executing coalesce into the
+//!   next round — exactly how load spikes turn into wider (cheaper per
 //!   request) batches.
 //! * Plans come from a **bounded** [`PlanCache`] (LRU), so many graphs
 //!   can be resident with preprocessing memory capped; evicted tenants
 //!   rebuild on their next batch.
 //! * Shutdown (drop) is graceful: the worker drains what is queued,
 //!   replies, then exits.
+//!
+//! ## Epochs and the `UpdateGraph` request kind
+//!
+//! [`Server::submit_update`] enqueues a batch of
+//! [`EdgeUpdate`]s against a tenant. The worker applies updates at the
+//! **end** of each round, after the round's compute groups: the
+//! registry swaps in an epoch+1 [`GraphEntry`] (atomic pointer swap —
+//! submitters never wait on update compute), and the cached plan is
+//! *patched* via [`patch_identity_plan`] + [`PlanCache::refresh`]
+//! instead of rebuilt. Compute requests capture their tenant's entry
+//! `Arc` **at submit**, so anything already queued — in flight —
+//! finishes on the epoch it saw (and, having run before the swap, on
+//! the still-cached plan), while requests submitted after the update's
+//! reply pick up the patched plan. Mixed-epoch requests in one round
+//! simply land in different fusion groups.
 //!
 //! ## Domains
 //!
@@ -34,9 +49,10 @@ use super::gcn::{spmm_relabeled, GcnForward, GcnModel};
 use super::metrics::ServeMetrics;
 use super::registry::{GraphEntry, GraphHandle, GraphRegistry};
 use crate::coordinator::ColumnBatcher;
+use crate::delta::{patch_identity_plan, EdgeUpdate};
 use crate::graph::csr::Csr;
 use crate::partition::patterns::PartitionParams;
-use crate::pipeline::PlanCache;
+use crate::pipeline::{GraphKey, PlanCache};
 use crate::runtime::HostTensor;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
@@ -96,15 +112,58 @@ pub struct Response {
     pub y: HostTensor,
 }
 
-struct Pending {
+/// Reply to an `UpdateGraph` request: what the swap did.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateReport {
+    /// The tenant's epoch after the swap.
+    pub epoch: u64,
+    /// Rows whose adjacency changed.
+    pub rows_changed: usize,
+    /// Edge updates staged by the batch.
+    pub staged_ops: usize,
+    /// Whether the tenant's overlay compacted its base CSR.
+    pub compacted: bool,
+    /// True if a resident plan was patched in place
+    /// ([`PlanCache::refresh`]); false if no plan was resident (the
+    /// next request builds from the new matrix).
+    pub plan_patched: bool,
+    /// Registry update + plan patch time, seconds.
+    pub patch_secs: f64,
+}
+
+struct ComputePending {
     graph: GraphHandle,
+    /// The tenant entry captured at submit — this request's epoch.
+    entry: Arc<GraphEntry>,
     payload: Payload,
     reply: Sender<Result<Response>>,
     enqueued: Instant,
 }
 
+struct UpdatePending {
+    graph: GraphHandle,
+    updates: Vec<EdgeUpdate>,
+    reply: Sender<Result<UpdateReport>>,
+    enqueued: Instant,
+}
+
+/// The queue's request kinds: compute (SpMM / GCN) and graph updates.
+enum QueuedRequest {
+    Compute(ComputePending),
+    UpdateGraph(UpdatePending),
+}
+
+impl QueuedRequest {
+    fn enqueued(&self) -> Instant {
+        match self {
+            QueuedRequest::Compute(p) => p.enqueued,
+            QueuedRequest::UpdateGraph(p) => p.enqueued,
+        }
+    }
+}
+
 struct QueueState {
-    pending: Vec<Pending>,
+    pending: Vec<QueuedRequest>,
     paused: bool,
     shutdown: bool,
 }
@@ -120,6 +179,9 @@ pub struct Server {
     registry: Arc<GraphRegistry>,
     shared: Arc<SharedQueue>,
     metrics: Arc<ServeMetrics>,
+    /// Shared with the worker: updates patch plans in place, the worker
+    /// reads them per round.
+    cache: Arc<PlanCache>,
     queue_capacity: usize,
     max_width: usize,
     worker: Option<std::thread::JoinHandle<()>>,
@@ -134,11 +196,11 @@ impl Server {
         let shared = Arc::clone(&server.shared);
         let registry = Arc::clone(&server.registry);
         let metrics = Arc::clone(&server.metrics);
+        let cache = Arc::clone(&server.cache);
         let worker = std::thread::Builder::new()
             .name("accel-gcn-serve".into())
             .spawn(move || {
                 let pool = ThreadPool::new(config.threads);
-                let cache = PlanCache::bounded(config.plan_capacity);
                 worker_loop(shared, registry, metrics, batcher, pool, cache, config.params);
             })
             .expect("spawn serve worker");
@@ -160,6 +222,7 @@ impl Server {
                 cv: Condvar::new(),
             }),
             metrics: Arc::new(ServeMetrics::new()),
+            cache: Arc::new(PlanCache::bounded(config.plan_capacity)),
             queue_capacity: config.queue_capacity,
             max_width: batcher.max_width,
             worker: None,
@@ -182,6 +245,11 @@ impl Server {
         &self.metrics
     }
 
+    /// The server's plan cache (shared with the worker).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
     /// Widest fused batch the ladder supports.
     pub fn max_width(&self) -> usize {
         self.max_width
@@ -190,6 +258,11 @@ impl Server {
     /// Resident graph count.
     pub fn resident_graphs(&self) -> usize {
         self.registry.len()
+    }
+
+    /// A tenant's current epoch.
+    pub fn graph_epoch(&self, graph: GraphHandle) -> Result<u64> {
+        Ok(self.registry.get(graph)?.epoch)
     }
 
     /// Hold the worker between rounds: submissions keep queueing (and
@@ -204,6 +277,29 @@ impl Server {
     pub fn resume(&self) {
         self.shared.state.lock().unwrap().paused = false;
         self.shared.cv.notify_all();
+    }
+
+    fn enqueue(&self, req: QueuedRequest) -> Result<()> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                self.metrics.rejected.inc();
+                return Err(anyhow!("server is shutting down"));
+            }
+            if st.pending.len() >= self.queue_capacity {
+                self.metrics.rejected.inc();
+                return Err(anyhow!(
+                    "queue full ({} pending, capacity {})",
+                    st.pending.len(),
+                    self.queue_capacity
+                ));
+            }
+            st.pending.push(req);
+            self.metrics.queue_depth.set(st.pending.len() as i64);
+        }
+        self.metrics.submitted.inc();
+        self.shared.cv.notify_one();
+        Ok(())
     }
 
     /// Validate and enqueue; returns the reply channel. Errors on shape
@@ -222,32 +318,51 @@ impl Server {
             return Err(e);
         }
         let (reply, rx) = channel();
-        let pending = Pending {
+        self.enqueue(QueuedRequest::Compute(ComputePending {
             graph: req.graph,
+            entry,
             payload: req.payload,
             reply,
             enqueued: Instant::now(),
-        };
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            if st.shutdown {
-                self.metrics.rejected.inc();
-                return Err(anyhow!("server is shutting down"));
-            }
-            if st.pending.len() >= self.queue_capacity {
-                self.metrics.rejected.inc();
-                return Err(anyhow!(
-                    "queue full ({} pending, capacity {})",
-                    st.pending.len(),
-                    self.queue_capacity
-                ));
-            }
-            st.pending.push(pending);
-            self.metrics.queue_depth.set(st.pending.len() as i64);
-        }
-        self.metrics.submitted.inc();
-        self.shared.cv.notify_one();
+        }))?;
         Ok(rx)
+    }
+
+    /// Enqueue an `UpdateGraph` request: apply `updates` to the tenant
+    /// and swap in the next epoch. Ordering guarantee: compute requests
+    /// submitted *before* this call execute against the pre-update
+    /// epoch, ones submitted after the reply observe the new epoch.
+    pub fn submit_update(
+        &self,
+        graph: GraphHandle,
+        updates: Vec<EdgeUpdate>,
+    ) -> Result<Receiver<Result<UpdateReport>>> {
+        if self.worker.as_ref().is_some_and(|h| h.is_finished()) {
+            self.metrics.rejected.inc();
+            return Err(anyhow!("serve worker is not running"));
+        }
+        let entry = self.registry.get(graph)?;
+        for u in &updates {
+            let (r, c) = (u.row() as usize, u.col() as usize);
+            if r >= entry.n || c >= entry.n {
+                self.metrics.rejected.inc();
+                return Err(anyhow!("update ({r},{c}) out of bounds for {}-node tenant", entry.n));
+            }
+        }
+        let (reply, rx) = channel();
+        self.enqueue(QueuedRequest::UpdateGraph(UpdatePending {
+            graph,
+            updates,
+            reply,
+            enqueued: Instant::now(),
+        }))?;
+        Ok(rx)
+    }
+
+    /// [`Server::submit_update`] + wait for the swap to complete.
+    pub fn update_graph(&self, graph: GraphHandle, updates: Vec<EdgeUpdate>) -> Result<UpdateReport> {
+        let rx = self.submit_update(graph, updates)?;
+        rx.recv().map_err(|_| anyhow!("server dropped the update reply"))?
     }
 
     /// Convenience: submit a single SpMM request.
@@ -342,11 +457,11 @@ fn worker_loop(
     metrics: Arc<ServeMetrics>,
     batcher: ColumnBatcher,
     pool: ThreadPool,
-    cache: PlanCache,
+    cache: Arc<PlanCache>,
     params: PartitionParams,
 ) {
     loop {
-        let round: Vec<Pending> = {
+        let round: Vec<QueuedRequest> = {
             let mut st = shared.state.lock().unwrap();
             while (st.pending.is_empty() || st.paused) && !st.shutdown {
                 st = shared.cv.wait(st).unwrap();
@@ -360,33 +475,107 @@ fn worker_loop(
         };
         let picked_up = Instant::now();
         for p in &round {
-            metrics.queue_wait.record(picked_up.duration_since(p.enqueued).as_secs_f64());
+            metrics.queue_wait.record(picked_up.duration_since(p.enqueued()).as_secs_f64());
         }
-        // group by tenant (and, for GCN, by model identity); BTreeMap
-        // keys make the processing order deterministic
-        let mut spmm_groups: BTreeMap<GraphHandle, Vec<Pending>> = BTreeMap::new();
-        let mut gcn_groups: BTreeMap<(GraphHandle, usize), Vec<Pending>> = BTreeMap::new();
-        for p in round {
-            match &p.payload {
-                Payload::Spmm { .. } => spmm_groups.entry(p.graph).or_default().push(p),
-                Payload::Gcn { model, .. } => {
-                    let key = (p.graph, Arc::as_ptr(model) as usize);
-                    gcn_groups.entry(key).or_default().push(p);
-                }
+        // compute groups run first, updates apply at round end: every
+        // compute request executes against the entry it captured at
+        // submit (its epoch), so serving them before the swap lets
+        // old-epoch groups hit the still-cached plan — which the update
+        // then patches in place, instead of the update dropping the key
+        // and forcing a from-scratch rebuild of the *old* topology for
+        // requests already in the round
+        let mut spmm_groups: BTreeMap<(GraphHandle, u64), Vec<ComputePending>> = BTreeMap::new();
+        let mut gcn_groups: BTreeMap<(GraphHandle, u64, usize), Vec<ComputePending>> =
+            BTreeMap::new();
+        let mut updates: Vec<UpdatePending> = Vec::new();
+        for q in round {
+            match q {
+                QueuedRequest::UpdateGraph(u) => updates.push(u),
+                QueuedRequest::Compute(p) => match &p.payload {
+                    Payload::Spmm { .. } => {
+                        spmm_groups.entry((p.graph, p.entry.epoch)).or_default().push(p)
+                    }
+                    Payload::Gcn { model, .. } => {
+                        let key = (p.graph, p.entry.epoch, Arc::as_ptr(model) as usize);
+                        gcn_groups.entry(key).or_default().push(p)
+                    }
+                },
             }
         }
-        for (graph, group) in spmm_groups {
-            run_spmm_group(graph, group, &registry, &metrics, &batcher, &pool, &cache, params);
+        for (_, group) in spmm_groups {
+            run_spmm_group(group, &metrics, &batcher, &pool, &cache, params);
         }
-        for ((graph, _), group) in gcn_groups {
-            run_gcn_group(graph, group, &registry, &metrics, &batcher, &pool, &cache, params);
+        for (_, group) in gcn_groups {
+            run_gcn_group(group, &metrics, &batcher, &pool, &cache, params);
+        }
+        for u in updates {
+            apply_update(u, &registry, &metrics, &cache, params);
+        }
+    }
+}
+
+/// Apply one `UpdateGraph` request: registry swap (epoch + 1) and an
+/// in-place plan patch via [`PlanCache::refresh`]. The expensive work
+/// happens here in the worker; submitters only ever contend on the
+/// registry's pointer-swap lock.
+fn apply_update(
+    u: UpdatePending,
+    registry: &GraphRegistry,
+    metrics: &ServeMetrics,
+    cache: &PlanCache,
+    params: PartitionParams,
+) {
+    let t0 = Instant::now();
+    match registry.update(u.graph, &u.updates) {
+        Ok(gu) => {
+            let old_key = GraphKey { fingerprint: gu.old.fingerprint, params };
+            let plan_patched = match cache.peek(&old_key) {
+                Some(old_plan) => {
+                    match patch_identity_plan(
+                        &old_plan,
+                        &gu.new.relabeled,
+                        &gu.changes,
+                        Some(gu.new.fingerprint),
+                    ) {
+                        Ok((plan, _stats)) => {
+                            cache.refresh(&old_key, Arc::new(plan));
+                            true
+                        }
+                        // patching must never take the server down: drop
+                        // the stale plan and let the next batch rebuild
+                        Err(_) => {
+                            cache.invalidate(&old_key);
+                            false
+                        }
+                    }
+                }
+                None => false, // nothing resident; next batch builds fresh
+            };
+            let patch_secs = t0.elapsed().as_secs_f64();
+            metrics.updates.inc();
+            metrics.plan_swaps.inc();
+            metrics.patch_latency.record(patch_secs);
+            metrics.epoch.set_max(gu.new.epoch as i64);
+            metrics.total.record(u.enqueued.elapsed().as_secs_f64());
+            let _ = u.reply.send(Ok(UpdateReport {
+                epoch: gu.new.epoch,
+                rows_changed: gu.changes.len(),
+                staged_ops: gu.staged_ops,
+                compacted: gu.compacted,
+                plan_patched,
+                patch_secs,
+            }));
+        }
+        Err(e) => {
+            metrics.errors.inc();
+            let _ = u.reply.send(Err(e));
         }
     }
 }
 
 /// Reply to every member of a failed group (anyhow errors don't clone;
 /// each member gets the formatted chain).
-fn fail_group(group: Vec<Pending>, metrics: &ServeMetrics, e: &anyhow::Error) {
+fn fail_group(group: Vec<ComputePending>, metrics: &ServeMetrics, e: &anyhow::Error) {
     for p in group {
         metrics.errors.inc();
         metrics.total.record(p.enqueued.elapsed().as_secs_f64());
@@ -394,29 +583,25 @@ fn fail_group(group: Vec<Pending>, metrics: &ServeMetrics, e: &anyhow::Error) {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_spmm_group(
-    graph: GraphHandle,
-    group: Vec<Pending>,
-    registry: &GraphRegistry,
+    group: Vec<ComputePending>,
     metrics: &ServeMetrics,
     batcher: &ColumnBatcher,
     pool: &ThreadPool,
     cache: &PlanCache,
     params: PartitionParams,
 ) {
-    let entry = match registry.get(graph) {
-        Ok(e) => e,
-        Err(e) => return fail_group(group, metrics, &e),
-    };
-    let widths: Vec<usize> = group.iter().map(Pending::payload_width).collect();
+    // all members share (graph, epoch): any member's captured entry is
+    // the group's entry
+    let entry = Arc::clone(&group[0].entry);
+    let widths: Vec<usize> = group.iter().map(ComputePending::payload_width).collect();
     let plans = match batcher.plan(&widths) {
         Ok(p) => p,
         Err(e) => return fail_group(group, metrics, &e),
     };
     let plan = cache.plan_for_keyed(entry.fingerprint, &entry.relabeled, params);
     let n = entry.n;
-    let mut members: Vec<Option<Pending>> = group.into_iter().map(Some).collect();
+    let mut members: Vec<Option<ComputePending>> = group.into_iter().map(Some).collect();
     for bp in &plans {
         // fuse: copy member columns into the padded fused matrix while
         // permuting rows into the relabeled domain (single pass)
@@ -464,7 +649,7 @@ fn run_spmm_group(
     debug_assert!(members.iter().all(Option::is_none), "every member replied");
 }
 
-impl Pending {
+impl ComputePending {
     fn payload_width(&self) -> usize {
         match &self.payload {
             Payload::Spmm { x } | Payload::Gcn { x, .. } => x.shape()[1],
@@ -472,11 +657,8 @@ impl Pending {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_gcn_group(
-    graph: GraphHandle,
-    group: Vec<Pending>,
-    registry: &GraphRegistry,
+    group: Vec<ComputePending>,
     metrics: &ServeMetrics,
     batcher: &ColumnBatcher,
     pool: &ThreadPool,
@@ -487,10 +669,7 @@ fn run_gcn_group(
         Payload::Gcn { model, .. } => Arc::clone(model),
         Payload::Spmm { .. } => unreachable!("gcn group"),
     };
-    let entry = match registry.get(graph) {
-        Ok(e) => e,
-        Err(e) => return fail_group(group, metrics, &e),
-    };
+    let entry = Arc::clone(&group[0].entry);
     // pack members so that k · max_layer_width fits the ladder: the
     // batcher plans over each member's *widest* layer, which bounds
     // every per-layer fused width in the stack
@@ -503,7 +682,7 @@ fn run_gcn_group(
     let in_dim = model.config.in_dim;
     let out_dim = model.config.out_dim;
     let n = entry.n;
-    let mut members: Vec<Option<Pending>> = group.into_iter().map(Some).collect();
+    let mut members: Vec<Option<ComputePending>> = group.into_iter().map(Some).collect();
     for bp in &plans {
         let xs_rel: Vec<Vec<f32>> = bp
             .members
@@ -535,7 +714,7 @@ fn run_gcn_group(
                 }
             }
             Err(e) => {
-                let failed: Vec<Pending> =
+                let failed: Vec<ComputePending> =
                     bp.members.iter().filter_map(|&m| members[m].take()).collect();
                 fail_group(failed, metrics, &e);
             }
@@ -696,7 +875,11 @@ mod tests {
         let mut broken = GcnModel::random(ModelConfig::gcn(16, 8, 4, 2), 3);
         broken.weights.pop();
         assert!(server.submit_gcn(h, Arc::new(broken), features(&mut rng, 12, 16)).is_err());
-        assert_eq!(server.metrics().rejected.get(), 6, "unknown handle precedes validation");
+        // out-of-bounds UpdateGraph
+        assert!(server
+            .submit_update(h, vec![EdgeUpdate::Insert { row: 50, col: 0, val: 1.0 }])
+            .is_err());
+        assert_eq!(server.metrics().rejected.get(), 7, "unknown handle precedes validation");
     }
 
     #[test]
@@ -717,5 +900,123 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().expect("reply delivered before shutdown").is_ok());
         }
+    }
+
+    #[test]
+    fn update_graph_swaps_epoch_and_serves_new_topology() {
+        let server = Server::start(ServeConfig {
+            threads: 2,
+            ladder: vec![32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(9, 30);
+        let h = server.register_graph("g", &g).unwrap();
+        let mut rng = Pcg::seed_from(11);
+        // warm the plan cache so the update patches instead of dropping
+        server.submit_spmm(h, features(&mut rng, 30, 8)).unwrap().recv().unwrap().unwrap();
+        let batch = vec![
+            EdgeUpdate::Insert { row: 0, col: 29, val: 2.5 },
+            EdgeUpdate::Insert { row: 7, col: 3, val: -1.0 },
+            EdgeUpdate::Delete { row: 0, col: 0 },
+        ];
+        let report = server.update_graph(h, batch.clone()).unwrap();
+        assert_eq!(report.epoch, 1);
+        assert!(report.plan_patched, "warm plan must be patched, not dropped");
+        assert!(report.rows_changed >= 2);
+        assert_eq!(server.graph_epoch(h).unwrap(), 1);
+        // post-update responses match the dense reference on the NEW graph
+        let mut dg = crate::delta::DeltaGraph::new(g);
+        dg.apply(&batch).unwrap();
+        let updated = dg.snapshot();
+        let x = features(&mut rng, 30, 12);
+        let want = updated.spmm_dense(x.as_f32().unwrap(), 12);
+        let resp = server.submit_spmm(h, x).unwrap().recv().unwrap().unwrap();
+        assert_allclose(resp.y.as_f32().unwrap(), &want, 1e-4, 1e-4, "post-update spmm");
+        let m = server.metrics();
+        assert_eq!(m.plan_swaps.get(), 1);
+        assert_eq!(m.updates.get(), 1);
+        assert_eq!(m.epoch.get(), 1);
+        assert!(m.patch_latency.snapshot().count == 1);
+    }
+
+    #[test]
+    fn in_flight_requests_finish_on_old_epoch() {
+        // pause; queue compute A, then an update, then compute B; resume.
+        // A captured epoch 0 and must see the old adjacency; B is
+        // submitted after the update *reply*, so it sees epoch 1.
+        let server = Server::start(ServeConfig {
+            threads: 1,
+            ladder: vec![32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(10, 25);
+        let h = server.register_graph("g", &g).unwrap();
+        let mut rng = Pcg::seed_from(13);
+        let xa = features(&mut rng, 25, 8);
+        let want_old = g.spmm_dense(xa.as_f32().unwrap(), 8);
+        server.pause();
+        let rx_a = server.submit_spmm(h, xa).unwrap();
+        let batch = vec![EdgeUpdate::Insert { row: 1, col: 24, val: 9.0 }];
+        let rx_u = server.submit_update(h, batch.clone()).unwrap();
+        server.resume();
+        let a = rx_a.recv().unwrap().unwrap();
+        assert_allclose(
+            a.y.as_f32().unwrap(),
+            &want_old,
+            1e-4,
+            1e-4,
+            "in-flight request must execute on the epoch it captured",
+        );
+        let rep = rx_u.recv().unwrap().unwrap();
+        assert_eq!(rep.epoch, 1);
+        // after the update: new topology served
+        let mut dg = crate::delta::DeltaGraph::new(g);
+        dg.apply(&batch).unwrap();
+        let updated = dg.snapshot();
+        let xb = features(&mut rng, 25, 8);
+        let want_new = updated.spmm_dense(xb.as_f32().unwrap(), 8);
+        let b = server.submit_spmm(h, xb).unwrap().recv().unwrap().unwrap();
+        assert_allclose(b.y.as_f32().unwrap(), &want_new, 1e-4, 1e-4, "post-update request");
+    }
+
+    #[test]
+    fn gcn_correct_across_update_epochs() {
+        let server = Server::start(ServeConfig {
+            threads: 2,
+            ladder: vec![16, 32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(12, 30);
+        let h = server.register_graph("g", &g).unwrap();
+        let model = Arc::new(GcnModel::random(ModelConfig::gcn(8, 6, 3, 2), 5));
+        let mut rng = Pcg::seed_from(21);
+        let mut dg = crate::delta::DeltaGraph::new(g);
+        for round in 0..3 {
+            let batch: Vec<EdgeUpdate> = (0..4)
+                .map(|_| EdgeUpdate::Insert {
+                    row: rng.range(0, 30) as u32,
+                    col: rng.range(0, 30) as u32,
+                    val: rng.f32() + 0.1,
+                })
+                .collect();
+            let rep = server.update_graph(h, batch.clone()).unwrap();
+            assert_eq!(rep.epoch, round + 1);
+            dg.apply(&batch).unwrap();
+            let cur = dg.snapshot();
+            let x = features(&mut rng, 30, 8);
+            let want = reference_forward(&cur, &model, x.as_f32().unwrap());
+            let resp = server.submit_gcn(h, Arc::clone(&model), x).unwrap().recv().unwrap().unwrap();
+            assert_allclose(
+                resp.y.as_f32().unwrap(),
+                &want,
+                1e-3,
+                1e-3,
+                &format!("gcn after epoch {}", round + 1),
+            );
+        }
+        assert_eq!(server.metrics().plan_swaps.get(), 3);
     }
 }
