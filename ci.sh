@@ -24,6 +24,13 @@ cargo run --release --bin accel-gcn -- update-demo \
 cargo run --release --bin accel-gcn -- bench --experiment delta_update --quick \
     --out results-ci-delta
 
+# Microkernel smoke: scalar-vs-tiled head-to-head at tiny scale with
+# every cell checked against the dense reference (the bench exits
+# nonzero if either path diverges), so the tiled hot path — including
+# its ragged-tail widths — is exercised on every CI run.
+cargo run --release --bin accel-gcn -- bench --experiment microkernel --quick \
+    --out results-ci-micro
+
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
 # has been run tree-wide.

@@ -181,16 +181,14 @@ pub fn run(cfg: &DeltaConfig) -> Result<Vec<DeltaPoint>> {
                 plan = Arc::new(patched);
                 // numeric check against the dense reference
                 let f = cfg.coldim.min(8); // keep the verify pass cheap
-                let x: Arc<Vec<f32>> =
-                    Arc::new((0..cfg.nodes * f).map(|_| rng.f32() - 0.5).collect());
-                let y = plan
-                    .sorted
-                    .unpermute_rows(&spmm_block_level_parallel(&plan, &x, f, &pool), f);
+                let x: Vec<f32> = (0..cfg.nodes * f).map(|_| rng.f32() - 0.5).collect();
+                // fused unpermute-scatter: already in original row order
+                let y = spmm_block_level_parallel(&plan, &x, f, &pool);
                 verified &= allclose(&y, &new_csr.spmm_dense(&x, f), 1e-3, 1e-3);
             }
             // post-update SpMM throughput on the final patched plan
-            let x: Arc<Vec<f32>> =
-                Arc::new((0..cfg.nodes * cfg.coldim).map(|_| rng.f32() - 0.5).collect());
+            let x: Vec<f32> =
+                (0..cfg.nodes * cfg.coldim).map(|_| rng.f32() - 0.5).collect();
             let m = time_fn("delta_spmm", 1, 0.05, || {
                 std::hint::black_box(spmm_block_level_parallel(&plan, &x, cfg.coldim, &pool));
             });

@@ -9,9 +9,10 @@
 //!
 //! Timing methodology: one [`SpmmPlan`] is built per graph (plan build
 //! is *not* timed — that is the point of the pipeline), the input
-//! matrix is shared via `Arc`, and each (coldim, threads) cell times
-//! the sorted-domain parallel executor with a persistent pool, p50 over
-//! [`time_fn`]'s batched samples.
+//! matrix is borrowed directly by the scoped shard jobs (zero-copy),
+//! and each (coldim, threads) cell times the full tiled executor —
+//! including its fused unpermute-scatter — with a persistent pool, p50
+//! over [`time_fn`]'s batched samples.
 
 use crate::graph::datasets::{by_name, materialize, ScalePolicy};
 use crate::partition::patterns::PartitionParams;
@@ -60,8 +61,7 @@ pub fn exec_scaling(
 
     let mut points = Vec::with_capacity(coldims.len() * threads.len());
     for &coldim in coldims {
-        let x: Arc<Vec<f32>> =
-            Arc::new((0..n_cols * coldim).map(|_| rng.f32() - 0.5).collect());
+        let x: Vec<f32> = (0..n_cols * coldim).map(|_| rng.f32() - 0.5).collect();
         // time every thread count first, then derive speedups from the
         // 1-thread entry so the `threads` ordering doesn't matter
         let timed: Vec<(usize, f64)> = threads

@@ -1,0 +1,198 @@
+//! `microkernel` — old scalar execution path vs the column-tiled
+//! zero-copy path, head to head.
+//!
+//! Both paths run the same block-level schedule over the same
+//! [`SpmmPlan`] and the same shard layout; what differs is everything
+//! this PR's tentpole changed:
+//!
+//! * **scalar** ([`spmm_block_level_parallel_scalar`]) — `Arc` input
+//!   copy, bounds-checked scalar inner loop, per-block `vec!` staging,
+//!   post-join copy pass, separate full unpermute;
+//! * **tiled** ([`spmm_block_level_parallel`]) — borrowed inputs,
+//!   register-tiled autovectorized inner loop, direct-write sharding,
+//!   fused unpermute-scatter.
+//!
+//! The sweep runs on the Collab stand-in (the paper's headline
+//! power-law graph) across threads × column dimensions — including
+//! ragged widths (17) that exercise the tail path — and **every cell is
+//! verified against the dense CSR reference** before it is timed.
+//! Results (GFLOP/s per path + speedup) go to `BENCH_microkernel.json`
+//! so successive PRs can track the hot path.
+
+use crate::graph::datasets::{by_name, materialize, ScalePolicy};
+use crate::partition::patterns::PartitionParams;
+use crate::pipeline::{spmm_block_level_parallel, spmm_block_level_parallel_scalar, SpmmPlan};
+use crate::spmm::spmm_flops;
+use crate::spmm::verify::allclose;
+use crate::util::bench::{time_fn, Table};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Default thread sweep: serial baseline, small, and the paper-relevant
+/// core count.
+pub const DEFAULT_THREADS: [usize; 3] = [1, 2, 8];
+
+/// Default column dimensions: the paper's 16..128 range plus ragged
+/// widths (17) and a non-power-of-two multiple of the tile (96).
+pub const DEFAULT_COLDIMS: [usize; 5] = [16, 17, 64, 96, 128];
+
+/// One timed (coldim, threads) cell: both paths, same plan and input.
+#[derive(Clone, Debug)]
+pub struct MicroPoint {
+    pub graph: String,
+    pub coldim: usize,
+    pub threads: usize,
+    pub scalar_us: f64,
+    pub tiled_us: f64,
+    pub scalar_gflops: f64,
+    pub tiled_gflops: f64,
+    /// `scalar_us / tiled_us`.
+    pub speedup: f64,
+    /// Both paths matched the dense CSR reference on this cell's input.
+    pub verified: bool,
+}
+
+/// Run the head-to-head sweep on one named dataset.
+pub fn run(
+    graph: &str,
+    coldims: &[usize],
+    threads: &[usize],
+    policy: ScalePolicy,
+    seed: u64,
+) -> Result<Vec<MicroPoint>> {
+    let spec = by_name(graph)
+        .ok_or_else(|| anyhow::anyhow!("unknown graph `{graph}` (see `accel-gcn datasets`)"))?;
+    let csr = materialize(spec, policy, seed);
+    let n_cols = csr.n_cols;
+    let nnz = csr.nnz();
+    let plan = Arc::new(SpmmPlan::build(csr, PartitionParams::default()));
+    let mut rng = Pcg::seed_from(seed ^ 0x71c7_0e);
+
+    let mut points = Vec::with_capacity(coldims.len() * threads.len());
+    for &coldim in coldims {
+        let x: Vec<f32> = (0..n_cols * coldim).map(|_| rng.f32() - 0.5).collect();
+        let want = plan.original.spmm_dense(&x, coldim);
+        for &t in threads {
+            let pool = ThreadPool::new(t);
+            // verify first: a fast wrong kernel is worse than no kernel
+            let tiled_y = spmm_block_level_parallel(&plan, &x, coldim, &pool);
+            let scalar_y = spmm_block_level_parallel_scalar(&plan, &x, coldim, &pool);
+            let verified = allclose(&tiled_y, &want, 1e-3, 1e-3)
+                && allclose(&scalar_y, &want, 1e-3, 1e-3);
+            drop((tiled_y, scalar_y));
+            let m_scalar = time_fn("microkernel_scalar", 1, 0.2, || {
+                std::hint::black_box(spmm_block_level_parallel_scalar(&plan, &x, coldim, &pool));
+            });
+            let m_tiled = time_fn("microkernel_tiled", 1, 0.2, || {
+                std::hint::black_box(spmm_block_level_parallel(&plan, &x, coldim, &pool));
+            });
+            let (scalar_s, tiled_s) = (m_scalar.p50(), m_tiled.p50());
+            let flops = spmm_flops(nnz, coldim);
+            points.push(MicroPoint {
+                graph: graph.to_string(),
+                coldim,
+                threads: t,
+                scalar_us: scalar_s * 1e6,
+                tiled_us: tiled_s * 1e6,
+                scalar_gflops: flops / scalar_s.max(1e-12) / 1e9,
+                tiled_gflops: flops / tiled_s.max(1e-12) / 1e9,
+                speedup: scalar_s / tiled_s.max(1e-12),
+                verified,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Render the paper-style table.
+pub fn report(points: &[MicroPoint]) -> String {
+    let mut table = Table::new(&[
+        "graph", "coldim", "threads", "scalar µs", "tiled µs", "scalar GF/s", "tiled GF/s",
+        "speedup", "verified",
+    ]);
+    for p in points {
+        table.row(vec![
+            p.graph.clone(),
+            p.coldim.to_string(),
+            p.threads.to_string(),
+            format!("{:.1}", p.scalar_us),
+            format!("{:.1}", p.tiled_us),
+            format!("{:.2}", p.scalar_gflops),
+            format!("{:.2}", p.tiled_gflops),
+            format!("{:.2}x", p.speedup),
+            p.verified.to_string(),
+        ]);
+    }
+    table.render()
+}
+
+/// The machine-readable form consumed by the perf-trajectory tooling.
+pub fn to_json(points: &[MicroPoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("graph", p.graph.as_str());
+            o.set("coldim", p.coldim);
+            o.set("threads", p.threads);
+            o.set("scalar_us", p.scalar_us);
+            o.set("tiled_us", p.tiled_us);
+            o.set("scalar_gflops", p.scalar_gflops);
+            o.set("tiled_gflops", p.tiled_gflops);
+            o.set("speedup", p.speedup);
+            o.set("verified", p.verified);
+            o
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("experiment", "microkernel");
+    doc.set("baseline", "block-level-parallel-scalar");
+    doc.set("candidate", "block-level-parallel-tiled");
+    doc.set("unit", "us");
+    doc.set("points", rows);
+    doc
+}
+
+/// Write `BENCH_microkernel.json`.
+pub fn save_json(points: &[MicroPoint], path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_json(points).to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shape_verification_and_json() {
+        let pts = run("collab", &[16, 17], &[1, 2], ScalePolicy::tiny(), 7).unwrap();
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(p.verified, "{p:?}: both paths must match the dense reference");
+            assert!(p.scalar_us > 0.0 && p.tiled_us > 0.0, "{p:?}");
+            assert!(p.scalar_gflops.is_finite() && p.tiled_gflops.is_finite(), "{p:?}");
+            assert!(p.speedup > 0.0, "{p:?}");
+        }
+        let json = to_json(&pts).to_pretty();
+        assert!(json.contains("microkernel"));
+        assert!(json.contains("tiled_gflops"));
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.req_arr("points").unwrap().len(), 4);
+        let rendered = report(&pts);
+        assert!(rendered.contains("speedup"));
+    }
+
+    #[test]
+    fn unknown_graph_rejected() {
+        assert!(run("nope", &[16], &[1], ScalePolicy::tiny(), 1).is_err());
+    }
+}

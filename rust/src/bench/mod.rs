@@ -17,11 +17,16 @@
 //! * [`delta_update`] — incremental plan maintenance vs full replanning
 //!   across update-batch sizes × degree-skew regimes, with every batch
 //!   verified bit-for-bit (writes `BENCH_delta_update.json`).
+//! * [`microkernel`] — the old scalar execution path vs the
+//!   column-tiled zero-copy path, threads × column widths (ragged tails
+//!   included), every cell verified against the dense reference
+//!   (writes `BENCH_microkernel.json`).
 
 pub mod paper;
 pub mod ablation;
 pub mod delta_update;
 pub mod exec_scaling;
+pub mod microkernel;
 pub mod train;
 pub mod serve;
 pub mod serve_native;

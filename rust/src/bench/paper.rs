@@ -520,6 +520,25 @@ pub fn run_from_args(args: &Args) -> Result<()> {
             es::report(&pts)
         );
     }
+    if arm("microkernel") {
+        use crate::bench::microkernel as mk;
+        let pts = mk::run(
+            "collab",
+            &mk::DEFAULT_COLDIMS,
+            &mk::DEFAULT_THREADS,
+            cfg.policy,
+            seed,
+        )?;
+        anyhow::ensure!(
+            pts.iter().all(|p| p.verified),
+            "microkernel: a path diverged from the dense reference"
+        );
+        save_bench_json(out, "BENCH_microkernel.json", |p| mk::save_json(&pts, p))?;
+        report += &format!(
+            "=== Microkernel (scalar vs tiled, collab) ===\n{}(written to BENCH_microkernel.json)\n\n",
+            mk::report(&pts)
+        );
+    }
     if arm("serve_native") {
         use crate::bench::serve_native as sn;
         let load = sn::LoadConfig {

@@ -589,17 +589,14 @@ mod tests {
                 let patched = Arc::new(patched);
                 let rebuilt = Arc::new(SpmmPlan::build(new_csr.clone(), PartitionParams::default()));
                 let f = rng.range(1, 6);
-                let x: Arc<Vec<f32>> =
-                    Arc::new((0..n * f).map(|_| rng.f32() - 0.5).collect());
+                let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
                 let want = new_csr.spmm_dense(&x, f);
                 for &threads in &[1usize, 2, 8] {
                     let pool = ThreadPool::new(threads);
-                    let got = patched
-                        .sorted
-                        .unpermute_rows(&spmm_block_level_parallel(&patched, &x, f, &pool), f);
-                    let reb = rebuilt
-                        .sorted
-                        .unpermute_rows(&spmm_block_level_parallel(&rebuilt, &x, f, &pool), f);
+                    // the parallel executor returns original row order
+                    // directly (fused unpermute-scatter)
+                    let got = spmm_block_level_parallel(&patched, &x, f, &pool);
+                    let reb = spmm_block_level_parallel(&rebuilt, &x, f, &pool);
                     assert_allclose(&got, &want, 1e-4, 1e-4, "patched vs dense");
                     assert_allclose(&got, &reb, 1e-5, 1e-5, "patched vs rebuilt");
                 }

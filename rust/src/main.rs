@@ -10,7 +10,7 @@
 //! accel-gcn serve        --artifacts artifacts/quickstart --requests 64
 //! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
 //! accel-gcn update-demo  --batches 8 --batch-size 64 [--edge-list graph.txt]
-//! accel-gcn bench        --out results [--experiment fig5|fig6|...|delta_update]
+//! accel-gcn bench        --out results [--experiment fig5|fig6|...|microkernel|delta_update]
 //! ```
 
 use accel_gcn::bench as harness;
@@ -78,7 +78,7 @@ fn print_usage() {
          \x20           (stream edge-update batches; patch plans incrementally,\n\
          \x20           verify each patch against a from-scratch rebuild)\n\
          \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
-         \x20           exec_scaling|serve_native|delta_update|all] [--quick]"
+         \x20           exec_scaling|microkernel|serve_native|delta_update|all] [--quick]"
     );
 }
 
@@ -353,8 +353,9 @@ fn cmd_update_demo(rest: &[String]) -> Result<()> {
         anyhow::ensure!(identical, "batch {b}: patched plan diverged from rebuild");
         plan = Arc::new(patched);
         let f = 16;
-        let x: Arc<Vec<f32>> = Arc::new((0..n * f).map(|_| rng.f32() - 0.5).collect());
-        let y = plan.sorted.unpermute_rows(&spmm_block_level_parallel(&plan, &x, f, &pool), f);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        // the parallel executor scatters straight into original row order
+        let y = spmm_block_level_parallel(&plan, &x, f, &pool);
         anyhow::ensure!(
             allclose(&y, &new_csr.spmm_dense(&x, f), 1e-3, 1e-3),
             "batch {b}: patched SpMM diverged from the dense reference"

@@ -5,10 +5,11 @@
 //! convention: `x` is `[n_cols × f]` row-major in the **original**
 //! column order, and the returned `Y` is `[n_rows × f]` in the
 //! **original** row order. Executors that internally run the
-//! degree-sorted schedule (the block-level ones) unpermute before
-//! returning, so any two executors' outputs are directly comparable —
-//! up to f32 addition reordering, which is exactly what the property
-//! tests assert.
+//! degree-sorted schedule undo the permutation before returning — the
+//! sequential one with an explicit `unpermute_rows` pass, the parallel
+//! one by scattering stores through the permutation (fused) — so any
+//! two executors' outputs are directly comparable, up to f32 addition
+//! reordering, which is exactly what the property tests assert.
 //!
 //! Implementations:
 //! * [`CsrReference`] — the dense-traversal numeric ground truth.
@@ -22,16 +23,23 @@
 
 use super::plan::SpmmPlan;
 use crate::spmm::{spmm_block_level, spmm_warp_level};
-use std::sync::Arc;
 
 /// A strategy for executing one SpMM request against a prebuilt plan.
+///
+/// The contract is **zero-copy**: both `plan` and `x` are plain
+/// borrows, so implementations must not require owned or `Arc`-wrapped
+/// inputs. Parallel executors achieve this with scoped pool jobs
+/// ([`crate::util::threadpool::ThreadPool::scoped_run`]) that join
+/// before `execute` returns. Callers holding `Arc<SpmmPlan>` /
+/// `Arc<Vec<f32>>` pass `&plan` / `&x` and deref coercion does the
+/// rest.
 pub trait Executor {
     /// Stable identifier (used in bench output and test reports).
     fn name(&self) -> &'static str;
 
     /// Compute `Y = A·X`. `x` is `[plan.original.n_cols × f]` row-major;
     /// the result is `[plan.original.n_rows × f]`, original row order.
-    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32>;
+    fn execute(&self, plan: &SpmmPlan, x: &[f32], f: usize) -> Vec<f32>;
 }
 
 /// Dense CSR traversal over the original matrix — the reference.
@@ -42,7 +50,7 @@ impl Executor for CsrReference {
         "csr-reference"
     }
 
-    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+    fn execute(&self, plan: &SpmmPlan, x: &[f32], f: usize) -> Vec<f32> {
         plan.original.spmm_dense(x, f)
     }
 }
@@ -56,7 +64,7 @@ impl Executor for BlockLevel {
         "block-level"
     }
 
-    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+    fn execute(&self, plan: &SpmmPlan, x: &[f32], f: usize) -> Vec<f32> {
         let sorted_y = spmm_block_level(&plan.sorted.csr, &plan.block, x, f);
         plan.sorted.unpermute_rows(&sorted_y, f)
     }
@@ -70,7 +78,7 @@ impl Executor for WarpLevel {
         "warp-level"
     }
 
-    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
+    fn execute(&self, plan: &SpmmPlan, x: &[f32], f: usize) -> Vec<f32> {
         spmm_warp_level(&plan.original, &plan.warp, x, f)
     }
 }
@@ -83,6 +91,7 @@ mod tests {
     use crate::spmm::verify::assert_allclose;
     use crate::util::proptest;
     use crate::util::rng::Pcg;
+    use std::sync::Arc;
 
     fn random_plan(rng: &mut Pcg, n: usize) -> Arc<SpmmPlan> {
         let mut edges = Vec::new();

@@ -18,10 +18,11 @@
 //!   sequential block-level schedule, and the warp-level baseline under
 //!   one original-domain contract.
 //! * [`parallel`] — [`ParallelBlockLevel`]: the block-level schedule
-//!   sharded across [`crate::util::threadpool::ThreadPool`], with
-//!   lock-free disjoint row writes for non-split blocks and a
-//!   deterministic post-join reduction for split rows (see the module
-//!   docs for the split-row reduction strategy).
+//!   sharded across [`crate::util::threadpool::ThreadPool`], executed
+//!   through the column-tiled microkernel with zero-copy borrowed
+//!   inputs, direct disjoint row writes scattered straight into the
+//!   original row order (fused unpermute), and a deterministic
+//!   post-join reduction for split rows (see the module docs).
 //!
 //! Consumers (all four former call sites route through here):
 //! * the `accel-gcn` binary (`simulate` builds its plan directly;
@@ -43,5 +44,8 @@ pub mod parallel;
 
 pub use cache::{GraphKey, PlanCache};
 pub use exec::{BlockLevel, CsrReference, Executor, WarpLevel};
-pub use parallel::{spmm_block_level_parallel, ParallelBlockLevel};
+pub use parallel::{
+    spmm_block_level_parallel, spmm_block_level_parallel_into, spmm_block_level_parallel_scalar,
+    ParallelBlockLevel,
+};
 pub use plan::{GraphFingerprint, SpmmPlan};

@@ -1,51 +1,120 @@
 //! Parallel block-level SpMM: the paper's schedule sharded across the
-//! worker pool ([`crate::util::threadpool::ThreadPool`]).
+//! worker pool ([`crate::util::threadpool::ThreadPool`]), executed
+//! through the column-tiled microkernel
+//! ([`crate::spmm::microkernel`]).
 //!
-//! ## Sharding and the split-row reduction strategy
+//! ## The zero-copy tiled hot path
+//!
+//! [`spmm_block_level_parallel`] is the CPU analog of the paper's
+//! combined-warp kernel, with every accumulation level mapped onto
+//! threads and registers:
+//!
+//! 1. **Within a warp task** — the column dimension is swept in
+//!    [`TILE`](crate::spmm::microkernel::TILE)-wide register tiles
+//!    (tile width ↔ warp span), with a ragged-tail path for
+//!    `f % TILE != 0` and zip-fused nonzero iteration, so the inner
+//!    loop carries no per-element bounds checks.
+//! 2. **Non-split blocks** — each block owns a disjoint set of output
+//!    rows, so shards write finished rows **straight into `y`**
+//!    (direct-write sharding): no per-block staging buffers, no
+//!    post-join copy pass. The write scatters through the plan's
+//!    permutation (`y[perm[sorted_row]]`), fusing the former
+//!    `unpermute_rows` pass into the store itself.
+//! 3. **Split rows** (`deg > deg_bound`) — a long row's chunks may land
+//!    in different shards. Each shard accumulates its chunks into one
+//!    reused per-shard arena ([`SplitPartials`]); after the scoped join,
+//!    the partials are summed into the output **in shard order**. This
+//!    mirrors the kernel's third cache level (global `atomicAdd`) with
+//!    the atomics replaced by a deterministic post-join reduction, which
+//!    keeps the result bit-stable for a given shard layout.
+//!
+//! Inputs are borrowed (`&[f32]`), jobs run via
+//! [`ThreadPool::scoped_run`], and the result comes back already in the
+//! **original** row order — no `Arc` input copy, no staging buffers, no
+//! separate unpermute pass anywhere on the path.
+//!
+//! ## Sharding
 //!
 //! Blocks are split into contiguous shards of approximately equal
 //! nonzero count (block order == ascending sorted-row order, so a shard
-//! is also a contiguous row span). Each shard executes its blocks
-//! exactly like the sequential executor, with the paper's three
-//! accumulation levels mapped onto threads as follows:
+//! is also a contiguous row span). [`shard_ranges`] places each cut at
+//! the block boundary nearest the ideal `i·total/n_shards` prefix —
+//! a lookahead that caps every shard near the target, instead of the
+//! greedy accumulate-past-target rule that systematically overshot and
+//! starved (or dropped) the trailing shards on skewed plans.
 //!
-//! 1. **Within a warp task** — the inner `f`-loop over a private
-//!    register row (unchanged).
-//! 2. **Non-split blocks** — each block accumulates into its private
-//!    block-shared buffer and owns a disjoint set of output rows, so
-//!    shards produce these rows without any synchronization and the
-//!    reduction is a plain disjoint copy ("lock-free" writes).
-//! 3. **Split rows** (`deg > deg_bound`) — a long row's chunks may land
-//!    in different shards. Each shard accumulates its chunks into a
-//!    per-shard partial buffer for that row; after `run_all` joins, the
-//!    partials are summed into the output. This mirrors the kernel's
-//!    third cache level (global `atomicAdd`) with the atomics replaced
-//!    by a deterministic post-join reduction, which keeps the result
-//!    bit-stable for a given shard layout.
-//!
-//! Shard results are combined in shard order, so the floating-point
-//! addition order matches the sequential executor's up to the shard
-//! boundaries of split rows — within the reordering tolerance the
-//! property tests assert.
+//! [`spmm_block_level_parallel_scalar`] preserves the pre-tiling
+//! execution path — scalar bounds-checked inner loop, per-block `vec!`
+//! staging, `Arc` input copy, post-join copy pass, separate unpermute —
+//! as the measured baseline for `bench --experiment microkernel`.
 
 use super::exec::Executor;
 use super::plan::SpmmPlan;
 use crate::partition::block_level::BlockPartition;
 use crate::partition::metadata::BlockMeta;
+use crate::spmm::microkernel;
 use crate::util::threadpool::ThreadPool;
 use std::ops::Range;
 use std::sync::Arc;
 
-/// One shard's output: disjoint finished rows plus split-row partials.
-struct ShardOut {
-    /// `(base sorted row, rows×f buffer)` per non-split block.
-    dense: Vec<(usize, Vec<f32>)>,
-    /// `(sorted row, f partial)` per split row touched by this shard.
-    split: Vec<(usize, Vec<f32>)>,
+/// Shared output buffer handed to shard jobs as a raw pointer.
+///
+/// # Safety contract
+///
+/// Concurrent shards may only write **disjoint** row spans: non-split
+/// blocks own disjoint sorted rows (and `perm` is a bijection, so the
+/// scattered original rows are disjoint too), and split rows are never
+/// written through this pointer — they go through per-shard partials
+/// reduced after the join. The pointer is only dereferenced inside
+/// `scoped_run`, which joins before the owning `&mut [f32]` is touched
+/// again.
+struct OutPtr {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl OutPtr {
+    /// # Safety
+    /// `[start, start + n)` must be in bounds and not concurrently
+    /// aliased by any other shard (see the type-level contract).
+    #[inline]
+    unsafe fn slice_mut(&self, start: usize, n: usize) -> &mut [f32] {
+        debug_assert!(start + n <= self.len, "OutPtr out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), n)
+    }
+}
+
+/// Per-shard arena for split-row partial sums: one growable buffer
+/// reused across all split rows the shard touches (`rows[k]`'s partial
+/// lives at `buf[k*f..(k+1)*f]`), instead of one `vec!` per row.
+#[derive(Default)]
+struct SplitPartials {
+    /// Sorted-domain row ids, in first-touch (block) order.
+    rows: Vec<u32>,
+    /// Concatenated `f`-wide partials, parallel to `rows`.
+    buf: Vec<f32>,
+}
+
+fn block_nnz(m: &BlockMeta, deg_bound: usize) -> usize {
+    if m.is_split(deg_bound) {
+        m.split_nzs()
+    } else {
+        m.deg as usize * m.block_rows()
+    }
 }
 
 /// Slice `bp`'s blocks into at most `n_shards` contiguous ranges of
 /// approximately equal nonzero count.
+///
+/// Each cut lands on the block boundary whose nonzero prefix is nearest
+/// the ideal `s·total/n_shards`, clamped so every shard keeps at least
+/// one block. Shard sizes therefore deviate from the target by at most
+/// one block's nonzeros — bounded by `deg_bound` — where the old greedy
+/// cut-at-`acc ≥ target` rule could stack its overshoot into a wildly
+/// over- or under-sized tail shard on skewed plans.
 fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
     let n_blocks = bp.meta.len();
     if n_blocks == 0 {
@@ -53,33 +122,167 @@ fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
     }
     let n_shards = n_shards.clamp(1, n_blocks);
     let deg_bound = bp.params.deg_bound();
-    let block_nnz = |m: &BlockMeta| -> usize {
-        if m.is_split(deg_bound) {
-            m.split_nzs()
-        } else {
-            m.deg as usize * m.block_rows()
-        }
-    };
-    let total: usize = bp.meta.iter().map(block_nnz).sum();
-    let target = total.div_ceil(n_shards).max(1);
+    let mut prefix = Vec::with_capacity(n_blocks + 1);
+    prefix.push(0usize);
+    for m in &bp.meta {
+        prefix.push(prefix[prefix.len() - 1] + block_nnz(m, deg_bound));
+    }
+    let total = prefix[n_blocks];
     let mut ranges = Vec::with_capacity(n_shards);
-    let (mut start, mut acc) = (0usize, 0usize);
-    for (b, m) in bp.meta.iter().enumerate() {
-        acc += block_nnz(m);
-        if acc >= target && ranges.len() + 1 < n_shards {
-            ranges.push(start..b + 1);
-            start = b + 1;
-            acc = 0;
+    let mut start = 0usize;
+    for s in 1..n_shards {
+        let lo = start + 1; // shard s-1 keeps ≥ 1 block
+        let hi = n_blocks - (n_shards - s); // ≥ 1 block per remaining shard
+        let ideal = ((total as u128 * s as u128) / n_shards as u128) as usize;
+        // first boundary at or past the ideal, then the nearer of it and
+        // its predecessor (the lookahead)
+        let mut cut = prefix.partition_point(|&p| p < ideal).clamp(lo, hi);
+        if cut > lo && prefix[cut] >= ideal && ideal - prefix[cut - 1] < prefix[cut] - ideal {
+            cut -= 1;
         }
+        ranges.push(start..cut);
+        start = cut;
     }
-    if start < n_blocks {
-        ranges.push(start..n_blocks);
-    }
+    ranges.push(start..n_blocks);
     ranges
 }
 
-/// Execute one contiguous block range (sequential, no shared state).
-fn exec_shard(plan: &SpmmPlan, x: &[f32], f: usize, blocks: Range<usize>) -> ShardOut {
+/// Execute one contiguous block range through the tiled microkernel.
+/// Non-split rows are finished in place (scattered to original order
+/// through `perm`); split-row chunks accumulate into `partials`.
+fn exec_shard(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    blocks: Range<usize>,
+    out: &OutPtr,
+    partials: &mut SplitPartials,
+) {
+    let sorted = &plan.sorted.csr;
+    let perm = &plan.sorted.perm;
+    let bp = &plan.block;
+    let deg_bound = bp.params.deg_bound();
+    for b in blocks {
+        let m = bp.meta[b];
+        let loc = m.loc as usize;
+        if m.is_split(deg_bound) {
+            // chunks of one row are contiguous in block order, so the
+            // shard keeps at most one open arena window per split row
+            if partials.rows.last() != Some(&m.row) {
+                partials.rows.push(m.row);
+                partials.buf.resize(partials.buf.len() + f, 0.0);
+            }
+            let w = partials.buf.len() - f;
+            let nzs = m.split_nzs();
+            microkernel::accumulate_row(
+                &sorted.col_idx[loc..loc + nzs],
+                &sorted.vals[loc..loc + nzs],
+                x,
+                f,
+                &mut partials.buf[w..],
+            );
+        } else {
+            // direct-write: this block owns its rows exclusively, so
+            // each finished row scatters straight into y[perm[row]]
+            let deg = m.deg as usize;
+            for row_i in 0..m.block_rows() {
+                let s = loc + row_i * deg;
+                let dst_row = perm[m.row as usize + row_i] as usize;
+                // SAFETY: non-split rows are owned by exactly one block,
+                // blocks by exactly one shard, and perm is a bijection —
+                // no other shard touches this span (see OutPtr).
+                let dst = unsafe { out.slice_mut(dst_row * f, f) };
+                microkernel::accumulate_row(
+                    &sorted.col_idx[s..s + deg],
+                    &sorted.vals[s..s + deg],
+                    x,
+                    f,
+                    dst,
+                );
+            }
+        }
+    }
+}
+
+/// Execute `Y = A·X` via the block-level schedule, sharded across
+/// `pool`, writing into the caller's buffer (which is zeroed first).
+/// `x` is `[n_cols × f]` row-major in **original** column order; `y`
+/// comes back `[n_rows × f]` in **original** row order — the unpermute
+/// is fused into the shards' scattered stores.
+///
+/// Inputs are borrowed: jobs run via [`ThreadPool::scoped_run`], which
+/// joins every shard before returning, so no `Arc` copies are needed.
+pub fn spmm_block_level_parallel_into(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    pool: &ThreadPool,
+    y: &mut [f32],
+) {
+    y.fill(0.0);
+    exec_into_zeroed(plan, x, f, pool, y);
+}
+
+/// [`spmm_block_level_parallel_into`] minus the zeroing pass — `y` must
+/// already be all-zero (e.g. freshly allocated).
+fn exec_into_zeroed(plan: &SpmmPlan, x: &[f32], f: usize, pool: &ThreadPool, y: &mut [f32]) {
+    assert_eq!(x.len(), plan.sorted.csr.n_cols * f, "X shape mismatch");
+    assert_eq!(y.len(), plan.sorted.csr.n_rows * f, "Y shape mismatch");
+    let ranges = shard_ranges(&plan.block, pool.size());
+    if ranges.is_empty() {
+        return;
+    }
+    let mut partials: Vec<SplitPartials> =
+        ranges.iter().map(|_| SplitPartials::default()).collect();
+    let out = OutPtr { ptr: y.as_mut_ptr(), len: y.len() };
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+        .into_iter()
+        .zip(partials.iter_mut())
+        .map(|(range, part)| {
+            let out = &out;
+            Box::new(move || exec_shard(plan, x, f, range, out, part))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.scoped_run(jobs);
+    // the "global atomic" level: split-row partials reduced
+    // deterministically in shard order, scattered to original rows
+    let perm = &plan.sorted.perm;
+    for part in &partials {
+        for (k, &srow) in part.rows.iter().enumerate() {
+            let dst = perm[srow as usize] as usize * f;
+            for (d, s) in y[dst..dst + f].iter_mut().zip(&part.buf[k * f..(k + 1) * f]) {
+                *d += *s;
+            }
+        }
+    }
+}
+
+/// Allocating wrapper over [`spmm_block_level_parallel_into`]: the
+/// zero-copy tiled hot path, result in **original** row order.
+pub fn spmm_block_level_parallel(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    let mut y = vec![0f32; plan.sorted.csr.n_rows * f];
+    exec_into_zeroed(plan, x, f, pool, &mut y); // fresh allocation: skip the re-zero
+    y
+}
+
+/// One shard's output on the scalar baseline path: staged buffers that
+/// the join copies out (what direct-write sharding deletes).
+struct ShardOut {
+    /// `(base sorted row, rows×f buffer)` per non-split block.
+    dense: Vec<(usize, Vec<f32>)>,
+    /// `(sorted row, f partial)` per split row touched by this shard.
+    split: Vec<(usize, Vec<f32>)>,
+}
+
+/// The scalar baseline's shard body: bounds-checked scalar inner loop
+/// over warp tasks, one fresh `vec!` per block.
+fn exec_shard_scalar(plan: &SpmmPlan, x: &[f32], f: usize, blocks: Range<usize>) -> ShardOut {
     let sorted = &plan.sorted.csr;
     let bp = &plan.block;
     let deg_bound = bp.params.deg_bound();
@@ -89,8 +292,6 @@ fn exec_shard(plan: &SpmmPlan, x: &[f32], f: usize, blocks: Range<usize>) -> Sha
         let m = bp.meta[b];
         if m.is_split(deg_bound) {
             let dst = m.row as usize;
-            // chunks of one row are contiguous in block order, so the
-            // shard keeps at most one open partial per split row
             if split.last().map_or(true, |(r, _)| *r != dst) {
                 split.push((dst, vec![0f32; f]));
             }
@@ -106,7 +307,6 @@ fn exec_shard(plan: &SpmmPlan, x: &[f32], f: usize, blocks: Range<usize>) -> Sha
                 }
             });
         } else {
-            // block-shared accumulator, one slot per block row
             let rows = m.block_rows();
             let mut shared = vec![0f32; rows * f];
             bp.for_each_block_warp_task(b, |t| {
@@ -127,26 +327,26 @@ fn exec_shard(plan: &SpmmPlan, x: &[f32], f: usize, blocks: Range<usize>) -> Sha
     ShardOut { dense, split }
 }
 
-/// Execute `Y = A_sorted · X` via the block-level schedule, sharded
-/// across `pool`. Result rows are in the **sorted** domain, exactly like
-/// [`crate::spmm::spmm_block_level`].
-///
-/// `plan` and `x` are `Arc`s because shard jobs outlive the borrow
-/// checker's view of this frame (the pool requires `'static` jobs);
-/// `run_all` joins every shard before this function returns.
-pub fn spmm_block_level_parallel(
+/// The pre-tiling execution path, preserved as the measured baseline
+/// for `bench --experiment microkernel`: `x` copied into an `Arc` (the
+/// `'static` job bound the scoped path removed), scalar bounds-checked
+/// inner loop, per-block `vec!` staging buffers, a post-join copy pass,
+/// and a separate full `unpermute_rows`. Result in **original** row
+/// order, numerically interchangeable with the tiled path.
+pub fn spmm_block_level_parallel_scalar(
     plan: &Arc<SpmmPlan>,
-    x: &Arc<Vec<f32>>,
+    x: &[f32],
     f: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
     assert_eq!(x.len(), plan.sorted.csr.n_cols * f, "X shape mismatch");
+    let x: Arc<Vec<f32>> = Arc::new(x.to_vec());
     let jobs: Vec<_> = shard_ranges(&plan.block, pool.size())
         .into_iter()
         .map(|range| {
             let plan = Arc::clone(plan);
-            let x = Arc::clone(x);
-            move || exec_shard(&plan, &x, f, range)
+            let x = Arc::clone(&x);
+            move || exec_shard_scalar(&plan, &x, f, range)
         })
         .collect();
     let shards = pool.run_all(jobs);
@@ -154,18 +354,16 @@ pub fn spmm_block_level_parallel(
     let mut y = vec![0f32; plan.sorted.csr.n_rows * f];
     for shard in shards {
         for (base, buf) in shard.dense {
-            // disjoint rows: plain stores, no accumulation needed
             y[base * f..base * f + buf.len()].copy_from_slice(&buf);
         }
         for (row, partial) in shard.split {
-            // the "global atomic" level, reduced deterministically
             let yrow = &mut y[row * f..(row + 1) * f];
             for k in 0..f {
                 yrow[k] += partial[k];
             }
         }
     }
-    y
+    plan.sorted.unpermute_rows(&y, f)
 }
 
 /// [`Executor`] running the block-level schedule on an owned thread
@@ -185,8 +383,8 @@ impl ParallelBlockLevel {
         self.pool.size()
     }
 
-    /// The underlying pool (for callers that already hold `Arc` inputs
-    /// and want the sorted-domain result without the executor's copies).
+    /// The underlying pool (for callers that drive
+    /// [`spmm_block_level_parallel_into`] against reused buffers).
     pub fn pool(&self) -> &ThreadPool {
         &self.pool
     }
@@ -197,14 +395,10 @@ impl Executor for ParallelBlockLevel {
         "block-level-parallel"
     }
 
-    /// Satisfying the slice-based [`Executor`] contract costs one copy
-    /// of `x` into an `Arc` per call (the pool needs `'static` jobs).
-    /// Hot paths that already hold `Arc` inputs should call
-    /// [`spmm_block_level_parallel`] directly — the bench harnesses do.
-    fn execute(&self, plan: &Arc<SpmmPlan>, x: &[f32], f: usize) -> Vec<f32> {
-        let x = Arc::new(x.to_vec());
-        let sorted_y = spmm_block_level_parallel(plan, &x, f, &self.pool);
-        plan.sorted.unpermute_rows(&sorted_y, f)
+    /// Zero-copy: `x` is borrowed by the scoped shard jobs directly and
+    /// the unpermute is fused into the shards' scattered stores.
+    fn execute(&self, plan: &SpmmPlan, x: &[f32], f: usize) -> Vec<f32> {
+        spmm_block_level_parallel(plan, x, f, &self.pool)
     }
 }
 
@@ -255,6 +449,67 @@ mod tests {
         });
     }
 
+    /// The rebalance satellite: on a skewed power-law plan whose block
+    /// granularity is far below the per-shard target, every shard must
+    /// land near the target — max/min nonzero ratio ≤ 2 — and the full
+    /// shard count must be realized (the old greedy rule could stack
+    /// overshoot into a starved or missing tail shard).
+    #[test]
+    fn shard_ranges_balanced_on_skewed_plan() {
+        use crate::graph::generator::{degree_sequence, from_degree_sequence, DegreeModel};
+        let mut rng = Pcg::seed_from(0x5BAD);
+        let n = 3000;
+        let degs = degree_sequence(
+            DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.2 },
+            n,
+            n * 12,
+            &mut rng,
+        );
+        let csr = from_degree_sequence(n, &degs, &mut rng);
+        let plan = SpmmPlan::build(csr, PartitionParams::default());
+        let deg_bound = plan.block.params.deg_bound();
+        for n_shards in [2usize, 4, 6, 8] {
+            let ranges = shard_ranges(&plan.block, n_shards);
+            assert_eq!(ranges.len(), n_shards, "full shard count must be realized");
+            let nnzs: Vec<usize> = ranges
+                .iter()
+                .map(|r| plan.block.meta[r.clone()].iter().map(|m| block_nnz(m, deg_bound)).sum())
+                .collect();
+            let max = *nnzs.iter().max().unwrap();
+            let min = *nnzs.iter().min().unwrap();
+            assert!(
+                max <= 2 * min,
+                "shards {n_shards}: nnz imbalance {nnzs:?} (max {max} > 2×min {min})"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_cut_prefers_nearest_boundary() {
+        // blocks sized [4, 31, 31, 31, 31] (deg-ascending): the greedy
+        // rule produced [35, 62, 31] — a 2× spread on 3 of 4 requested
+        // shards; nearest-boundary cuts give 4 shards within one block
+        let params = PartitionParams { max_block_warps: 1, max_warp_nzs: 32 };
+        let mut edges: Vec<(u32, u32, f32)> = (0..4).map(|c| (0u32, c, 1.0)).collect();
+        for r in 1..5u32 {
+            for c in 0..31u32 {
+                edges.push((r, c, 1.0));
+            }
+        }
+        let csr = Csr::from_edges(5, 32, &edges).unwrap();
+        let plan = SpmmPlan::build(csr, params);
+        // one block per row with these params (block_rows = 1)
+        assert_eq!(plan.block.meta.len(), 5);
+        let ranges = shard_ranges(&plan.block, 4);
+        assert_eq!(ranges.len(), 4);
+        let deg_bound = params.deg_bound();
+        let nnzs: Vec<usize> = ranges
+            .iter()
+            .map(|r| plan.block.meta[r.clone()].iter().map(|m| block_nnz(m, deg_bound)).sum())
+            .collect();
+        assert_eq!(nnzs, vec![35, 31, 31, 31]);
+    }
+
     #[test]
     fn split_row_straddling_shards_reduces_correctly() {
         // one row of degree 60 with deg_bound 4 → 15 split chunks spread
@@ -275,9 +530,9 @@ mod tests {
 
     #[test]
     fn prop_parallel_matches_sequential_and_reference() {
-        // the satellite property: parallel == sequential == dense
-        // reference across random graphs, thread counts, and the
-        // paper's column dimensions
+        // the core property: parallel == sequential == dense reference
+        // across random graphs, thread counts, and the paper's column
+        // dimensions
         proptest::check("parallel_block_exec", 0x9A54, 8, |rng| {
             let n = rng.range(1, 50);
             let params = PartitionParams {
@@ -300,15 +555,90 @@ mod tests {
         });
     }
 
+    /// The ragged-tail satellite: column widths that exercise the
+    /// microkernel's sub-tile (`f < TILE`), tail (`f % TILE != 0`) and
+    /// multi-tile paths inside the full sharded executor, on graphs
+    /// with empty rows, against the dense reference, across threads.
+    #[test]
+    fn prop_microkernel_ragged_tails() {
+        proptest::check("parallel_ragged_tails", 0x7A17, 10, |rng| {
+            let n = rng.range(1, 40);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 12]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 32]),
+            };
+            // heavy zero-row mix so empty rows and degree runs both occur
+            let mut edges = Vec::new();
+            for r in 0..n {
+                let d = match rng.range(0, 4) {
+                    0 => 0, // empty row
+                    1 => rng.range(1, 4),
+                    2 => rng.range(1, 12),
+                    _ => rng.range(0, 2 * n + 2), // may split
+                };
+                for _ in 0..d {
+                    edges.push((r as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+                }
+            }
+            let plan =
+                Arc::new(SpmmPlan::build(Csr::from_edges(n, n, &edges).unwrap(), params));
+            for &threads in &[1usize, 2, 8] {
+                let exec = ParallelBlockLevel::new(threads);
+                for &f in &[1usize, 3, 17, 33] {
+                    let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+                    let got = exec.execute(&plan, &x, f);
+                    let want = CsrReference.execute(&plan, &x, f);
+                    assert_allclose(&got, &want, 1e-4, 1e-4, "ragged tail vs reference");
+                }
+            }
+        });
+    }
+
     #[test]
     fn zero_and_empty_graphs() {
         let params = PartitionParams::default();
         let empty = Arc::new(SpmmPlan::build(Csr::from_edges(0, 0, &[]).unwrap(), params));
         let exec = ParallelBlockLevel::new(2);
         assert!(exec.execute(&empty, &[], 3).is_empty());
-        // all-zero rows produce an all-zero result
+        assert!(exec.execute(&empty, &[], 17).is_empty());
+        // all-zero rows produce an all-zero result, at ragged widths too
         let zeros = Arc::new(SpmmPlan::build(Csr::from_edges(4, 4, &[]).unwrap(), params));
-        let y = exec.execute(&zeros, &[1.0; 12], 3);
-        assert!(y.iter().all(|&v| v == 0.0));
+        for f in [3usize, 17] {
+            let y = exec.execute(&zeros, &vec![1.0; 4 * f], f);
+            assert_eq!(y.len(), 4 * f);
+            assert!(y.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn into_variant_reuses_buffers() {
+        let mut rng = Pcg::seed_from(0x1A7E);
+        let plan = random_plan(&mut rng, 30, PartitionParams { max_block_warps: 2, max_warp_nzs: 4 });
+        let pool = ThreadPool::new(3);
+        let f = 7;
+        let mut y = vec![f32::NAN; 30 * f]; // stale garbage must be cleared
+        for trial in 0..2 {
+            let x: Vec<f32> = (0..30 * f).map(|_| rng.f32() - 0.5).collect();
+            spmm_block_level_parallel_into(&plan, &x, f, &pool, &mut y);
+            let want = CsrReference.execute(&plan, &x, f);
+            assert_allclose(&y, &want, 1e-4, 1e-4, &format!("into trial {trial}"));
+        }
+    }
+
+    #[test]
+    fn scalar_baseline_matches_tiled_path() {
+        // the bench baseline must be numerically interchangeable with
+        // the hot path it is compared against
+        let mut rng = Pcg::seed_from(0xBA5E);
+        let plan = random_plan(&mut rng, 45, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        let pool = ThreadPool::new(4);
+        for &f in &[5usize, 16, 33] {
+            let x: Vec<f32> = (0..45 * f).map(|_| rng.f32() - 0.5).collect();
+            let scalar = spmm_block_level_parallel_scalar(&plan, &x, f, &pool);
+            let tiled = spmm_block_level_parallel(&plan, &x, f, &pool);
+            let want = CsrReference.execute(&plan, &x, f);
+            assert_allclose(&scalar, &want, 1e-4, 1e-4, "scalar vs reference");
+            assert_allclose(&tiled, &scalar, 1e-4, 1e-4, "tiled vs scalar");
+        }
     }
 }

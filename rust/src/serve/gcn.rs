@@ -3,18 +3,24 @@
 //! A [`GcnModel`] is the dense half of a GCN stack (per-layer weight
 //! matrix + bias, dims from [`ModelConfig`]); [`GcnForward`] chains
 //! `SpMM → X·W + b → ReLU` per layer **in the relabeled domain**
-//! (DESIGN §2), so consecutive layers compose with zero per-layer
-//! unpermutes, and fuses all members of a batch into one wide SpMM per
-//! layer — Accel-GCN's column-dimension insight applied across
-//! concurrent requests instead of across lanes.
+//! (DESIGN §2), keeping the whole batch in one fused `[n × k·d]`
+//! matrix from ingress to egress — Accel-GCN's column-dimension insight
+//! applied across concurrent requests instead of across lanes.
+//!
+//! The path is zero-copy end to end: member features are borrowed
+//! slices gathered straight into the fused matrix (permuting on the
+//! way in), every layer ping-pongs between two reused buffers through
+//! [`spmm_block_level_parallel_into`] and a fused-layout parallel
+//! affine, and the egress split scatters rows back to the original
+//! node order while copying out — no per-layer fuse/split buffers, no
+//! `Arc` input copies, no separate permute passes.
 
 use crate::graph::csr::Csr;
 use crate::model::ModelConfig;
-use crate::pipeline::{spmm_block_level_parallel, SpmmPlan};
+use crate::pipeline::{spmm_block_level_parallel_into, SpmmPlan};
 use crate::util::rng::Pcg;
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
-use std::sync::Arc;
 use std::time::Instant;
 
 /// Dense parameters of a GCN stack. Weights are row-major
@@ -57,6 +63,41 @@ impl GcnModel {
     pub fn max_width(&self) -> usize {
         self.dims().iter().map(|&(din, _)| din).max().unwrap_or(0)
     }
+
+    /// Floating-point operations of one SpMM-side forward pass for `k`
+    /// fused members on an `nnz`-edge graph: `2·nnz·k·d_in` per layer
+    /// (the GFLOP/s numerator the serve metrics record).
+    pub fn spmm_flops(&self, nnz: usize, k: usize) -> f64 {
+        self.dims()
+            .iter()
+            .map(|&(din, _)| crate::spmm::spmm_flops(nnz, k * din))
+            .sum()
+    }
+}
+
+/// `orow = xrow · w + b`, optionally ReLU-clamped — the one per-row
+/// affine kernel both the sequential reference and the parallel fused
+/// path run.
+#[inline]
+fn affine_one_row(xrow: &[f32], w: &[f32], dout: usize, b: &[f32], relu: bool, orow: &mut [f32]) {
+    orow.copy_from_slice(b);
+    // k-outer ordering: the inner j-loop streams one w row (cache-friendly)
+    for (k, &xv) in xrow.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[k * dout..(k + 1) * dout];
+        for j in 0..dout {
+            orow[j] += xv * wrow[j];
+        }
+    }
+    if relu {
+        for v in orow.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
 }
 
 /// `out = x · w + b`, optionally ReLU-clamped. `x` is `[rows × din]`
@@ -67,83 +108,62 @@ fn affine_rows(x: &[f32], rows: usize, din: usize, w: &[f32], dout: usize, b: &[
     debug_assert_eq!(b.len(), dout);
     let mut out = vec![0f32; rows * dout];
     for r in 0..rows {
-        let orow = &mut out[r * dout..(r + 1) * dout];
-        orow.copy_from_slice(b);
-        let xrow = &x[r * din..(r + 1) * din];
-        // k-outer ordering: the inner j-loop streams one w row (cache-friendly)
-        for (k, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[k * dout..(k + 1) * dout];
-            for j in 0..dout {
-                orow[j] += xv * wrow[j];
-            }
-        }
-        if relu {
-            for v in orow.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
+        affine_one_row(&x[r * din..(r + 1) * din], w, dout, b, relu, &mut out[r * dout..(r + 1) * dout]);
     }
     out
 }
 
-/// Parallel `x · w + b` over the worker pool: rows are chunked, each
-/// chunk runs [`affine_rows`], results concatenate in row order.
-pub fn dense_affine_parallel(
+/// Fused-layout parallel affine: `x` is `[n × k·din]` (members
+/// column-concatenated), `out` is `[n × k·dout]`; each member's columns
+/// go through `x·w + b` (shared weights), optional ReLU. Rows are
+/// chunked across the pool with scoped jobs writing disjoint spans of
+/// `out` — no staging buffers, no input copies.
+fn affine_fused_parallel(
     pool: &ThreadPool,
-    x: &Arc<Vec<f32>>,
-    rows: usize,
+    x: &[f32],
+    n: usize,
+    k: usize,
     din: usize,
-    model: &Arc<GcnModel>,
-    layer: usize,
+    w: &[f32],
+    dout: usize,
+    b: &[f32],
     relu: bool,
-) -> Vec<f32> {
-    let threads = pool.size().max(1);
-    let chunk = rows.div_ceil(threads).max(1);
-    let jobs: Vec<_> = (0..rows)
-        .step_by(chunk)
-        .map(|lo| {
-            let hi = (lo + chunk).min(rows);
-            let x = Arc::clone(x);
-            let model = Arc::clone(model);
-            move || {
-                let dout = model.dims()[layer].1;
-                affine_rows(
-                    &x[lo * din..hi * din],
-                    hi - lo,
-                    din,
-                    &model.weights[layer],
-                    dout,
-                    &model.biases[layer],
-                    relu,
-                )
-            }
+    out: &mut [f32],
+) {
+    let wi = k * din;
+    let wo = k * dout;
+    debug_assert_eq!(x.len(), n * wi);
+    debug_assert_eq!(out.len(), n * wo);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    if n == 0 || k == 0 || wo == 0 {
+        return;
+    }
+    let chunk = n.div_ceil(pool.size().max(1)).max(1);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(chunk * wo)
+        .enumerate()
+        .map(|(ci, ochunk)| {
+            let rows = ochunk.len() / wo;
+            let lo = ci * chunk;
+            let xs = &x[lo * wi..(lo + rows) * wi];
+            Box::new(move || {
+                for r in 0..rows {
+                    for m in 0..k {
+                        affine_one_row(
+                            &xs[r * wi + m * din..r * wi + (m + 1) * din],
+                            w,
+                            dout,
+                            b,
+                            relu,
+                            &mut ochunk[r * wo + m * dout..r * wo + (m + 1) * dout],
+                        );
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
-    pool.run_all(jobs).concat()
-}
-
-/// Run the parallel block-level SpMM for a plan built **from** a
-/// relabeled adjacency, returning the result in that same domain.
-///
-/// The relabeled matrix's rows already ascend by degree, so the plan's
-/// internal degree sort is the identity and the sorted-domain result of
-/// [`spmm_block_level_parallel`] *is* the relabeled-domain result. The
-/// identity check is O(n) — free next to the O(nnz·f) SpMM — and the
-/// fallback keeps this correct even for a plan that was built from a
-/// non-relabeled matrix.
-pub fn spmm_relabeled(plan: &Arc<SpmmPlan>, x: &Arc<Vec<f32>>, f: usize, pool: &ThreadPool) -> Vec<f32> {
-    let y = spmm_block_level_parallel(plan, x, f, pool);
-    let identity = plan.sorted.perm.iter().enumerate().all(|(i, &p)| p as usize == i);
-    if identity {
-        y
-    } else {
-        plan.sorted.unpermute_rows(&y, f)
-    }
+    pool.scoped_run(jobs);
 }
 
 /// Timings of one fused forward pass, for the per-stage recorders.
@@ -153,61 +173,107 @@ pub struct ForwardTimings {
     pub dense_secs: f64,
 }
 
-/// The GCN layer stack bound to one relabeled-domain plan and pool.
+/// The GCN layer stack bound to one plan (over the internal-domain
+/// adjacency) and pool.
 pub struct GcnForward<'a> {
-    pub plan: &'a Arc<SpmmPlan>,
+    pub plan: &'a SpmmPlan,
     pub pool: &'a ThreadPool,
 }
 
 impl GcnForward<'_> {
-    /// Forward `k` member feature matrices (each `[n × in_dim]`,
-    /// **relabeled** row order) through the stack as one fused batch:
-    /// each layer concatenates the members column-wise, runs a single
-    /// wide SpMM, splits, and applies the dense affine per member
-    /// (ReLU on all but the last layer). Returns per-member
-    /// `[n × out_dim]` matrices, still in the relabeled domain.
-    pub fn forward(&self, model: &Arc<GcnModel>, xs: Vec<Vec<f32>>) -> Result<(Vec<Vec<f32>>, ForwardTimings)> {
+    /// Forward `k` borrowed member feature matrices (each
+    /// `[n × in_dim]`) through the stack as one fused batch.
+    ///
+    /// `perm`, when given, maps internal (relabeled) row `i` to the
+    /// member matrices' row `perm[i]` — the registry entry's
+    /// permutation. Ingress gathers member rows through it while fusing
+    /// members column-wise; egress scatters result rows back through it
+    /// while splitting — so callers pass features and receive results
+    /// in the **original** node order with zero standalone permute
+    /// passes. With `None`, features and results stay in the plan's own
+    /// row order.
+    ///
+    /// Between ingress and egress each layer runs one wide SpMM and one
+    /// fused-layout affine (ReLU on all but the last layer), ping-pong
+    /// between two buffers reused across layers.
+    pub fn forward(
+        &self,
+        model: &GcnModel,
+        xs: &[&[f32]],
+        perm: Option<&[u32]>,
+    ) -> Result<(Vec<Vec<f32>>, ForwardTimings)> {
         let n = self.plan.n_rows();
         let k = xs.len();
         anyhow::ensure!(k > 0, "empty GCN batch");
         let dims = model.dims();
-        let mut hs = xs;
+        anyhow::ensure!(!dims.is_empty(), "model has no layers");
+        if let Some(p) = perm {
+            anyhow::ensure!(p.len() == n, "permutation/plan size mismatch");
+        }
+        let in_dim = dims[0].0;
+        for (m, x) in xs.iter().enumerate() {
+            anyhow::ensure!(x.len() == n * in_dim, "member {m}: feature shape mismatch");
+        }
+
+        // ingress: gather member rows (through perm) into the fused
+        // [n × k·in_dim] matrix — the only full copy on the way in
+        let width = k * in_dim;
+        let mut h = vec![0f32; n * width];
+        for (m, x) in xs.iter().enumerate() {
+            let at = m * in_dim;
+            for i in 0..n {
+                let src = perm.map_or(i, |p| p[i] as usize) * in_dim;
+                h[i * width + at..i * width + at + in_dim]
+                    .copy_from_slice(&x[src..src + in_dim]);
+            }
+        }
+
+        let mut agg: Vec<f32> = Vec::new();
+        let mut nxt: Vec<f32> = Vec::new();
         let mut t = ForwardTimings::default();
         for (l, &(din, dout)) in dims.iter().enumerate() {
-            for h in &hs {
-                anyhow::ensure!(h.len() == n * din, "layer {l}: member shape mismatch");
-            }
-            // fuse: Â·[H₁ … Hₖ] in one traversal of the adjacency
             let width = k * din;
-            let mut fused = vec![0f32; n * width];
-            for (m, h) in hs.iter().enumerate() {
-                for r in 0..n {
-                    fused[r * width + m * din..r * width + (m + 1) * din]
-                        .copy_from_slice(&h[r * din..(r + 1) * din]);
-                }
-            }
-            let fused = Arc::new(fused);
+            debug_assert_eq!(h.len(), n * width);
+            // Â·[H₁ … Hₖ] in one traversal of the adjacency
+            agg.resize(n * width, 0.0);
             let t0 = Instant::now();
-            let agg = spmm_relabeled(self.plan, &fused, width, self.pool);
+            spmm_block_level_parallel_into(self.plan, &h, width, self.pool, &mut agg);
             t.spmm_secs += t0.elapsed().as_secs_f64();
-            // split + dense per member
+            // fused-layout dense affine, members sharing the layer weights
             let t1 = Instant::now();
             let relu = l + 1 < dims.len();
-            let mut next = Vec::with_capacity(k);
-            for m in 0..k {
-                let mut part = vec![0f32; n * din];
-                for r in 0..n {
-                    part[r * din..(r + 1) * din]
-                        .copy_from_slice(&agg[r * width + m * din..r * width + (m + 1) * din]);
-                }
-                let part = Arc::new(part);
-                next.push(dense_affine_parallel(self.pool, &part, n, din, model, l, relu));
-                debug_assert_eq!(next.last().unwrap().len(), n * dout);
-            }
+            nxt.resize(n * k * dout, 0.0);
+            affine_fused_parallel(
+                self.pool,
+                &agg,
+                n,
+                k,
+                din,
+                &model.weights[l],
+                dout,
+                &model.biases[l],
+                relu,
+                &mut nxt,
+            );
             t.dense_secs += t1.elapsed().as_secs_f64();
-            hs = next;
+            std::mem::swap(&mut h, &mut nxt);
         }
-        Ok((hs, t))
+
+        // egress: split members, scattering rows back through perm —
+        // the only full copy on the way out
+        let out_dim = dims.last().expect("non-empty").1;
+        let width = k * out_dim;
+        let mut outs = Vec::with_capacity(k);
+        for m in 0..k {
+            let at = m * out_dim;
+            let mut out = vec![0f32; n * out_dim];
+            for i in 0..n {
+                let dst = perm.map_or(i, |p| p[i] as usize) * out_dim;
+                out[dst..dst + out_dim].copy_from_slice(&h[i * width + at..i * width + at + out_dim]);
+            }
+            outs.push(out);
+        }
+        Ok((outs, t))
     }
 }
 
@@ -215,10 +281,11 @@ impl GcnForward<'_> {
 /// traversal in the **original** domain (what serve responses are
 /// verified against).
 pub fn reference_forward(csr: &Csr, model: &GcnModel, x: &[f32]) -> Vec<f32> {
-    let mut h = x.to_vec();
     let dims = model.dims();
+    let mut h: Vec<f32> = Vec::new();
     for (l, &(din, dout)) in dims.iter().enumerate() {
-        let agg = csr.spmm_dense(&h, din);
+        let input: &[f32] = if l == 0 { x } else { &h };
+        let agg = csr.spmm_dense(input, din);
         h = affine_rows(
             &agg,
             csr.n_rows,
@@ -229,7 +296,11 @@ pub fn reference_forward(csr: &Csr, model: &GcnModel, x: &[f32]) -> Vec<f32> {
             l + 1 < dims.len(),
         );
     }
-    h
+    if dims.is_empty() {
+        x.to_vec()
+    } else {
+        h
+    }
 }
 
 #[cfg(test)]
@@ -238,6 +309,7 @@ mod tests {
     use crate::partition::patterns::PartitionParams;
     use crate::serve::registry::GraphRegistry;
     use crate::spmm::verify::assert_allclose;
+    use std::sync::Arc;
 
     fn random_csr(seed: u64, n: usize) -> Csr {
         let mut rng = Pcg::seed_from(seed);
@@ -259,6 +331,8 @@ mod tests {
         assert_eq!(m.weights[2].len(), 8 * 4);
         assert_eq!(m.biases[2].len(), 4);
         assert_eq!(m.max_width(), 16);
+        // per-layer 2·nnz·k·din: 2·10·2·(16+8+8)
+        assert_eq!(m.spmm_flops(10, 2), 2.0 * 10.0 * 2.0 * 32.0);
     }
 
     #[test]
@@ -272,21 +346,49 @@ mod tests {
 
     #[test]
     fn parallel_affine_matches_sequential() {
-        let model = Arc::new(GcnModel::random(ModelConfig::gcn(6, 5, 3, 2), 2));
+        // k = 1 degenerates the fused layout to a plain row-chunked affine
+        let model = GcnModel::random(ModelConfig::gcn(6, 5, 3, 2), 2);
         let rows = 37;
         let mut rng = Pcg::seed_from(3);
         let x: Vec<f32> = (0..rows * 6).map(|_| rng.f32() - 0.5).collect();
         let want = affine_rows(&x, rows, 6, &model.weights[0], 5, &model.biases[0], true);
         let pool = ThreadPool::new(4);
-        let got = dense_affine_parallel(&pool, &Arc::new(x), rows, 6, &model, 0, true);
+        let mut got = vec![0f32; rows * 5];
+        affine_fused_parallel(&pool, &x, rows, 1, 6, &model.weights[0], 5, &model.biases[0], true, &mut got);
         assert_allclose(&got, &want, 1e-5, 1e-5, "parallel affine");
+    }
+
+    #[test]
+    fn fused_affine_matches_per_member() {
+        // k members in fused layout == each member through affine_rows
+        let model = GcnModel::random(ModelConfig::gcn(5, 4, 2, 2), 9);
+        let (n, k, din, dout) = (23, 3, 5, 4);
+        let mut rng = Pcg::seed_from(31);
+        let fused: Vec<f32> = (0..n * k * din).map(|_| rng.f32() - 0.5).collect();
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0f32; n * k * dout];
+        affine_fused_parallel(
+            &pool, &fused, n, k, din, &model.weights[0], dout, &model.biases[0], true, &mut out,
+        );
+        for m in 0..k {
+            let xm: Vec<f32> = (0..n)
+                .flat_map(|r| fused[r * k * din + m * din..r * k * din + (m + 1) * din].to_vec())
+                .collect();
+            let want = affine_rows(&xm, n, din, &model.weights[0], dout, &model.biases[0], true);
+            for r in 0..n {
+                for j in 0..dout {
+                    let got = out[r * k * dout + m * dout + j];
+                    let w = want[r * dout + j];
+                    assert!((got - w).abs() < 1e-5, "m={m} r={r} j={j}: {got} vs {w}");
+                }
+            }
+        }
     }
 
     #[test]
     fn fused_forward_matches_reference_per_member() {
         let csr = random_csr(7, 45);
-        let model =
-            Arc::new(GcnModel::random(ModelConfig::gcn(8, 6, 3, 2), 11));
+        let model = Arc::new(GcnModel::random(ModelConfig::gcn(8, 6, 3, 2), 11));
         let reg = GraphRegistry::new();
         let h = reg.register("g", &csr).unwrap();
         let entry = reg.get(h).unwrap();
@@ -298,18 +400,54 @@ mod tests {
         let mut rng = Pcg::seed_from(5);
         let xs: Vec<Vec<f32>> =
             (0..3).map(|_| (0..45 * 8).map(|_| rng.f32() - 0.5).collect()).collect();
-        let xs_rel: Vec<Vec<f32>> = xs.iter().map(|x| entry.permute_rows(x, 8)).collect();
-        let (outs, timings) = fw.forward(&model, xs_rel).unwrap();
+        // original-domain features in, original-domain results out:
+        // permutes are fused into the forward's ingress/egress copies
+        let xs_refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        let (outs, timings) = fw.forward(&model, &xs_refs, Some(&entry.perm)).unwrap();
         assert!(timings.spmm_secs >= 0.0 && timings.dense_secs >= 0.0);
-        for (m, out_rel) in outs.iter().enumerate() {
-            let got = entry.unpermute_rows(out_rel, 3);
+        for (m, got) in outs.iter().enumerate() {
             let want = reference_forward(&csr, &model, &xs[m]);
-            assert_allclose(&got, &want, 1e-3, 1e-3, "fused member vs reference");
+            assert_allclose(got, &want, 1e-3, 1e-3, "fused member vs reference");
         }
     }
 
     #[test]
-    fn spmm_relabeled_identity_domain() {
+    fn forward_without_perm_runs_in_plan_domain() {
+        // with perm: None the stack runs directly in the plan's own row
+        // order — over the original adjacency that IS the original order
+        let csr = random_csr(13, 30);
+        let model = GcnModel::random(ModelConfig::gcn(6, 4, 2, 2), 3);
+        let plan = SpmmPlan::build(csr.clone(), PartitionParams::default());
+        let pool = ThreadPool::new(2);
+        let fw = GcnForward { plan: &plan, pool: &pool };
+        let mut rng = Pcg::seed_from(8);
+        let x: Vec<f32> = (0..30 * 6).map(|_| rng.f32() - 0.5).collect();
+        let (outs, _) = fw.forward(&model, &[&x], None).unwrap();
+        let want = reference_forward(&csr, &model, &x);
+        assert_allclose(&outs[0], &want, 1e-3, 1e-3, "no-perm forward");
+    }
+
+    #[test]
+    fn forward_rejects_bad_shapes() {
+        let csr = random_csr(17, 12);
+        let model = GcnModel::random(ModelConfig::gcn(4, 3, 2, 2), 4);
+        let plan = SpmmPlan::build(csr, PartitionParams::default());
+        let pool = ThreadPool::new(1);
+        let fw = GcnForward { plan: &plan, pool: &pool };
+        assert!(fw.forward(&model, &[], None).is_err(), "empty batch");
+        let short = vec![0f32; 5];
+        assert!(fw.forward(&model, &[&short], None).is_err(), "bad member shape");
+        let x = vec![0f32; 12 * 4];
+        let bad_perm = vec![0u32; 3];
+        assert!(fw.forward(&model, &[&x], Some(&bad_perm)).is_err(), "bad perm length");
+    }
+
+    #[test]
+    fn relabeled_plan_spmm_stays_in_relabeled_domain() {
+        // what the serve SpMM group relies on: for a plan built FROM a
+        // relabeled matrix, the executor's original-row-order result IS
+        // the relabeled domain (the internal degree sort is the identity)
+        use crate::pipeline::spmm_block_level_parallel;
         let csr = random_csr(9, 30);
         let reg = GraphRegistry::new();
         let entry = reg.get(reg.register("g", &csr).unwrap()).unwrap();
@@ -320,9 +458,9 @@ mod tests {
         let f = 4;
         let mut rng = Pcg::seed_from(17);
         let x: Vec<f32> = (0..30 * f).map(|_| rng.f32() - 0.5).collect();
-        let x_rel = Arc::new(entry.permute_rows(&x, f));
+        let x_rel = entry.permute_rows(&x, f);
         let pool = ThreadPool::new(2);
-        let y_rel = spmm_relabeled(&plan, &x_rel, f, &pool);
+        let y_rel = spmm_block_level_parallel(&plan, &x_rel, f, &pool);
         let got = entry.unpermute_rows(&y_rel, f);
         let want = csr.spmm_dense(&x, f);
         assert_allclose(&got, &want, 1e-4, 1e-4, "relabeled spmm");

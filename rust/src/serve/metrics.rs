@@ -26,6 +26,10 @@ pub struct ServeMetrics {
     pub queue_wait: LatencyRecorder,
     /// sparse traversal stage (per fused batch).
     pub spmm_stage: LatencyRecorder,
+    /// Achieved SpMM throughput, GFLOP/s, recorded **per request** (a
+    /// fused batch's rate is credited to every member riding it —
+    /// 2·nnz·width flops over the batch's spmm wall time).
+    pub spmm_gflops: LatencyRecorder,
     /// dense affine stage (per fused batch; GCN requests only).
     pub dense_stage: LatencyRecorder,
     /// submit → reply.
@@ -79,6 +83,11 @@ impl ServeMetrics {
         ));
         s.push_str(&format!("{}\n", self.queue_wait.snapshot().render("queue wait")));
         s.push_str(&format!("{}\n", self.spmm_stage.snapshot().render("spmm stage")));
+        let g = self.spmm_gflops.snapshot();
+        s.push_str(&format!(
+            "spmm throughput: mean {:.3} GFLOP/s, max {:.3} GFLOP/s over {} requests\n",
+            g.mean, g.max, g.count
+        ));
         s.push_str(&format!("{}\n", self.dense_stage.snapshot().render("dense stage")));
         s.push_str(&format!("{}\n", self.patch_latency.snapshot().render("plan patch")));
         s.push_str(&format!("{}\n", self.total.snapshot().render("total")));
@@ -101,9 +110,13 @@ mod tests {
         m.completed.add(7);
         m.queue_depth.set(0);
         m.total.record(0.001);
+        m.spmm_gflops.record(1.25);
+        m.spmm_gflops.record(2.75);
         let r = m.render();
         assert!(r.contains("fusion factor 3.50"));
         assert!(r.contains("submitted=7"));
+        assert!(r.contains("spmm throughput: mean 2.000 GFLOP/s"), "{r}");
+        assert!(r.contains("over 2 requests"), "{r}");
     }
 
     #[test]

@@ -45,7 +45,7 @@
 //! the fused matrix, layers chain with zero per-layer unpermutes, and
 //! the split back to per-request tensors unpermutes while copying out.
 
-use super::gcn::{spmm_relabeled, GcnForward, GcnModel};
+use super::gcn::{GcnForward, GcnModel};
 use super::metrics::ServeMetrics;
 use super::registry::{GraphEntry, GraphHandle, GraphRegistry};
 use crate::coordinator::ColumnBatcher;
@@ -623,10 +623,15 @@ fn run_spmm_group(
             widths.push(c);
             col += c;
         }
-        let fused = Arc::new(fused);
+        // zero-copy: the fused matrix is borrowed by the scoped shard
+        // jobs directly — no Arc wrap, no input copy. The plan is built
+        // FROM the relabeled matrix, so the executor's original-row-order
+        // result is already in the relabeled domain.
         let t0 = Instant::now();
-        let y = spmm_relabeled(&plan, &fused, aw, pool);
-        metrics.spmm_stage.record(t0.elapsed().as_secs_f64());
+        let y = crate::pipeline::spmm_block_level_parallel(&plan, &fused, aw, pool);
+        let spmm_secs = t0.elapsed().as_secs_f64();
+        metrics.spmm_stage.record(spmm_secs);
+        let gflops = crate::spmm::spmm_flops(plan.nnz(), aw) / spmm_secs.max(1e-9) / 1e9;
         metrics.batches.inc();
         metrics.fused_requests.add(bp.members.len() as u64);
         // split: copy each member's columns back out, unpermuting rows
@@ -642,6 +647,7 @@ fn run_spmm_group(
             col += c;
             let p = members[m].take().expect("each request split once");
             metrics.completed.inc();
+            metrics.spmm_gflops.record(gflops);
             metrics.total.record(p.enqueued.elapsed().as_secs_f64());
             let _ = p.reply.send(Ok(Response { y: HostTensor::f32(&[n, c], out) }));
         }
@@ -679,38 +685,43 @@ fn run_gcn_group(
         Err(e) => return fail_group(group, metrics, &e),
     };
     let plan = cache.plan_for_keyed(entry.fingerprint, &entry.relabeled, params);
-    let in_dim = model.config.in_dim;
     let out_dim = model.config.out_dim;
     let n = entry.n;
     let mut members: Vec<Option<ComputePending>> = group.into_iter().map(Some).collect();
     for bp in &plans {
-        let xs_rel: Vec<Vec<f32>> = bp
+        // zero-copy ingress: borrow each member's feature slice as-is;
+        // the forward's fused ingress gather permutes rows while
+        // copying into the fused matrix, and its egress scatter returns
+        // results already in the original node order — the standalone
+        // permute_rows/unpermute_rows passes are gone
+        let xs: Vec<&[f32]> = bp
             .members
             .iter()
             .map(|&m| {
                 let p = members[m].as_ref().expect("each request forwarded once");
-                let x = match &p.payload {
+                match &p.payload {
                     Payload::Gcn { x, .. } => x.as_f32().expect("validated at submit"),
                     Payload::Spmm { .. } => unreachable!("gcn group"),
-                };
-                entry.permute_rows(x, in_dim)
+                }
             })
             .collect();
-        let fw = GcnForward { plan: &plan, pool };
-        match fw.forward(&model, xs_rel) {
+        let fw = GcnForward { plan: plan.as_ref(), pool };
+        match fw.forward(&model, &xs, Some(&entry.perm)) {
             Ok((outs, timings)) => {
                 metrics.spmm_stage.record(timings.spmm_secs);
                 metrics.dense_stage.record(timings.dense_secs);
+                let gflops = model.spmm_flops(plan.nnz(), bp.members.len())
+                    / timings.spmm_secs.max(1e-9)
+                    / 1e9;
                 metrics.batches.inc();
                 metrics.fused_requests.add(bp.members.len() as u64);
-                for (slot, &m) in bp.members.iter().enumerate() {
-                    let out = entry.unpermute_rows(&outs[slot], out_dim);
+                for (&m, out) in bp.members.iter().zip(outs) {
                     let p = members[m].take().expect("each request replied once");
                     metrics.completed.inc();
+                    metrics.spmm_gflops.record(gflops);
                     metrics.total.record(p.enqueued.elapsed().as_secs_f64());
-                    let _ = p
-                        .reply
-                        .send(Ok(Response { y: HostTensor::f32(&[n, out_dim], out) }));
+                    let _ =
+                        p.reply.send(Ok(Response { y: HostTensor::f32(&[n, out_dim], out) }));
                 }
             }
             Err(e) => {
@@ -799,6 +810,10 @@ mod tests {
         assert_eq!(m.errors.get(), 0);
         assert!(m.batches.get() > 0);
         assert!(m.total.snapshot().count >= 36);
+        // every served request gets a per-request GFLOP/s sample
+        let g = m.spmm_gflops.snapshot();
+        assert_eq!(g.count, 36);
+        assert!(g.mean > 0.0 && g.mean.is_finite());
     }
 
     #[test]

@@ -6,11 +6,19 @@
 //! dense CSR reference. They are the correctness ground truth for the
 //! partitioners and the behavioural model the GPU simulator's trace
 //! generators are built on.
+//!
+//! [`microkernel`] is the performance-oriented exception: the
+//! column-tiled inner loop the parallel executor
+//! ([`crate::pipeline::ParallelBlockLevel`](crate::pipeline)) runs,
+//! mapping the paper's combined-warp column sweep onto autovectorized
+//! register tiles.
 
 pub mod block_exec;
+pub mod microkernel;
 pub mod warp_exec;
 pub mod verify;
 
 pub use block_exec::spmm_block_level;
+pub use microkernel::{accumulate_row, spmm_flops, TILE};
 pub use verify::{allclose, max_abs_diff};
 pub use warp_exec::spmm_warp_level;

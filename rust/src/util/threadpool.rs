@@ -72,11 +72,16 @@ impl ThreadPool {
 
     /// Submit a job; returns immediately.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_boxed(Box::new(f));
+    }
+
+    /// Submit an already-boxed job without re-boxing it.
+    fn submit_boxed(&self, job: Job) {
         self.shared.pending.fetch_add(1, Ordering::AcqRel);
         self.tx
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("worker channel closed");
     }
 
@@ -86,6 +91,37 @@ impl ThreadPool {
         while self.shared.pending.load(Ordering::Acquire) != 0 {
             g = self.shared.cv.wait(g).unwrap();
         }
+    }
+
+    /// Run a batch of **borrowing** jobs to completion — the zero-copy
+    /// twin of [`ThreadPool::run_all`]. Jobs may capture references to
+    /// the caller's stack frame (`&[f32]` inputs, disjoint `&mut`
+    /// output spans), which is what lets the SpMM hot path skip the
+    /// `Arc<Vec<f32>>` input copy the `'static` job bound used to force.
+    ///
+    /// Blocks until every submitted job has finished, so no borrow
+    /// escapes the caller's frame.
+    ///
+    /// # Safety (internal)
+    ///
+    /// The implementation erases the `'env` lifetime to satisfy the
+    /// worker channel's `'static` bound. This is sound because:
+    /// * every job is submitted before `wait_idle`, and `wait_idle`
+    ///   returns only after the pending count — incremented at submit,
+    ///   decremented after each job runs — drops to zero, so all
+    ///   borrows are dead before this function returns;
+    /// * if a job panics, the worker thread dies without decrementing
+    ///   the count and this function blocks forever — a hang, never a
+    ///   dangling borrow (same failure mode `run_all` already has).
+    pub fn scoped_run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        for job in jobs {
+            // SAFETY: see above — the job cannot outlive this call.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            self.submit_boxed(job);
+        }
+        self.wait_idle();
     }
 
     /// Run a batch of independent jobs to completion, collecting results
@@ -164,6 +200,47 @@ mod tests {
         let a = pool.run_all(vec![|| 1, || 2]);
         let b = pool.run_all(vec![|| 3, || 4]);
         assert_eq!((a, b), (vec![1, 2], vec![3, 4]));
+    }
+
+    #[test]
+    fn scoped_run_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<u64> = (0..96).collect();
+        let mut out = vec![0u64; 96];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(32)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    let src = &input[i * 32..(i + 1) * 32];
+                    Box::new(move || {
+                        for (d, s) in chunk.iter_mut().zip(src) {
+                            *d = s * 3;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scoped_run(jobs);
+        }
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+    }
+
+    #[test]
+    fn scoped_run_empty_and_reuse() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_run(Vec::new()); // no jobs: returns immediately
+        let x = AtomicU64::new(0);
+        pool.scoped_run(vec![
+            Box::new(|| {
+                x.fetch_add(1, Ordering::Relaxed);
+            }) as Box<dyn FnOnce() + Send + '_>,
+            Box::new(|| {
+                x.fetch_add(2, Ordering::Relaxed);
+            }),
+        ]);
+        assert_eq!(x.load(Ordering::Relaxed), 3);
+        // pool still usable by run_all afterwards
+        assert_eq!(pool.run_all(vec![|| 7]), vec![7]);
     }
 
     #[test]
