@@ -31,6 +31,16 @@ cargo run --release --bin accel-gcn -- bench --experiment delta_update --quick \
 cargo run --release --bin accel-gcn -- bench --experiment microkernel --quick \
     --out results-ci-micro
 
+# Train-native smoke: 50 full-graph steps on the synthetic labeled
+# graph with both optimizers. The command verifies the backward SpMM
+# against the dense Âᵀ reference before training and exits nonzero
+# unless the final loss is ≤ 0.5× the initial loss; the analytic-vs-
+# finite-difference gradient check runs in `cargo test` above.
+cargo run --release --bin accel-gcn -- train-native --quick --steps 50 \
+    --optimizer sgd --threads 2 --seed 7 --require-loss-drop 0.5
+cargo run --release --bin accel-gcn -- train-native --quick --steps 50 \
+    --optimizer adam --threads 2 --seed 7 --require-loss-drop 0.5
+
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
 # has been run tree-wide.

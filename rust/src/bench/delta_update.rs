@@ -26,8 +26,7 @@ use crate::util::bench::{time_fn, Table};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use crate::util::threadpool::ThreadPool;
-use anyhow::{Context, Result};
-use std::path::Path;
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Sweep shape.
@@ -260,18 +259,6 @@ pub fn to_json(points: &[DeltaPoint]) -> Json {
     doc.set("unit", "us");
     doc.set("points", rows);
     doc
-}
-
-/// Write `BENCH_delta_update.json`.
-pub fn save_json(points: &[DeltaPoint], path: &Path) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
-    }
-    std::fs::write(path, to_json(points).to_pretty())
-        .with_context(|| format!("write {}", path.display()))?;
-    Ok(())
 }
 
 #[cfg(test)]

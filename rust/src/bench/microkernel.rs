@@ -29,7 +29,6 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
-use std::path::Path;
 use std::sync::Arc;
 
 /// Default thread sweep: serial baseline, small, and the paper-relevant
@@ -155,17 +154,6 @@ pub fn to_json(points: &[MicroPoint]) -> Json {
     doc.set("unit", "us");
     doc.set("points", rows);
     doc
-}
-
-/// Write `BENCH_microkernel.json`.
-pub fn save_json(points: &[MicroPoint], path: &Path) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
-    }
-    std::fs::write(path, to_json(points).to_pretty())?;
-    Ok(())
 }
 
 #[cfg(test)]

@@ -21,12 +21,22 @@
 //!   column-tiled zero-copy path, threads × column widths (ragged tails
 //!   included), every cell verified against the dense reference
 //!   (writes `BENCH_microkernel.json`).
+//! * [`train_native`] — end-to-end native training ([`crate::train`]):
+//!   steps/sec + per-phase breakdown (fwd-SpMM / fwd-dense / bwd-SpMM /
+//!   bwd-dense / opt) across threads × optimizers, backward SpMM
+//!   verified against the dense `Âᵀ` reference (writes
+//!   `BENCH_train_native.json`).
+//! * [`report`] — the one writer for every `BENCH_*.json` trajectory
+//!   file (out-dir + repo-root duplicate conventions live here, not in
+//!   each experiment).
 
 pub mod paper;
 pub mod ablation;
 pub mod delta_update;
 pub mod exec_scaling;
 pub mod microkernel;
+pub mod report;
 pub mod train;
+pub mod train_native;
 pub mod serve;
 pub mod serve_native;

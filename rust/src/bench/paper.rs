@@ -426,24 +426,6 @@ fn unique_graphs(points: &[SweepPoint]) -> Vec<String> {
     v
 }
 
-/// CLI entry: `accel-gcn bench [--experiment X] [--out DIR] [--quick]`.
-/// Write a perf-trajectory JSON into the results dir, plus a copy at
-/// the repo root — but only when the working directory *is* the
-/// checkout (the usual `cargo run` case): never drop stray files
-/// elsewhere, and skip the duplicate write when `--out` is the current
-/// directory.
-fn save_bench_json(out: &Path, filename: &str, save: impl Fn(&Path) -> Result<()>) -> Result<()> {
-    save(&out.join(filename))?;
-    let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
-    let same_dir = std::fs::canonicalize(out)
-        .and_then(|o| std::fs::canonicalize(".").map(|c| o == c))
-        .unwrap_or(false);
-    if cwd_is_repo_root && !same_dir {
-        save(Path::new(filename))?;
-    }
-    Ok(())
-}
-
 pub fn run_from_args(args: &Args) -> Result<()> {
     let out_dir = args.str_or("out", "results");
     let out = Path::new(&out_dir);
@@ -514,7 +496,7 @@ pub fn run_from_args(args: &Args) -> Result<()> {
             cfg.policy,
             seed,
         )?;
-        save_bench_json(out, "BENCH_exec_scaling.json", |p| es::save_json(&pts, p))?;
+        crate::bench::report::write_report(out, "BENCH_exec_scaling.json", &es::to_json(&pts))?;
         report += &format!(
             "=== Exec scaling (parallel block-level, collab) ===\n{}(written to BENCH_exec_scaling.json)\n\n",
             es::report(&pts)
@@ -533,7 +515,7 @@ pub fn run_from_args(args: &Args) -> Result<()> {
             pts.iter().all(|p| p.verified),
             "microkernel: a path diverged from the dense reference"
         );
-        save_bench_json(out, "BENCH_microkernel.json", |p| mk::save_json(&pts, p))?;
+        crate::bench::report::write_report(out, "BENCH_microkernel.json", &mk::to_json(&pts))?;
         report += &format!(
             "=== Microkernel (scalar vs tiled, collab) ===\n{}(written to BENCH_microkernel.json)\n\n",
             mk::report(&pts)
@@ -547,7 +529,7 @@ pub fn run_from_args(args: &Args) -> Result<()> {
             ..sn::LoadConfig::default()
         };
         let pts = sn::run_sweep(&load, &[1, 2, 4])?;
-        save_bench_json(out, "BENCH_serve_native.json", |p| sn::save_json(&pts, p))?;
+        crate::bench::report::write_report(out, "BENCH_serve_native.json", &sn::to_json(&pts))?;
         report += &format!(
             "=== Serve native (multi-tenant, column-fused) ===\n{}(written to BENCH_serve_native.json)\n\n",
             sn::report(&pts)
@@ -565,10 +547,28 @@ pub fn run_from_args(args: &Args) -> Result<()> {
             pts.iter().all(|p| p.verified),
             "delta_update: a patched plan diverged from the from-scratch rebuild"
         );
-        save_bench_json(out, "BENCH_delta_update.json", |p| du::save_json(&pts, p))?;
+        crate::bench::report::write_report(out, "BENCH_delta_update.json", &du::to_json(&pts))?;
         report += &format!(
             "=== Delta update (patch vs full replan) ===\n{}(written to BENCH_delta_update.json)\n\n",
             du::report(&pts)
+        );
+    }
+    if arm("train_native") {
+        use crate::bench::train_native as tn;
+        let cfg = if args.flag("quick") {
+            tn::TrainBenchConfig::quick(seed)
+        } else {
+            tn::TrainBenchConfig::paper(seed)
+        };
+        let pts = tn::run(&cfg)?;
+        anyhow::ensure!(
+            pts.iter().all(|p| p.verified),
+            "train_native: backward SpMM diverged from the dense Âᵀ reference"
+        );
+        crate::bench::report::write_report(out, "BENCH_train_native.json", &tn::to_json(&pts))?;
+        report += &format!(
+            "=== Train native (full GCN backprop, threads × optimizers) ===\n{}(written to BENCH_train_native.json)\n\n",
+            tn::report(&pts)
         );
     }
     if arm("ablation-params") || experiment == "all" {

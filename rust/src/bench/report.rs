@@ -1,0 +1,61 @@
+//! One writer for every perf-trajectory `BENCH_*.json` file.
+//!
+//! Each experiment builds its own `Json` document (`to_json`) and hands
+//! it here; this module owns the on-disk conventions that used to be
+//! copy-pasted across five experiments: parent directories are created,
+//! output is pretty-printed, and — when the process runs from the repo
+//! root (the usual `cargo run` case) — a duplicate lands next to
+//! `ROADMAP.md` so successive PRs can diff trajectories without digging
+//! through results dirs. Nothing is written outside `out_dir` when the
+//! working directory is not the checkout, and the duplicate is skipped
+//! when `out_dir` *is* the working directory.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write `doc` as `out_dir/filename` (+ the repo-root duplicate when
+/// applicable). `filename` should be a bare `BENCH_<experiment>.json`
+/// name.
+pub fn write_report(out_dir: &Path, filename: &str, doc: &Json) -> Result<()> {
+    write_one(&out_dir.join(filename), doc)?;
+    let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
+    let same_dir = std::fs::canonicalize(out_dir)
+        .and_then(|o| std::fs::canonicalize(".").map(|c| o == c))
+        .unwrap_or(false);
+    if cwd_is_repo_root && !same_dir {
+        write_one(Path::new(filename), doc)?;
+    }
+    Ok(())
+}
+
+fn write_one(path: &Path, doc: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.to_pretty()).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_into_fresh_nested_dir() {
+        let dir = std::env::temp_dir().join(format!("accel-report-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut doc = Json::obj();
+        doc.set("experiment", "unit-test").set("points", Vec::<Json>::new());
+        // temp dir has no ROADMAP.md/.git relative to cwd semantics —
+        // only the out_dir copy must appear under `dir`
+        write_report(&dir.join("deep"), "BENCH_unit.json", &doc).unwrap();
+        let text = std::fs::read_to_string(dir.join("deep/BENCH_unit.json")).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req_str("experiment").unwrap(), "unit-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        // if the test ever runs from a repo root, clean the duplicate
+        let _ = std::fs::remove_file("BENCH_unit.json");
+    }
+}

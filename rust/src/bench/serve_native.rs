@@ -24,8 +24,7 @@ use crate::spmm::verify::allclose;
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
-use anyhow::{Context, Result};
-use std::path::Path;
+use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -289,18 +288,6 @@ pub fn to_json(points: &[ServeNativePoint]) -> Json {
     doc.set("executor", "serve/block-level-parallel");
     doc.set("points", rows);
     doc
-}
-
-/// Write `BENCH_serve_native.json`.
-pub fn save_json(points: &[ServeNativePoint], path: &Path) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
-    }
-    std::fs::write(path, to_json(points).to_pretty())
-        .with_context(|| format!("write {}", path.display()))?;
-    Ok(())
 }
 
 #[cfg(test)]

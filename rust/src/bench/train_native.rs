@@ -1,0 +1,247 @@
+//! `train_native` — end-to-end native training throughput.
+//!
+//! Trains the same GCN on the same planted-partition labeled graph
+//! ([`labeled_synthetic_with`]) across thread counts × optimizers,
+//! reporting steps/sec and the per-step phase breakdown the tentpole
+//! promises: fwd-SpMM / fwd-dense / bwd-SpMM / bwd-dense / optimizer.
+//! Every cell also records the loss trajectory (initial → final) and a
+//! **verified** bit: before training, the backward direction's SpMM
+//! (`Âᵀ·G` through the transpose plan) is checked against the dense
+//! `Âᵀ` reference — bit-for-bit when the plan has no split rows, else
+//! elementwise-close — so a wrong backward path fails the bench (and
+//! CI) rather than silently mis-training. Written to
+//! `BENCH_train_native.json` via [`bench::report`](crate::bench::report).
+
+use crate::graph::datasets::{labeled_synthetic_with, LabeledDataset};
+use crate::model::ModelConfig;
+use crate::train::{default_lr, TrainConfig, Trainer};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Default thread sweep: serial baseline, small, and the paper-relevant
+/// core count.
+pub const DEFAULT_THREADS: [usize; 3] = [1, 2, 8];
+
+/// Sweep shape.
+#[derive(Clone, Debug)]
+pub struct TrainBenchConfig {
+    pub nodes: usize,
+    pub classes: usize,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub steps: usize,
+    pub homophily: f64,
+    pub avg_deg: f64,
+    pub threads: Vec<usize>,
+    pub seed: u64,
+}
+
+impl TrainBenchConfig {
+    /// The full sweep the `bench` subcommand runs.
+    pub fn paper(seed: u64) -> TrainBenchConfig {
+        TrainBenchConfig {
+            nodes: 2000,
+            classes: 6,
+            feat_dim: 32,
+            hidden: 32,
+            layers: 2,
+            steps: 60,
+            homophily: 0.85,
+            avg_deg: 8.0,
+            threads: DEFAULT_THREADS.to_vec(),
+            seed,
+        }
+    }
+
+    /// Reduced sweep for unit tests / `--quick`.
+    pub fn quick(seed: u64) -> TrainBenchConfig {
+        TrainBenchConfig {
+            nodes: 250,
+            classes: 4,
+            feat_dim: 16,
+            hidden: 16,
+            layers: 2,
+            steps: 50,
+            homophily: 0.85,
+            avg_deg: 6.0,
+            threads: vec![1, 2],
+            seed,
+        }
+    }
+
+    fn model(&self, optimizer: &str) -> ModelConfig {
+        ModelConfig::gcn(self.feat_dim, self.hidden, self.classes, self.layers)
+            .with_lr(default_lr(optimizer))
+    }
+}
+
+/// One (threads, optimizer) cell.
+#[derive(Clone, Debug)]
+pub struct TrainNativePoint {
+    pub threads: usize,
+    pub optimizer: String,
+    pub steps: usize,
+    pub steps_per_sec: f64,
+    /// Per-step phase means, µs.
+    pub fwd_spmm_us: f64,
+    pub fwd_dense_us: f64,
+    pub bwd_spmm_us: f64,
+    pub bwd_dense_us: f64,
+    pub opt_us: f64,
+    pub loss_initial: f64,
+    pub loss_final: f64,
+    pub train_accuracy: f64,
+    pub test_accuracy: f64,
+    /// Backward SpMM matched the dense `Âᵀ` reference.
+    pub verified: bool,
+}
+
+/// Run the sweep: threads × {sgd, adam}, one fresh trainer per cell
+/// (same dataset, same init seed — cells differ only in the knob being
+/// measured).
+pub fn run(cfg: &TrainBenchConfig) -> Result<Vec<TrainNativePoint>> {
+    let data = labeled_synthetic_with(
+        cfg.nodes,
+        cfg.classes,
+        cfg.feat_dim,
+        cfg.avg_deg,
+        cfg.homophily,
+        cfg.seed,
+    );
+    let adj = data.csr.gcn_normalize();
+    let mut points = Vec::new();
+    for &threads in &cfg.threads {
+        for optimizer in ["sgd", "adam"] {
+            points.push(run_cell(cfg, &data, &adj, threads, optimizer)?);
+        }
+    }
+    Ok(points)
+}
+
+fn run_cell(
+    cfg: &TrainBenchConfig,
+    data: &LabeledDataset,
+    adj: &crate::graph::Csr,
+    threads: usize,
+    optimizer: &str,
+) -> Result<TrainNativePoint> {
+    let tc = TrainConfig {
+        model: cfg.model(optimizer),
+        optimizer: optimizer.to_string(),
+        steps: cfg.steps,
+        threads,
+        seed: cfg.seed,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(adj, tc)?;
+    let verified = trainer.verify_backward_spmm(cfg.feat_dim, cfg.seed);
+    let report = trainer.train(data)?;
+    let steps = report.losses.len();
+    let per = |s: f64| s / steps.max(1) as f64 * 1e6;
+    Ok(TrainNativePoint {
+        threads,
+        optimizer: optimizer.to_string(),
+        steps,
+        steps_per_sec: report.steps_per_sec,
+        fwd_spmm_us: per(report.phases.fwd_spmm),
+        fwd_dense_us: per(report.phases.fwd_dense),
+        bwd_spmm_us: per(report.phases.bwd_spmm),
+        bwd_dense_us: per(report.phases.bwd_dense),
+        opt_us: per(report.phases.opt),
+        loss_initial: report.initial_loss(),
+        loss_final: report.final_loss(),
+        train_accuracy: report.train_accuracy,
+        test_accuracy: report.test_accuracy,
+        verified,
+    })
+}
+
+/// Render the paper-style table.
+pub fn report(points: &[TrainNativePoint]) -> String {
+    let mut table = Table::new(&[
+        "threads", "optim", "steps/s", "fwd-spmm µs", "fwd-dense µs", "bwd-spmm µs",
+        "bwd-dense µs", "opt µs", "loss init→final", "test acc", "verified",
+    ]);
+    for p in points {
+        table.row(vec![
+            p.threads.to_string(),
+            p.optimizer.clone(),
+            format!("{:.1}", p.steps_per_sec),
+            format!("{:.0}", p.fwd_spmm_us),
+            format!("{:.0}", p.fwd_dense_us),
+            format!("{:.0}", p.bwd_spmm_us),
+            format!("{:.0}", p.bwd_dense_us),
+            format!("{:.0}", p.opt_us),
+            format!("{:.3}→{:.3}", p.loss_initial, p.loss_final),
+            format!("{:.2}", p.test_accuracy),
+            p.verified.to_string(),
+        ]);
+    }
+    table.render()
+}
+
+/// The machine-readable form consumed by the perf-trajectory tooling.
+pub fn to_json(points: &[TrainNativePoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("threads", p.threads);
+            o.set("optimizer", p.optimizer.as_str());
+            o.set("steps", p.steps);
+            o.set("steps_per_sec", p.steps_per_sec);
+            o.set("fwd_spmm_us", p.fwd_spmm_us);
+            o.set("fwd_dense_us", p.fwd_dense_us);
+            o.set("bwd_spmm_us", p.bwd_spmm_us);
+            o.set("bwd_dense_us", p.bwd_dense_us);
+            o.set("opt_us", p.opt_us);
+            o.set("loss_initial", p.loss_initial);
+            o.set("loss_final", p.loss_final);
+            o.set("train_accuracy", p.train_accuracy);
+            o.set("test_accuracy", p.test_accuracy);
+            o.set("verified", p.verified);
+            o
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("experiment", "train_native");
+    doc.set("executor", "train/block-level-parallel");
+    doc.set("unit", "us");
+    doc.set("points", rows);
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_trains_verifies_and_reports() {
+        let mut cfg = TrainBenchConfig::quick(7);
+        cfg.threads = vec![2];
+        cfg.steps = 50;
+        let pts = run(&cfg).unwrap();
+        assert_eq!(pts.len(), 2, "one cell per optimizer");
+        for p in &pts {
+            assert!(p.verified, "{p:?}: backward SpMM must match dense Âᵀ");
+            assert!(p.steps_per_sec > 0.0, "{p:?}");
+            assert!(
+                p.loss_final <= 0.5 * p.loss_initial,
+                "{}: loss {:.4} -> {:.4} must halve in {} steps",
+                p.optimizer,
+                p.loss_initial,
+                p.loss_final,
+                p.steps
+            );
+            assert!(p.fwd_spmm_us >= 0.0 && p.bwd_dense_us >= 0.0);
+        }
+        let json = to_json(&pts).to_pretty();
+        assert!(json.contains("train_native"));
+        assert!(json.contains("bwd_spmm_us"));
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.req_arr("points").unwrap().len(), 2);
+        assert!(report(&pts).contains("steps/s"));
+    }
+}

@@ -206,6 +206,52 @@ impl Csr {
         y
     }
 
+    /// Transpose: `out[(c, r)] = self[(r, c)]`, via one counting pass
+    /// over the column ids — O(n + nnz), no sort. Because rows are
+    /// scanned in ascending order, every output row comes out with its
+    /// columns already ascending (and duplicate-free whenever `self` is
+    /// canonical), so the result is in canonical form without a
+    /// `sort_rows_and_merge_dups` pass.
+    ///
+    /// This is the backward pass's left operand: `dL/dH = Âᵀ · G`
+    /// (see [`crate::train`]).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts;
+        let mut cursor = row_ptr.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        for r in 0..self.n_rows {
+            for (c, v) in self.row(r) {
+                let p = cursor[c as usize];
+                col_idx[p] = r as u32;
+                vals[p] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, row_ptr, col_idx, vals }
+    }
+
+    /// Whether the matrix equals its transpose **bit-for-bit** (same
+    /// pattern, same f32 values). Requires canonical form (rows sorted,
+    /// duplicates merged — the invariant every constructor maintains).
+    /// `Â = D^{-1/2}(A+I)D^{-1/2}` of an undirected graph is symmetric,
+    /// which is what lets the training path reuse the forward plan for
+    /// the backward SpMM instead of building a transposed one.
+    pub fn is_symmetric(&self) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        let t = self.transpose();
+        t.row_ptr == self.row_ptr && t.col_idx == self.col_idx && t.vals == self.vals
+    }
+
     /// Apply a row permutation: `out.row[i] = self.row[perm[i]]`.
     pub fn permute_rows(&self, perm: &[u32]) -> Csr {
         assert_eq!(perm.len(), self.n_rows);
@@ -370,6 +416,77 @@ mod tests {
                 assert!((got[i * f + k] - want_full[src * f + k]).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn transpose_moves_entries() {
+        let m = small();
+        let t = m.transpose();
+        assert_eq!((t.n_rows, t.n_cols), (3, 3));
+        // (0,0,1) -> (0,0,1); (0,2,2) -> (2,0,2); (2,1,3) -> (1,2,3)
+        assert_eq!(t.row(0).collect::<Vec<_>>(), vec![(0, 1.0)]);
+        assert_eq!(t.row(1).collect::<Vec<_>>(), vec![(2, 3.0)]);
+        assert_eq!(t.row(2).collect::<Vec<_>>(), vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn transpose_roundtrip_and_canonical() {
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::seed_from(91);
+        let (n_rows, n_cols) = (17, 23);
+        let edges: Vec<(u32, u32, f32)> = (0..120)
+            .map(|_| (rng.range(0, n_rows) as u32, rng.range(0, n_cols) as u32, rng.f32() + 0.1))
+            .collect();
+        let m = Csr::from_edges(n_rows, n_cols, &edges).unwrap();
+        let t = m.transpose();
+        // canonical: rows sorted, no duplicates
+        for r in 0..t.n_rows {
+            let cols: Vec<u32> = t.row(r).map(|(c, _)| c).collect();
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {r} not canonical");
+        }
+        assert_eq!(t.transpose(), m, "double transpose is identity");
+    }
+
+    #[test]
+    fn transpose_spmm_is_dense_at() {
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::seed_from(92);
+        let n = 20;
+        let edges: Vec<(u32, u32, f32)> = (0..90)
+            .map(|_| (rng.range(0, n) as u32, rng.range(0, n) as u32, rng.f32() - 0.5))
+            .collect();
+        let m = Csr::from_edges(n, n, &edges).unwrap();
+        let t = m.transpose();
+        let f = 3;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        // Aᵀ·X via the transpose == column-wise accumulation over A
+        let got = t.spmm_dense(&x, f);
+        let mut want = vec![0f32; n * f];
+        for r in 0..n {
+            for (c, v) in m.row(r) {
+                for k in 0..f {
+                    want[c as usize * f + k] += v * x[r * f + k];
+                }
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn is_symmetric_detects() {
+        let asym = Csr::from_edges(3, 3, &[(0, 1, 1.0), (2, 0, 1.0)]).unwrap();
+        assert!(!asym.is_symmetric());
+        assert!(asym.symmetrize().is_symmetric());
+        // GCN normalization of a symmetric pattern stays symmetric
+        assert!(asym.symmetrize().gcn_normalize().is_symmetric());
+        // value asymmetry on a symmetric pattern is caught
+        let vals = Csr::from_edges(2, 2, &[(0, 1, 1.0), (1, 0, 2.0)]).unwrap();
+        assert!(!vals.is_symmetric());
+        // non-square is never symmetric
+        let rect = Csr::from_edges(2, 3, &[(0, 2, 1.0)]).unwrap();
+        assert!(!rect.is_symmetric());
     }
 
     #[test]

@@ -141,6 +141,136 @@ pub fn materialize(spec: &DatasetSpec, policy: ScalePolicy, seed: u64) -> Csr {
     generator::from_degree_sequence(n, &degs, &mut rng)
 }
 
+/// A labeled graph ready for native training ([`crate::train`]):
+/// topology + node features + class labels + disjoint 60/20/20
+/// train/val/test masks. Everything is deterministic in the seed.
+#[derive(Clone, Debug)]
+pub struct LabeledDataset {
+    pub csr: Csr,
+    /// Row-major `n × feat_dim`.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    /// One class id per node, `< n_classes`.
+    pub labels: Vec<u32>,
+    pub n_classes: usize,
+    /// Disjoint boolean masks covering every node: ~60% / 20% / 20%.
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl LabeledDataset {
+    pub fn n_nodes(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Nodes selected by a mask.
+    pub fn mask_count(mask: &[bool]) -> usize {
+        mask.iter().filter(|&&m| m).count()
+    }
+}
+
+/// Split `n` nodes 60/20/20 by a seeded shuffle. Train gets the
+/// rounding slack; val and test each get `n/5` (so all three are
+/// non-empty for `n ≥ 5`, asserted).
+fn split_masks(n: usize, rng: &mut Pcg) -> (Vec<bool>, Vec<bool>, Vec<bool>) {
+    assert!(n >= 5, "need ≥ 5 nodes for a 60/20/20 split, got {n}");
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let n_val = n / 5;
+    let n_test = n / 5;
+    let (mut train, mut val, mut test) = (vec![false; n], vec![false; n], vec![false; n]);
+    for (i, &v) in order.iter().enumerate() {
+        if i < n_val {
+            val[v] = true;
+        } else if i < n_val + n_test {
+            test[v] = true;
+        } else {
+            train[v] = true;
+        }
+    }
+    (train, val, test)
+}
+
+/// Planted-partition labeled graph for native training: a homophilous
+/// community graph (`generator::labeled_communities`) with 60/20/20
+/// masks. `homophily` is the probability an edge endpoint is drawn from
+/// the same class; `feat_dim` defaults to `max(8, 2·classes)` — use
+/// [`labeled_synthetic_with`] to control it and the average degree.
+pub fn labeled_synthetic(n: usize, classes: usize, homophily: f64, seed: u64) -> LabeledDataset {
+    labeled_synthetic_with(n, classes, (2 * classes).max(8), 6.0, homophily, seed)
+}
+
+/// [`labeled_synthetic`] with explicit feature dimension and average
+/// degree.
+pub fn labeled_synthetic_with(
+    n: usize,
+    classes: usize,
+    feat_dim: usize,
+    avg_deg: f64,
+    homophily: f64,
+    seed: u64,
+) -> LabeledDataset {
+    assert!(classes >= 2, "need ≥ 2 classes");
+    assert!((0.0..=1.0).contains(&homophily), "homophily must be in [0,1]");
+    let mut rng = Pcg::new(seed, 0x1abe1);
+    let g = generator::labeled_communities(n, avg_deg, feat_dim, classes, homophily, &mut rng);
+    let (train_mask, val_mask, test_mask) = split_masks(n, &mut rng);
+    LabeledDataset {
+        csr: g.csr,
+        features: g.features,
+        feat_dim: g.feat_dim,
+        labels: g.labels,
+        n_classes: g.n_classes,
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
+/// Plant labels *onto an existing topology* (e.g. a loaded edge list,
+/// which carries no labels): random seed labels smoothed by a few
+/// rounds of deterministic majority-vote propagation so labels are
+/// locally consistent — learnable by a GCN — then centroid features and
+/// 60/20/20 masks as in [`labeled_synthetic`].
+pub fn labeled_from_topology(csr: &Csr, classes: usize, feat_dim: usize, seed: u64) -> LabeledDataset {
+    assert_eq!(csr.n_rows, csr.n_cols, "labeling needs a square adjacency");
+    assert!(classes >= 2, "need ≥ 2 classes");
+    let n = csr.n_rows;
+    let mut rng = Pcg::new(seed, 0x70b0);
+    let mut labels: Vec<u32> = (0..n).map(|_| rng.range(0, classes) as u32).collect();
+    // majority-vote label propagation; ties keep the current label
+    // (deterministic), isolated nodes keep their seed label
+    for _round in 0..3 {
+        let mut next = labels.clone();
+        let mut votes = vec![0usize; classes];
+        for v in 0..n {
+            votes.iter_mut().for_each(|c| *c = 0);
+            for (u, _) in csr.row(v) {
+                votes[labels[u as usize] as usize] += 1;
+            }
+            let cur = labels[v] as usize;
+            let best = (0..classes).max_by_key(|&c| (votes[c], usize::from(c == cur))).unwrap();
+            if votes[best] > votes[cur] {
+                next[v] = best as u32;
+            }
+        }
+        labels = next;
+    }
+    let features = generator::centroid_features(&labels, classes, feat_dim, &mut rng);
+    let (train_mask, val_mask, test_mask) = split_masks(n, &mut rng);
+    LabeledDataset {
+        csr: csr.clone(),
+        features,
+        feat_dim,
+        labels,
+        n_classes: classes,
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +330,82 @@ mod tests {
         assert_ne!(a, c);
         let (n, _) = policy.scaled(spec);
         assert_eq!(a.n_rows, n);
+    }
+
+    fn assert_split_invariants(d: &LabeledDataset) {
+        let n = d.n_nodes();
+        // masks are disjoint and cover every node exactly once
+        for v in 0..n {
+            let picks =
+                usize::from(d.train_mask[v]) + usize::from(d.val_mask[v]) + usize::from(d.test_mask[v]);
+            assert_eq!(picks, 1, "node {v} must be in exactly one split");
+        }
+        // 60/20/20 within integer rounding
+        let (tr, va, te) = (
+            LabeledDataset::mask_count(&d.train_mask),
+            LabeledDataset::mask_count(&d.val_mask),
+            LabeledDataset::mask_count(&d.test_mask),
+        );
+        assert_eq!(tr + va + te, n);
+        assert_eq!(va, n / 5);
+        assert_eq!(te, n / 5);
+        assert!(tr >= va && tr >= te, "train must be the largest split");
+        // labels in range, features shaped
+        assert!(d.labels.iter().all(|&l| (l as usize) < d.n_classes));
+        assert_eq!(d.features.len(), n * d.feat_dim);
+        assert_eq!(d.csr.n_rows, n);
+    }
+
+    #[test]
+    fn labeled_synthetic_invariants() {
+        let d = labeled_synthetic(200, 4, 0.85, 7);
+        assert_split_invariants(&d);
+        assert_eq!(d.n_classes, 4);
+        assert_eq!(d.feat_dim, 8);
+        // every class present at this size
+        for c in 0..4u32 {
+            assert!(d.labels.contains(&c), "class {c} missing");
+        }
+        // homophily carried through: most edges intra-class
+        let (mut intra, mut total) = (0usize, 0usize);
+        for r in 0..d.n_nodes() {
+            for (c, _) in d.csr.row(r) {
+                total += 1;
+                intra += usize::from(d.labels[r] == d.labels[c as usize]);
+            }
+        }
+        assert!(intra as f64 > 0.6 * total as f64, "intra={intra}/{total}");
+        // deterministic in the seed
+        let d2 = labeled_synthetic(200, 4, 0.85, 7);
+        assert_eq!(d.labels, d2.labels);
+        assert_eq!(d.train_mask, d2.train_mask);
+        assert_ne!(labeled_synthetic(200, 4, 0.85, 8).labels, d.labels);
+    }
+
+    #[test]
+    fn labeled_from_topology_invariants() {
+        use crate::graph::generator::{degree_sequence, from_degree_sequence, DegreeModel};
+        let mut rng = Pcg::seed_from(11);
+        let n = 150;
+        let degs =
+            degree_sequence(DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.1 }, n, n * 6, &mut rng);
+        let csr = from_degree_sequence(n, &degs, &mut rng);
+        let d = labeled_from_topology(&csr, 3, 12, 5);
+        assert_split_invariants(&d);
+        assert_eq!(d.feat_dim, 12);
+        // propagation makes labels locally consistent: strictly more
+        // intra-class edges than a uniform assignment would give
+        let (mut intra, mut total) = (0usize, 0usize);
+        for r in 0..n {
+            for (c, _) in d.csr.row(r) {
+                total += 1;
+                intra += usize::from(d.labels[r] == d.labels[c as usize]);
+            }
+        }
+        assert!(
+            intra as f64 > 1.1 * total as f64 / 3.0,
+            "propagated labels not locally consistent: {intra}/{total}"
+        );
     }
 
     #[test]

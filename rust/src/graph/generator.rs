@@ -221,20 +221,33 @@ pub fn labeled_communities(
         edges.push((r as u32, c, 1.0));
     }
     let csr = Csr::from_edges(n, n, &edges).unwrap().symmetrize();
-    // features: class centroid + noise
+    let features = centroid_features(&labels, n_classes, feat_dim, rng);
+    LabeledGraph { csr, features, feat_dim, labels, n_classes }
+}
+
+/// Class-centroid features with Gaussian noise: per-class N(0,1)
+/// centroids plus 0.8·N(0,1) per-node noise — what makes planted labels
+/// learnable from features alone. Shared by [`labeled_communities`] and
+/// the training datasets' label-planting paths
+/// ([`crate::graph::datasets`]).
+pub fn centroid_features(
+    labels: &[u32],
+    n_classes: usize,
+    feat_dim: usize,
+    rng: &mut Pcg,
+) -> Vec<f32> {
     let mut centroids = vec![0f32; n_classes * feat_dim];
     for v in centroids.iter_mut() {
         *v = rng.normal() as f32;
     }
-    let mut features = vec![0f32; n * feat_dim];
-    for v in 0..n {
-        let l = labels[v] as usize;
+    let mut features = vec![0f32; labels.len() * feat_dim];
+    for (v, &l) in labels.iter().enumerate() {
         for k in 0..feat_dim {
             features[v * feat_dim + k] =
-                centroids[l * feat_dim + k] + 0.8 * rng.normal() as f32;
+                centroids[l as usize * feat_dim + k] + 0.8 * rng.normal() as f32;
         }
     }
-    LabeledGraph { csr, features, feat_dim, labels, n_classes }
+    features
 }
 
 #[cfg(test)]

@@ -30,6 +30,11 @@
 //!   server executing column-fused SpMM/GCN batches through
 //!   [`pipeline`] on CPU — the request path that works offline. Tenants
 //!   accept `UpdateGraph` requests with epoch-versioned plan swaps.
+//! * [`train`] — native training subsystem: full-graph GCN backprop
+//!   (forward with tape → masked softmax cross-entropy → backward →
+//!   SGD/Adam) entirely on the parallel SpMM pipeline; the backward
+//!   SpMM runs against a cached transposed plan (or the forward plan
+//!   itself when `Â` is symmetric).
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
 //! * [`metrics`] — counters and latency histograms.
 //! * [`util`] — zero-dependency substrates (RNG, JSON, NPY, CLI, stats,
@@ -47,4 +52,5 @@ pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;
+pub mod train;
 pub mod bench;

@@ -7,10 +7,11 @@
 //! accel-gcn datasets                      # Table I summary
 //! accel-gcn stats     --graph collab      # Fig. 2-style degree histogram
 //! accel-gcn train        --artifacts artifacts/quickstart --steps 300
+//! accel-gcn train-native [--steps 200] [--optimizer sgd|adam] [--quick]
 //! accel-gcn serve        --artifacts artifacts/quickstart --requests 64
 //! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
 //! accel-gcn update-demo  --batches 8 --batch-size 64 [--edge-list graph.txt]
-//! accel-gcn bench        --out results [--experiment fig5|fig6|...|microkernel|delta_update]
+//! accel-gcn bench        --out results [--experiment fig5|...|microkernel|train_native]
 //! ```
 
 use accel_gcn::bench as harness;
@@ -39,6 +40,7 @@ fn main() {
         "datasets" => cmd_datasets(rest),
         "stats" => cmd_stats(rest),
         "train" => cmd_train(rest),
+        "train-native" => cmd_train_native(rest),
         "serve" => cmd_serve(rest),
         "serve-native" => cmd_serve_native(rest),
         "update-demo" => cmd_update_demo(rest),
@@ -69,6 +71,12 @@ fn print_usage() {
          \x20 datasets  (print Table I specs and scale factors)\n\
          \x20 stats     --graph NAME (Fig. 2 degree histogram)\n\
          \x20 train     --artifacts DIR [--steps N]\n\
+         \x20 train-native [--nodes N] [--classes K] [--feat-dim F] [--hidden H]\n\
+         \x20           [--layers L] [--steps N] [--lr LR] [--optimizer sgd|adam]\n\
+         \x20           [--momentum M] [--homophily P] [--avg-deg D] [--threads T]\n\
+         \x20           [--patience N] [--seed S] [--edge-list PATH [--one-based]]\n\
+         \x20           [--require-loss-drop FRAC] [--quick]\n\
+         \x20           (full GCN backprop on the native SpMM pipeline, no artifacts)\n\
          \x20 serve     --artifacts DIR [--requests N] [--coldims 16,32]\n\
          \x20 serve-native [--requests N] [--tenants K] [--nodes N] [--avg-deg D]\n\
          \x20           [--threads T] [--ladder 32,64,128] [--gcn-every K] [--seed S]\n\
@@ -78,7 +86,8 @@ fn print_usage() {
          \x20           (stream edge-update batches; patch plans incrementally,\n\
          \x20           verify each patch against a from-scratch rebuild)\n\
          \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
-         \x20           exec_scaling|microkernel|serve_native|delta_update|all] [--quick]"
+         \x20           exec_scaling|microkernel|serve_native|delta_update|train_native|all]\n\
+         \x20           [--quick]"
     );
 }
 
@@ -241,6 +250,132 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let steps = args.usize_or("steps", 300)?;
     let log_every = args.usize_or("log-every", 20)?;
     harness::train::run_training(&dir, steps, log_every).map(|_| ())
+}
+
+/// Full-graph GCN training on the native pipeline — no Python, no
+/// artifacts. Trains on a planted-partition labeled graph (or labels
+/// planted onto a loaded edge list), verifies the backward SpMM against
+/// the dense `Âᵀ` reference before training, and (with
+/// `--require-loss-drop`) exits nonzero unless the final loss is at
+/// most that fraction of the initial loss — the CI smoke contract.
+fn cmd_train_native(rest: &[String]) -> Result<()> {
+    use accel_gcn::graph::datasets::{labeled_from_topology, labeled_synthetic_with};
+    use accel_gcn::graph::io::{load_edge_list, EdgeListOptions};
+    use accel_gcn::model::ModelConfig;
+    use accel_gcn::train::{default_lr, TrainConfig, Trainer};
+
+    let args = Args::parse(
+        rest,
+        &[
+            "nodes", "classes", "feat-dim", "hidden", "layers", "steps", "lr", "optimizer",
+            "momentum", "homophily", "avg-deg", "threads", "patience", "seed", "edge-list",
+            "require-loss-drop", "log-every",
+        ],
+        &["quick", "one-based"],
+    )?;
+    let quick = args.flag("quick");
+    let seed = args.u64_or("seed", 42)?;
+    let classes = args.usize_or("classes", 4)?;
+    let feat_dim = args.usize_or("feat-dim", 16)?;
+    let hidden = args.usize_or("hidden", 16)?;
+    let layers = args.usize_or("layers", 2)?;
+    let steps = args.usize_or("steps", if quick { 50 } else { 200 })?;
+    let optimizer = args.str_or("optimizer", "sgd");
+    let lr = args.f64_or("lr", default_lr(&optimizer))?;
+    let threads = args.usize_or("threads", 4)?;
+    // validate user-reachable knobs here so bad flags get clean CLI
+    // errors instead of tripping library asserts
+    anyhow::ensure!(lr.is_finite() && lr > 0.0, "--lr must be positive, got {lr}");
+    anyhow::ensure!(classes >= 2, "--classes must be ≥ 2, got {classes}");
+    anyhow::ensure!(layers >= 1, "--layers must be ≥ 1, got {layers}");
+    anyhow::ensure!(
+        feat_dim > 0 && hidden > 0,
+        "--feat-dim and --hidden must be positive"
+    );
+
+    let data = match args.get("edge-list") {
+        Some(path) => {
+            let opts = EdgeListOptions { one_based: args.flag("one-based"), ..Default::default() };
+            let g = load_edge_list(path, opts)?;
+            anyhow::ensure!(
+                g.n_rows >= 5,
+                "`{path}` has {} nodes; training needs ≥ 5 for a 60/20/20 split",
+                g.n_rows
+            );
+            println!("loaded `{path}`: {} nodes, {} edges; planting {classes} classes", g.n_rows, g.nnz());
+            labeled_from_topology(&g, classes, feat_dim, seed)
+        }
+        None => {
+            let nodes = args.usize_or("nodes", if quick { 300 } else { 1000 })?;
+            let homophily = args.f64_or("homophily", 0.85)?;
+            let avg_deg = args.f64_or("avg-deg", 6.0)?;
+            anyhow::ensure!(nodes >= 5, "--nodes must be ≥ 5 for a 60/20/20 split, got {nodes}");
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&homophily),
+                "--homophily must be in [0, 1], got {homophily}"
+            );
+            let d = labeled_synthetic_with(nodes, classes, feat_dim, avg_deg, homophily, seed);
+            println!(
+                "generated labeled graph: {} nodes, {} edges, {} classes, feat_dim {feat_dim}, homophily {homophily}",
+                nodes,
+                d.csr.nnz(),
+                classes
+            );
+            d
+        }
+    };
+    let adj = data.csr.gcn_normalize();
+    let cfg = TrainConfig {
+        model: ModelConfig::gcn(feat_dim, hidden, classes, layers).with_lr(lr),
+        optimizer: optimizer.clone(),
+        momentum: args.f64_or("momentum", 0.9)?,
+        steps,
+        patience: args.usize_or("patience", 0)?,
+        threads,
+        seed,
+        log_every: args.usize_or("log-every", 10)?,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&adj, cfg)?;
+    println!(
+        "training {layers}-layer GCN ({feat_dim}→{hidden}→{classes}) with {optimizer} (lr {lr}), \
+         {threads} threads; transpose plan {}",
+        if trainer.transpose_reused { "REUSED (Â symmetric)" } else { "built+cached" }
+    );
+    anyhow::ensure!(
+        trainer.verify_backward_spmm(feat_dim, seed),
+        "backward SpMM diverged from the dense Âᵀ reference"
+    );
+    println!("backward SpMM verified against dense Âᵀ reference");
+
+    let report = trainer.train(&data)?;
+    println!(
+        "done: {} steps at {:.1} steps/s, loss {:.4} -> {:.4} ({:.1}% of initial){}",
+        report.losses.len(),
+        report.steps_per_sec,
+        report.initial_loss(),
+        report.final_loss(),
+        100.0 * report.final_loss() / report.initial_loss(),
+        if report.stopped_early { ", stopped early on val loss" } else { "" },
+    );
+    println!(
+        "accuracy: train {:.1}%  val {:.1}%  test {:.1}%",
+        report.train_accuracy * 100.0,
+        report.val_accuracy * 100.0,
+        report.test_accuracy * 100.0
+    );
+    println!("per-step phases: {}", report.phases.render_per_step(report.losses.len()));
+    if let Some(frac) = args.get("require-loss-drop") {
+        let frac: f64 = frac.parse().map_err(|e| anyhow::anyhow!("--require-loss-drop: {e}"))?;
+        anyhow::ensure!(
+            report.final_loss() <= frac * report.initial_loss(),
+            "loss dropped to {:.1}% of initial, required ≤ {:.1}%",
+            100.0 * report.final_loss() / report.initial_loss(),
+            100.0 * frac
+        );
+        println!("loss-drop check passed (≤ {:.0}% of initial)", frac * 100.0);
+    }
+    Ok(())
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {

@@ -34,6 +34,16 @@ impl ModelConfig {
         }
     }
 
+    /// Set the learning rate (builder style). [`ModelConfig::gcn`]
+    /// deliberately leaves `lr` at 0.0 — inference never reads it — so
+    /// every training consumer must pass through here (and the training
+    /// entry points validate `lr > 0` before running a step).
+    pub fn with_lr(mut self, lr: f64) -> ModelConfig {
+        assert!(lr.is_finite() && lr > 0.0, "learning rate must be positive, got {lr}");
+        self.lr = lr;
+        self
+    }
+
     /// `(in, out)` dimensions of every layer in the stack.
     pub fn layer_dims(&self) -> Vec<(usize, usize)> {
         (0..self.n_layers)
@@ -88,6 +98,20 @@ mod tests {
     fn rejects_missing_fields() {
         let j = Json::parse(r#"{"arch":"gcn"}"#).unwrap();
         assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn with_lr_sets_rate() {
+        let m = ModelConfig::gcn(8, 4, 2, 2);
+        assert_eq!(m.lr, 0.0, "inference constructor leaves lr unset");
+        let m = m.with_lr(0.05);
+        assert_eq!(m.lr, 0.05);
+    }
+
+    #[test]
+    #[should_panic(expected = "learning rate must be positive")]
+    fn with_lr_rejects_zero() {
+        let _ = ModelConfig::gcn(8, 4, 2, 2).with_lr(0.0);
     }
 
     #[test]

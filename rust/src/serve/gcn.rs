@@ -77,9 +77,16 @@ impl GcnModel {
 
 /// `orow = xrow · w + b`, optionally ReLU-clamped — the one per-row
 /// affine kernel both the sequential reference and the parallel fused
-/// path run.
+/// path run (shared with the training forward, [`crate::train`]).
 #[inline]
-fn affine_one_row(xrow: &[f32], w: &[f32], dout: usize, b: &[f32], relu: bool, orow: &mut [f32]) {
+pub(crate) fn affine_one_row(
+    xrow: &[f32],
+    w: &[f32],
+    dout: usize,
+    b: &[f32],
+    relu: bool,
+    orow: &mut [f32],
+) {
     orow.copy_from_slice(b);
     // k-outer ordering: the inner j-loop streams one w row (cache-friendly)
     for (k, &xv) in xrow.iter().enumerate() {
@@ -102,7 +109,15 @@ fn affine_one_row(xrow: &[f32], w: &[f32], dout: usize, b: &[f32], relu: bool, o
 
 /// `out = x · w + b`, optionally ReLU-clamped. `x` is `[rows × din]`
 /// row-major, `w` is `[din × dout]` row-major.
-fn affine_rows(x: &[f32], rows: usize, din: usize, w: &[f32], dout: usize, b: &[f32], relu: bool) -> Vec<f32> {
+pub(crate) fn affine_rows(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    b: &[f32],
+    relu: bool,
+) -> Vec<f32> {
     debug_assert_eq!(x.len(), rows * din);
     debug_assert_eq!(w.len(), din * dout);
     debug_assert_eq!(b.len(), dout);
@@ -117,8 +132,10 @@ fn affine_rows(x: &[f32], rows: usize, din: usize, w: &[f32], dout: usize, b: &[
 /// column-concatenated), `out` is `[n × k·dout]`; each member's columns
 /// go through `x·w + b` (shared weights), optional ReLU. Rows are
 /// chunked across the pool with scoped jobs writing disjoint spans of
-/// `out` — no staging buffers, no input copies.
-fn affine_fused_parallel(
+/// `out` — no staging buffers, no input copies. With `k = 1` this is a
+/// plain row-chunked parallel affine, which is how the training forward
+/// ([`crate::train::tape`]) shares the serving path's dense kernel.
+pub(crate) fn affine_fused_parallel(
     pool: &ThreadPool,
     x: &[f32],
     n: usize,

@@ -1,0 +1,305 @@
+//! Reverse-mode differentiation of the GCN stack — every op of the
+//! forward, transposed, on the same parallel machinery.
+//!
+//! For layer `l` with forward `H_l = act(Â·H_{l-1}·W_l + b_l)` and
+//! incoming gradient `G = dL/dA_l` (the affine output):
+//!
+//! ```text
+//! dW_l = Z_lᵀ · G              (dense GEMM, row-sharded + reduced)
+//! db_l = Σ_rows G              (same sharding)
+//! dZ_l = G · W_lᵀ              (dense GEMM, row-parallel)
+//! dH_{l-1} = Âᵀ · dZ_l         (SpMM against the TRANSPOSED plan)
+//! dA_{l-1} = dH_{l-1} ⊙ 1[H_{l-1} > 0]   (ReLU backward)
+//! ```
+//!
+//! The transpose SpMM runs through the identical block-level schedule
+//! as the forward — Accel-GCN's partition applies to `Âᵀ` exactly as to
+//! `Â` (and when `Â` is symmetric the two plans are literally the same
+//! object, see [`Trainer`](crate::train::Trainer)). The dense GEMMs
+//! shard rows across the [`ThreadPool`] with scoped jobs: `dZ` rows are
+//! disjoint output spans (lock-free), while `dW`/`db` accumulate into
+//! per-shard buffers reduced **in shard order** after the join — the
+//! same determinism discipline as the SpMM split-row reduction.
+
+use crate::pipeline::{spmm_block_level_parallel_into, SpmmPlan};
+use crate::serve::gcn::GcnModel;
+use crate::train::tape::Tape;
+use crate::train::PhaseBreakdown;
+use crate::util::threadpool::ThreadPool;
+use std::time::Instant;
+
+/// Parameter gradients of one backward pass (plus `dL/dX` when
+/// requested — the training loop skips it, the gradient check needs it).
+#[derive(Clone, Debug)]
+pub struct Gradients {
+    /// `dw[l]` is `[din × dout]` row-major, like `model.weights[l]`.
+    pub dw: Vec<Vec<f32>>,
+    /// `db[l]` is `[dout]`.
+    pub db: Vec<Vec<f32>>,
+    /// `dL/dX` (`[n × in_dim]`), empty unless `want_dx`.
+    pub dx: Vec<f32>,
+}
+
+/// `out[n × din] = g[n × dout] · wᵀ` where `w` is `[din × dout]`
+/// row-major. Row-chunked across the pool; each output row is a series
+/// of dot products against rows of `w` (both streams contiguous).
+pub(crate) fn matmul_wt_parallel(
+    pool: &ThreadPool,
+    g: &[f32],
+    n: usize,
+    dout: usize,
+    w: &[f32],
+    din: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), n * dout);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(out.len(), n * din);
+    if n == 0 || din == 0 {
+        return;
+    }
+    let chunk = n.div_ceil(pool.size().max(1)).max(1);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(chunk * din)
+        .enumerate()
+        .map(|(ci, ochunk)| {
+            let rows = ochunk.len() / din;
+            let lo = ci * chunk;
+            let gs = &g[lo * dout..(lo + rows) * dout];
+            Box::new(move || {
+                for r in 0..rows {
+                    let grow = &gs[r * dout..(r + 1) * dout];
+                    let orow = &mut ochunk[r * din..(r + 1) * din];
+                    for (k, o) in orow.iter_mut().enumerate() {
+                        let wrow = &w[k * dout..(k + 1) * dout];
+                        let mut acc = 0f32;
+                        for j in 0..dout {
+                            acc += grow[j] * wrow[j];
+                        }
+                        *o = acc;
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.scoped_run(jobs);
+}
+
+/// `(dw, db) = (zᵀ·g, column sums of g)` for `z: [n × din]`,
+/// `g: [n × dout]`. Rows are chunked across the pool; each shard
+/// accumulates a private `[din × dout]` + `[dout]` buffer, reduced in
+/// shard order after the join (deterministic for a fixed thread count).
+pub(crate) fn grad_wb_parallel(
+    pool: &ThreadPool,
+    z: &[f32],
+    g: &[f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(z.len(), n * din);
+    debug_assert_eq!(g.len(), n * dout);
+    let n_shards = pool.size().max(1).min(n.max(1));
+    let chunk = n.div_ceil(n_shards).max(1);
+    let mut partials: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..n_shards).map(|_| (vec![0f32; din * dout], vec![0f32; dout])).collect();
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = partials
+        .iter_mut()
+        .enumerate()
+        .map(|(ci, (dw, db))| {
+            let lo = (ci * chunk).min(n);
+            let hi = ((ci + 1) * chunk).min(n);
+            let zs = &z[lo * din..hi * din];
+            let gs = &g[lo * dout..hi * dout];
+            Box::new(move || {
+                for r in 0..hi - lo {
+                    let grow = &gs[r * dout..(r + 1) * dout];
+                    for (j, d) in db.iter_mut().enumerate() {
+                        *d += grow[j];
+                    }
+                    let zrow = &zs[r * din..(r + 1) * din];
+                    for (k, &zv) in zrow.iter().enumerate() {
+                        if zv == 0.0 {
+                            continue;
+                        }
+                        let drow = &mut dw[k * dout..(k + 1) * dout];
+                        for j in 0..dout {
+                            drow[j] += zv * grow[j];
+                        }
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.scoped_run(jobs);
+    // shard-order reduction
+    let mut dw = vec![0f32; din * dout];
+    let mut db = vec![0f32; dout];
+    for (pw, pb) in &partials {
+        for (d, s) in dw.iter_mut().zip(pw) {
+            *d += *s;
+        }
+        for (d, s) in db.iter_mut().zip(pb) {
+            *d += *s;
+        }
+    }
+    (dw, db)
+}
+
+/// ReLU backward in place: `g[i] ← 0` wherever the recorded activation
+/// `h[i]` was clamped (`h[i] ≤ 0`).
+#[inline]
+fn relu_backward(g: &mut [f32], h: &[f32]) {
+    debug_assert_eq!(g.len(), h.len());
+    for (gv, &hv) in g.iter_mut().zip(h) {
+        if hv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Full backward pass: from `dlogits` (`dL/d(last affine output)`,
+/// `[n × out_dim]`) to every `dW_l`, `db_l` — and `dL/dX` when
+/// `want_dx` (the layer-0 transpose SpMM is skipped otherwise, since no
+/// parameters sit below it). `plan_t` must be the plan over `Âᵀ`
+/// (identical to the forward plan when `Â` is symmetric). Timings
+/// accumulate into `phases`.
+pub fn backward(
+    plan_t: &SpmmPlan,
+    pool: &ThreadPool,
+    model: &GcnModel,
+    tape: &Tape,
+    dlogits: &[f32],
+    want_dx: bool,
+    phases: &mut PhaseBreakdown,
+) -> Gradients {
+    let n = tape.n;
+    let dims = model.dims();
+    let n_layers = dims.len();
+    assert_eq!(dlogits.len(), n * dims[n_layers - 1].1, "dlogits shape mismatch");
+    let mut dw: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+    let mut db: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+    let mut g = dlogits.to_vec();
+    let mut dx = Vec::new();
+    for l in (0..n_layers).rev() {
+        let (din, dout) = dims[l];
+        debug_assert_eq!(g.len(), n * dout);
+        // dW_l = Z_lᵀ·G, db_l = Σ G
+        let t0 = Instant::now();
+        let (dwl, dbl) = grad_wb_parallel(pool, &tape.zs[l], &g, n, din, dout);
+        dw[l] = dwl;
+        db[l] = dbl;
+        if l == 0 && !want_dx {
+            phases.bwd_dense += t0.elapsed().as_secs_f64();
+            break;
+        }
+        // dZ_l = G · W_lᵀ
+        let mut dz = vec![0f32; n * din];
+        matmul_wt_parallel(pool, &g, n, dout, &model.weights[l], din, &mut dz);
+        phases.bwd_dense += t0.elapsed().as_secs_f64();
+        // dH_{l-1} = Âᵀ · dZ_l
+        let t1 = Instant::now();
+        let mut dh = vec![0f32; n * din];
+        spmm_block_level_parallel_into(plan_t, &dz, din, pool, &mut dh);
+        phases.bwd_spmm += t1.elapsed().as_secs_f64();
+        if l == 0 {
+            dx = dh;
+        } else {
+            // dA_{l-1} = dH_{l-1} ⊙ 1[H_{l-1} > 0]; H_{l-1} is layer
+            // l-1's recorded activation
+            relu_backward(&mut dh, &tape.acts[l - 1]);
+            g = dh;
+        }
+    }
+    Gradients { dw, db, dx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn naive_wt(g: &[f32], n: usize, dout: usize, w: &[f32], din: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n * din];
+        for r in 0..n {
+            for k in 0..din {
+                for j in 0..dout {
+                    out[r * din + k] += g[r * dout + j] * w[k * dout + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_wt_matches_naive_across_threads() {
+        let (n, din, dout) = (33, 7, 5);
+        let mut rng = Pcg::seed_from(21);
+        let g: Vec<f32> = (0..n * dout).map(|_| rng.f32() - 0.5).collect();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.f32() - 0.5).collect();
+        let want = naive_wt(&g, n, dout, &w, din);
+        for threads in [1usize, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut out = vec![0f32; n * din];
+            matmul_wt_parallel(&pool, &g, n, dout, &w, din, &mut out);
+            crate::spmm::verify::assert_allclose(&out, &want, 1e-5, 1e-5, "matmul_wt");
+        }
+    }
+
+    #[test]
+    fn grad_wb_matches_naive_across_threads() {
+        let (n, din, dout) = (41, 6, 4);
+        let mut rng = Pcg::seed_from(22);
+        let z: Vec<f32> = (0..n * din).map(|_| rng.f32() - 0.5).collect();
+        let g: Vec<f32> = (0..n * dout).map(|_| rng.f32() - 0.5).collect();
+        let mut want_dw = vec![0f32; din * dout];
+        let mut want_db = vec![0f32; dout];
+        for r in 0..n {
+            for j in 0..dout {
+                want_db[j] += g[r * dout + j];
+                for k in 0..din {
+                    want_dw[k * dout + j] += z[r * din + k] * g[r * dout + j];
+                }
+            }
+        }
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let (dw, db) = grad_wb_parallel(&pool, &z, &g, n, din, dout);
+            crate::spmm::verify::assert_allclose(&dw, &want_dw, 1e-4, 1e-4, "dw");
+            crate::spmm::verify::assert_allclose(&db, &want_db, 1e-4, 1e-4, "db");
+        }
+    }
+
+    #[test]
+    fn grad_wb_deterministic_for_fixed_threads() {
+        let (n, din, dout) = (57, 5, 3);
+        let mut rng = Pcg::seed_from(23);
+        let z: Vec<f32> = (0..n * din).map(|_| rng.f32() - 0.5).collect();
+        let g: Vec<f32> = (0..n * dout).map(|_| rng.f32() - 0.5).collect();
+        let pool = ThreadPool::new(4);
+        let (dw1, db1) = grad_wb_parallel(&pool, &z, &g, n, din, dout);
+        let (dw2, db2) = grad_wb_parallel(&pool, &z, &g, n, din, dout);
+        assert_eq!(dw1, dw2, "dw must be bit-stable");
+        assert_eq!(db1, db2, "db must be bit-stable");
+    }
+
+    #[test]
+    fn relu_backward_masks() {
+        let mut g = vec![1.0f32, 2.0, 3.0, 4.0];
+        relu_backward(&mut g, &[0.5, 0.0, -1.0, 2.0]);
+        assert_eq!(g, vec![1.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_and_tiny_shapes() {
+        let pool = ThreadPool::new(2);
+        let mut out: Vec<f32> = Vec::new();
+        matmul_wt_parallel(&pool, &[], 0, 3, &[0.0; 6], 2, &mut out);
+        let (dw, db) = grad_wb_parallel(&pool, &[], &[], 0, 2, 3);
+        assert!(dw.iter().all(|&v| v == 0.0) && db.iter().all(|&v| v == 0.0));
+        // single row
+        let (dw, db) = grad_wb_parallel(&pool, &[2.0, 3.0], &[5.0], 1, 2, 1);
+        assert_eq!(dw, vec![10.0, 15.0]);
+        assert_eq!(db, vec![5.0]);
+    }
+}

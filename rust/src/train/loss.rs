@@ -1,0 +1,188 @@
+//! Masked softmax cross-entropy — the training objective and its exact
+//! gradient, plus argmax accuracy.
+//!
+//! Loss and gradient come out of one pass over the logits: per masked
+//! row, a numerically-stable log-sum-exp (max-subtracted) gives
+//! `loss_i = lse(z_i) - z_i[label_i]`, and the gradient of the *mean*
+//! masked loss is `(softmax(z_i) - onehot(label_i)) / m` on masked rows
+//! and exactly zero elsewhere — the zero rows are what lets the
+//! backward pass run over the full node set without a gather. The loss
+//! sum accumulates in f64 so the finite-difference tests compare
+//! against a stable scalar.
+
+/// One row's stable cross-entropy pieces:
+/// `(lse - z[label], row max, Σ exp(z - max))` — the loss term plus
+/// what the gradient variant needs to form softmax probabilities. The
+/// single source of the numerical convention for both loss functions.
+#[inline]
+fn row_xent(row: &[f32], label: usize, k: usize) -> (f64, f32, f64) {
+    assert!(label < k, "label {label} out of range for {k} classes");
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f64;
+    for &z in row {
+        sum += ((z - max) as f64).exp();
+    }
+    (max as f64 + sum.ln() - row[label] as f64, max, sum)
+}
+
+/// Mean softmax cross-entropy over the masked rows of `logits`
+/// (`[n × k]` row-major), plus `dL/dlogits` (same shape; zero on
+/// unmasked rows). Panics if no row is masked.
+pub fn masked_softmax_xent(
+    logits: &[f32],
+    labels: &[u32],
+    mask: &[bool],
+    k: usize,
+) -> (f64, Vec<f32>) {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * k, "logit shape mismatch");
+    assert_eq!(mask.len(), n, "mask length mismatch");
+    let m = mask.iter().filter(|&&b| b).count();
+    assert!(m > 0, "empty mask: nothing to train on");
+    let inv_m = 1.0 / m as f32;
+    let mut grad = vec![0f32; n * k];
+    let mut loss = 0f64;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let row = &logits[i * k..(i + 1) * k];
+        let label = labels[i] as usize;
+        let (li, max, sum) = row_xent(row, label, k);
+        loss += li;
+        let grow = &mut grad[i * k..(i + 1) * k];
+        for (j, &z) in row.iter().enumerate() {
+            let p = (((z - max) as f64).exp() / sum) as f32;
+            grow[j] = (p - (j == label) as u8 as f32) * inv_m;
+        }
+    }
+    (loss / m as f64, grad)
+}
+
+/// Loss-only variant of [`masked_softmax_xent`] — no gradient buffer —
+/// for evaluation passes (per-step validation loss reads the same
+/// logits the training loss already produced).
+pub fn masked_softmax_xent_loss(logits: &[f32], labels: &[u32], mask: &[bool], k: usize) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * k, "logit shape mismatch");
+    assert_eq!(mask.len(), n, "mask length mismatch");
+    let mut m = 0usize;
+    let mut loss = 0f64;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let row = &logits[i * k..(i + 1) * k];
+        let (li, _, _) = row_xent(row, labels[i] as usize, k);
+        loss += li;
+        m += 1;
+    }
+    assert!(m > 0, "empty mask: nothing to evaluate");
+    loss / m as f64
+}
+
+/// Argmax accuracy over the masked rows (ties resolve to the lowest
+/// class id, matching every argmax in this tree). Returns 0.0 on an
+/// empty mask.
+pub fn masked_accuracy(logits: &[f32], labels: &[u32], mask: &[bool], k: usize) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * k, "logit shape mismatch");
+    let (mut correct, mut total) = (0usize, 0usize);
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let row = &logits[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for j in 1..k {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        total += 1;
+        correct += usize::from(best as u32 == labels[i]);
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_ln_k() {
+        let k = 4;
+        let logits = vec![0f32; 3 * k];
+        let labels = vec![0u32, 1, 3];
+        let mask = vec![true; 3];
+        let (loss, grad) = masked_softmax_xent(&logits, &labels, &mask, k);
+        assert!((loss - (k as f64).ln()).abs() < 1e-6, "loss {loss}");
+        // gradient: (1/k - onehot)/m
+        for i in 0..3 {
+            for j in 0..k {
+                let want = (0.25 - (j as u32 == labels[i]) as u8 as f32) / 3.0;
+                assert!((grad[i * k + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_rows_sum_to_zero_and_mask_zeroes() {
+        let k = 3;
+        let logits = vec![1.0f32, -2.0, 0.5, 3.0, 3.0, -1.0];
+        let labels = vec![2u32, 0];
+        let mask = vec![true, false];
+        let (_, grad) = masked_softmax_xent(&logits, &labels, &mask, k);
+        let s: f32 = grad[0..k].iter().sum();
+        assert!(s.abs() < 1e-6, "softmax - onehot must sum to 0, got {s}");
+        assert!(grad[k..].iter().all(|&g| g == 0.0), "unmasked row must have zero grad");
+    }
+
+    #[test]
+    fn loss_only_variant_agrees_with_grad_variant() {
+        let k = 3;
+        let logits = vec![1.0f32, -2.0, 0.5, 3.0, 0.25, -1.0, 0.0, 0.0, 2.0];
+        let labels = vec![2u32, 0, 1];
+        let mask = vec![true, false, true];
+        let (want, _) = masked_softmax_xent(&logits, &labels, &mask, k);
+        let got = masked_softmax_xent_loss(&logits, &labels, &mask, k);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn confident_correct_prediction_has_low_loss() {
+        let logits = vec![10.0f32, -10.0];
+        let (lo, _) = masked_softmax_xent(&logits, &[0], &[true], 2);
+        let (hi, _) = masked_softmax_xent(&logits, &[1], &[true], 2);
+        assert!(lo < 1e-6, "correct confident loss {lo}");
+        assert!(hi > 10.0, "wrong confident loss {hi}");
+    }
+
+    #[test]
+    fn large_logits_stay_finite() {
+        let logits = vec![1000.0f32, 999.0, -1000.0];
+        let (loss, grad) = masked_softmax_xent(&logits, &[1], &[true], 3);
+        assert!(loss.is_finite());
+        assert!(grad.iter().all(|g| g.is_finite()));
+    }
+
+    #[test]
+    fn accuracy_counts_masked_rows_only() {
+        let k = 2;
+        let logits = vec![2.0f32, 1.0, 0.0, 5.0, 9.0, 1.0];
+        let labels = vec![0u32, 1, 1];
+        assert_eq!(masked_accuracy(&logits, &labels, &[true, true, true], k), 2.0 / 3.0);
+        assert_eq!(masked_accuracy(&logits, &labels, &[true, true, false], k), 1.0);
+        assert_eq!(masked_accuracy(&logits, &labels, &[false, false, false], k), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty mask")]
+    fn empty_mask_rejected() {
+        let _ = masked_softmax_xent(&[0.0, 0.0], &[0], &[false], 2);
+    }
+}

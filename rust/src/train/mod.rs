@@ -1,0 +1,716 @@
+//! Native training subsystem: full-graph GCN training — forward with a
+//! tape, masked softmax cross-entropy, exact backprop, and an optimizer
+//! step — entirely on the parallel SpMM pipeline. No Python, no PJRT
+//! artifacts (the [`bench::train`](crate::bench::train) path needs
+//! those; this one works offline).
+//!
+//! The backward pass needs SpMM against `Âᵀ` (`dH = Âᵀ·G`). The
+//! [`Trainer`] obtains that plan through the same
+//! [`PlanCache`](crate::pipeline::PlanCache) as the forward plan,
+//! fingerprint-keyed — and when the normalized adjacency is symmetric
+//! (every undirected GCN graph: `Â = D^{-1/2}(A+I)D^{-1/2}` of a
+//! symmetric pattern is symmetric, checked by
+//! [`Csr::is_symmetric`](crate::graph::csr::Csr::is_symmetric)) the
+//! forward plan is **reused verbatim** — zero extra preprocessing, one
+//! cache entry. Both directions execute through the PR-4 tiled
+//! microkernel
+//! ([`spmm_block_level_parallel_into`](crate::pipeline::spmm_block_level_parallel_into)).
+//!
+//! Module map:
+//! * [`tape`] — forward pass recording per-layer `Z_l`/`H_l` (the dense
+//!   affine is shared with [`serve::gcn`](crate::serve::gcn)).
+//! * [`backward`] — `dW`/`db`/`dX` through ReLU → affine → SpMM per
+//!   layer; dense GEMMs sharded over the
+//!   [`ThreadPool`](crate::util::threadpool::ThreadPool) with
+//!   deterministic shard-order reductions.
+//! * [`loss`] — masked softmax cross-entropy + accuracy.
+//! * [`optim`] — SGD(+momentum) and Adam behind the
+//!   [`Optimizer`](optim::Optimizer) trait.
+//! * [`Trainer`] (here) — drives steps over train/val/test masks with
+//!   early stopping on validation loss, producing a [`TrainReport`]
+//!   with a per-phase time breakdown (fwd-SpMM / fwd-dense / bwd-SpMM /
+//!   bwd-dense / opt).
+
+pub mod backward;
+pub mod loss;
+pub mod optim;
+pub mod tape;
+
+pub use backward::{backward, Gradients};
+pub use loss::{masked_accuracy, masked_softmax_xent, masked_softmax_xent_loss};
+pub use optim::Optimizer;
+pub use tape::{forward_with_tape, Tape};
+
+use crate::graph::csr::Csr;
+use crate::graph::datasets::LabeledDataset;
+use crate::model::ModelConfig;
+use crate::partition::patterns::PartitionParams;
+use crate::pipeline::{PlanCache, SpmmPlan};
+use crate::serve::gcn::GcnModel;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Wall-clock seconds per training phase, accumulated across steps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseBreakdown {
+    pub fwd_spmm: f64,
+    pub fwd_dense: f64,
+    pub bwd_spmm: f64,
+    pub bwd_dense: f64,
+    pub opt: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fwd_spmm + self.fwd_dense + self.bwd_spmm + self.bwd_dense + self.opt
+    }
+
+    /// One-line human summary (µs per step).
+    pub fn render_per_step(&self, steps: usize) -> String {
+        let per = |s: f64| s / steps.max(1) as f64 * 1e6;
+        format!(
+            "fwd-spmm {:.0}µs  fwd-dense {:.0}µs  bwd-spmm {:.0}µs  bwd-dense {:.0}µs  opt {:.0}µs",
+            per(self.fwd_spmm),
+            per(self.fwd_dense),
+            per(self.bwd_spmm),
+            per(self.bwd_dense),
+            per(self.opt),
+        )
+    }
+}
+
+/// Training-run configuration. `model.lr` must be set (> 0) via
+/// [`ModelConfig::with_lr`] — the constructor rejects the default 0.0.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelConfig,
+    /// `sgd` or `adam`.
+    pub optimizer: String,
+    /// SGD momentum (ignored by Adam).
+    pub momentum: f64,
+    /// Full-graph steps (one forward+backward+update each).
+    pub steps: usize,
+    /// Stop after this many consecutive steps without a new best
+    /// validation loss; 0 disables early stopping.
+    pub patience: usize,
+    /// A step only counts as an improvement when it beats the best
+    /// validation loss by more than this margin (keeps asymptotic
+    /// micro-improvements from postponing the stop forever).
+    pub min_delta: f64,
+    pub threads: usize,
+    pub seed: u64,
+    /// Print a progress line every `log_every` steps; 0 silences.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            model: ModelConfig::gcn(16, 16, 4, 2).with_lr(0.1),
+            optimizer: "sgd".to_string(),
+            momentum: 0.9,
+            steps: 100,
+            patience: 0,
+            min_delta: 1e-4,
+            threads: 4,
+            seed: 42,
+            log_every: 0,
+        }
+    }
+}
+
+/// Result of one [`Trainer::train`] run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Train loss per executed step.
+    pub losses: Vec<f64>,
+    /// Validation loss per executed step.
+    pub val_losses: Vec<f64>,
+    pub train_accuracy: f64,
+    pub val_accuracy: f64,
+    pub test_accuracy: f64,
+    pub steps_per_sec: f64,
+    pub phases: PhaseBreakdown,
+    pub stopped_early: bool,
+}
+
+impl TrainReport {
+    pub fn initial_loss(&self) -> f64 {
+        self.losses.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.losses.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Statistics of one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f64,
+}
+
+/// The default learning rate per optimizer name — the single source the
+/// CLI and the bench both read, so their defaults cannot drift.
+pub fn default_lr(optimizer: &str) -> f64 {
+    if optimizer == "adam" {
+        0.02
+    } else {
+        0.1
+    }
+}
+
+/// The native training engine: one normalized adjacency, its forward
+/// and transpose plans (shared when symmetric), a thread pool, model
+/// parameters, and an optimizer.
+pub struct Trainer {
+    pub plan: Arc<SpmmPlan>,
+    /// Plan over `Âᵀ`; the same `Arc` as `plan` when `Â` is symmetric.
+    pub plan_t: Arc<SpmmPlan>,
+    /// Whether the symmetric fast path reused the forward plan.
+    pub transpose_reused: bool,
+    pub model: GcnModel,
+    opt: Box<dyn Optimizer>,
+    pool: ThreadPool,
+    cfg: TrainConfig,
+}
+
+impl Trainer {
+    /// Build a trainer against the process-global [`PlanCache`].
+    /// `adj` should be the **normalized** adjacency (`gcn_normalize`).
+    pub fn new(adj: &Csr, cfg: TrainConfig) -> Result<Trainer> {
+        Trainer::with_cache(adj, cfg, PlanCache::global())
+    }
+
+    /// [`Trainer::new`] with an explicit cache (tests, multi-tenant
+    /// embedding). Both the forward plan and — for asymmetric
+    /// adjacencies — the transposed plan are built/reused through
+    /// `cache`, fingerprint-keyed like every other consumer's plans.
+    pub fn with_cache(adj: &Csr, cfg: TrainConfig, cache: &PlanCache) -> Result<Trainer> {
+        ensure!(adj.n_rows == adj.n_cols, "training needs a square adjacency");
+        ensure!(adj.n_rows >= 1, "empty graph");
+        ensure!(
+            cfg.model.lr > 0.0,
+            "learning rate is unset ({}): call ModelConfig::with_lr",
+            cfg.model.lr
+        );
+        ensure!(cfg.steps > 0, "steps must be ≥ 1");
+        let params = PartitionParams::default();
+        let plan = cache.plan_for(adj, params);
+        // the backward direction: reuse the forward plan when Âᵀ == Â,
+        // otherwise cache a transposed plan alongside it (one transpose
+        // pass serves both the symmetry check and the plan build)
+        let at = adj.transpose();
+        let (plan_t, transpose_reused) = if at == *adj {
+            (Arc::clone(&plan), true)
+        } else {
+            (cache.plan_for(&at, params), false)
+        };
+        let opt = optim::by_name(&cfg.optimizer, cfg.model.lr, cfg.momentum)?;
+        let model = GcnModel::random(cfg.model.clone(), cfg.seed);
+        let pool = ThreadPool::new(cfg.threads);
+        Ok(Trainer { plan, plan_t, transpose_reused, model, opt, pool, cfg })
+    }
+
+    /// The model's output dimension (class count).
+    fn out_dim(&self) -> usize {
+        self.cfg.model.out_dim
+    }
+
+    /// Forward only: logits in original row order.
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let mut phases = PhaseBreakdown::default();
+        forward_with_tape(&self.plan, &self.pool, &self.model, x, &mut phases).into_logits()
+    }
+
+    /// Check the backward direction on this trainer's own pool: the
+    /// transpose plan's parallel SpMM against the dense `Âᵀ·G`
+    /// reference on a seeded random `G` — **bit-for-bit** when the plan
+    /// has no split rows (`max_degree ≤ deg_bound`; each output lane
+    /// then accumulates the identical f32 sequence), elementwise-close
+    /// otherwise. The CLI and the `train_native` bench both gate on
+    /// this before training.
+    pub fn verify_backward_spmm(&self, f: usize, seed: u64) -> bool {
+        let at = &self.plan_t.original;
+        let mut rng = crate::util::rng::Pcg::seed_from(seed ^ 0xbacc);
+        let g: Vec<f32> = (0..at.n_cols * f).map(|_| rng.f32() - 0.5).collect();
+        let got = crate::pipeline::spmm_block_level_parallel(&self.plan_t, &g, f, &self.pool);
+        let want = at.spmm_dense(&g, f);
+        if at.max_degree() <= self.plan_t.params.deg_bound() {
+            got == want
+        } else {
+            crate::spmm::verify::allclose(&got, &want, 1e-4, 1e-4)
+        }
+    }
+
+    /// One full-graph step: forward (tape) → masked loss/grad → backward
+    /// → optimizer. Returns the pre-update training loss.
+    pub fn step(
+        &mut self,
+        x: &[f32],
+        labels: &[u32],
+        train_mask: &[bool],
+        phases: &mut PhaseBreakdown,
+    ) -> Result<StepStats> {
+        let (loss, _) = self.step_with_logits(x, labels, train_mask, phases);
+        Ok(StepStats { loss })
+    }
+
+    /// The one step sequence both [`Trainer::step`] and
+    /// [`Trainer::train`] run: forward (tape) → masked train loss/grad →
+    /// backward → optimizer. Returns the pre-update loss and the
+    /// pre-update logits (so the epoch loop can read validation metrics
+    /// from the same forward pass).
+    fn step_with_logits(
+        &mut self,
+        x: &[f32],
+        labels: &[u32],
+        train_mask: &[bool],
+        phases: &mut PhaseBreakdown,
+    ) -> (f64, Vec<f32>) {
+        let tape = forward_with_tape(&self.plan, &self.pool, &self.model, x, &mut *phases);
+        let (loss, dlogits) =
+            masked_softmax_xent(tape.logits(), labels, train_mask, self.out_dim());
+        let grads = backward(
+            &self.plan_t,
+            &self.pool,
+            &self.model,
+            &tape,
+            &dlogits,
+            false,
+            phases,
+        );
+        let t0 = Instant::now();
+        self.opt.step(&mut self.model, &grads);
+        phases.opt += t0.elapsed().as_secs_f64();
+        (loss, tape.into_logits())
+    }
+
+    /// Train on a labeled dataset: `cfg.steps` full-graph steps with
+    /// per-step validation loss (computed from the same forward pass —
+    /// masks only affect the loss, not the logits) and optional early
+    /// stopping on the best validation loss.
+    pub fn train(&mut self, data: &LabeledDataset) -> Result<TrainReport> {
+        let n = data.n_nodes();
+        ensure!(n == self.plan.n_rows(), "dataset/plan size mismatch");
+        ensure!(data.feat_dim == self.cfg.model.in_dim, "feature dim != model in_dim");
+        ensure!(data.n_classes <= self.out_dim(), "more classes than model outputs");
+        let mut phases = PhaseBreakdown::default();
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut val_losses = Vec::with_capacity(self.cfg.steps);
+        let mut best_val = f64::INFINITY;
+        let mut since_best = 0usize;
+        let mut stopped_early = false;
+        let t0 = Instant::now();
+        for step in 0..self.cfg.steps {
+            // one shared step; val loss is read from the same pre-update
+            // logits the train loss came from (masks only affect loss)
+            let (loss, logits) =
+                self.step_with_logits(&data.features, &data.labels, &data.train_mask, &mut phases);
+            let val_loss =
+                loss::masked_softmax_xent_loss(&logits, &data.labels, &data.val_mask, self.out_dim());
+            losses.push(loss);
+            val_losses.push(val_loss);
+            if self.cfg.log_every > 0 && (step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps) {
+                println!("step {step:>5}  train loss {loss:.4}  val loss {val_loss:.4}");
+            }
+            if val_loss < best_val - self.cfg.min_delta {
+                best_val = val_loss;
+                since_best = 0;
+            } else {
+                since_best += 1;
+                if self.cfg.patience > 0 && since_best >= self.cfg.patience {
+                    stopped_early = true;
+                    if self.cfg.log_every > 0 {
+                        println!(
+                            "early stop at step {step}: no val improvement in {} steps (best {best_val:.4})",
+                            self.cfg.patience
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        // final metrics from one last forward over the updated weights
+        let logits = self.logits(&data.features);
+        let k = self.out_dim();
+        Ok(TrainReport {
+            steps_per_sec: losses.len() as f64 / elapsed.max(1e-12),
+            train_accuracy: masked_accuracy(&logits, &data.labels, &data.train_mask, k),
+            val_accuracy: masked_accuracy(&logits, &data.labels, &data.val_mask, k),
+            test_accuracy: masked_accuracy(&logits, &data.labels, &data.test_mask, k),
+            losses,
+            val_losses,
+            phases,
+            stopped_early,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::{labeled_synthetic, labeled_synthetic_with};
+    use crate::pipeline::spmm_block_level_parallel;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg;
+
+    fn cfg(model: ModelConfig, optimizer: &str, steps: usize) -> TrainConfig {
+        TrainConfig {
+            model,
+            optimizer: optimizer.to_string(),
+            steps,
+            threads: 2,
+            ..TrainConfig::default()
+        }
+    }
+
+    /// f64 dense reference of the whole forward + masked loss — the
+    /// independent oracle the finite-difference check differentiates.
+    struct DenseRef {
+        adj: Vec<f64>, // n × n
+        n: usize,
+        dims: Vec<(usize, usize)>,
+        weights: Vec<Vec<f64>>,
+        biases: Vec<Vec<f64>>,
+        x: Vec<f64>,
+        labels: Vec<u32>,
+        mask: Vec<bool>,
+    }
+
+    impl DenseRef {
+        fn of(adj: &Csr, model: &GcnModel, x: &[f32], labels: &[u32], mask: &[bool]) -> DenseRef {
+            let n = adj.n_rows;
+            let mut dense = vec![0f64; n * n];
+            for r in 0..n {
+                for (c, v) in adj.row(r) {
+                    dense[r * n + c as usize] = v as f64;
+                }
+            }
+            DenseRef {
+                adj: dense,
+                n,
+                dims: model.dims(),
+                weights: model.weights.iter().map(|w| w.iter().map(|&v| v as f64).collect()).collect(),
+                biases: model.biases.iter().map(|b| b.iter().map(|&v| v as f64).collect()).collect(),
+                x: x.iter().map(|&v| v as f64).collect(),
+                labels: labels.to_vec(),
+                mask: mask.to_vec(),
+            }
+        }
+
+        fn loss(&self) -> f64 {
+            let n = self.n;
+            let mut h = self.x.clone();
+            for (l, &(din, dout)) in self.dims.iter().enumerate() {
+                // z = A·h
+                let mut z = vec![0f64; n * din];
+                for r in 0..n {
+                    for c in 0..n {
+                        let a = self.adj[r * n + c];
+                        if a != 0.0 {
+                            for k in 0..din {
+                                z[r * din + k] += a * h[c * din + k];
+                            }
+                        }
+                    }
+                }
+                // a = z·W + b (+ ReLU on hidden layers)
+                let relu = l + 1 < self.dims.len();
+                let mut out = vec![0f64; n * dout];
+                for r in 0..n {
+                    for j in 0..dout {
+                        let mut acc = self.biases[l][j];
+                        for k in 0..din {
+                            acc += z[r * din + k] * self.weights[l][k * dout + j];
+                        }
+                        out[r * dout + j] = if relu { acc.max(0.0) } else { acc };
+                    }
+                }
+                h = out;
+            }
+            // masked mean softmax cross-entropy
+            let k = self.dims.last().unwrap().1;
+            let m = self.mask.iter().filter(|&&b| b).count();
+            let mut loss = 0f64;
+            for i in 0..n {
+                if !self.mask[i] {
+                    continue;
+                }
+                let row = &h[i * k..(i + 1) * k];
+                let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let lse = max + row.iter().map(|&z| (z - max).exp()).sum::<f64>().ln();
+                loss += lse - row[self.labels[i] as usize];
+            }
+            loss / m as f64
+        }
+
+        /// Central difference of the loss wrt one scalar reached by
+        /// `access`.
+        fn central_diff(&mut self, eps: f64, access: impl Fn(&mut DenseRef) -> &mut f64) -> f64 {
+            let orig = *access(self);
+            *access(self) = orig + eps;
+            let up = self.loss();
+            *access(self) = orig - eps;
+            let down = self.loss();
+            *access(self) = orig;
+            (up - down) / (2.0 * eps)
+        }
+    }
+
+    fn assert_grad_close(analytic: f32, numeric: f64, what: &str) {
+        let (a, n) = (analytic as f64, numeric);
+        let tol = 1e-2 * a.abs().max(n.abs()) + 1e-4;
+        assert!(
+            (a - n).abs() <= tol,
+            "{what}: analytic {a:.6e} vs central-diff {n:.6e} (|Δ|={:.2e} > tol {tol:.2e})",
+            (a - n).abs()
+        );
+    }
+
+    /// The finite-difference satellite: analytic dW, db, dX vs central
+    /// differences of the f64 dense oracle, across the paper-relevant
+    /// ragged/full feature widths.
+    #[test]
+    fn prop_gradients_match_finite_differences() {
+        for &f in &[3usize, 16, 17] {
+            proptest::check(&format!("grad_check_f{f}"), 0x96AD ^ f as u64, 3, |rng| {
+                let n = rng.range(6, 14);
+                let classes = 3;
+                let hidden = rng.range(3, 6);
+                // random graph, normalized like a real training run
+                let mut edges = vec![(0u32, 0u32, 1.0f32)];
+                for r in 0..n {
+                    for _ in 0..rng.range(1, 5) {
+                        edges.push((r as u32, rng.range(0, n) as u32, 1.0));
+                    }
+                }
+                let adj = Csr::from_edges(n, n, &edges).unwrap().gcn_normalize();
+                let model_cfg = ModelConfig::gcn(f, hidden, classes, 2).with_lr(0.1);
+                let model = GcnModel::random(model_cfg, rng.next_u64());
+                let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+                let labels: Vec<u32> = (0..n).map(|_| rng.range(0, classes) as u32).collect();
+                let mask: Vec<bool> = (0..n).map(|i| i % 2 == 0 || i + 1 == n).collect();
+
+                // analytic gradients through the parallel pipeline
+                let plan = SpmmPlan::build(adj.clone(), PartitionParams::default());
+                let plan_t = SpmmPlan::build(adj.transpose(), PartitionParams::default());
+                let pool = ThreadPool::new(2);
+                let mut phases = PhaseBreakdown::default();
+                let tape = forward_with_tape(&plan, &pool, &model, &x, &mut phases);
+                let (_, dlogits) = masked_softmax_xent(tape.logits(), &labels, &mask, classes);
+                let grads =
+                    backward(&plan_t, &pool, &model, &tape, &dlogits, true, &mut phases);
+
+                let mut oracle = DenseRef::of(&adj, &model, &x, &labels, &mask);
+                let eps = 1e-4;
+                // all weight/bias coordinates (layers are tiny)
+                for l in 0..2 {
+                    for i in 0..grads.dw[l].len() {
+                        let nd = oracle.central_diff(eps, |o| &mut o.weights[l][i]);
+                        assert_grad_close(grads.dw[l][i], nd, &format!("dW[{l}][{i}] f={f}"));
+                    }
+                    for i in 0..grads.db[l].len() {
+                        let nd = oracle.central_diff(eps, |o| &mut o.biases[l][i]);
+                        assert_grad_close(grads.db[l][i], nd, &format!("db[{l}][{i}] f={f}"));
+                    }
+                }
+                // a sample of dX coordinates
+                assert_eq!(grads.dx.len(), n * f);
+                for _ in 0..12 {
+                    let i = rng.range(0, n * f);
+                    let nd = oracle.central_diff(eps, |o| &mut o.x[i]);
+                    assert_grad_close(grads.dx[i], nd, &format!("dX[{i}] f={f}"));
+                }
+            });
+        }
+    }
+
+    /// The transpose-SpMM satellite: on plans with no split rows, the
+    /// parallel executor over `Âᵀ` is **bit-for-bit** the dense `Âᵀ·G`
+    /// reference, at every thread count (each output lane accumulates
+    /// the identical f32 sequence).
+    #[test]
+    fn transpose_plan_spmm_bit_for_bit_vs_dense() {
+        let mut rng = Pcg::seed_from(0x7A05);
+        let n = 60;
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            for _ in 0..rng.range(0, 9) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+            }
+        }
+        let a = Csr::from_edges(n, n, &edges).unwrap();
+        let at = a.transpose();
+        let params = PartitionParams::default();
+        assert!(
+            at.max_degree() <= params.deg_bound(),
+            "test premise: no split rows (max deg {} ≤ bound {})",
+            at.max_degree(),
+            params.deg_bound()
+        );
+        let plan_t = SpmmPlan::build(at.clone(), params);
+        for &f in &[3usize, 16, 17] {
+            let g: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let want = at.spmm_dense(&g, f);
+            for threads in [1usize, 2, 8] {
+                let pool = ThreadPool::new(threads);
+                let got = spmm_block_level_parallel(&plan_t, &g, f, &pool);
+                assert_eq!(got, want, "f={f} threads={threads}: transpose SpMM must be bit-exact");
+            }
+        }
+    }
+
+    /// Split rows (degree > deg_bound) reduce through per-shard
+    /// partials, so bit-equality is not guaranteed — allclose is.
+    #[test]
+    fn transpose_plan_spmm_allclose_with_split_rows() {
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let n = 40;
+        let mut rng = Pcg::seed_from(0x7A06);
+        let mut edges = Vec::new();
+        for c in 0..n {
+            // column 0 of A = row 0 of Aᵀ gets degree n (splits)
+            edges.push((c as u32, 0u32, rng.f32() - 0.5));
+            edges.push((c as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+        }
+        let a = Csr::from_edges(n, n, &edges).unwrap();
+        let at = a.transpose();
+        assert!(at.max_degree() > params.deg_bound(), "test premise: split rows exist");
+        let plan_t = SpmmPlan::build(at.clone(), params);
+        let f = 5;
+        let g: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        let want = at.spmm_dense(&g, f);
+        for threads in [1usize, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = spmm_block_level_parallel(&plan_t, &g, f, &pool);
+            assert_allclose(&got, &want, 1e-4, 1e-4, "split transpose spmm");
+        }
+    }
+
+    /// The symmetric fast path: a normalized undirected graph reuses the
+    /// forward plan for the backward SpMM — one cache entry, same Arc.
+    #[test]
+    fn symmetric_adjacency_reuses_forward_plan() {
+        let data = labeled_synthetic(80, 3, 0.8, 5);
+        let adj = data.csr.gcn_normalize();
+        assert!(adj.is_symmetric(), "normalized undirected graph must be symmetric");
+        let cache = PlanCache::new();
+        let t = Trainer::with_cache(
+            &adj,
+            cfg(ModelConfig::gcn(data.feat_dim, 8, 3, 2).with_lr(0.1), "sgd", 5),
+            &cache,
+        )
+        .unwrap();
+        assert!(t.transpose_reused);
+        assert!(Arc::ptr_eq(&t.plan, &t.plan_t), "must share one plan");
+        assert_eq!(cache.len(), 1, "no transposed plan cached");
+    }
+
+    #[test]
+    fn asymmetric_adjacency_caches_transposed_plan() {
+        let adj = Csr::from_edges(
+            6,
+            6,
+            &[(0, 1, 0.5), (1, 2, 0.25), (2, 0, 1.0), (3, 3, 1.0), (4, 5, 0.125), (5, 4, 0.5)],
+        )
+        .unwrap();
+        assert!(!adj.is_symmetric());
+        let cache = PlanCache::new();
+        let t = Trainer::with_cache(
+            &adj,
+            cfg(ModelConfig::gcn(4, 3, 2, 2).with_lr(0.1), "sgd", 5),
+            &cache,
+        )
+        .unwrap();
+        assert!(!t.transpose_reused);
+        assert!(!Arc::ptr_eq(&t.plan, &t.plan_t));
+        assert_eq!(cache.len(), 2, "forward + transposed plan both cached");
+        assert_eq!(t.plan_t.original, adj.transpose());
+    }
+
+    #[test]
+    fn unset_lr_rejected() {
+        let data = labeled_synthetic(40, 2, 0.8, 1);
+        let adj = data.csr.gcn_normalize();
+        let bad = cfg(ModelConfig::gcn(data.feat_dim, 4, 2, 2), "sgd", 5); // lr left at 0.0
+        assert!(Trainer::with_cache(&adj, bad, &PlanCache::new()).is_err());
+    }
+
+    /// The acceptance criterion: ≥ 50% loss reduction in 50 steps on the
+    /// synthetic labeled graph, with BOTH optimizers.
+    #[test]
+    fn fifty_steps_halve_the_loss_with_sgd_and_adam() {
+        let data = labeled_synthetic_with(200, 4, 16, 6.0, 0.85, 7);
+        let adj = data.csr.gcn_normalize();
+        for (opt, lr) in [("sgd", 0.1), ("adam", 0.02)] {
+            let mut trainer = Trainer::with_cache(
+                &adj,
+                cfg(ModelConfig::gcn(16, 16, 4, 2).with_lr(lr), opt, 50),
+                &PlanCache::new(),
+            )
+            .unwrap();
+            let report = trainer.train(&data).unwrap();
+            assert_eq!(report.losses.len(), 50);
+            assert!(
+                report.final_loss() <= 0.5 * report.initial_loss(),
+                "{opt}: loss {:.4} -> {:.4} (needs ≥ 50% drop)",
+                report.initial_loss(),
+                report.final_loss()
+            );
+            assert!(
+                report.train_accuracy > 1.0 / 4.0,
+                "{opt}: train accuracy {:.2} no better than chance",
+                report.train_accuracy
+            );
+            assert!(report.steps_per_sec > 0.0);
+            assert!(report.phases.total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn early_stopping_halts_on_plateau() {
+        let data = labeled_synthetic(100, 3, 0.85, 11);
+        let adj = data.csr.gcn_normalize();
+        let mut c = cfg(ModelConfig::gcn(data.feat_dim, 8, 3, 2).with_lr(0.05), "sgd", 400);
+        c.patience = 10;
+        c.min_delta = 1e-3;
+        let mut trainer = Trainer::with_cache(&adj, c, &PlanCache::new()).unwrap();
+        let report = trainer.train(&data).unwrap();
+        // a 400-step budget on a 100-node toy problem must plateau and
+        // stop early well before exhausting the budget
+        assert!(report.stopped_early, "expected early stop; ran {} steps", report.losses.len());
+        assert!(report.losses.len() < 400);
+        assert_eq!(report.losses.len(), report.val_losses.len());
+    }
+
+    #[test]
+    fn step_api_reduces_loss() {
+        let data = labeled_synthetic(60, 2, 0.9, 3);
+        let adj = data.csr.gcn_normalize();
+        let mut trainer = Trainer::with_cache(
+            &adj,
+            cfg(ModelConfig::gcn(data.feat_dim, 8, 2, 2).with_lr(0.1), "sgd", 30),
+            &PlanCache::new(),
+        )
+        .unwrap();
+        let mut phases = PhaseBreakdown::default();
+        let first = trainer
+            .step(&data.features, &data.labels, &data.train_mask, &mut phases)
+            .unwrap()
+            .loss;
+        let mut last = first;
+        for _ in 0..29 {
+            last = trainer
+                .step(&data.features, &data.labels, &data.train_mask, &mut phases)
+                .unwrap()
+                .loss;
+        }
+        assert!(last < first, "loss must decrease: {first:.4} -> {last:.4}");
+        assert!(phases.fwd_spmm > 0.0 && phases.bwd_dense > 0.0 && phases.opt >= 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! First-order optimizers over [`GcnModel`] parameters.
+//!
+//! Both optimizers keep per-parameter state vectors shaped like the
+//! model (allocated lazily on the first step so construction needs no
+//! dimensions) and update weights and biases in place. Steps are
+//! deterministic: same gradients in, same parameters out.
+
+use crate::serve::gcn::GcnModel;
+use crate::train::backward::Gradients;
+use anyhow::{bail, ensure, Result};
+
+/// One parameter update from one gradient evaluation.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// Apply `grads` to `model` in place.
+    fn step(&mut self, model: &mut GcnModel, grads: &Gradients);
+}
+
+/// Classic SGD with (optional) heavy-ball momentum:
+/// `v ← μ·v + g; θ ← θ - lr·v`.
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    vel_w: Vec<Vec<f32>>,
+    vel_b: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, momentum: f64) -> Sgd {
+        assert!(lr > 0.0, "lr must be positive");
+        assert!((0.0..1.0).contains(&momentum), "momentum must be in [0,1)");
+        Sgd { lr: lr as f32, momentum: momentum as f32, vel_w: Vec::new(), vel_b: Vec::new() }
+    }
+}
+
+fn ensure_like(state: &mut Vec<Vec<f32>>, like: &[Vec<f32>]) {
+    if state.len() != like.len() {
+        *state = like.iter().map(|g| vec![0f32; g.len()]).collect();
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, model: &mut GcnModel, grads: &Gradients) {
+        ensure_like(&mut self.vel_w, &grads.dw);
+        ensure_like(&mut self.vel_b, &grads.db);
+        for l in 0..grads.dw.len() {
+            for ((w, g), v) in model.weights[l]
+                .iter_mut()
+                .zip(&grads.dw[l])
+                .zip(self.vel_w[l].iter_mut())
+            {
+                *v = self.momentum * *v + g;
+                *w -= self.lr * *v;
+            }
+            for ((b, g), v) in
+                model.biases[l].iter_mut().zip(&grads.db[l]).zip(self.vel_b[l].iter_mut())
+            {
+                *v = self.momentum * *v + g;
+                *b -= self.lr * *v;
+            }
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u32,
+    m_w: Vec<Vec<f32>>,
+    v_w: Vec<Vec<f32>>,
+    m_b: Vec<Vec<f32>>,
+    v_b: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Adam {
+        assert!(lr > 0.0, "lr must be positive");
+        Adam {
+            lr: lr as f32,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m_w: Vec::new(),
+            v_w: Vec::new(),
+            m_b: Vec::new(),
+            v_b: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn update(lr: f32, b1: f32, b2: f32, eps: f32, bc1: f32, bc2: f32, p: &mut f32, g: f32, m: &mut f32, v: &mut f32) {
+        *m = b1 * *m + (1.0 - b1) * g;
+        *v = b2 * *v + (1.0 - b2) * g * g;
+        let mhat = *m / bc1;
+        let vhat = *v / bc2;
+        *p -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, model: &mut GcnModel, grads: &Gradients) {
+        ensure_like(&mut self.m_w, &grads.dw);
+        ensure_like(&mut self.v_w, &grads.dw);
+        ensure_like(&mut self.m_b, &grads.db);
+        ensure_like(&mut self.v_b, &grads.db);
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for l in 0..grads.dw.len() {
+            for (i, w) in model.weights[l].iter_mut().enumerate() {
+                Self::update(
+                    self.lr, self.beta1, self.beta2, self.eps, bc1, bc2,
+                    w, grads.dw[l][i], &mut self.m_w[l][i], &mut self.v_w[l][i],
+                );
+            }
+            for (i, b) in model.biases[l].iter_mut().enumerate() {
+                Self::update(
+                    self.lr, self.beta1, self.beta2, self.eps, bc1, bc2,
+                    b, grads.db[l][i], &mut self.m_b[l][i], &mut self.v_b[l][i],
+                );
+            }
+        }
+    }
+}
+
+/// Construct an optimizer by CLI name (`sgd` | `adam`). Validates the
+/// hyperparameters here (clean `Result` errors) so the CLI never hits
+/// the constructors' programmer-error asserts.
+pub fn by_name(name: &str, lr: f64, momentum: f64) -> Result<Box<dyn Optimizer>> {
+    ensure!(lr.is_finite() && lr > 0.0, "learning rate must be positive, got {lr}");
+    ensure!(
+        (0.0..1.0).contains(&momentum),
+        "momentum must be in [0, 1), got {momentum}"
+    );
+    match name {
+        "sgd" => Ok(Box::new(Sgd::new(lr, momentum))),
+        "adam" => Ok(Box::new(Adam::new(lr))),
+        other => bail!("unknown optimizer `{other}` (expected sgd|adam)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    /// Drive an optimizer on the 1-d quadratic `f(w) = (w - c)²` whose
+    /// gradient is `2(w - c)`, using a 1×1×1 model as the parameter
+    /// container.
+    fn descend(opt: &mut dyn Optimizer, steps: usize, target: f32) -> f32 {
+        let mut model = GcnModel::random(ModelConfig::gcn(1, 1, 1, 1), 3);
+        model.weights[0][0] = 0.0;
+        model.biases[0][0] = 0.0;
+        for _ in 0..steps {
+            let w = model.weights[0][0];
+            let grads = Gradients {
+                dw: vec![vec![2.0 * (w - target)]],
+                db: vec![vec![0.0]],
+                dx: Vec::new(),
+            };
+            opt.step(&mut model, &grads);
+        }
+        model.weights[0][0]
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let w = descend(&mut Sgd::new(0.1, 0.0), 100, 3.0);
+        assert!((w - 3.0).abs() < 1e-3, "plain SGD got {w}");
+        let w = descend(&mut Sgd::new(0.05, 0.9), 200, -2.0);
+        assert!((w + 2.0).abs() < 1e-2, "momentum SGD got {w}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // Adam's sign-like steps settle into an O(lr) neighbourhood of
+        // the optimum on a deterministic quadratic (it does not decay to
+        // machine precision like SGD); assert the neighbourhood.
+        let lr = 0.05;
+        let w = descend(&mut Adam::new(lr), 300, 3.0);
+        assert!((w - 3.0).abs() < 2.0 * lr as f32, "Adam got {w}");
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // bias correction makes the first step ≈ lr · sign(g)
+        let mut model = GcnModel::random(ModelConfig::gcn(1, 1, 1, 1), 3);
+        model.weights[0][0] = 0.0;
+        let mut opt = Adam::new(0.01);
+        let grads =
+            Gradients { dw: vec![vec![5.0]], db: vec![vec![0.0]], dx: Vec::new() };
+        opt.step(&mut model, &grads);
+        assert!((model.weights[0][0] + 0.01).abs() < 1e-4, "got {}", model.weights[0][0]);
+    }
+
+    #[test]
+    fn by_name_resolves_and_validates() {
+        assert_eq!(by_name("sgd", 0.1, 0.9).unwrap().name(), "sgd");
+        assert_eq!(by_name("adam", 0.1, 0.0).unwrap().name(), "adam");
+        assert!(by_name("lbfgs", 0.1, 0.0).is_err());
+        // bad hyperparameters are clean errors, not panics
+        assert!(by_name("sgd", 0.1, 1.0).is_err());
+        assert!(by_name("sgd", 0.1, -0.1).is_err());
+        assert!(by_name("sgd", 0.0, 0.9).is_err());
+        assert!(by_name("adam", -1.0, 0.0).is_err());
+    }
+}

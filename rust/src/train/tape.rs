@@ -1,0 +1,162 @@
+//! Forward pass with a tape: every intermediate the backward pass needs,
+//! recorded as it is produced.
+//!
+//! Layer `l` of the stack computes, in the **original** row domain:
+//!
+//! ```text
+//! Z_l = Â · H_{l-1}          (SpMM through the block-level plan)
+//! H_l = act(Z_l · W_l + b_l)  (fused parallel affine; act = ReLU for
+//!                              hidden layers, identity for the last)
+//! ```
+//!
+//! The tape stores every `(Z_l, H_l)` pair: `Z_l` is the affine's input
+//! (needed for `dW_l = Z_lᵀ·G`), and `H_l > 0` *is* the ReLU mask
+//! (exact, since `H_l = max(A_l, 0)` and the gradient at 0 is taken as
+//! 0). The input features are **not** copied onto the tape — layer 0
+//! reads `x` directly and the backward pass never needs it. The dense
+//! affine is the serving path's
+//! [`affine_fused_parallel`](crate::serve::gcn) with `k = 1` — training
+//! and serving share one dense kernel, as they share one SpMM.
+//!
+//! Unlike the serve forward (two ping-pong buffers for the whole
+//! stack), a tape inherently *keeps* every per-layer buffer alive for
+//! the backward pass, so each step allocates its `Z_l`/`H_l` fresh.
+//! Revisit with a step-persistent arena if training ever becomes a
+//! serving-scale hot path; at bench scale the SpMM/GEMM work dominates.
+
+use crate::pipeline::{spmm_block_level_parallel_into, SpmmPlan};
+use crate::serve::gcn::{affine_fused_parallel, GcnModel};
+use crate::train::PhaseBreakdown;
+use crate::util::threadpool::ThreadPool;
+use std::time::Instant;
+
+/// Recorded intermediates of one forward pass over `n` nodes.
+pub struct Tape {
+    /// `acts[l]` is layer `l`'s output `H_{l+1}` (post-ReLU for hidden
+    /// layers); `acts.last()` is the logits. The input `X` is not
+    /// stored (backward never reads it).
+    pub acts: Vec<Vec<f32>>,
+    /// `zs[l] = Â · (layer l's input)` — the SpMM output feeding layer
+    /// `l`'s affine.
+    pub zs: Vec<Vec<f32>>,
+    pub n: usize,
+}
+
+impl Tape {
+    /// The final layer's output (`[n × out_dim]`, original row order).
+    pub fn logits(&self) -> &[f32] {
+        self.acts.last().expect("tape has at least one layer")
+    }
+
+    /// Consume the tape, returning the logits buffer.
+    pub fn into_logits(self) -> Vec<f32> {
+        self.acts.into_iter().last().expect("tape has at least one layer")
+    }
+}
+
+/// Run the stack forward over `x` (`[n × in_dim]`, original row order),
+/// recording the tape. Phase timings (SpMM vs dense) accumulate into
+/// `phases`.
+pub fn forward_with_tape(
+    plan: &SpmmPlan,
+    pool: &ThreadPool,
+    model: &GcnModel,
+    x: &[f32],
+    phases: &mut PhaseBreakdown,
+) -> Tape {
+    let n = plan.n_rows();
+    let dims = model.dims();
+    assert!(!dims.is_empty(), "model has no layers");
+    assert_eq!(x.len(), n * dims[0].0, "feature shape mismatch");
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
+    let mut zs: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
+    for (l, &(din, dout)) in dims.iter().enumerate() {
+        // layer 0 borrows the caller's features directly — no tape copy
+        let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+        debug_assert_eq!(input.len(), n * din);
+        let mut z = vec![0f32; n * din];
+        let t0 = Instant::now();
+        spmm_block_level_parallel_into(plan, input, din, pool, &mut z);
+        phases.fwd_spmm += t0.elapsed().as_secs_f64();
+        let relu = l + 1 < dims.len();
+        let mut a = vec![0f32; n * dout];
+        let t1 = Instant::now();
+        affine_fused_parallel(
+            pool,
+            &z,
+            n,
+            1,
+            din,
+            &model.weights[l],
+            dout,
+            &model.biases[l],
+            relu,
+            &mut a,
+        );
+        phases.fwd_dense += t1.elapsed().as_secs_f64();
+        zs.push(z);
+        acts.push(a);
+    }
+    Tape { acts, zs, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::model::ModelConfig;
+    use crate::partition::patterns::PartitionParams;
+    use crate::serve::gcn::reference_forward;
+    use crate::spmm::verify::assert_allclose;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            for _ in 0..rng.range(0, 6) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    #[test]
+    fn tape_logits_match_reference_forward() {
+        let csr = random_csr(3, 40);
+        let model = GcnModel::random(ModelConfig::gcn(6, 5, 3, 2), 9);
+        let plan = SpmmPlan::build(csr.clone(), PartitionParams::default());
+        let pool = ThreadPool::new(3);
+        let mut rng = Pcg::seed_from(4);
+        let x: Vec<f32> = (0..40 * 6).map(|_| rng.f32() - 0.5).collect();
+        let mut phases = PhaseBreakdown::default();
+        let tape = forward_with_tape(&plan, &pool, &model, &x, &mut phases);
+        let want = reference_forward(&csr, &model, &x);
+        assert_allclose(tape.logits(), &want, 1e-4, 1e-4, "tape logits");
+        assert!(phases.fwd_spmm >= 0.0 && phases.fwd_dense >= 0.0);
+    }
+
+    #[test]
+    fn tape_records_every_layer() {
+        let csr = random_csr(5, 25);
+        let model = GcnModel::random(ModelConfig::gcn(4, 3, 2, 3), 1);
+        let plan = SpmmPlan::build(csr.clone(), PartitionParams::default());
+        let pool = ThreadPool::new(2);
+        let x = vec![0.5f32; 25 * 4];
+        let tape =
+            forward_with_tape(&plan, &pool, &model, &x, &mut PhaseBreakdown::default());
+        assert_eq!(tape.zs.len(), 3);
+        assert_eq!(tape.acts.len(), 3);
+        // shapes: zs[l] is [n × din], acts[l] is [n × dout]
+        for (l, &(din, dout)) in model.dims().iter().enumerate() {
+            assert_eq!(tape.zs[l].len(), 25 * din);
+            assert_eq!(tape.acts[l].len(), 25 * dout);
+        }
+        // z_0 really is Â·X
+        let want = csr.spmm_dense(&x, 4);
+        assert_allclose(&tape.zs[0], &want, 1e-4, 1e-4, "z0");
+        // hidden activations are ReLU-clamped
+        assert!(tape.acts[0].iter().all(|&v| v >= 0.0));
+        assert!(tape.acts[1].iter().all(|&v| v >= 0.0));
+    }
+}
