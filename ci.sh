@@ -4,7 +4,13 @@ set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
-cargo test -q
+
+# The test suite runs twice: once with the portable SIMD fallback
+# forced (proves the microkernel's arch-independent path end to end)
+# and once compiled for the host CPU so the AVX2/NEON intrinsic paths
+# are both detected and exercised where the hardware allows.
+ACCEL_GCN_SIMD=portable cargo test -q
+RUSTFLAGS="-C target-cpu=native" cargo test -q
 
 # Serve-native smoke: the multi-tenant serving path end-to-end on a
 # small synthetic load, with every response verified against the exact
@@ -24,10 +30,12 @@ cargo run --release --bin accel-gcn -- update-demo \
 cargo run --release --bin accel-gcn -- bench --experiment delta_update --quick \
     --out results-ci-delta
 
-# Microkernel smoke: scalar-vs-tiled head-to-head at tiny scale with
-# every cell checked against the dense reference (the bench exits
-# nonzero if either path diverges), so the tiled hot path — including
-# its ragged-tail widths — is exercised on every CI run.
+# Adaptive-microkernel smoke: the SIMD × dispatch matrix ({scalar,
+# portable-simd, arch-if-available} × {fixed, adaptive}) at tiny scale
+# over both skew extremes, every cell checked against the dense
+# reference (the bench exits nonzero if any variant diverges), so the
+# SIMD lanes, the sparse gather kernel, and the per-bucket dispatch —
+# including ragged-tail widths — are exercised on every CI run.
 cargo run --release --bin accel-gcn -- bench --experiment microkernel --quick \
     --out results-ci-micro
 

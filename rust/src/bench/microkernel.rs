@@ -1,29 +1,42 @@
-//! `microkernel` — old scalar execution path vs the column-tiled
-//! zero-copy path, head to head.
+//! `microkernel` — the SIMD × dispatch matrix over a degree-skew sweep.
 //!
-//! Both paths run the same block-level schedule over the same
-//! [`SpmmPlan`] and the same shard layout; what differs is everything
-//! this PR's tentpole changed:
+//! Every cell runs the same block-level schedule over the same
+//! [`SpmmPlan`] and shard layout; the matrix axes are everything the
+//! SIMD tentpole made selectable:
 //!
-//! * **scalar** ([`spmm_block_level_parallel_scalar`]) — `Arc` input
-//!   copy, bounds-checked scalar inner loop, per-block `vec!` staging,
-//!   post-join copy pass, separate full unpermute;
-//! * **tiled** ([`spmm_block_level_parallel`]) — borrowed inputs,
-//!   register-tiled autovectorized inner loop, direct-write sharding,
-//!   fused unpermute-scatter.
+//! * **lane strategy** — `scalar` (the PR 4 autovectorized tile,
+//!   kept as the measured floor), `portable-simd` (explicit 8-wide
+//!   unrolled lanes), and the arch path (`avx2` / `neon`) when the host
+//!   supports it;
+//! * **dispatch mode** — `fixed` forces the dense tiled kernel on every
+//!   block (PR 4 behavior); `adaptive` honors the plan's per-bucket
+//!   [`KernelSchedule`](crate::pipeline::KernelSchedule), routing
+//!   short-row blocks through the sparse gather kernel.
 //!
-//! The sweep runs on the Collab stand-in (the paper's headline
-//! power-law graph) across threads × column dimensions — including
-//! ragged widths (17) that exercise the tail path — and **every cell is
-//! verified against the dense CSR reference** before it is timed.
-//! Results (GFLOP/s per path + speedup) go to `BENCH_microkernel.json`
-//! so successive PRs can track the hot path.
+//! The graph list is a **degree-skew sweep**: the Collab stand-in (the
+//! paper's headline power-law graph), a near-regular low-degree graph
+//! (`uniform-d2`, almost entirely gather-territory rows — where
+//! adaptive dispatch must win) and a synthetic power-law mix
+//! (`powerlaw-2.1`, both kernel shapes live in one plan — where the
+//! dense/sparse crossover shows). Each point records its plan's
+//! `sparse_frac` so the crossover is readable straight from
+//! `BENCH_microkernel.json`.
+//!
+//! Speedups are relative to the `scalar+fixed` cell — exactly the PR 4
+//! tiled path — and **every cell is verified against the dense CSR
+//! reference** before it is timed. The legacy pre-tiling path
+//! ([`spmm_block_level_parallel_scalar`]) is also timed per cell as
+//! `legacy-scalar` for cross-PR continuity.
 
+use crate::graph::csr::Csr;
 use crate::graph::datasets::{by_name, materialize, ScalePolicy};
+use crate::graph::generator::{degree_sequence, from_degree_sequence, DegreeModel};
 use crate::partition::patterns::PartitionParams;
-use crate::pipeline::{spmm_block_level_parallel, spmm_block_level_parallel_scalar, SpmmPlan};
-use crate::spmm::spmm_flops;
+use crate::pipeline::{
+    spmm_block_level_parallel_scalar, spmm_block_level_parallel_with, SpmmPlan,
+};
 use crate::spmm::verify::allclose;
+use crate::spmm::{spmm_gflops, SimdLevel, SPARSE_DEG_MAX};
 use crate::util::bench::{time_fn, Table};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
@@ -39,23 +52,84 @@ pub const DEFAULT_THREADS: [usize; 3] = [1, 2, 8];
 /// widths (17) and a non-power-of-two multiple of the tile (96).
 pub const DEFAULT_COLDIMS: [usize; 5] = [16, 17, 64, 96, 128];
 
-/// One timed (coldim, threads) cell: both paths, same plan and input.
+/// The degree-skew sweep (see the module docs).
+pub const DEFAULT_GRAPHS: [&str; 3] = ["collab", "uniform-d2", "powerlaw-2.1"];
+
+/// Reduced axes for the `--quick` CI smoke: one ragged and one exact
+/// width, both dispatch modes, both skew extremes — small enough to run
+/// with verification on in seconds.
+pub const QUICK_THREADS: [usize; 2] = [1, 2];
+pub const QUICK_COLDIMS: [usize; 2] = [16, 17];
+pub const QUICK_GRAPHS: [&str; 2] = ["collab", "uniform-d2"];
+
+/// One timed (graph, coldim, threads, variant) cell.
 #[derive(Clone, Debug)]
 pub struct MicroPoint {
     pub graph: String,
     pub coldim: usize,
     pub threads: usize,
-    pub scalar_us: f64,
-    pub tiled_us: f64,
-    pub scalar_gflops: f64,
-    pub tiled_gflops: f64,
-    /// `scalar_us / tiled_us`.
-    pub speedup: f64,
-    /// Both paths matched the dense CSR reference on this cell's input.
+    /// `"<level>+<dispatch>"`, e.g. `"portable-simd+adaptive"`, or
+    /// `"legacy-scalar"` for the pre-tiling path.
+    pub variant: String,
+    pub us: f64,
+    pub gflops: f64,
+    /// This cell's time relative to the `scalar+fixed` (PR 4 tiled)
+    /// cell at the same (graph, coldim, threads).
+    pub speedup_vs_baseline: f64,
+    /// Fraction of the plan's blocks the schedule routed to the sparse
+    /// gather kernel (a property of the graph+params, constant across
+    /// the cell's variants).
+    pub sparse_frac: f64,
+    /// This variant matched the dense CSR reference on this input.
     pub verified: bool,
 }
 
-/// Run the head-to-head sweep on one named dataset.
+/// Resolve a sweep graph name: Table I stand-ins via the dataset layer,
+/// synthetic skew points via the degree-sequence generator (scaled by
+/// the same policy so `--quick` stays small).
+fn build_graph(name: &str, policy: ScalePolicy, seed: u64) -> Result<Csr> {
+    if let Some(spec) = by_name(name) {
+        return Ok(materialize(spec, policy, seed));
+    }
+    let n = policy.node_cap.clamp(64, 20_000);
+    let mut rng = Pcg::seed_from(seed ^ 0x5_4e57);
+    let (model, target_edges) = match name {
+        // nearly every row lands at deg ≤ SPARSE_DEG_MAX: the
+        // gather-dominant end of the skew sweep
+        "uniform-d2" => (DegreeModel::NearRegular { jitter: 0.3 }, 2 * n),
+        // heavy-tailed mix: sparse rows and dense buckets in one plan
+        "powerlaw-2.1" => {
+            (DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.05 }, (8 * n).min(policy.edge_cap))
+        }
+        _ => anyhow::bail!("unknown graph `{name}` (see `accel-gcn datasets`)"),
+    };
+    let degs = degree_sequence(model, n, target_edges.min(policy.edge_cap), &mut rng);
+    Ok(from_degree_sequence(n, &degs, &mut rng))
+}
+
+/// The lane×dispatch variant list for this host: `arch` rows appear
+/// only when the features are actually available (an unavailable arch
+/// request would silently degrade to portable and time the same code
+/// twice).
+fn variants() -> Vec<(SimdLevel, bool)> {
+    let mut levels = vec![SimdLevel::Scalar, SimdLevel::Portable];
+    if SimdLevel::Arch.available() {
+        levels.push(SimdLevel::Arch);
+    }
+    let mut out = Vec::with_capacity(levels.len() * 2);
+    for level in levels {
+        for adaptive in [false, true] {
+            out.push((level, adaptive));
+        }
+    }
+    out
+}
+
+fn variant_name(level: SimdLevel, adaptive: bool) -> String {
+    format!("{}+{}", level.name(), if adaptive { "adaptive" } else { "fixed" })
+}
+
+/// Run the matrix over one named graph.
 pub fn run(
     graph: &str,
     coldims: &[usize],
@@ -63,66 +137,100 @@ pub fn run(
     policy: ScalePolicy,
     seed: u64,
 ) -> Result<Vec<MicroPoint>> {
-    let spec = by_name(graph)
-        .ok_or_else(|| anyhow::anyhow!("unknown graph `{graph}` (see `accel-gcn datasets`)"))?;
-    let csr = materialize(spec, policy, seed);
+    let csr = build_graph(graph, policy, seed)?;
     let n_cols = csr.n_cols;
     let nnz = csr.nnz();
     let plan = Arc::new(SpmmPlan::build(csr, PartitionParams::default()));
+    let sparse_frac = plan.kernels.sparse_frac();
     let mut rng = Pcg::seed_from(seed ^ 0x71c7_0e);
+    let vs = variants();
 
-    let mut points = Vec::with_capacity(coldims.len() * threads.len());
+    let mut points = Vec::with_capacity(coldims.len() * threads.len() * (vs.len() + 1));
     for &coldim in coldims {
         let x: Vec<f32> = (0..n_cols * coldim).map(|_| rng.f32() - 0.5).collect();
         let want = plan.original.spmm_dense(&x, coldim);
         for &t in threads {
             let pool = ThreadPool::new(t);
             // verify first: a fast wrong kernel is worse than no kernel
-            let tiled_y = spmm_block_level_parallel(&plan, &x, coldim, &pool);
-            let scalar_y = spmm_block_level_parallel_scalar(&plan, &x, coldim, &pool);
-            let verified = allclose(&tiled_y, &want, 1e-3, 1e-3)
-                && allclose(&scalar_y, &want, 1e-3, 1e-3);
-            drop((tiled_y, scalar_y));
-            let m_scalar = time_fn("microkernel_scalar", 1, 0.2, || {
-                std::hint::black_box(spmm_block_level_parallel_scalar(&plan, &x, coldim, &pool));
-            });
-            let m_tiled = time_fn("microkernel_tiled", 1, 0.2, || {
-                std::hint::black_box(spmm_block_level_parallel(&plan, &x, coldim, &pool));
-            });
-            let (scalar_s, tiled_s) = (m_scalar.p50(), m_tiled.p50());
-            let flops = spmm_flops(nnz, coldim);
-            points.push(MicroPoint {
-                graph: graph.to_string(),
-                coldim,
-                threads: t,
-                scalar_us: scalar_s * 1e6,
-                tiled_us: tiled_s * 1e6,
-                scalar_gflops: flops / scalar_s.max(1e-12) / 1e9,
-                tiled_gflops: flops / tiled_s.max(1e-12) / 1e9,
-                speedup: scalar_s / tiled_s.max(1e-12),
-                verified,
-            });
+            let mut cells: Vec<(String, bool, f64)> = Vec::new(); // (variant, verified, secs)
+            let mut baseline_s = f64::NAN;
+            for &(level, adaptive) in &vs {
+                let y = spmm_block_level_parallel_with(&plan, &x, coldim, &pool, level, adaptive);
+                let verified = allclose(&y, &want, 1e-3, 1e-3);
+                drop(y);
+                let name = variant_name(level, adaptive);
+                let m = time_fn(&format!("microkernel_{name}"), 1, 0.2, || {
+                    std::hint::black_box(spmm_block_level_parallel_with(
+                        &plan, &x, coldim, &pool, level, adaptive,
+                    ));
+                });
+                let secs = m.p50();
+                if level == SimdLevel::Scalar && !adaptive {
+                    baseline_s = secs; // the PR 4 tiled path
+                }
+                cells.push((name, verified, secs));
+            }
+            // the pre-tiling legacy path, for cross-PR continuity
+            {
+                let y = spmm_block_level_parallel_scalar(&plan, &x, coldim, &pool);
+                let verified = allclose(&y, &want, 1e-3, 1e-3);
+                drop(y);
+                let m = time_fn("microkernel_legacy_scalar", 1, 0.2, || {
+                    std::hint::black_box(spmm_block_level_parallel_scalar(
+                        &plan, &x, coldim, &pool,
+                    ));
+                });
+                cells.push(("legacy-scalar".to_string(), verified, m.p50()));
+            }
+            for (variant, verified, secs) in cells {
+                points.push(MicroPoint {
+                    graph: graph.to_string(),
+                    coldim,
+                    threads: t,
+                    variant,
+                    us: secs * 1e6,
+                    gflops: spmm_gflops(nnz, coldim, secs),
+                    speedup_vs_baseline: baseline_s / secs.max(1e-12),
+                    sparse_frac,
+                    verified,
+                });
+            }
         }
     }
     Ok(points)
 }
 
+/// Run the matrix over a list of graphs (the skew sweep).
+pub fn run_graphs(
+    graphs: &[&str],
+    coldims: &[usize],
+    threads: &[usize],
+    policy: ScalePolicy,
+    seed: u64,
+) -> Result<Vec<MicroPoint>> {
+    let mut all = Vec::new();
+    for g in graphs {
+        all.extend(run(g, coldims, threads, policy, seed)?);
+    }
+    Ok(all)
+}
+
 /// Render the paper-style table.
 pub fn report(points: &[MicroPoint]) -> String {
     let mut table = Table::new(&[
-        "graph", "coldim", "threads", "scalar µs", "tiled µs", "scalar GF/s", "tiled GF/s",
-        "speedup", "verified",
+        "graph", "coldim", "threads", "variant", "µs", "GF/s", "vs scalar+fixed", "sparse frac",
+        "verified",
     ]);
     for p in points {
         table.row(vec![
             p.graph.clone(),
             p.coldim.to_string(),
             p.threads.to_string(),
-            format!("{:.1}", p.scalar_us),
-            format!("{:.1}", p.tiled_us),
-            format!("{:.2}", p.scalar_gflops),
-            format!("{:.2}", p.tiled_gflops),
-            format!("{:.2}x", p.speedup),
+            p.variant.clone(),
+            format!("{:.1}", p.us),
+            format!("{:.2}", p.gflops),
+            format!("{:.2}x", p.speedup_vs_baseline),
+            format!("{:.2}", p.sparse_frac),
             p.verified.to_string(),
         ]);
     }
@@ -138,19 +246,20 @@ pub fn to_json(points: &[MicroPoint]) -> Json {
             o.set("graph", p.graph.as_str());
             o.set("coldim", p.coldim);
             o.set("threads", p.threads);
-            o.set("scalar_us", p.scalar_us);
-            o.set("tiled_us", p.tiled_us);
-            o.set("scalar_gflops", p.scalar_gflops);
-            o.set("tiled_gflops", p.tiled_gflops);
-            o.set("speedup", p.speedup);
+            o.set("variant", p.variant.as_str());
+            o.set("us", p.us);
+            o.set("gflops", p.gflops);
+            o.set("speedup_vs_baseline", p.speedup_vs_baseline);
+            o.set("sparse_frac", p.sparse_frac);
             o.set("verified", p.verified);
             o
         })
         .collect();
     let mut doc = Json::obj();
     doc.set("experiment", "microkernel");
-    doc.set("baseline", "block-level-parallel-scalar");
-    doc.set("candidate", "block-level-parallel-tiled");
+    doc.set("baseline", "scalar+fixed (the PR 4 tiled path)");
+    doc.set("simd_detected", SimdLevel::detect().name());
+    doc.set("sparse_deg_max", SPARSE_DEG_MAX);
     doc.set("unit", "us");
     doc.set("points", rows);
     doc
@@ -162,21 +271,45 @@ mod tests {
 
     #[test]
     fn sweep_shape_verification_and_json() {
-        let pts = run("collab", &[16, 17], &[1, 2], ScalePolicy::tiny(), 7).unwrap();
-        assert_eq!(pts.len(), 4);
+        let pts = run("collab", &[16, 17], &[1], ScalePolicy::tiny(), 7).unwrap();
+        // variants() cells + legacy-scalar, per (coldim, thread) pair
+        let per_cell = variants().len() + 1;
+        assert_eq!(pts.len(), 2 * per_cell);
         for p in &pts {
-            assert!(p.verified, "{p:?}: both paths must match the dense reference");
-            assert!(p.scalar_us > 0.0 && p.tiled_us > 0.0, "{p:?}");
-            assert!(p.scalar_gflops.is_finite() && p.tiled_gflops.is_finite(), "{p:?}");
-            assert!(p.speedup > 0.0, "{p:?}");
+            assert!(p.verified, "{p:?}: every variant must match the dense reference");
+            assert!(p.us > 0.0 && p.gflops.is_finite(), "{p:?}");
+            assert!(p.speedup_vs_baseline > 0.0, "{p:?}");
+            assert!((0.0..=1.0).contains(&p.sparse_frac), "{p:?}");
         }
+        // the baseline cell's speedup is exactly 1 by definition
+        let base = pts.iter().find(|p| p.variant == "scalar+fixed").unwrap();
+        assert!((base.speedup_vs_baseline - 1.0).abs() < 1e-9);
         let json = to_json(&pts).to_pretty();
         assert!(json.contains("microkernel"));
-        assert!(json.contains("tiled_gflops"));
+        assert!(json.contains("sparse_deg_max"));
+        assert!(json.contains("simd_detected"));
         let parsed = Json::parse(&json).unwrap();
-        assert_eq!(parsed.req_arr("points").unwrap().len(), 4);
+        assert_eq!(parsed.req_arr("points").unwrap().len(), pts.len());
         let rendered = report(&pts);
-        assert!(rendered.contains("speedup"));
+        assert!(rendered.contains("vs scalar+fixed"));
+    }
+
+    #[test]
+    fn skew_sweep_covers_both_kernel_regimes() {
+        let pts =
+            run_graphs(&["uniform-d2", "powerlaw-2.1"], &[16], &[1], ScalePolicy::tiny(), 3)
+                .unwrap();
+        let frac = |g: &str| {
+            pts.iter().find(|p| p.graph == g).map(|p| p.sparse_frac).unwrap()
+        };
+        // the near-regular deg-2 graph is gather-dominant; the
+        // power-law mix keeps a meaningful dense share — the crossover
+        // the bench exists to show
+        assert!(frac("uniform-d2") > 0.5, "uniform-d2 sparse_frac {}", frac("uniform-d2"));
+        assert!(frac("powerlaw-2.1") < 1.0, "powerlaw sparse_frac {}", frac("powerlaw-2.1"));
+        for p in &pts {
+            assert!(p.verified, "{p:?}");
+        }
     }
 
     #[test]

@@ -17,9 +17,10 @@
 //! * [`delta_update`] — incremental plan maintenance vs full replanning
 //!   across update-batch sizes × degree-skew regimes, with every batch
 //!   verified bit-for-bit (writes `BENCH_delta_update.json`).
-//! * [`microkernel`] — the old scalar execution path vs the
-//!   column-tiled zero-copy path, threads × column widths (ragged tails
-//!   included), every cell verified against the dense reference
+//! * [`microkernel`] — the SIMD × dispatch matrix: lane strategies
+//!   {scalar, portable-simd, arch} × {fixed, adaptive} kernel dispatch
+//!   over a degree-skew graph sweep, threads × column widths (ragged
+//!   tails included), every cell verified against the dense reference
 //!   (writes `BENCH_microkernel.json`).
 //! * [`train_native`] — end-to-end native training ([`crate::train`]):
 //!   steps/sec + per-phase breakdown (fwd-SpMM / fwd-dense / bwd-SpMM /

@@ -504,20 +504,21 @@ pub fn run_from_args(args: &Args) -> Result<()> {
     }
     if arm("microkernel") {
         use crate::bench::microkernel as mk;
-        let pts = mk::run(
-            "collab",
-            &mk::DEFAULT_COLDIMS,
-            &mk::DEFAULT_THREADS,
-            cfg.policy,
-            seed,
-        )?;
+        // --quick shrinks every axis but keeps both dispatch modes and
+        // both skew extremes, with verification on — the CI smoke
+        let (graphs, coldims, threads): (&[&str], &[usize], &[usize]) = if args.flag("quick") {
+            (&mk::QUICK_GRAPHS, &mk::QUICK_COLDIMS, &mk::QUICK_THREADS)
+        } else {
+            (&mk::DEFAULT_GRAPHS, &mk::DEFAULT_COLDIMS, &mk::DEFAULT_THREADS)
+        };
+        let pts = mk::run_graphs(graphs, coldims, threads, cfg.policy, seed)?;
         anyhow::ensure!(
             pts.iter().all(|p| p.verified),
-            "microkernel: a path diverged from the dense reference"
+            "microkernel: a variant diverged from the dense reference"
         );
         crate::bench::report::write_report(out, "BENCH_microkernel.json", &mk::to_json(&pts))?;
         report += &format!(
-            "=== Microkernel (scalar vs tiled, collab) ===\n{}(written to BENCH_microkernel.json)\n\n",
+            "=== Microkernel (SIMD × dispatch matrix, degree-skew sweep) ===\n{}(written to BENCH_microkernel.json)\n\n",
             mk::report(&pts)
         );
     }

@@ -527,6 +527,10 @@ mod tests {
         assert_eq!(patched.block.n_split_rows, rebuilt.block.n_split_rows, "split rows");
         assert_eq!(patched.block.nnz, rebuilt.block.nnz);
         assert_eq!(patched.warp.groups, rebuilt.warp.groups, "warp groups");
+        // the patch path must re-run per-bucket kernel selection: a
+        // batch can move rows across the dense/sparse crossover, and
+        // the patched schedule must match a from-scratch rebuild's
+        assert_eq!(patched.kernels, rebuilt.kernels, "kernel schedule");
         assert_eq!(patched.original, rebuilt.original, "original CSR");
     }
 

@@ -382,6 +382,44 @@ mod tests {
         assert_eq!(cache.misses(), before, "refresh pre-warmed the new key");
     }
 
+    /// The refresh pre-warm satellite: when a patched plan's degree
+    /// stats move rows across the dense/sparse crossover, the plan
+    /// served from the refreshed cache entry must carry the *re-run*
+    /// per-bucket kernel selection — identical to a from-scratch
+    /// rebuild's schedule, not the stale pre-patch one.
+    #[test]
+    fn refresh_carries_patched_kernel_schedule() {
+        use crate::delta::graph::{DeltaGraph, EdgeUpdate};
+        use crate::spmm::microkernel::SPARSE_DEG_MAX;
+
+        // a graph whose rows all sit in gather territory
+        let n = 30usize;
+        let edges: Vec<(u32, u32, f32)> =
+            (0..n as u32).map(|r| (r, (r + 1) % n as u32, 1.0)).collect();
+        let base = Csr::from_edges(n, n, &edges).unwrap();
+        let params = PartitionParams::default();
+        let cache = PlanCache::new();
+        let plan = cache.plan_for(&base, params);
+        assert_eq!(plan.kernels.n_dense, 0, "degree-1 rows all select gather");
+        let old_key = GraphKey { fingerprint: plan.fingerprint(), params };
+
+        // push row 0 well past the crossover via a delta batch
+        let mut dg = DeltaGraph::with_threshold(base, 1e9);
+        let batch: Vec<EdgeUpdate> = (2..(SPARSE_DEG_MAX as u32 + 4))
+            .map(|c| EdgeUpdate::Insert { row: 0, col: c, val: 0.5 })
+            .collect();
+        let rep = dg.apply(&batch).unwrap();
+        let new_csr = dg.snapshot();
+        let (patched, _) = crate::delta::patch_plan(&plan, new_csr.clone(), &rep.changes).unwrap();
+        let new_key = cache.refresh(&old_key, Arc::new(patched));
+
+        let served = cache.peek(&new_key).expect("patched plan resident after refresh");
+        let rebuilt = SpmmPlan::build(new_csr, params);
+        assert_eq!(served.kernels, rebuilt.kernels, "refresh must carry re-run selection");
+        assert!(served.kernels.n_dense >= 1, "row 0 crossed to the dense kernel");
+        assert!(served.kernels.n_sparse >= 1, "untouched rows stay on gather");
+    }
+
     #[test]
     fn refresh_respects_capacity() {
         let cache = PlanCache::bounded(2);

@@ -22,7 +22,7 @@
 //!   [`super::parallel`]).
 
 use super::plan::SpmmPlan;
-use crate::spmm::{spmm_block_level, spmm_warp_level};
+use crate::spmm::{spmm_block_level, spmm_block_level_adaptive, spmm_warp_level, SimdLevel};
 
 /// A strategy for executing one SpMM request against a prebuilt plan.
 ///
@@ -70,6 +70,26 @@ impl Executor for BlockLevel {
     }
 }
 
+/// The block-level schedule with the plan's sparsity-adaptive kernel
+/// dispatch, sequential, at an explicit SIMD level
+/// ([`crate::spmm::spmm_block_level_adaptive`]). The sequential
+/// counterpart of running
+/// [`ParallelBlockLevel`](super::parallel::ParallelBlockLevel) in
+/// adaptive mode — used by tests and the bench harness to isolate
+/// kernel-shape effects from sharding.
+pub struct AdaptiveBlockLevel(pub SimdLevel);
+
+impl Executor for AdaptiveBlockLevel {
+    fn name(&self) -> &'static str {
+        "block-level-adaptive"
+    }
+
+    fn execute(&self, plan: &SpmmPlan, x: &[f32], f: usize) -> Vec<f32> {
+        let sorted_y = spmm_block_level_adaptive(plan, x, f, self.0);
+        plan.sorted.unpermute_rows(&sorted_y, f)
+    }
+}
+
 /// The warp-level (GNNAdvisor-style) baseline schedule.
 pub struct WarpLevel;
 
@@ -111,11 +131,12 @@ mod tests {
 
     #[test]
     fn names_are_distinct() {
-        let execs: [&dyn Executor; 3] = [&CsrReference, &BlockLevel, &WarpLevel];
+        let adaptive = AdaptiveBlockLevel(SimdLevel::Scalar);
+        let execs: [&dyn Executor; 4] = [&CsrReference, &BlockLevel, &WarpLevel, &adaptive];
         let mut names: Vec<&str> = execs.iter().map(|e| e.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 3);
+        assert_eq!(names.len(), 4);
     }
 
     #[test]
@@ -126,7 +147,8 @@ mod tests {
             let f = rng.range(1, 8);
             let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
             let want = CsrReference.execute(&plan, &x, f);
-            for exec in [&BlockLevel as &dyn Executor, &WarpLevel] {
+            let adaptive = AdaptiveBlockLevel(SimdLevel::best());
+            for exec in [&BlockLevel as &dyn Executor, &WarpLevel, &adaptive] {
                 let got = exec.execute(&plan, &x, f);
                 assert_allclose(&got, &want, 1e-4, 1e-4, exec.name());
             }

@@ -43,9 +43,10 @@ pub mod exec;
 pub mod parallel;
 
 pub use cache::{GraphKey, PlanCache};
-pub use exec::{BlockLevel, CsrReference, Executor, WarpLevel};
+pub use exec::{AdaptiveBlockLevel, BlockLevel, CsrReference, Executor, WarpLevel};
 pub use parallel::{
-    spmm_block_level_parallel, spmm_block_level_parallel_into, spmm_block_level_parallel_scalar,
-    ParallelBlockLevel,
+    spmm_block_level_parallel, spmm_block_level_parallel_into,
+    spmm_block_level_parallel_into_with, spmm_block_level_parallel_scalar,
+    spmm_block_level_parallel_with, ParallelBlockLevel,
 };
-pub use plan::{GraphFingerprint, SpmmPlan};
+pub use plan::{GraphFingerprint, KernelSchedule, SpmmPlan};

@@ -53,6 +53,7 @@ use super::plan::SpmmPlan;
 use crate::partition::block_level::BlockPartition;
 use crate::partition::metadata::BlockMeta;
 use crate::spmm::microkernel;
+use crate::spmm::microkernel::{RowKernel, SimdLevel};
 use crate::util::threadpool::ThreadPool;
 use std::ops::Range;
 use std::sync::Arc;
@@ -147,9 +148,13 @@ fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
     ranges
 }
 
-/// Execute one contiguous block range through the tiled microkernel.
-/// Non-split rows are finished in place (scattered to original order
-/// through `perm`); split-row chunks accumulate into `partials`.
+/// Execute one contiguous block range through the microkernels at the
+/// given lane strategy. Non-split rows are finished in place (scattered
+/// to original order through `perm`) via the kernel shape the plan's
+/// [`KernelSchedule`](super::plan::KernelSchedule) selected for their
+/// block (when `adaptive`; always the dense tiled kernel otherwise);
+/// split-row chunks carry `deg_bound` nonzeros each and accumulate into
+/// `partials` through the dense kernel unconditionally.
 fn exec_shard(
     plan: &SpmmPlan,
     x: &[f32],
@@ -157,6 +162,8 @@ fn exec_shard(
     blocks: Range<usize>,
     out: &OutPtr,
     partials: &mut SplitPartials,
+    level: SimdLevel,
+    adaptive: bool,
 ) {
     let sorted = &plan.sorted.csr;
     let perm = &plan.sorted.perm;
@@ -174,7 +181,8 @@ fn exec_shard(
             }
             let w = partials.buf.len() - f;
             let nzs = m.split_nzs();
-            microkernel::accumulate_row(
+            microkernel::accumulate_row_with(
+                level,
                 &sorted.col_idx[loc..loc + nzs],
                 &sorted.vals[loc..loc + nzs],
                 x,
@@ -184,6 +192,7 @@ fn exec_shard(
         } else {
             // direct-write: this block owns its rows exclusively, so
             // each finished row scatters straight into y[perm[row]]
+            let kern = if adaptive { plan.kernels.kernel_for(b) } else { RowKernel::DenseTiled };
             let deg = m.deg as usize;
             for row_i in 0..m.block_rows() {
                 let s = loc + row_i * deg;
@@ -192,7 +201,9 @@ fn exec_shard(
                 // blocks by exactly one shard, and perm is a bijection —
                 // no other shard touches this span (see OutPtr).
                 let dst = unsafe { out.slice_mut(dst_row * f, f) };
-                microkernel::accumulate_row(
+                microkernel::accumulate_row_select(
+                    kern,
+                    level,
                     &sorted.col_idx[s..s + deg],
                     &sorted.vals[s..s + deg],
                     x,
@@ -219,13 +230,39 @@ pub fn spmm_block_level_parallel_into(
     pool: &ThreadPool,
     y: &mut [f32],
 ) {
-    y.fill(0.0);
-    exec_into_zeroed(plan, x, f, pool, y);
+    spmm_block_level_parallel_into_with(plan, x, f, pool, y, SimdLevel::best(), true);
 }
 
-/// [`spmm_block_level_parallel_into`] minus the zeroing pass — `y` must
-/// already be all-zero (e.g. freshly allocated).
-fn exec_into_zeroed(plan: &SpmmPlan, x: &[f32], f: usize, pool: &ThreadPool, y: &mut [f32]) {
+/// [`spmm_block_level_parallel_into`] with an explicit lane strategy
+/// and kernel-dispatch mode — the bench harness's matrix knob. `level`
+/// picks the SIMD path ([`SimdLevel::Arch`] degrades to portable when
+/// unavailable); `adaptive` toggles the plan's per-block kernel
+/// schedule versus forcing the dense tiled kernel everywhere (the PR 4
+/// behavior).
+pub fn spmm_block_level_parallel_into_with(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    pool: &ThreadPool,
+    y: &mut [f32],
+    level: SimdLevel,
+    adaptive: bool,
+) {
+    y.fill(0.0);
+    exec_into_zeroed(plan, x, f, pool, y, level, adaptive);
+}
+
+/// The `_into` body minus the zeroing pass — `y` must already be
+/// all-zero (e.g. freshly allocated).
+fn exec_into_zeroed(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    pool: &ThreadPool,
+    y: &mut [f32],
+    level: SimdLevel,
+    adaptive: bool,
+) {
     assert_eq!(x.len(), plan.sorted.csr.n_cols * f, "X shape mismatch");
     assert_eq!(y.len(), plan.sorted.csr.n_rows * f, "Y shape mismatch");
     let ranges = shard_ranges(&plan.block, pool.size());
@@ -240,7 +277,7 @@ fn exec_into_zeroed(plan: &SpmmPlan, x: &[f32], f: usize, pool: &ThreadPool, y: 
         .zip(partials.iter_mut())
         .map(|(range, part)| {
             let out = &out;
-            Box::new(move || exec_shard(plan, x, f, range, out, part))
+            Box::new(move || exec_shard(plan, x, f, range, out, part, level, adaptive))
                 as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
@@ -266,8 +303,21 @@ pub fn spmm_block_level_parallel(
     f: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
+    spmm_block_level_parallel_with(plan, x, f, pool, SimdLevel::best(), true)
+}
+
+/// Allocating wrapper with an explicit lane strategy and dispatch mode
+/// (see [`spmm_block_level_parallel_into_with`]).
+pub fn spmm_block_level_parallel_with(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    pool: &ThreadPool,
+    level: SimdLevel,
+    adaptive: bool,
+) -> Vec<f32> {
     let mut y = vec![0f32; plan.sorted.csr.n_rows * f];
-    exec_into_zeroed(plan, x, f, pool, &mut y); // fresh allocation: skip the re-zero
+    exec_into_zeroed(plan, x, f, pool, &mut y, level, adaptive); // fresh allocation: skip the re-zero
     y
 }
 
@@ -589,6 +639,86 @@ mod tests {
                     let got = exec.execute(&plan, &x, f);
                     let want = CsrReference.execute(&plan, &x, f);
                     assert_allclose(&got, &want, 1e-4, 1e-4, "ragged tail vs reference");
+                }
+            }
+        });
+    }
+
+    /// The SIMD-equivalence satellite at executor scope: every
+    /// (lane strategy × dispatch mode) combination agrees with the
+    /// dense reference across thread counts {1, 2, 8}, the required
+    /// column widths, empty rows, and split rows. Scalar and portable
+    /// are additionally held bit-for-bit identical (same per-lane op
+    /// order, same shard layout); arch is allclose within the
+    /// documented FMA tolerance.
+    #[test]
+    fn prop_simd_levels_and_dispatch_match_reference() {
+        use crate::spmm::microkernel::ARCH_REL_TOL;
+        proptest::check("parallel_simd_matrix", 0x51D5, 6, |rng| {
+            let n = rng.range(1, 40);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 12]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 32]),
+            };
+            // sparse-heavy degree mix so both kernel shapes are selected
+            let mut edges = Vec::new();
+            for r in 0..n {
+                let d = match rng.range(0, 5) {
+                    0 => 0, // empty row
+                    1 | 2 => rng.range(1, 5), // gather territory
+                    3 => rng.range(5, 20),
+                    _ => rng.range(0, 2 * n + 2), // may split
+                };
+                for _ in 0..d {
+                    edges.push((r as u32, rng.range(0, n) as u32, rng.f32() - 0.5));
+                }
+            }
+            let plan =
+                Arc::new(SpmmPlan::build(Csr::from_edges(n, n, &edges).unwrap(), params));
+            for &threads in &[1usize, 2, 8] {
+                let pool = ThreadPool::new(threads);
+                for &f in &[1usize, 3, 8, 16, 17, 33] {
+                    let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+                    let want = CsrReference.execute(&plan, &x, f);
+                    let mut scalar_adaptive = None;
+                    for level in [SimdLevel::Scalar, SimdLevel::Portable, SimdLevel::Arch] {
+                        for adaptive in [false, true] {
+                            let got = spmm_block_level_parallel_with(
+                                &plan, &x, f, &pool, level, adaptive,
+                            );
+                            assert_allclose(
+                                &got,
+                                &want,
+                                1e-4,
+                                1e-4,
+                                &format!("{} adaptive={adaptive}", level.name()),
+                            );
+                            match (level, adaptive) {
+                                (SimdLevel::Scalar, true) => scalar_adaptive = Some(got),
+                                (SimdLevel::Portable, true) => {
+                                    // bit-for-bit vs scalar on the same shard layout
+                                    let sa = scalar_adaptive.as_ref().expect("scalar ran first");
+                                    for (j, (a, b)) in got.iter().zip(sa).enumerate() {
+                                        assert_eq!(
+                                            a.to_bits(),
+                                            b.to_bits(),
+                                            "lane {j}: portable vs scalar bitwise"
+                                        );
+                                    }
+                                }
+                                (SimdLevel::Arch, true) => {
+                                    let sa = scalar_adaptive.as_ref().expect("scalar ran first");
+                                    for (a, b) in got.iter().zip(sa) {
+                                        assert!(
+                                            (a - b).abs() <= ARCH_REL_TOL * (1.0 + b.abs()),
+                                            "arch {a} vs scalar {b} beyond ARCH_REL_TOL"
+                                        );
+                                    }
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
                 }
             }
         });

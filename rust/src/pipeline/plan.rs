@@ -24,7 +24,78 @@ use crate::graph::degree::DegreeSorted;
 use crate::partition::block_level::BlockPartition;
 use crate::partition::patterns::PartitionParams;
 use crate::partition::warp_level::WarpPartition;
+use crate::spmm::microkernel::{select_kernel, RowKernel, SimdLevel};
 use std::sync::OnceLock;
+
+/// The sparsity-adaptive kernel schedule: which kernel shape
+/// ([`RowKernel`]) each block of the block-level partition runs.
+///
+/// Derived deterministically from the partition's per-block degree
+/// stats by [`KernelSchedule::derive`] — a pure function of
+/// `BlockPartition`, so the delta patch path
+/// ([`patch_plan`](crate::delta::patch_plan)) reproduces exactly the
+/// schedule a from-scratch rebuild would pick (asserted in the delta
+/// property tests). Blocks of split rows (`deg > deg_bound`) always run
+/// the dense tiled kernel: each chunk carries up to `deg_bound`
+/// nonzeros, well past the gather crossover.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelSchedule {
+    /// Kernel shape per block, parallel to `BlockPartition::meta`.
+    pub per_block: Vec<RowKernel>,
+    /// Number of blocks scheduled on the dense tiled kernel.
+    pub n_dense: usize,
+    /// Number of blocks scheduled on the sparse gather kernel.
+    pub n_sparse: usize,
+}
+
+impl KernelSchedule {
+    /// Select a kernel shape for every block from its degree metadata
+    /// ([`select_kernel`] on non-split blocks, dense for split rows).
+    pub fn derive(block: &BlockPartition) -> KernelSchedule {
+        let deg_bound = block.params.deg_bound();
+        let mut per_block = Vec::with_capacity(block.meta.len());
+        let mut n_sparse = 0usize;
+        for m in &block.meta {
+            let k = if m.is_split(deg_bound) {
+                RowKernel::DenseTiled
+            } else {
+                select_kernel(m.deg as usize)
+            };
+            if k == RowKernel::SparseGather {
+                n_sparse += 1;
+            }
+            per_block.push(k);
+        }
+        let n_dense = per_block.len() - n_sparse;
+        KernelSchedule { per_block, n_dense, n_sparse }
+    }
+
+    /// The kernel shape block `b` runs under adaptive dispatch.
+    #[inline]
+    pub fn kernel_for(&self, b: usize) -> RowKernel {
+        self.per_block[b]
+    }
+
+    /// Fraction of blocks on the sparse gather kernel (bench reporting).
+    pub fn sparse_frac(&self) -> f64 {
+        if self.per_block.is_empty() {
+            0.0
+        } else {
+            self.n_sparse as f64 / self.per_block.len() as f64
+        }
+    }
+
+    /// Human-readable variant tag for metrics footers and bench tables,
+    /// e.g. `"avx2+adaptive(dense 12 / sparse 40 blocks)"`.
+    pub fn summary(&self, level: SimdLevel) -> String {
+        format!(
+            "{}+adaptive(dense {} / sparse {} blocks)",
+            level.effective().name(),
+            self.n_dense,
+            self.n_sparse
+        )
+    }
+}
 
 /// Cheap identity of a CSR matrix: dimensions, nonzero count, and a
 /// 64-bit FNV-1a content hash over `row_ptr`/`col_idx`/`vals`.
@@ -99,6 +170,10 @@ pub struct SpmmPlan {
     pub sorted: DegreeSorted,
     pub block: BlockPartition,
     pub warp: WarpPartition,
+    /// Per-block kernel shapes for adaptive dispatch, derived from
+    /// `block` at construction (both [`SpmmPlan::build`] and the delta
+    /// path's `from_parts` — same pure rule, same schedule).
+    pub kernels: KernelSchedule,
     pub params: PartitionParams,
     /// Lazily computed (only cache lookups need it); see
     /// [`SpmmPlan::fingerprint`].
@@ -120,7 +195,8 @@ impl SpmmPlan {
         let sorted = DegreeSorted::new(&csr);
         let block = BlockPartition::build(&sorted.csr, params);
         let warp = WarpPartition::build(&csr, params.max_warp_nzs);
-        SpmmPlan { original: csr, sorted, block, warp, params, fingerprint: OnceLock::new() }
+        let kernels = KernelSchedule::derive(&block);
+        SpmmPlan { original: csr, sorted, block, warp, kernels, params, fingerprint: OnceLock::new() }
     }
 
     /// The graph's fingerprint, computed on first use and cached.
@@ -156,7 +232,12 @@ impl SpmmPlan {
         debug_assert_eq!(sorted.csr.n_rows, original.n_rows);
         debug_assert_eq!(block.n_rows, original.n_rows);
         debug_assert_eq!(block.nnz, original.nnz());
-        SpmmPlan { original, sorted, block, warp, params, fingerprint: OnceLock::new() }
+        // re-run kernel selection on the patched partition: the patch
+        // may have moved rows across the dense/sparse crossover, and the
+        // selection rule is pure in the block stats, so this is exactly
+        // what a from-scratch rebuild would pick
+        let kernels = KernelSchedule::derive(&block);
+        SpmmPlan { original, sorted, block, warp, kernels, params, fingerprint: OnceLock::new() }
     }
 
     pub fn n_rows(&self) -> usize {
@@ -219,6 +300,43 @@ mod tests {
         for r in 1..50 {
             assert!(plan.sorted.csr.degree(r - 1) <= plan.sorted.csr.degree(r));
         }
+    }
+
+    #[test]
+    fn kernel_schedule_matches_block_degrees() {
+        use crate::spmm::microkernel::SPARSE_DEG_MAX;
+        let csr = random_csr(7, 80);
+        let plan = SpmmPlan::build(csr, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        assert_eq!(plan.kernels.per_block.len(), plan.block.meta.len());
+        assert_eq!(plan.kernels.n_dense + plan.kernels.n_sparse, plan.block.meta.len());
+        let deg_bound = plan.params.deg_bound();
+        for (b, m) in plan.block.meta.iter().enumerate() {
+            let k = plan.kernels.kernel_for(b);
+            if m.is_split(deg_bound) {
+                assert_eq!(k, RowKernel::DenseTiled, "split block {b} must stay dense");
+            } else if m.deg as usize <= SPARSE_DEG_MAX {
+                assert_eq!(k, RowKernel::SparseGather, "block {b} deg {}", m.deg);
+            } else {
+                assert_eq!(k, RowKernel::DenseTiled, "block {b} deg {}", m.deg);
+            }
+        }
+        let frac = plan.kernels.sparse_frac();
+        assert!((0.0..=1.0).contains(&frac));
+        let summary = plan.kernels.summary(SimdLevel::Scalar);
+        assert!(summary.starts_with("scalar+adaptive("), "{summary}");
+    }
+
+    /// The selection-stability satellite: building the same graph twice
+    /// yields identical per-block kernel choices (selection is a pure
+    /// function of the partition, with no ambient state).
+    #[test]
+    fn kernel_selection_is_stable() {
+        let csr = random_csr(11, 60);
+        let params = PartitionParams::default();
+        let a = SpmmPlan::build(csr.clone(), params);
+        let b = SpmmPlan::build(csr, params);
+        assert_eq!(a.kernels, b.kernels);
+        assert_eq!(a.kernels, KernelSchedule::derive(&a.block));
     }
 
     #[test]

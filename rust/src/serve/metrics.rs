@@ -4,6 +4,8 @@
 //! constant memory).
 
 use crate::metrics::{Counter, Gauge, LatencyRecorder};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 /// Shared between submitters (front edge) and the worker loop.
 #[derive(Debug, Default)]
@@ -42,11 +44,30 @@ pub struct ServeMetrics {
     pub patch_latency: LatencyRecorder,
     /// Highest epoch any tenant has reached.
     pub epoch: Gauge,
+    /// Kernel variant that last served each tenant (graph name →
+    /// variant tag, e.g. `"avx2+adaptive(dense 3 / sparse 40 blocks)"`)
+    /// — recorded by the worker per executed batch, rendered in the
+    /// footer. BTreeMap for deterministic footer order.
+    tenant_kernels: Mutex<BTreeMap<String, String>>,
 }
 
 impl ServeMetrics {
     pub fn new() -> ServeMetrics {
         ServeMetrics::default()
+    }
+
+    /// Record which kernel variant served `tenant`'s last executed
+    /// batch (overwrites: the footer shows the current variant, which
+    /// can change when a plan patch moves blocks across the
+    /// dense/sparse crossover).
+    pub fn note_kernel(&self, tenant: &str, variant: String) {
+        let mut map = self.tenant_kernels.lock().unwrap();
+        match map.get_mut(tenant) {
+            Some(v) => *v = variant,
+            None => {
+                map.insert(tenant.to_string(), variant);
+            }
+        }
     }
 
     /// Mean requests fused per executed batch (> 1 means the column
@@ -88,6 +109,9 @@ impl ServeMetrics {
             "spmm throughput: mean {:.3} GFLOP/s, max {:.3} GFLOP/s over {} requests\n",
             g.mean, g.max, g.count
         ));
+        for (tenant, variant) in self.tenant_kernels.lock().unwrap().iter() {
+            s.push_str(&format!("spmm kernel [{tenant}]: {variant}\n"));
+        }
         s.push_str(&format!("{}\n", self.dense_stage.snapshot().render("dense stage")));
         s.push_str(&format!("{}\n", self.patch_latency.snapshot().render("plan patch")));
         s.push_str(&format!("{}\n", self.total.snapshot().render("total")));
@@ -117,6 +141,20 @@ mod tests {
         assert!(r.contains("submitted=7"));
         assert!(r.contains("spmm throughput: mean 2.000 GFLOP/s"), "{r}");
         assert!(r.contains("over 2 requests"), "{r}");
+    }
+
+    #[test]
+    fn kernel_variants_render_per_tenant() {
+        let m = ServeMetrics::new();
+        assert!(!m.render().contains("spmm kernel"), "no tenants yet");
+        m.note_kernel("cora", "scalar+adaptive(dense 1 / sparse 2 blocks)".into());
+        m.note_kernel("collab", "portable-simd+adaptive(dense 5 / sparse 0 blocks)".into());
+        // re-noting overwrites (plan patch changed the schedule)
+        m.note_kernel("cora", "scalar+adaptive(dense 2 / sparse 1 blocks)".into());
+        let r = m.render();
+        assert!(r.contains("spmm kernel [cora]: scalar+adaptive(dense 2 / sparse 1 blocks)"), "{r}");
+        assert!(r.contains("spmm kernel [collab]: portable-simd+adaptive"), "{r}");
+        assert!(!r.contains("dense 1 / sparse 2"), "stale variant must be replaced");
     }
 
     #[test]

@@ -631,7 +631,8 @@ fn run_spmm_group(
         let y = crate::pipeline::spmm_block_level_parallel(&plan, &fused, aw, pool);
         let spmm_secs = t0.elapsed().as_secs_f64();
         metrics.spmm_stage.record(spmm_secs);
-        let gflops = crate::spmm::spmm_flops(plan.nnz(), aw) / spmm_secs.max(1e-9) / 1e9;
+        let gflops = crate::spmm::spmm_gflops(plan.nnz(), aw, spmm_secs);
+        metrics.note_kernel(&entry.name, plan.kernels.summary(crate::spmm::SimdLevel::best()));
         metrics.batches.inc();
         metrics.fused_requests.add(bp.members.len() as u64);
         // split: copy each member's columns back out, unpermuting rows
@@ -710,9 +711,12 @@ fn run_gcn_group(
             Ok((outs, timings)) => {
                 metrics.spmm_stage.record(timings.spmm_secs);
                 metrics.dense_stage.record(timings.dense_secs);
-                let gflops = model.spmm_flops(plan.nnz(), bp.members.len())
-                    / timings.spmm_secs.max(1e-9)
-                    / 1e9;
+                let gflops = crate::spmm::gflops(
+                    model.spmm_flops(plan.nnz(), bp.members.len()),
+                    timings.spmm_secs,
+                );
+                metrics
+                    .note_kernel(&entry.name, plan.kernels.summary(crate::spmm::SimdLevel::best()));
                 metrics.batches.inc();
                 metrics.fused_requests.add(bp.members.len() as u64);
                 for (&m, out) in bp.members.iter().zip(outs) {

@@ -16,6 +16,8 @@
 
 use crate::graph::csr::Csr;
 use crate::partition::block_level::BlockPartition;
+use crate::pipeline::plan::SpmmPlan;
+use crate::spmm::microkernel::{self, SimdLevel};
 
 /// Execute `Y = A_sorted · X` via the block-level schedule.
 /// `x` is `[n_cols × f]` row-major; result rows are in the sorted domain.
@@ -64,6 +66,59 @@ pub fn spmm_block_level(sorted: &Csr, bp: &BlockPartition, x: &[f32], f: usize) 
             // write back shared → global (coalesced store)
             let base = m.row as usize;
             y[base * f..(base + rows) * f].copy_from_slice(&shared);
+        }
+    }
+    y
+}
+
+/// Sequential block-level executor honoring the plan's sparsity-
+/// adaptive kernel schedule at an explicit SIMD level: each non-split
+/// block's rows run the kernel shape
+/// [`KernelSchedule::derive`](crate::pipeline::plan::KernelSchedule)
+/// selected for that block (dense tiled or sparse gather); split-row
+/// chunks always run the dense kernel into a global-accumulation row,
+/// mirroring [`spmm_block_level`]'s level-3 path. Result rows are in
+/// the **sorted** domain, exactly like [`spmm_block_level`].
+pub fn spmm_block_level_adaptive(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+    level: SimdLevel,
+) -> Vec<f32> {
+    let sorted = &plan.sorted.csr;
+    let bp = &plan.block;
+    assert_eq!(x.len(), sorted.n_cols * f, "X shape mismatch");
+    let deg_bound = bp.params.deg_bound();
+    let mut y = vec![0f32; sorted.n_rows * f];
+    for (b, m) in bp.meta.iter().enumerate() {
+        let loc = m.loc as usize;
+        if m.is_split(deg_bound) {
+            let dst = m.row as usize;
+            let nzs = m.split_nzs();
+            microkernel::accumulate_row_with(
+                level,
+                &sorted.col_idx[loc..loc + nzs],
+                &sorted.vals[loc..loc + nzs],
+                x,
+                f,
+                &mut y[dst * f..(dst + 1) * f],
+            );
+        } else {
+            let kern = plan.kernels.kernel_for(b);
+            let deg = m.deg as usize;
+            for row_i in 0..m.block_rows() {
+                let s = loc + row_i * deg;
+                let dst = m.row as usize + row_i;
+                microkernel::accumulate_row_select(
+                    kern,
+                    level,
+                    &sorted.col_idx[s..s + deg],
+                    &sorted.vals[s..s + deg],
+                    x,
+                    f,
+                    &mut y[dst * f..(dst + 1) * f],
+                );
+            }
         }
     }
     y
@@ -153,6 +208,30 @@ mod tests {
             let want = ds.csr.spmm_dense(&x, f);
             let got = spmm_block_level(&ds.csr, &bp, &x, f);
             assert_allclose(&got, &want, 1e-4, 1e-4, "prop block exec");
+        });
+    }
+
+    /// The adaptive sequential executor agrees with the literal one —
+    /// and with the dense reference — at every SIMD level, on graphs
+    /// mixing gather-territory rows, dense rows, and split rows.
+    #[test]
+    fn prop_adaptive_exec_equals_reference() {
+        proptest::check("block_exec_adaptive", 0x5B0E, 12, |rng| {
+            let n = rng.range(1, 60);
+            let csr = random_graph(rng, n, true);
+            let params = PartitionParams {
+                max_block_warps: *rng.choose(&[1usize, 2, 4]),
+                max_warp_nzs: *rng.choose(&[1usize, 2, 8]),
+            };
+            let plan = SpmmPlan::build(csr, params);
+            let f = *rng.choose(&[1usize, 3, 16, 17, 33]);
+            let x: Vec<f32> =
+                (0..plan.original.n_cols * f).map(|_| rng.f32() - 0.5).collect();
+            let want = spmm_block_level(&plan.sorted.csr, &plan.block, &x, f);
+            for level in [SimdLevel::Scalar, SimdLevel::Portable, SimdLevel::Arch] {
+                let got = spmm_block_level_adaptive(&plan, &x, f, level);
+                assert_allclose(&got, &want, 1e-4, 1e-4, level.name());
+            }
         });
     }
 

@@ -1,27 +1,178 @@
-//! Column-tiled SpMM microkernel — the CPU analog of the paper's
-//! combined-warp strategy (§III-C).
+//! Column-tiled, SIMD-dispatched SpMM microkernels — the CPU analog of
+//! the paper's combined-warp strategy (§III-C), now with explicit f32
+//! lanes and a sparsity-adaptive second kernel shape.
 //!
 //! On the GPU, a combined warp's 32 lanes sweep the dense column
 //! dimension in lockstep so every global load is coalesced. The CPU
 //! translation: walk the columns in fixed-width tiles of [`TILE`]
-//! floats, accumulating each tile in a stack array (`[f32; TILE]`) that
-//! LLVM keeps in vector registers and autovectorizes — tile width ↔
-//! warp span. The nonzero loop iterates `col_idx`/`vals` with a fused
-//! `zip`, and the X row slice is reborrowed as a fixed-size `&[f32;
-//! TILE]`, so the inner loop carries **no per-element bounds checks**:
-//! the compiler sees constant trip counts and in-bounds indices.
+//! floats, accumulating each tile in vector registers — tile width ↔
+//! warp span. Three lane strategies implement that sweep, selected at
+//! runtime ([`SimdLevel`]):
+//!
+//! * [`SimdLevel::Scalar`] — the PR 4 baseline: a `[f32; TILE]` stack
+//!   accumulator LLVM autovectorizes. Kept as the measured floor.
+//! * [`SimdLevel::Portable`] — explicit 8-wide unrolled lanes (two
+//!   independent `[f32; LANES]` accumulators per tile, `wide`-style
+//!   f32x8 written by hand). Identical per-lane operation order to the
+//!   scalar path, so the two are **bit-for-bit** equal.
+//! * [`SimdLevel::Arch`] — arch intrinsics behind runtime feature
+//!   detection: AVX2+FMA on x86_64 (`_mm256_fmadd_ps`, two 8-lane
+//!   vectors per tile), NEON on aarch64 (`vfmaq_f32`, four 4-lane
+//!   vectors per tile). FMA contracts the multiply-add into a single
+//!   rounding, so arch results differ from scalar/portable within
+//!   [`ARCH_REL_TOL`] relative — the documented tolerance every
+//!   equivalence proptest uses.
 //!
 //! Columns beyond the last full tile (`f % TILE != 0`) take the ragged
-//! tail path: same accumulator array, runtime-bounded lanes. Both paths
+//! tail path: runtime-bounded lanes, shared by all levels. Both paths
 //! *accumulate* into `dst` (`+=`), so a destination row can absorb
 //! several nonzero ranges (multiple warp tasks of one row, or split-row
-//! chunks) in sequence.
+//! chunks) in sequence — the contract every executor programs against.
+//!
+//! ## Two kernel shapes ([`RowKernel`])
+//!
+//! FlexVector's observation holds on CPUs too: one kernel shape loses
+//! on varying-sparsity graphs. For short rows the dense tile's
+//! accumulator round-trip (zero `acc`, sum into `acc`, add `acc` into
+//! `dst`) costs more than the row's arithmetic, so rows with
+//! `deg ≤ SPARSE_DEG_MAX` run [`gather_row_with`] instead: each
+//! nonzero's X row is axpy'd straight into `dst`, no tile accumulator
+//! at all. [`select_kernel`] is the pure degree → kernel rule; the plan
+//! records the choice per block
+//! ([`KernelSchedule`](crate::pipeline::plan::KernelSchedule)) and the
+//! executors honor it.
+
+use std::sync::OnceLock;
 
 /// Column-tile width, in f32 lanes. 16 floats = one 64-byte cache line
 /// = two AVX2 / one AVX-512 vector — wide enough to saturate the FMA
 /// ports, narrow enough that one accumulator tile always fits the
 /// register file.
 pub const TILE: usize = 16;
+
+/// Portable-SIMD lane width: one f32x8 (half a [`TILE`]).
+pub const LANES: usize = 8;
+
+/// Dense/sparse crossover degree: rows with at most this many nonzeros
+/// run the sparse gather kernel (the tile-accumulator setup dominates
+/// below it). Chosen so the gather path covers the power-law mass of
+/// degree 1–4 rows; the microkernel bench sweeps degree skew so the
+/// crossover is measured, not guessed.
+pub const SPARSE_DEG_MAX: usize = 4;
+
+/// Relative tolerance between the arch-SIMD (FMA-contracted) results
+/// and the scalar/portable (separate multiply + add) results. One FMA
+/// saves one rounding per (nonzero, lane) pair; over any realistic row
+/// the relative drift stays far below this bound.
+pub const ARCH_REL_TOL: f32 = 1e-5;
+
+/// Lane strategy for the inner column sweep, in ascending order of
+/// hardware assumption.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdLevel {
+    /// Autovectorized stack-array tiles (the PR 4 baseline).
+    Scalar,
+    /// Explicit 8-wide unrolled lanes; bit-identical to `Scalar`.
+    Portable,
+    /// AVX2+FMA (x86_64) / NEON (aarch64) intrinsics. Falls back to
+    /// `Portable` at dispatch when the host lacks the features
+    /// ([`SimdLevel::effective`]), so passing `Arch` is always safe.
+    Arch,
+}
+
+impl SimdLevel {
+    /// Stable identifier used in bench output, JSON, and the serve
+    /// metrics footer.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Portable => "portable-simd",
+            SimdLevel::Arch => arch::NAME,
+        }
+    }
+
+    /// Whether this level can actually execute on the running host.
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Scalar | SimdLevel::Portable => true,
+            SimdLevel::Arch => arch::available(),
+        }
+    }
+
+    /// The level the dispatcher will really run: `Arch` degrades to
+    /// `Portable` when the host lacks the features, everything else is
+    /// itself. All public kernel entry points call this, so an
+    /// unsupported `Arch` request is never unsound — just portable.
+    pub fn effective(self) -> SimdLevel {
+        if self == SimdLevel::Arch && !arch::available() {
+            SimdLevel::Portable
+        } else {
+            self
+        }
+    }
+
+    /// Fresh hardware probe (no caching): the widest available level.
+    pub fn detect() -> SimdLevel {
+        if arch::available() {
+            SimdLevel::Arch
+        } else {
+            SimdLevel::Portable
+        }
+    }
+
+    /// The process-wide default level, computed once: the
+    /// `ACCEL_GCN_SIMD` environment variable (`scalar` | `portable` |
+    /// `arch`/`native`) if set — CI forces `portable` to prove the
+    /// fallback — otherwise [`SimdLevel::detect`]. A forced `arch` on a
+    /// host without the features degrades to portable at dispatch.
+    pub fn best() -> SimdLevel {
+        static BEST: OnceLock<SimdLevel> = OnceLock::new();
+        *BEST.get_or_init(|| match std::env::var("ACCEL_GCN_SIMD").ok().as_deref() {
+            Some("scalar") => SimdLevel::Scalar,
+            Some("portable") => SimdLevel::Portable,
+            Some("arch") | Some("native") => SimdLevel::Arch,
+            _ => SimdLevel::detect(),
+        })
+    }
+}
+
+/// Which kernel shape a row (or a whole degree bucket) runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RowKernel {
+    /// Column-tiled accumulator kernel ([`accumulate_row_with`]) — the
+    /// dense-row shape: amortizes the accumulator round-trip over many
+    /// nonzeros.
+    DenseTiled,
+    /// Direct-axpy gather kernel ([`gather_row_with`]) — the sparse-row
+    /// shape: no tile accumulator, each nonzero streams straight into
+    /// the destination row.
+    SparseGather,
+}
+
+impl RowKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            RowKernel::DenseTiled => "dense-tiled",
+            RowKernel::SparseGather => "sparse-gather",
+        }
+    }
+}
+
+/// The dense/sparse selection rule: a pure function of row degree, so
+/// plan build, the delta patch path, and a from-scratch rebuild always
+/// agree (the patch proptests assert schedule equality).
+#[inline]
+pub fn select_kernel(deg: usize) -> RowKernel {
+    if deg <= SPARSE_DEG_MAX {
+        RowKernel::SparseGather
+    } else {
+        RowKernel::DenseTiled
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar (autovectorized) tiles — the PR 4 baseline, byte-for-byte.
+// ---------------------------------------------------------------------
 
 /// `dst[t0 .. t0+TILE] += Σ_i vals[i] · x[cols[i]·f + t0 ..][..TILE]`
 /// — one full-width tile, constant trip counts throughout.
@@ -42,7 +193,9 @@ fn tile_full(cols: &[u32], vals: &[f32], x: &[f32], f: usize, t0: usize, dst: &m
 }
 
 /// The ragged tail: the final `f - t0 < TILE` columns, runtime-bounded
-/// lanes over the same stack accumulator.
+/// lanes over the same stack accumulator. Shared by every [`SimdLevel`]
+/// (the tail is a bounded fraction of the work; keeping one copy keeps
+/// scalar and portable bit-identical on ragged widths too).
 #[inline]
 fn tile_tail(cols: &[u32], vals: &[f32], x: &[f32], f: usize, t0: usize, dst: &mut [f32]) {
     let tw = f - t0;
@@ -59,26 +212,320 @@ fn tile_tail(cols: &[u32], vals: &[f32], x: &[f32], f: usize, t0: usize, dst: &m
     }
 }
 
+// ---------------------------------------------------------------------
+// Portable 8-wide tiles — hand-written f32x8, no arch assumptions.
+// ---------------------------------------------------------------------
+
+/// Full tile as two independent 8-lane accumulators (two f32x8
+/// registers). Per-lane operation order matches [`tile_full`] exactly,
+/// so the result is bit-identical to the scalar path.
+#[inline]
+fn tile_full_portable(cols: &[u32], vals: &[f32], x: &[f32], f: usize, t0: usize, dst: &mut [f32]) {
+    let mut acc0 = [0f32; LANES];
+    let mut acc1 = [0f32; LANES];
+    for (&c, &v) in cols.iter().zip(vals) {
+        let base = c as usize * f + t0;
+        let xt: &[f32; TILE] = x[base..base + TILE].try_into().expect("tile in bounds");
+        for j in 0..LANES {
+            acc0[j] += v * xt[j];
+        }
+        for j in 0..LANES {
+            acc1[j] += v * xt[LANES + j];
+        }
+    }
+    let d: &mut [f32; TILE] = (&mut dst[t0..t0 + TILE]).try_into().expect("tile in bounds");
+    for j in 0..LANES {
+        d[j] += acc0[j];
+    }
+    for j in 0..LANES {
+        d[LANES + j] += acc1[j];
+    }
+}
+
+/// `dst[j] += v · xrow[j]` in 8-lane chunks plus a scalar tail — the
+/// portable axpy the sparse gather kernel streams through.
+#[inline]
+fn axpy_portable(v: f32, xrow: &[f32], dst: &mut [f32]) {
+    let n = dst.len();
+    debug_assert_eq!(xrow.len(), n);
+    let mut j = 0usize;
+    while j + LANES <= n {
+        let xt: &[f32; LANES] = xrow[j..j + LANES].try_into().expect("chunk in bounds");
+        let d: &mut [f32; LANES] = (&mut dst[j..j + LANES]).try_into().expect("chunk in bounds");
+        for k in 0..LANES {
+            d[k] += v * xt[k];
+        }
+        j += LANES;
+    }
+    for k in j..n {
+        dst[k] += v * xrow[k];
+    }
+}
+
+#[inline]
+fn axpy_scalar(v: f32, xrow: &[f32], dst: &mut [f32]) {
+    for (d, &xv) in dst.iter_mut().zip(xrow) {
+        *d += v * xv;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arch-gated intrinsics: AVX2+FMA on x86_64, NEON on aarch64.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod arch {
+    use super::{LANES, TILE};
+    use std::arch::x86_64::*;
+
+    pub const NAME: &str = "avx2";
+
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    /// One full tile: two 8-lane FMA accumulators.
+    ///
+    /// # Safety
+    /// AVX2+FMA must be available ([`available`]); the caller upholds
+    /// the tile contract (`t0 + TILE ≤ f`, every `cols[i]` a valid row
+    /// of `x`, `dst.len() == f`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn tile_full(
+        cols: &[u32],
+        vals: &[f32],
+        x: &[f32],
+        f: usize,
+        t0: usize,
+        dst: &mut [f32],
+    ) {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        for (&c, &v) in cols.iter().zip(vals) {
+            let base = c as usize * f + t0;
+            debug_assert!(base + TILE <= x.len());
+            let vv = _mm256_set1_ps(v);
+            let p = x.as_ptr().add(base);
+            acc0 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(p), acc0);
+            acc1 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(p.add(LANES)), acc1);
+        }
+        debug_assert!(t0 + TILE <= dst.len());
+        let d = dst.as_mut_ptr().add(t0);
+        _mm256_storeu_ps(d, _mm256_add_ps(_mm256_loadu_ps(d), acc0));
+        _mm256_storeu_ps(
+            d.add(LANES),
+            _mm256_add_ps(_mm256_loadu_ps(d.add(LANES)), acc1),
+        );
+    }
+
+    /// `dst += v · xrow`, 8-lane FMA chunks + scalar tail.
+    ///
+    /// # Safety
+    /// AVX2+FMA must be available; `xrow.len() == dst.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(v: f32, xrow: &[f32], dst: &mut [f32]) {
+        let n = dst.len();
+        debug_assert_eq!(xrow.len(), n);
+        let vv = _mm256_set1_ps(v);
+        let mut j = 0usize;
+        while j + LANES <= n {
+            let d = dst.as_mut_ptr().add(j);
+            let r = _mm256_fmadd_ps(vv, _mm256_loadu_ps(xrow.as_ptr().add(j)), _mm256_loadu_ps(d));
+            _mm256_storeu_ps(d, r);
+            j += LANES;
+        }
+        for k in j..n {
+            *dst.get_unchecked_mut(k) += v * xrow.get_unchecked(k);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arch {
+    use super::TILE;
+    use std::arch::aarch64::*;
+
+    pub const NAME: &str = "neon";
+
+    /// NEON is part of the aarch64 baseline.
+    pub fn available() -> bool {
+        true
+    }
+
+    /// One full tile: four 4-lane FMA accumulators.
+    ///
+    /// # Safety
+    /// Caller upholds the tile contract (`t0 + TILE ≤ f`, every
+    /// `cols[i]` a valid row of `x`, `dst.len() == f`).
+    pub unsafe fn tile_full(
+        cols: &[u32],
+        vals: &[f32],
+        x: &[f32],
+        f: usize,
+        t0: usize,
+        dst: &mut [f32],
+    ) {
+        let mut acc = [vdupq_n_f32(0.0); 4];
+        for (&c, &v) in cols.iter().zip(vals) {
+            let base = c as usize * f + t0;
+            debug_assert!(base + TILE <= x.len());
+            let vv = vdupq_n_f32(v);
+            let p = x.as_ptr().add(base);
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vfmaq_f32(*a, vv, vld1q_f32(p.add(4 * k)));
+            }
+        }
+        debug_assert!(t0 + TILE <= dst.len());
+        let d = dst.as_mut_ptr().add(t0);
+        for (k, a) in acc.iter().enumerate() {
+            let dp = d.add(4 * k);
+            vst1q_f32(dp, vaddq_f32(vld1q_f32(dp), *a));
+        }
+    }
+
+    /// `dst += v · xrow`, 4-lane FMA chunks + scalar tail.
+    ///
+    /// # Safety
+    /// `xrow.len() == dst.len()`.
+    pub unsafe fn axpy(v: f32, xrow: &[f32], dst: &mut [f32]) {
+        let n = dst.len();
+        debug_assert_eq!(xrow.len(), n);
+        let vv = vdupq_n_f32(v);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let d = dst.as_mut_ptr().add(j);
+            vst1q_f32(d, vfmaq_f32(vld1q_f32(d), vv, vld1q_f32(xrow.as_ptr().add(j))));
+            j += 4;
+        }
+        for k in j..n {
+            *dst.get_unchecked_mut(k) += v * xrow.get_unchecked(k);
+        }
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod arch {
+    pub const NAME: &str = "arch-simd";
+
+    pub fn available() -> bool {
+        false
+    }
+
+    /// # Safety
+    /// Never called: [`available`] is false, so dispatch degrades
+    /// `Arch` to `Portable` before reaching here.
+    pub unsafe fn tile_full(_: &[u32], _: &[f32], _: &[f32], _: usize, _: usize, _: &mut [f32]) {
+        unreachable!("no arch SIMD on this target");
+    }
+
+    /// # Safety
+    /// Never called (see [`tile_full`]).
+    pub unsafe fn axpy(_: f32, _: &[f32], _: &mut [f32]) {
+        unreachable!("no arch SIMD on this target");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public kernel entry points.
+// ---------------------------------------------------------------------
+
 /// Accumulate one sparse row's contribution into its dense output row:
 /// `dst[0..f] += Σ_i vals[i] · X[cols[i]]` with `X` row-major
 /// `[n_cols × f]`. `cols`/`vals` are the row's (or row chunk's) nonzero
-/// slice; `dst` is the full `f`-wide destination row.
+/// slice; `dst` is the full `f`-wide destination row. Runs the dense
+/// tiled kernel at the process-wide best [`SimdLevel`].
 #[inline]
 pub fn accumulate_row(cols: &[u32], vals: &[f32], x: &[f32], f: usize, dst: &mut [f32]) {
+    accumulate_row_with(SimdLevel::best(), cols, vals, x, f, dst);
+}
+
+/// The dense tiled kernel at an explicit [`SimdLevel`] — full tiles at
+/// the requested lane strategy, ragged tail shared. `Arch` degrades to
+/// `Portable` on hosts without the features.
+pub fn accumulate_row_with(
+    level: SimdLevel,
+    cols: &[u32],
+    vals: &[f32],
+    x: &[f32],
+    f: usize,
+    dst: &mut [f32],
+) {
     debug_assert_eq!(cols.len(), vals.len());
     debug_assert_eq!(dst.len(), f);
     if cols.is_empty() || f == 0 {
         return;
     }
+    let level = level.effective();
     let mut t0 = 0usize;
     while t0 + TILE <= f {
-        tile_full(cols, vals, x, f, t0, dst);
+        match level {
+            SimdLevel::Scalar => tile_full(cols, vals, x, f, t0, dst),
+            SimdLevel::Portable => tile_full_portable(cols, vals, x, f, t0, dst),
+            // SAFETY: `effective()` guarantees the features are present;
+            // the tile contract is upheld by the bounds-checked slices
+            // the scalar path uses on the same indices.
+            SimdLevel::Arch => unsafe { arch::tile_full(cols, vals, x, f, t0, dst) },
+        }
         t0 += TILE;
     }
     if t0 < f {
         tile_tail(cols, vals, x, f, t0, dst);
     }
 }
+
+/// The sparse gather kernel: `dst[0..f] += Σ_i vals[i] · X[cols[i]]`
+/// with no tile accumulator — each nonzero's X row is axpy'd straight
+/// into `dst`. Wins on short rows (`deg ≤ SPARSE_DEG_MAX`) where the
+/// dense kernel's accumulator round-trip dominates; identical contract
+/// otherwise (accumulates, any `f`, empty-input no-op).
+pub fn gather_row_with(
+    level: SimdLevel,
+    cols: &[u32],
+    vals: &[f32],
+    x: &[f32],
+    f: usize,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(cols.len(), vals.len());
+    debug_assert_eq!(dst.len(), f);
+    if f == 0 {
+        return;
+    }
+    let level = level.effective();
+    for (&c, &v) in cols.iter().zip(vals) {
+        let base = c as usize * f;
+        let xrow = &x[base..base + f];
+        match level {
+            SimdLevel::Scalar => axpy_scalar(v, xrow, dst),
+            SimdLevel::Portable => axpy_portable(v, xrow, dst),
+            // SAFETY: `effective()` guarantees the features; slice
+            // lengths are equal by construction.
+            SimdLevel::Arch => unsafe { arch::axpy(v, xrow, dst) },
+        }
+    }
+}
+
+/// Dispatch one row through the selected kernel shape at the given lane
+/// strategy — the single entry point the adaptive executors call.
+#[inline]
+pub fn accumulate_row_select(
+    kernel: RowKernel,
+    level: SimdLevel,
+    cols: &[u32],
+    vals: &[f32],
+    x: &[f32],
+    f: usize,
+    dst: &mut [f32],
+) {
+    match kernel {
+        RowKernel::DenseTiled => accumulate_row_with(level, cols, vals, x, f, dst),
+        RowKernel::SparseGather => gather_row_with(level, cols, vals, x, f, dst),
+    }
+}
+
+// ---------------------------------------------------------------------
+// FLOP accounting — the one home for every GFLOP/s computation.
+// ---------------------------------------------------------------------
 
 /// Floating-point operations of one SpMM: a multiply and an add per
 /// (nonzero, column) pair — the GFLOP/s numerator used by the
@@ -87,11 +534,25 @@ pub fn spmm_flops(nnz: usize, f: usize) -> f64 {
     2.0 * nnz as f64 * f as f64
 }
 
+/// `flops / secs` in GFLOP/s, guarded against zero wall time — the one
+/// divider every bench table and serve metric goes through (previously
+/// copy-pasted across `bench/` and `serve`).
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs.max(1e-12) / 1e9
+}
+
+/// Achieved throughput of one SpMM: [`spmm_flops`] over wall time.
+pub fn spmm_gflops(nnz: usize, f: usize, secs: f64) -> f64 {
+    gflops(spmm_flops(nnz, f), secs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest;
     use crate::util::rng::Pcg;
+
+    const ALL_LEVELS: [SimdLevel; 3] = [SimdLevel::Scalar, SimdLevel::Portable, SimdLevel::Arch];
 
     /// The definitionally-obvious scalar version the tiled kernel must
     /// reproduce (up to f32 addition reordering across tiles — exact
@@ -104,44 +565,149 @@ mod tests {
         }
     }
 
+    fn random_row(rng: &mut Pcg, f: usize, n_cols: usize) -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n_cols * f).map(|_| rng.f32() - 0.5).collect();
+        let nnz = rng.range(0, 25);
+        let cols: Vec<u32> = (0..nnz).map(|_| rng.range(0, n_cols) as u32).collect();
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.f32() - 0.5).collect();
+        (cols, vals, x)
+    }
+
     #[test]
-    fn matches_naive_across_widths() {
-        // full tiles, ragged tails, and sub-tile widths
+    fn matches_naive_across_widths_and_levels() {
+        // full tiles, ragged tails, and sub-tile widths, at every level
         for &f in &[1usize, 2, 3, 15, 16, 17, 31, 32, 33, 48, 64, 96, 100, 128] {
             let mut rng = Pcg::seed_from(f as u64 ^ 0xA11);
-            let n_cols = 37;
-            let x: Vec<f32> = (0..n_cols * f).map(|_| rng.f32() - 0.5).collect();
-            let nnz = rng.range(0, 25);
-            let cols: Vec<u32> = (0..nnz).map(|_| rng.range(0, n_cols) as u32).collect();
-            let vals: Vec<f32> = (0..nnz).map(|_| rng.f32() - 0.5).collect();
+            let (cols, vals, x) = random_row(&mut rng, f, 37);
             let mut want = vec![0.1f32; f]; // nonzero start: += must preserve it
-            let mut got = vec![0.1f32; f];
             naive(&cols, &vals, &x, f, &mut want);
-            accumulate_row(&cols, &vals, &x, f, &mut got);
-            for (a, b) in got.iter().zip(&want) {
-                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "f={f}: {a} vs {b}");
+            for level in ALL_LEVELS {
+                let mut got = vec![0.1f32; f];
+                accumulate_row_with(level, &cols, &vals, &x, f, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "{}: f={f}: {a} vs {b}",
+                        level.name()
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn empty_inputs_are_noops() {
+    fn gather_matches_naive_across_widths_and_levels() {
+        for &f in &[1usize, 3, 8, 15, 16, 17, 33] {
+            let mut rng = Pcg::seed_from(f as u64 ^ 0x6A7);
+            let (cols, vals, x) = random_row(&mut rng, f, 29);
+            let mut want = vec![0.25f32; f];
+            naive(&cols, &vals, &x, f, &mut want);
+            for level in ALL_LEVELS {
+                let mut got = vec![0.25f32; f];
+                gather_row_with(level, &cols, &vals, &x, f, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "gather {}: f={f}: {a} vs {b}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The satellite equivalence property: scalar and portable are
+    /// bit-for-bit; arch is within the documented [`ARCH_REL_TOL`]
+    /// (trivially bit-equal where `Arch` degrades to `Portable`).
+    /// Covers the required f set, empty rows, and both kernel shapes.
+    #[test]
+    fn prop_levels_equivalent() {
+        proptest::check("simd_levels_equivalent", 0x51D4, 40, |rng| {
+            let f = *rng.choose(&[1usize, 3, 8, 16, 17, 33]);
+            let n_cols = rng.range(1, 40);
+            let (cols, vals, x) = random_row(rng, f, n_cols);
+            for kernel in [RowKernel::DenseTiled, RowKernel::SparseGather] {
+                let mut scalar = vec![0f32; f];
+                let mut portable = vec![0f32; f];
+                let mut arch = vec![0f32; f];
+                accumulate_row_select(kernel, SimdLevel::Scalar, &cols, &vals, &x, f, &mut scalar);
+                accumulate_row_select(
+                    kernel,
+                    SimdLevel::Portable,
+                    &cols,
+                    &vals,
+                    &x,
+                    f,
+                    &mut portable,
+                );
+                accumulate_row_select(kernel, SimdLevel::Arch, &cols, &vals, &x, f, &mut arch);
+                for j in 0..f {
+                    assert_eq!(
+                        scalar[j].to_bits(),
+                        portable[j].to_bits(),
+                        "{:?} lane {j}: scalar vs portable must be bit-identical",
+                        kernel
+                    );
+                    let (a, b) = (arch[j], scalar[j]);
+                    assert!(
+                        (a - b).abs() <= ARCH_REL_TOL * (1.0 + b.abs()),
+                        "{:?} lane {j}: arch {a} vs scalar {b} beyond ARCH_REL_TOL",
+                        kernel
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dense_and_sparse_kernels_agree_from_zero() {
+        // both shapes on the same row from a zeroed dst: same sums
+        let mut rng = Pcg::seed_from(0xD5A);
+        for &f in &[1usize, 8, 16, 17, 33] {
+            let (cols, vals, x) = random_row(&mut rng, f, 23);
+            for level in ALL_LEVELS {
+                let mut dense = vec![0f32; f];
+                let mut sparse = vec![0f32; f];
+                accumulate_row_with(level, &cols, &vals, &x, f, &mut dense);
+                gather_row_with(level, &cols, &vals, &x, f, &mut sparse);
+                for (a, b) in dense.iter().zip(&sparse) {
+                    assert!(
+                        (a - b).abs() <= ARCH_REL_TOL * (1.0 + b.abs()),
+                        "{}: dense {a} vs sparse {b}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops_at_every_level() {
         let x = [1.0f32; 8];
-        let mut dst = [2.0f32; 4];
-        accumulate_row(&[], &[], &x, 4, &mut dst);
-        assert_eq!(dst, [2.0; 4]);
-        accumulate_row(&[0], &[3.0], &x, 0, &mut []);
+        for level in ALL_LEVELS {
+            let mut dst = [2.0f32; 4];
+            accumulate_row_with(level, &[], &[], &x, 4, &mut dst);
+            assert_eq!(dst, [2.0; 4]);
+            gather_row_with(level, &[], &[], &x, 4, &mut dst);
+            assert_eq!(dst, [2.0; 4]);
+            accumulate_row_with(level, &[0], &[3.0], &x, 0, &mut []);
+            gather_row_with(level, &[0], &[3.0], &x, 0, &mut []);
+        }
     }
 
     #[test]
     fn accumulates_instead_of_overwriting() {
         let f = TILE + 3; // exercise both paths
         let x: Vec<f32> = (0..2 * f).map(|i| i as f32).collect();
-        let mut dst = vec![0f32; f];
-        accumulate_row(&[0], &[1.0], &x, f, &mut dst);
-        accumulate_row(&[1], &[1.0], &x, f, &mut dst);
-        for k in 0..f {
-            assert_eq!(dst[k], x[k] + x[f + k]);
+        for level in ALL_LEVELS {
+            for kernel in [RowKernel::DenseTiled, RowKernel::SparseGather] {
+                let mut dst = vec![0f32; f];
+                accumulate_row_select(kernel, level, &[0], &[1.0], &x, f, &mut dst);
+                accumulate_row_select(kernel, level, &[1], &[1.0], &x, f, &mut dst);
+                for k in 0..f {
+                    assert_eq!(dst[k], x[k] + x[f + k], "{:?}/{}", kernel, level.name());
+                }
+            }
         }
     }
 
@@ -165,8 +731,38 @@ mod tests {
     }
 
     #[test]
+    fn selection_rule_thresholds() {
+        for deg in 0..=SPARSE_DEG_MAX {
+            assert_eq!(select_kernel(deg), RowKernel::SparseGather, "deg {deg}");
+        }
+        assert_eq!(select_kernel(SPARSE_DEG_MAX + 1), RowKernel::DenseTiled);
+        assert_eq!(select_kernel(1000), RowKernel::DenseTiled);
+    }
+
+    #[test]
+    fn level_metadata_consistent() {
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::Portable.name(), "portable-simd");
+        assert!(SimdLevel::Scalar.available() && SimdLevel::Portable.available());
+        // effective() never yields an unavailable level
+        for level in ALL_LEVELS {
+            assert!(level.effective().available(), "{:?}", level);
+        }
+        // detect() is the widest available level and best() is stable
+        assert!(SimdLevel::detect().available());
+        assert_eq!(SimdLevel::best(), SimdLevel::best());
+        assert!(SimdLevel::best().effective().available());
+        // kernel names are distinct (bench/JSON identifiers)
+        assert_ne!(RowKernel::DenseTiled.name(), RowKernel::SparseGather.name());
+    }
+
+    #[test]
     fn flops_accounting() {
         assert_eq!(spmm_flops(10, 16), 320.0);
         assert_eq!(spmm_flops(0, 64), 0.0);
+        assert!((spmm_gflops(1000, 16, 1.0) - 32_000.0 / 1e9).abs() < 1e-15);
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        // zero wall time is guarded, not infinite
+        assert!(gflops(1.0, 0.0).is_finite());
     }
 }

@@ -18,7 +18,10 @@ pub mod microkernel;
 pub mod warp_exec;
 pub mod verify;
 
-pub use block_exec::spmm_block_level;
-pub use microkernel::{accumulate_row, spmm_flops, TILE};
+pub use block_exec::{spmm_block_level, spmm_block_level_adaptive};
+pub use microkernel::{
+    accumulate_row, accumulate_row_select, accumulate_row_with, gather_row_with, gflops,
+    select_kernel, spmm_flops, spmm_gflops, RowKernel, SimdLevel, LANES, SPARSE_DEG_MAX, TILE,
+};
 pub use verify::{allclose, max_abs_diff};
-pub use warp_exec::spmm_warp_level;
+pub use warp_exec::{spmm_warp_level, spmm_warp_level_adaptive};

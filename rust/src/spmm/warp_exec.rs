@@ -7,6 +7,7 @@
 
 use crate::graph::csr::Csr;
 use crate::partition::warp_level::WarpPartition;
+use crate::spmm::microkernel::{self, select_kernel, SimdLevel};
 
 /// Execute `Y = A · X` via the warp-level schedule.
 pub fn spmm_warp_level(csr: &Csr, wp: &WarpPartition, x: &[f32], f: usize) -> Vec<f32> {
@@ -31,6 +32,41 @@ pub fn spmm_warp_level(csr: &Csr, wp: &WarpPartition, x: &[f32], f: usize) -> Ve
         for k in 0..f {
             yrow[k] += partial[k];
         }
+    }
+    y
+}
+
+/// Warp-level executor with sparsity-adaptive kernel dispatch: each
+/// neighbour group runs [`select_kernel`] on its *row's* total degree —
+/// the same degree-bucket rule the block-level plan records — so short
+/// rows take the gather kernel (axpy straight into their output row,
+/// skipping the warp-private partial) and long rows keep the tiled
+/// dense kernel. A group's nonzeros are contiguous (`loc .. loc+len`),
+/// so both kernels consume its slice directly; accumulation into `y`
+/// stays the "global atomic" analog of [`spmm_warp_level`].
+pub fn spmm_warp_level_adaptive(
+    csr: &Csr,
+    wp: &WarpPartition,
+    x: &[f32],
+    f: usize,
+    level: SimdLevel,
+) -> Vec<f32> {
+    assert_eq!(x.len(), csr.n_cols * f, "X shape mismatch");
+    assert_eq!(wp.n_rows, csr.n_rows, "partition/graph mismatch");
+    let mut y = vec![0f32; csr.n_rows * f];
+    for g in &wp.groups {
+        let dst = g.row as usize;
+        let (lo, hi) = (g.loc as usize, (g.loc + g.len) as usize);
+        let kern = select_kernel(csr.degree(dst));
+        microkernel::accumulate_row_select(
+            kern,
+            level,
+            &csr.col_idx[lo..hi],
+            &csr.vals[lo..hi],
+            x,
+            f,
+            &mut y[dst * f..(dst + 1) * f],
+        );
     }
     y
 }
@@ -76,6 +112,23 @@ mod tests {
             let want = csr.spmm_dense(&x, f);
             let got = spmm_warp_level(&csr, &wp, &x, f);
             assert_allclose(&got, &want, 1e-4, 1e-4, "prop warp exec");
+        });
+    }
+
+    #[test]
+    fn prop_adaptive_warp_exec_equals_reference() {
+        proptest::check("warp_exec_adaptive_vs_ref", 0x3A9B, 15, |rng| {
+            let n = rng.range(1, 60);
+            let csr = random_graph(rng, n);
+            let gs = *rng.choose(&[1usize, 2, 7, 32]);
+            let wp = WarpPartition::build(&csr, gs);
+            let f = *rng.choose(&[1usize, 3, 8, 17, 33]);
+            let x: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let want = csr.spmm_dense(&x, f);
+            for level in [SimdLevel::Scalar, SimdLevel::Portable, SimdLevel::Arch] {
+                let got = spmm_warp_level_adaptive(&csr, &wp, &x, f, level);
+                assert_allclose(&got, &want, 1e-4, 1e-4, level.name());
+            }
         });
     }
 
