@@ -49,6 +49,20 @@ cargo run --release --bin accel-gcn -- train-native --quick --steps 50 \
 cargo run --release --bin accel-gcn -- train-native --quick --steps 50 \
     --optimizer adam --threads 2 --seed 7 --require-loss-drop 0.5
 
+# Observability smoke: run the profiler and a short serve burst with
+# tracing on, then schema-validate both emitted metrics snapshots
+# (required keys present, per-shard busy-ns sums positive, histogram
+# quantiles ordered). The validator is the checked-in
+# `validate-metrics` subcommand, so the schema contract is enforced by
+# the same code that documents it.
+cargo run --release --bin accel-gcn -- profile --quick --threads 2 --seed 7 \
+    --json results-ci-obs/profile_metrics.json
+cargo run --release --bin accel-gcn -- serve-native \
+    --requests 48 --tenants 2 --nodes 200 --threads 2 --seed 7 \
+    --metrics-out results-ci-obs/serve_metrics.json
+cargo run --release --bin accel-gcn -- validate-metrics \
+    results-ci-obs/profile_metrics.json results-ci-obs/serve_metrics.json
+
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
 # has been run tree-wide.

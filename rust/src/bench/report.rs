@@ -9,15 +9,24 @@
 //! through results dirs. Nothing is written outside `out_dir` when the
 //! working directory is not the checkout, and the duplicate is skipped
 //! when `out_dir` *is* the working directory.
+//!
+//! Every report is stamped with a `meta` object
+//! ([`crate::obs::run_metadata`]): git commit (when in a checkout),
+//! ISO-8601 UTC timestamp, host thread count, detected SIMD level, and
+//! the metrics schema version — so a trajectory row is attributable to
+//! the exact commit and host conditions that produced it.
 
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::Path;
 
 /// Write `doc` as `out_dir/filename` (+ the repo-root duplicate when
-/// applicable). `filename` should be a bare `BENCH_<experiment>.json`
-/// name.
+/// applicable), with run metadata injected under `meta`. `filename`
+/// should be a bare `BENCH_<experiment>.json` name.
 pub fn write_report(out_dir: &Path, filename: &str, doc: &Json) -> Result<()> {
+    let mut doc = doc.clone();
+    doc.set("meta", crate::obs::run_metadata());
+    let doc = &doc;
     write_one(&out_dir.join(filename), doc)?;
     let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
     let same_dir = std::fs::canonicalize(out_dir)
@@ -54,6 +63,11 @@ mod tests {
         let text = std::fs::read_to_string(dir.join("deep/BENCH_unit.json")).unwrap();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.req_str("experiment").unwrap(), "unit-test");
+        // run metadata is stamped on the way out
+        let meta = back.get("meta").expect("meta injected");
+        assert_eq!(meta.req_str("schema").unwrap(), crate::obs::SCHEMA_VERSION);
+        assert!(meta.req_usize("threads").unwrap() >= 1);
+        assert!(!meta.req_str("simd").unwrap().is_empty());
         let _ = std::fs::remove_dir_all(&dir);
         // if the test ever runs from a repo root, clean the duplicate
         let _ = std::fs::remove_file("BENCH_unit.json");

@@ -208,6 +208,17 @@ pub fn run_once_with_metrics(cfg: &LoadConfig) -> Result<(ServeNativePoint, Arc<
     anyhow::ensure!(!cfg.verify || verified, "serve_native responses failed verification");
 
     let m = Arc::clone(server.metrics());
+    // bridge the plan cache's lifetime counters into the global
+    // registry, so `--metrics-out` snapshots carry plan-cache events
+    // alongside the shard timeline (set, not add: these are totals)
+    let reg = crate::obs::Registry::global();
+    if reg.enabled() {
+        let cache = server.plan_cache();
+        reg.gauge("serve.plan_cache.hits").set(cache.hits() as i64);
+        reg.gauge("serve.plan_cache.misses").set(cache.misses() as i64);
+        reg.gauge("serve.plan_cache.evictions").set(cache.evictions() as i64);
+        reg.gauge("serve.plan_cache.invalidations").set(cache.invalidations() as i64);
+    }
     let total = m.total.snapshot();
     let point = ServeNativePoint {
         threads: cfg.threads,

@@ -36,7 +36,13 @@
 //!   SpMM runs against a cached transposed plan (or the forward plan
 //!   itself when `Â` is symmetric).
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
-//! * [`metrics`] — counters and latency histograms.
+//! * [`obs`] — unified tracing & profiling: span timers with
+//!   thread-local nesting, typed counters/gauges, fixed log-bucket
+//!   histograms, the per-shard SpMM execution timeline, and the
+//!   versioned JSON metrics snapshot (`accel-gcn profile`,
+//!   `serve-native --metrics-out`).
+//! * [`metrics`] — serving-facing facade over [`obs`] (counters and
+//!   histogram-backed latency recorders).
 //! * [`util`] — zero-dependency substrates (RNG, JSON, NPY, CLI, stats,
 //!   bench harness) required by the offline build environment.
 
@@ -48,6 +54,7 @@ pub mod pipeline;
 pub mod delta;
 pub mod sim;
 pub mod model;
+pub mod obs;
 pub mod metrics;
 pub mod runtime;
 pub mod coordinator;

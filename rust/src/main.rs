@@ -12,6 +12,8 @@
 //! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
 //! accel-gcn update-demo  --batches 8 --batch-size 64 [--edge-list graph.txt]
 //! accel-gcn bench        --out results [--experiment fig5|...|microkernel|train_native]
+//! accel-gcn profile      [--nodes N] [--iters I] [--train-steps S] [--json PATH] [--quick]
+//! accel-gcn validate-metrics FILE [FILE...]
 //! ```
 
 use accel_gcn::bench as harness;
@@ -45,6 +47,8 @@ fn main() {
         "serve-native" => cmd_serve_native(rest),
         "update-demo" => cmd_update_demo(rest),
         "bench" => cmd_bench(rest),
+        "profile" => cmd_profile(rest),
+        "validate-metrics" => cmd_validate_metrics(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -80,14 +84,24 @@ fn print_usage() {
          \x20 serve     --artifacts DIR [--requests N] [--coldims 16,32]\n\
          \x20 serve-native [--requests N] [--tenants K] [--nodes N] [--avg-deg D]\n\
          \x20           [--threads T] [--ladder 32,64,128] [--gcn-every K] [--seed S]\n\
-         \x20           [--no-verify]  (multi-tenant CPU serving, no artifacts needed)\n\
+         \x20           [--no-verify] [--metrics-out PATH]\n\
+         \x20           (multi-tenant CPU serving, no artifacts needed; --metrics-out\n\
+         \x20           enables tracing and dumps the metrics snapshot JSON periodically\n\
+         \x20           and at exit)\n\
          \x20 update-demo [--nodes N] [--avg-deg D] [--batches B] [--batch-size K]\n\
          \x20           [--edge-list PATH [--one-based]] [--threads T] [--seed S]\n\
          \x20           (stream edge-update batches; patch plans incrementally,\n\
          \x20           verify each patch against a from-scratch rebuild)\n\
          \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
          \x20           exec_scaling|microkernel|serve_native|delta_update|train_native|all]\n\
-         \x20           [--quick]"
+         \x20           [--quick]\n\
+         \x20 profile   [--nodes N] [--avg-deg D] [--feat-dim F] [--iters I]\n\
+         \x20           [--train-steps S] [--threads T] [--seed S] [--json PATH] [--quick]\n\
+         \x20           (run SpMM + training iterations with tracing on; print the\n\
+         \x20           per-shard utilization table, imbalance ratio, and span tree)\n\
+         \x20 validate-metrics FILE [FILE...]\n\
+         \x20           (schema-check metrics snapshot JSON written by profile --json\n\
+         \x20           or serve-native --metrics-out; exits nonzero on violations)"
     );
 }
 
@@ -389,7 +403,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 fn cmd_serve_native(rest: &[String]) -> Result<()> {
     let args = Args::parse(
         rest,
-        &["requests", "tenants", "nodes", "avg-deg", "threads", "ladder", "gcn-every", "seed"],
+        &[
+            "requests", "tenants", "nodes", "avg-deg", "threads", "ladder", "gcn-every", "seed",
+            "metrics-out",
+        ],
         &["no-verify"],
     )?;
     let defaults = harness::serve_native::LoadConfig::default();
@@ -408,7 +425,32 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
         "serve-native: {} requests, {} tenants (~{} nodes each), {} threads, ladder {:?}, verify={}",
         cfg.requests, cfg.tenants, cfg.nodes, cfg.threads, cfg.ladder, cfg.verify
     );
-    let (point, metrics) = harness::serve_native::run_once_with_metrics(&cfg)?;
+    // --metrics-out turns tracing on and dumps the snapshot both
+    // periodically (so an interrupted run still leaves a usable file)
+    // and — with the serve section merged in — at exit
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = metrics_out.as_ref().map(|path| {
+        accel_gcn::obs::Registry::global().set_enabled(true);
+        let path = path.clone();
+        let stop = std::sync::Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let _ = write_metrics_snapshot(&path, None);
+                std::thread::sleep(std::time::Duration::from_millis(250));
+            }
+        })
+    });
+    let run = harness::serve_native::run_once_with_metrics(&cfg);
+    if let Some(h) = writer {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = h.join();
+    }
+    let (point, metrics) = run?;
+    if let Some(path) = &metrics_out {
+        write_metrics_snapshot(path, Some(&metrics))?;
+        println!("metrics snapshot written to {path}");
+    }
     print!("{}", harness::serve_native::report(std::slice::from_ref(&point)));
     print!("{}", metrics.render());
     println!(
@@ -416,6 +458,22 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
         point.requests, point.tenants, point.requests_per_sec, point.fusion_factor, point.verified
     );
     Ok(())
+}
+
+/// Write the global registry's snapshot (plus the serve section when a
+/// server's metrics are at hand) as pretty JSON at `path`.
+fn write_metrics_snapshot(path: &str, serve: Option<&accel_gcn::serve::ServeMetrics>) -> Result<()> {
+    let mut doc = accel_gcn::obs::Registry::global().snapshot();
+    if let Some(m) = serve {
+        doc.set("serve", m.snapshot_json());
+    }
+    let p = std::path::Path::new(path);
+    if let Some(parent) = p.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(p, doc.to_pretty()).with_context(|| format!("write {path}"))
 }
 
 /// Stream edge-update batches against a graph, patching its plan
@@ -529,4 +587,115 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         &["quick"],
     )?;
     harness::paper::run_from_args(&args)
+}
+
+/// Run SpMM and training iterations with tracing enabled, then report
+/// what the observability subsystem saw: the per-shard utilization
+/// table, the shard-imbalance ratio, and the flamegraph-style span
+/// tree. `--json` additionally writes the full metrics snapshot
+/// (validated by `validate-metrics` in CI).
+fn cmd_profile(rest: &[String]) -> Result<()> {
+    use accel_gcn::graph::datasets::labeled_synthetic_with;
+    use accel_gcn::pipeline::spmm_block_level_parallel;
+    use accel_gcn::train::{TrainConfig, Trainer};
+    use accel_gcn::util::threadpool::ThreadPool;
+
+    let args = Args::parse(
+        rest,
+        &["nodes", "avg-deg", "feat-dim", "iters", "train-steps", "threads", "seed", "json"],
+        &["quick"],
+    )?;
+    let quick = args.flag("quick");
+    let nodes = args.usize_or("nodes", if quick { 800 } else { 5000 })?;
+    let avg_deg = args.f64_or("avg-deg", 8.0)?;
+    let feat_dim = args.usize_or("feat-dim", 32)?;
+    let iters = args.usize_or("iters", if quick { 10 } else { 40 })?;
+    let train_steps = args.usize_or("train-steps", if quick { 5 } else { 10 })?;
+    let threads = args.usize_or("threads", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    anyhow::ensure!(nodes >= 5, "--nodes must be ≥ 5, got {nodes}");
+    anyhow::ensure!(iters >= 1, "--iters must be ≥ 1, got {iters}");
+
+    let reg = accel_gcn::obs::Registry::global();
+    reg.set_enabled(true);
+
+    // skewed power-law topology — the degree shape that makes shard
+    // imbalance worth measuring
+    let mut rng = Pcg::seed_from(seed);
+    let degs = generator::degree_sequence(
+        generator::DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.05 },
+        nodes,
+        (nodes as f64 * avg_deg) as usize,
+        &mut rng,
+    );
+    let csr = generator::from_degree_sequence(nodes, &degs, &mut rng);
+    println!(
+        "profile: power-law graph {} nodes / {} nnz, feat dim {feat_dim}, \
+         {iters} SpMM iters + {train_steps} train steps, {threads} threads",
+        csr.n_rows,
+        csr.nnz()
+    );
+    let plan = SpmmPlan::build(csr, PartitionParams::default());
+    let pool = ThreadPool::new(threads);
+    let x: Vec<f32> = (0..nodes * feat_dim).map(|_| rng.f32() - 0.5).collect();
+    for _ in 0..iters {
+        let _span = reg.span("profile/spmm");
+        let y = spmm_block_level_parallel(&plan, &x, feat_dim, &pool);
+        drop(y);
+    }
+    if train_steps > 0 {
+        // no wrapper span here: the trainer opens its own `train_step`
+        // guard per step, and its per-phase children are recorded under
+        // explicit `train_step/...` paths — a wrapper would fork the
+        // guard path away from the explicit ones
+        let data = labeled_synthetic_with(nodes, 4, feat_dim, avg_deg.min(6.0), 0.85, seed);
+        let adj = data.csr.gcn_normalize();
+        let cfg = TrainConfig {
+            model: accel_gcn::model::ModelConfig::gcn(feat_dim, 16, 4, 2).with_lr(0.1),
+            steps: train_steps,
+            threads,
+            seed,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(&adj, cfg)?;
+        trainer.train(&data)?;
+    }
+
+    println!("\nper-shard utilization ({} threads):", threads);
+    print!("{}", reg.render_shard_table());
+    let agg = reg.shard_aggregates();
+    let busy_total: u64 = agg.iter().map(|a| a.busy_ns).sum();
+    println!(
+        "shard busy-ns total {busy_total} across {} shards; imbalance ratio (max/mean busy) {:.3}",
+        agg.len(),
+        reg.imbalance_ratio()
+    );
+    let imb = reg.histogram("spmm.shard_imbalance").snapshot();
+    println!(
+        "per-dispatch imbalance: p50 {:.3}  p99 {:.3}  worst {:.3} over {} dispatches",
+        imb.p50, imb.p99, imb.max, imb.count
+    );
+    println!("\nspan tree:");
+    print!("{}", accel_gcn::obs::render_span_tree(&reg.span_stats()));
+    if let Some(path) = args.get("json") {
+        write_metrics_snapshot(path, None)?;
+        println!("\nmetrics snapshot written to {path}");
+    }
+    Ok(())
+}
+
+/// Schema-check metrics snapshot files (CI's validator for the JSON
+/// emitted by `profile --json` and `serve-native --metrics-out`).
+fn cmd_validate_metrics(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[], &[])?;
+    let files = args.positional();
+    anyhow::ensure!(!files.is_empty(), "usage: accel-gcn validate-metrics FILE [FILE...]");
+    for path in files {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let doc = accel_gcn::util::json::Json::parse(&text)
+            .with_context(|| format!("parse {path}"))?;
+        accel_gcn::obs::validate_snapshot(&doc).with_context(|| format!("validate {path}"))?;
+        println!("{path}: OK ({})", accel_gcn::obs::SCHEMA_VERSION);
+    }
+    Ok(())
 }

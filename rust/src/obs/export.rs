@@ -1,0 +1,202 @@
+//! Snapshot schema helpers: run metadata, the versioned-schema
+//! constant, and the CI validator for emitted metrics JSON.
+//!
+//! All of it is zero-dependency: the ISO-8601 timestamp is computed
+//! from `SystemTime` with the days-from-civil inverse (no chrono), and
+//! the git commit is read best-effort from `.git/HEAD` (no subprocess)
+//! so bench reports stay anchored even where `git` is not on PATH.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Version tag of [`Registry::snapshot`](super::Registry::snapshot)
+/// documents. Bump on any breaking schema change.
+pub const SCHEMA_VERSION: &str = "accel-gcn-metrics/v1";
+
+/// Run metadata embedded in every `BENCH_*.json` and metrics snapshot:
+/// `{git_commit, timestamp_utc, threads, simd, schema}`.
+pub fn run_metadata() -> Json {
+    let mut m = Json::obj();
+    match git_commit(Path::new(".")) {
+        Some(c) => m.set("git_commit", c),
+        None => m.set("git_commit", Json::Null),
+    };
+    m.set("timestamp_utc", iso8601_utc_now());
+    m.set(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    m.set("simd", crate::spmm::SimdLevel::best().name());
+    m.set("schema", SCHEMA_VERSION);
+    m
+}
+
+/// Current UTC time as `YYYY-MM-DDTHH:MM:SSZ`.
+pub fn iso8601_utc_now() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, mo, d) = civil_from_days((secs / 86_400) as i64);
+    let rem = secs % 86_400;
+    format!(
+        "{y:04}-{mo:02}-{d:02}T{:02}:{:02}:{:02}Z",
+        rem / 3600,
+        (rem % 3600) / 60,
+        rem % 60
+    )
+}
+
+/// Gregorian date from days since 1970-01-01 (Hinnant's civil-from-days).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// The current commit hash, read from `repo_root/.git` without spawning
+/// `git`: `HEAD` directly for a detached head, the named ref file (or
+/// `packed-refs`) otherwise. `None` when not in a checkout.
+pub fn git_commit(repo_root: &Path) -> Option<String> {
+    let git = repo_root.join(".git");
+    let head = std::fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    let Some(refname) = head.strip_prefix("ref: ") else {
+        return is_hex(head).then(|| head.to_string());
+    };
+    if let Ok(c) = std::fs::read_to_string(git.join(refname)) {
+        let c = c.trim();
+        if is_hex(c) {
+            return Some(c.to_string());
+        }
+    }
+    let packed = std::fs::read_to_string(git.join("packed-refs")).ok()?;
+    packed.lines().find_map(|line| {
+        let (hash, name) = line.split_once(' ')?;
+        (name == refname && is_hex(hash)).then(|| hash.to_string())
+    })
+}
+
+fn is_hex(s: &str) -> bool {
+    s.len() >= 7 && s.chars().all(|c| c.is_ascii_hexdigit())
+}
+
+/// The CI validator for emitted metrics snapshots (`accel-gcn
+/// validate-metrics FILE...`): required keys present, shard busy-ns
+/// totals positive, and every histogram's quantiles ordered
+/// (`p99 ≥ p50`) — in the core document and, when present, the merged
+/// `serve` section.
+pub fn validate_snapshot(doc: &Json) -> Result<()> {
+    let schema = doc.req_str("schema").context("snapshot is missing `schema`")?;
+    if schema != SCHEMA_VERSION {
+        bail!("schema `{schema}` is not the supported `{SCHEMA_VERSION}`");
+    }
+    for key in ["counters", "gauges", "histograms", "spans", "shards"] {
+        if doc.get(key).is_none() {
+            bail!("snapshot is missing required key `{key}`");
+        }
+    }
+    validate_histogram_map(doc.get("histograms").unwrap(), "histograms")?;
+    let shards = doc.get("shards").unwrap();
+    let per_shard = shards.req_arr("per_shard").context("shards.per_shard")?;
+    if per_shard.is_empty() {
+        bail!("shards.per_shard is empty — no SpMM was observed");
+    }
+    let mut busy_total = 0.0;
+    for (i, s) in per_shard.iter().enumerate() {
+        busy_total += s.req_f64("busy_ns").with_context(|| format!("per_shard[{i}]"))?;
+        s.req_f64("nnz").with_context(|| format!("per_shard[{i}]"))?;
+        s.req_f64("rows").with_context(|| format!("per_shard[{i}]"))?;
+    }
+    if !(busy_total > 0.0) {
+        bail!("per-shard busy-ns sums to {busy_total} — shard timing was not recorded");
+    }
+    if let Some(serve) = doc.get("serve") {
+        if let Some(lat) = serve.get("latencies") {
+            validate_histogram_map(lat, "serve.latencies")?;
+        }
+    }
+    Ok(())
+}
+
+fn validate_histogram_map(map: &Json, what: &str) -> Result<()> {
+    let Json::Obj(entries) = map else {
+        bail!("`{what}` must be an object");
+    };
+    for (name, h) in entries {
+        let p50 = h.req_f64("p50").with_context(|| format!("{what}.{name}"))?;
+        let p99 = h.req_f64("p99").with_context(|| format!("{what}.{name}"))?;
+        let max = h.req_f64("max").with_context(|| format!("{what}.{name}"))?;
+        h.req_f64("mean").with_context(|| format!("{what}.{name}"))?;
+        h.req_usize("count").with_context(|| format!("{what}.{name}"))?;
+        if p99 < p50 {
+            bail!("{what}.{name}: p99 {p99} < p50 {p50}");
+        }
+        if max < p99 {
+            bail!("{what}.{name}: max {max} < p99 {p99}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // leap year start
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29)); // leap day
+        assert_eq!(civil_from_days(20_673), (2026, 8, 8));
+    }
+
+    #[test]
+    fn timestamp_shape() {
+        let t = iso8601_utc_now();
+        assert_eq!(t.len(), 20, "{t}");
+        assert!(t.ends_with('Z') && t.as_bytes()[10] == b'T', "{t}");
+    }
+
+    #[test]
+    fn run_metadata_has_required_fields() {
+        let m = run_metadata();
+        assert_eq!(m.req_str("schema").unwrap(), SCHEMA_VERSION);
+        assert!(m.req_usize("threads").unwrap() >= 1);
+        assert!(!m.req_str("simd").unwrap().is_empty());
+        assert!(m.get("git_commit").is_some());
+        assert!(m.req_str("timestamp_utc").unwrap().ends_with('Z'));
+    }
+
+    #[test]
+    fn validator_rejects_broken_snapshots() {
+        // missing everything
+        assert!(validate_snapshot(&Json::obj()).is_err());
+        // minimal valid document
+        let text = format!(
+            r#"{{
+              "schema": "{SCHEMA_VERSION}",
+              "counters": {{}}, "gauges": {{}},
+              "histograms": {{"t": {{"count": 2, "mean": 1.0, "p50": 1.0, "p95": 2.0, "p99": 2.0, "max": 2.0}}}},
+              "spans": [],
+              "shards": {{"per_shard": [{{"shard": 0, "busy_ns": 123.0, "nnz": 10, "rows": 4}}], "events": []}}
+            }}"#
+        );
+        let doc = Json::parse(&text).unwrap();
+        validate_snapshot(&doc).expect("minimal snapshot validates");
+        // zero busy time must fail
+        let broken = Json::parse(&text.replace("123.0", "0.0")).unwrap();
+        assert!(validate_snapshot(&broken).unwrap_err().to_string().contains("busy-ns"));
+        // inverted quantiles must fail
+        let inverted = Json::parse(&text.replace(r#""p50": 1.0"#, r#""p50": 3.0"#)).unwrap();
+        assert!(validate_snapshot(&inverted).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Structured event ring buffer: the per-shard execution timeline.
+//!
+//! Every observed SpMM pushes one [`ShardEvent`] per shard; the ring
+//! keeps the most recent [`EventRing::capacity`] events (constant
+//! memory for a server that runs forever) while monotonically
+//! increasing sequence numbers keep the timeline stitchable even after
+//! wraparound.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// One shard's measured execution within one SpMM dispatch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardEvent {
+    /// Global event sequence number (monotonic, gap-free).
+    pub seq: u64,
+    /// Which SpMM dispatch this shard belonged to.
+    pub spmm: u64,
+    /// Shard index within the dispatch.
+    pub shard: u32,
+    /// Non-split output rows the shard finished.
+    pub rows: u64,
+    /// Nonzeros the shard traversed.
+    pub nnz: u64,
+    /// Wall time the shard's job ran, nanoseconds.
+    pub busy_ns: u64,
+    /// Blocks executed through the dense tiled kernel (split-row
+    /// chunks included: they always run dense).
+    pub dense_blocks: u64,
+    /// Blocks executed through the sparse gather kernel.
+    pub sparse_blocks: u64,
+}
+
+/// Bounded ring of [`ShardEvent`]s.
+#[derive(Debug)]
+pub struct EventRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+}
+
+#[derive(Debug, Default)]
+struct RingInner {
+    next_seq: u64,
+    buf: VecDeque<ShardEvent>,
+}
+
+impl EventRing {
+    pub fn new(capacity: usize) -> EventRing {
+        EventRing { capacity: capacity.max(1), inner: Mutex::new(RingInner::default()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append `ev` (its `seq` is assigned here), evicting the oldest
+    /// event when full. Returns the assigned sequence number.
+    pub fn push(&self, mut ev: ShardEvent) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        ev.seq = g.next_seq;
+        g.next_seq += 1;
+        if g.buf.len() == self.capacity {
+            g.buf.pop_front();
+        }
+        g.buf.push_back(ev);
+        ev.seq
+    }
+
+    /// Events recorded so far (including evicted ones).
+    pub fn total_recorded(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// The retained timeline, oldest first, at most `limit` newest
+    /// events (`usize::MAX` for all retained).
+    pub fn tail(&self, limit: usize) -> Vec<ShardEvent> {
+        let g = self.inner.lock().unwrap();
+        let skip = g.buf.len().saturating_sub(limit);
+        g.buf.iter().skip(skip).copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bounds_memory_and_keeps_sequence() {
+        let ring = EventRing::new(4);
+        for i in 0..10u64 {
+            let seq = ring.push(ShardEvent { spmm: i, ..Default::default() });
+            assert_eq!(seq, i, "sequence numbers are assigned in order");
+        }
+        assert_eq!(ring.total_recorded(), 10);
+        let tail = ring.tail(usize::MAX);
+        assert_eq!(tail.len(), 4, "only capacity events retained");
+        assert_eq!(tail.first().unwrap().seq, 6, "oldest retained after eviction");
+        assert_eq!(tail.last().unwrap().seq, 9);
+        let last2 = ring.tail(2);
+        assert_eq!(last2.len(), 2);
+        assert_eq!(last2[0].seq, 8);
+    }
+}

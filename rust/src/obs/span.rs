@@ -1,0 +1,143 @@
+//! Monotonic-clock span timers with thread-local nesting.
+//!
+//! [`Registry::span`](super::Registry::span) returns a guard; dropping
+//! it records `{count, total_ns, max_ns}` under the span's slash-joined
+//! path (`"serve_round/execute"`), built from a thread-local stack of
+//! the names currently open **on this thread** — so nesting reconstructs
+//! from the aggregated paths alone, with no per-event allocation kept
+//! around. When the registry is disabled, `span()` is a single relaxed
+//! atomic load and returns an inert guard: no clock read, no allocation,
+//! no thread-local touch.
+
+use super::Registry;
+use std::cell::RefCell;
+use std::time::Instant;
+
+thread_local! {
+    /// Names of the spans currently open on this thread, outermost
+    /// first.
+    static SPAN_STACK: RefCell<Vec<String>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Aggregated statistics of one span path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl SpanStat {
+    pub fn merge_ns(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+}
+
+/// RAII span guard; see the module docs. `#[must_use]`: binding it to
+/// `_` drops immediately and times nothing.
+#[must_use = "a span measures until dropped — bind it to a named `_guard`"]
+pub struct Span<'a> {
+    /// `None` when the registry was disabled at entry.
+    inner: Option<(&'a Registry, Instant)>,
+}
+
+impl<'a> Span<'a> {
+    pub(super) fn enter(reg: &'a Registry, name: &str) -> Span<'a> {
+        if !reg.enabled() {
+            return Span { inner: None };
+        }
+        SPAN_STACK.with(|s| s.borrow_mut().push(name.to_string()));
+        Span { inner: Some((reg, Instant::now())) }
+    }
+
+    /// Whether this guard is actually recording.
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some((reg, start)) = self.inner.take() {
+            let ns = start.elapsed().as_nanos() as u64;
+            let path = SPAN_STACK.with(|s| {
+                let mut stack = s.borrow_mut();
+                let path = stack.join("/");
+                stack.pop();
+                path
+            });
+            reg.record_span_ns(&path, ns);
+        }
+    }
+}
+
+/// Indented tree rendering of span paths (the `profile` subcommand's
+/// "flamegraph-style" view). Paths sort lexicographically, so a parent
+/// immediately precedes its children; depth is the slash count.
+pub fn render_span_tree(stats: &[(String, SpanStat)]) -> String {
+    if stats.is_empty() {
+        return "  (no spans recorded)\n".to_string();
+    }
+    let mut out = String::new();
+    for (path, st) in stats {
+        let depth = path.matches('/').count();
+        let name = path.rsplit('/').next().unwrap_or(path);
+        let mean_us = st.total_ns as f64 / st.count.max(1) as f64 / 1e3;
+        out.push_str(&format!(
+            "  {:indent$}{name:<24} count {:>7}  total {:>10.3} ms  mean {:>9.1} µs  max {:>9.1} µs\n",
+            "",
+            st.count,
+            st.total_ns as f64 / 1e6,
+            mean_us,
+            st.max_ns as f64 / 1e3,
+            indent = depth * 2,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nesting_reconstructs_paths() {
+        let reg = Registry::new();
+        {
+            let _outer = reg.span("step");
+            {
+                let _inner = reg.span("fwd");
+                let _leaf = reg.span("spmm");
+            }
+            let _inner2 = reg.span("bwd");
+        }
+        let _again = reg.span("step");
+        drop(_again);
+        let stats = reg.span_stats();
+        let paths: Vec<&str> = stats.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(paths, vec!["step", "step/bwd", "step/fwd", "step/fwd/spmm"]);
+        let step = stats.iter().find(|(p, _)| p == "step").unwrap();
+        assert_eq!(step.1.count, 2, "two top-level step spans");
+        assert!(step.1.total_ns >= step.1.max_ns);
+        assert!(render_span_tree(&stats).contains("spmm"));
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing_and_keep_stack_clean() {
+        let reg = Registry::new();
+        reg.set_enabled(false);
+        {
+            let outer = reg.span("ghost");
+            assert!(!outer.is_recording());
+            // flip on mid-flight: the already-open disabled span must
+            // not pop a name it never pushed
+            reg.set_enabled(true);
+            let _inner = reg.span("real");
+        }
+        let stats = reg.span_stats();
+        let paths: Vec<&str> = stats.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(paths, vec!["real"], "only the enabled span recorded");
+    }
+}

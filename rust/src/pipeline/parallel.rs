@@ -50,6 +50,7 @@
 
 use super::exec::Executor;
 use super::plan::SpmmPlan;
+use crate::obs::{Registry, ShardSample};
 use crate::partition::block_level::BlockPartition;
 use crate::partition::metadata::BlockMeta;
 use crate::spmm::microkernel;
@@ -57,6 +58,7 @@ use crate::spmm::microkernel::{RowKernel, SimdLevel};
 use crate::util::threadpool::ThreadPool;
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Shared output buffer handed to shard jobs as a raw pointer.
 ///
@@ -272,16 +274,39 @@ fn exec_into_zeroed(
     let mut partials: Vec<SplitPartials> =
         ranges.iter().map(|_| SplitPartials::default()).collect();
     let out = OutPtr { ptr: y.as_mut_ptr(), len: y.len() };
-    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
-        .into_iter()
-        .zip(partials.iter_mut())
-        .map(|(range, part)| {
-            let out = &out;
-            Box::new(move || exec_shard(plan, x, f, range, out, part, level, adaptive))
-                as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    pool.scoped_run(jobs);
+    // One relaxed load decides the whole observability cost: disabled,
+    // the job closures below are exactly the pre-instrumentation ones —
+    // no clock reads, no sample buffer, no per-shard accounting.
+    let obs = Registry::global();
+    if obs.enabled() {
+        let mut samples = vec![ShardSample::default(); partials.len()];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+            .into_iter()
+            .zip(partials.iter_mut())
+            .zip(samples.iter_mut())
+            .map(|((range, part), slot)| {
+                let out = &out;
+                Box::new(move || {
+                    let t0 = Instant::now();
+                    exec_shard(plan, x, f, range.clone(), out, part, level, adaptive);
+                    *slot = sample_shard(plan, range, adaptive, t0.elapsed());
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scoped_run(jobs);
+        obs.record_spmm_shards(&samples);
+    } else {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+            .into_iter()
+            .zip(partials.iter_mut())
+            .map(|(range, part)| {
+                let out = &out;
+                Box::new(move || exec_shard(plan, x, f, range, out, part, level, adaptive))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scoped_run(jobs);
+    }
     // the "global atomic" level: split-row partials reduced
     // deterministically in shard order, scattered to original rows
     let perm = &plan.sorted.perm;
@@ -293,6 +318,36 @@ fn exec_into_zeroed(
             }
         }
     }
+}
+
+/// What one shard did, for the per-shard execution timeline: nonzeros
+/// and rows from the plan metadata, kernel mix from the same dispatch
+/// rule [`exec_shard`] applied, wall time from the shard job itself.
+/// Runs inside the shard job, only when the registry is enabled.
+fn sample_shard(
+    plan: &SpmmPlan,
+    blocks: Range<usize>,
+    adaptive: bool,
+    busy: std::time::Duration,
+) -> ShardSample {
+    let bp = &plan.block;
+    let deg_bound = bp.params.deg_bound();
+    let mut s = ShardSample { busy_ns: busy.as_nanos() as u64, ..Default::default() };
+    for b in blocks {
+        let m = bp.meta[b];
+        s.nnz += block_nnz(&m, deg_bound) as u64;
+        if m.is_split(deg_bound) {
+            s.dense_blocks += 1; // split chunks always run the dense kernel
+        } else {
+            s.rows += m.block_rows() as u64;
+            let kern = if adaptive { plan.kernels.kernel_for(b) } else { RowKernel::DenseTiled };
+            match kern {
+                RowKernel::DenseTiled => s.dense_blocks += 1,
+                RowKernel::SparseGather => s.sparse_blocks += 1,
+            }
+        }
+    }
+    s
 }
 
 /// Allocating wrapper over [`spmm_block_level_parallel_into`]: the

@@ -1,9 +1,12 @@
 //! Serve-subsystem metrics: queue depth, batch occupancy, and
 //! per-stage latency recorders — all built on [`crate::metrics`]
-//! primitives (bounded reservoirs, so a server that runs forever holds
-//! constant memory).
+//! primitives (fixed log-bucket histograms with exact count/mean/max
+//! and quantiles within a documented ≤ 5% bound — actual bound
+//! `2^(1/32)−1 ≈ 2.2%`, one-sided — so a server that runs forever
+//! holds constant memory with no sampling).
 
-use crate::metrics::{Counter, Gauge, LatencyRecorder};
+use crate::metrics::{Counter, Gauge, LatencyRecorder, LatencySnapshot};
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
@@ -70,6 +73,16 @@ impl ServeMetrics {
         }
     }
 
+    /// Forget `tenant`'s kernel-variant footer line. Called when a
+    /// tenant's plan is evicted or replaced by an epoch bump: the noted
+    /// variant described the *old* plan, and a footer that keeps
+    /// rendering it would report a kernel mix no live plan uses. The
+    /// line reappears (with the fresh variant) on the tenant's next
+    /// executed batch.
+    pub fn clear_kernel(&self, tenant: &str) {
+        self.tenant_kernels.lock().unwrap().remove(tenant);
+    }
+
     /// Mean requests fused per executed batch (> 1 means the column
     /// batcher is amortizing traversals across requests).
     pub fn fusion_factor(&self) -> f64 {
@@ -117,6 +130,54 @@ impl ServeMetrics {
         s.push_str(&format!("{}\n", self.total.snapshot().render("total")));
         s
     }
+
+    /// Everything above as the snapshot schema's `serve` section —
+    /// merged into the registry document `serve-native --metrics-out`
+    /// writes (`{counters, gauges, fusion_factor, latencies, kernels}`;
+    /// `latencies.*` use the shared histogram summary shape the CI
+    /// validator checks).
+    pub fn snapshot_json(&self) -> Json {
+        fn lat(s: &LatencySnapshot) -> Json {
+            let mut o = Json::obj();
+            o.set("count", s.count);
+            o.set("mean", s.mean);
+            o.set("p50", s.p50);
+            o.set("p95", s.p95);
+            o.set("p99", s.p99);
+            o.set("max", s.max);
+            o
+        }
+        let mut doc = Json::obj();
+        let mut counters = Json::obj();
+        counters.set("submitted", self.submitted.get());
+        counters.set("rejected", self.rejected.get());
+        counters.set("completed", self.completed.get());
+        counters.set("errors", self.errors.get());
+        counters.set("batches", self.batches.get());
+        counters.set("fused_requests", self.fused_requests.get());
+        counters.set("updates", self.updates.get());
+        counters.set("plan_swaps", self.plan_swaps.get());
+        doc.set("counters", counters);
+        let mut gauges = Json::obj();
+        gauges.set("queue_depth", self.queue_depth.get());
+        gauges.set("epoch", self.epoch.get());
+        doc.set("gauges", gauges);
+        doc.set("fusion_factor", self.fusion_factor());
+        let mut latencies = Json::obj();
+        latencies.set("queue_wait", lat(&self.queue_wait.snapshot()));
+        latencies.set("spmm_stage", lat(&self.spmm_stage.snapshot()));
+        latencies.set("spmm_gflops", lat(&self.spmm_gflops.snapshot()));
+        latencies.set("dense_stage", lat(&self.dense_stage.snapshot()));
+        latencies.set("patch_latency", lat(&self.patch_latency.snapshot()));
+        latencies.set("total", lat(&self.total.snapshot()));
+        doc.set("latencies", latencies);
+        let mut kernels = Json::obj();
+        for (tenant, variant) in self.tenant_kernels.lock().unwrap().iter() {
+            kernels.set(tenant, variant.as_str());
+        }
+        doc.set("kernels", kernels);
+        doc
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +216,50 @@ mod tests {
         assert!(r.contains("spmm kernel [cora]: scalar+adaptive(dense 2 / sparse 1 blocks)"), "{r}");
         assert!(r.contains("spmm kernel [collab]: portable-simd+adaptive"), "{r}");
         assert!(!r.contains("dense 1 / sparse 2"), "stale variant must be replaced");
+    }
+
+    #[test]
+    fn clear_kernel_scopes_footer_to_live_plans() {
+        let m = ServeMetrics::new();
+        m.note_kernel("g", "scalar+adaptive(dense 1 / sparse 2 blocks)".into());
+        m.note_kernel("h", "scalar+adaptive(dense 4 / sparse 0 blocks)".into());
+        assert!(m.render().contains("spmm kernel [g]"));
+        // g's plan was evicted / epoch-bumped: its stale variant line
+        // must disappear, other tenants' lines must survive
+        m.clear_kernel("g");
+        let r = m.render();
+        assert!(!r.contains("spmm kernel [g]"), "{r}");
+        assert!(r.contains("spmm kernel [h]"), "{r}");
+        m.clear_kernel("never-noted"); // no-op, must not panic
+        // the next executed batch brings the line back, fresh
+        m.note_kernel("g", "scalar+adaptive(dense 0 / sparse 3 blocks)".into());
+        assert!(m.render().contains("spmm kernel [g]: scalar+adaptive(dense 0 / sparse 3 blocks)"));
+    }
+
+    #[test]
+    fn snapshot_json_has_schema_shape() {
+        let m = ServeMetrics::new();
+        m.submitted.add(5);
+        m.completed.add(4);
+        m.batches.add(2);
+        m.fused_requests.add(4);
+        m.queue_wait.record(0.001);
+        m.total.record(0.004);
+        m.total.record(0.002);
+        m.note_kernel("g", "scalar+adaptive(dense 1 / sparse 0 blocks)".into());
+        let doc = m.snapshot_json();
+        assert_eq!(doc.get("counters").unwrap().req_f64("submitted").unwrap(), 5.0);
+        assert!((doc.req_f64("fusion_factor").unwrap() - 2.0).abs() < 1e-12);
+        let total = doc.get("latencies").unwrap().get("total").unwrap();
+        assert_eq!(total.req_usize("count").unwrap(), 2);
+        assert!(total.req_f64("p99").unwrap() >= total.req_f64("p50").unwrap());
+        assert_eq!(
+            doc.get("kernels").unwrap().req_str("g").unwrap(),
+            "scalar+adaptive(dense 1 / sparse 0 blocks)"
+        );
+        // round-trips through text like the --metrics-out file does
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(back, doc);
     }
 
     #[test]

@@ -474,8 +474,14 @@ fn worker_loop(
             drained
         };
         let picked_up = Instant::now();
+        let reg = crate::obs::Registry::global();
         for p in &round {
-            metrics.queue_wait.record(picked_up.duration_since(p.enqueued()).as_secs_f64());
+            let wait = picked_up.duration_since(p.enqueued());
+            metrics.queue_wait.record(wait.as_secs_f64());
+            // queue wait spans submit → pickup across threads, so it is
+            // recorded by path rather than by guard (self-gating when
+            // the registry is disabled)
+            reg.record_span_ns("serve_round/queue_wait", wait.as_nanos() as u64);
         }
         // compute groups run first, updates apply at round end: every
         // compute request executes against the entry it captured at
@@ -552,10 +558,16 @@ fn apply_update(
                 None => false, // nothing resident; next batch builds fresh
             };
             let patch_secs = t0.elapsed().as_secs_f64();
+            crate::obs::Registry::global()
+                .record_span_ns("serve_round/apply_update", (patch_secs * 1e9) as u64);
             metrics.updates.inc();
             metrics.plan_swaps.inc();
             metrics.patch_latency.record(patch_secs);
             metrics.epoch.set_max(gu.new.epoch as i64);
+            // the swapped-in entry serves a new topology: the footer's
+            // kernel-variant line described the old plan, so scope it to
+            // live plans — the next executed batch re-notes it fresh
+            metrics.clear_kernel(&gu.new.name);
             metrics.total.record(u.enqueued.elapsed().as_secs_f64());
             let _ = u.reply.send(Ok(UpdateReport {
                 epoch: gu.new.epoch,
@@ -599,12 +611,14 @@ fn run_spmm_group(
         Ok(p) => p,
         Err(e) => return fail_group(group, metrics, &e),
     };
+    let reg = crate::obs::Registry::global();
     let plan = cache.plan_for_keyed(entry.fingerprint, &entry.relabeled, params);
     let n = entry.n;
     let mut members: Vec<Option<ComputePending>> = group.into_iter().map(Some).collect();
     for bp in &plans {
         // fuse: copy member columns into the padded fused matrix while
         // permuting rows into the relabeled domain (single pass)
+        let fuse_span = reg.span("serve_round/fuse");
         let aw = bp.artifact_width;
         let mut fused = vec![0f32; n * aw];
         let mut col = 0usize;
@@ -623,6 +637,7 @@ fn run_spmm_group(
             widths.push(c);
             col += c;
         }
+        drop(fuse_span);
         // zero-copy: the fused matrix is borrowed by the scoped shard
         // jobs directly — no Arc wrap, no input copy. The plan is built
         // FROM the relabeled matrix, so the executor's original-row-order
@@ -630,6 +645,7 @@ fn run_spmm_group(
         let t0 = Instant::now();
         let y = crate::pipeline::spmm_block_level_parallel(&plan, &fused, aw, pool);
         let spmm_secs = t0.elapsed().as_secs_f64();
+        reg.record_span_ns("serve_round/execute", (spmm_secs * 1e9) as u64);
         metrics.spmm_stage.record(spmm_secs);
         let gflops = crate::spmm::spmm_gflops(plan.nnz(), aw, spmm_secs);
         metrics.note_kernel(&entry.name, plan.kernels.summary(crate::spmm::SimdLevel::best()));
@@ -637,6 +653,7 @@ fn run_spmm_group(
         metrics.fused_requests.add(bp.members.len() as u64);
         // split: copy each member's columns back out, unpermuting rows
         // to the original node order
+        let split_span = reg.span("serve_round/split");
         let mut col = 0usize;
         for (slot, &m) in bp.members.iter().enumerate() {
             let c = widths[slot];
@@ -652,6 +669,7 @@ fn run_spmm_group(
             metrics.total.record(p.enqueued.elapsed().as_secs_f64());
             let _ = p.reply.send(Ok(Response { y: HostTensor::f32(&[n, c], out) }));
         }
+        drop(split_span);
     }
     debug_assert!(members.iter().all(Option::is_none), "every member replied");
 }
@@ -709,6 +727,11 @@ fn run_gcn_group(
         let fw = GcnForward { plan: plan.as_ref(), pool };
         match fw.forward(&model, &xs, Some(&entry.perm)) {
             Ok((outs, timings)) => {
+                let reg = crate::obs::Registry::global();
+                reg.record_span_ns(
+                    "serve_round/execute",
+                    ((timings.spmm_secs + timings.dense_secs) * 1e9) as u64,
+                );
                 metrics.spmm_stage.record(timings.spmm_secs);
                 metrics.dense_stage.record(timings.dense_secs);
                 let gflops = crate::spmm::gflops(
@@ -939,11 +962,21 @@ mod tests {
             EdgeUpdate::Insert { row: 7, col: 3, val: -1.0 },
             EdgeUpdate::Delete { row: 0, col: 0 },
         ];
+        assert!(
+            server.metrics().render().contains("spmm kernel [g]"),
+            "warm batch noted its kernel variant"
+        );
         let report = server.update_graph(h, batch.clone()).unwrap();
         assert_eq!(report.epoch, 1);
         assert!(report.plan_patched, "warm plan must be patched, not dropped");
         assert!(report.rows_changed >= 2);
         assert_eq!(server.graph_epoch(h).unwrap(), 1);
+        // the epoch bump cleared the footer's kernel line: the variant
+        // described the pre-update plan, which no longer serves anyone
+        assert!(
+            !server.metrics().render().contains("spmm kernel [g]"),
+            "stale kernel-variant line must not survive the epoch bump"
+        );
         // post-update responses match the dense reference on the NEW graph
         let mut dg = crate::delta::DeltaGraph::new(g);
         dg.apply(&batch).unwrap();
@@ -952,6 +985,10 @@ mod tests {
         let want = updated.spmm_dense(x.as_f32().unwrap(), 12);
         let resp = server.submit_spmm(h, x).unwrap().recv().unwrap().unwrap();
         assert_allclose(resp.y.as_f32().unwrap(), &want, 1e-4, 1e-4, "post-update spmm");
+        assert!(
+            server.metrics().render().contains("spmm kernel [g]"),
+            "the first post-update batch re-notes the fresh variant"
+        );
         let m = server.metrics();
         assert_eq!(m.plan_swaps.get(), 1);
         assert_eq!(m.updates.get(), 1);

@@ -270,6 +270,13 @@ impl Trainer {
         train_mask: &[bool],
         phases: &mut PhaseBreakdown,
     ) -> (f64, Vec<f32>) {
+        // the phase breakdown stays the step's return-value view (tests
+        // and the bench table read it); the same per-phase durations are
+        // also emitted as spans into the global registry so `profile`
+        // and `--metrics-out` see training alongside serve/SpMM data
+        let reg = crate::obs::Registry::global();
+        let step_span = reg.span("train_step");
+        let before = *phases;
         let tape = forward_with_tape(&self.plan, &self.pool, &self.model, x, &mut *phases);
         let (loss, dlogits) =
             masked_softmax_xent(tape.logits(), labels, train_mask, self.out_dim());
@@ -285,6 +292,18 @@ impl Trainer {
         let t0 = Instant::now();
         self.opt.step(&mut self.model, &grads);
         phases.opt += t0.elapsed().as_secs_f64();
+        if reg.enabled() {
+            for (name, secs) in [
+                ("train_step/fwd_spmm", phases.fwd_spmm - before.fwd_spmm),
+                ("train_step/fwd_dense", phases.fwd_dense - before.fwd_dense),
+                ("train_step/bwd_spmm", phases.bwd_spmm - before.bwd_spmm),
+                ("train_step/bwd_dense", phases.bwd_dense - before.bwd_dense),
+                ("train_step/opt", phases.opt - before.opt),
+            ] {
+                reg.record_span_ns(name, (secs * 1e9) as u64);
+            }
+        }
+        drop(step_span);
         (loss, tape.into_logits())
     }
 
