@@ -50,18 +50,44 @@ cargo run --release --bin accel-gcn -- train-native --quick --steps 50 \
     --optimizer adam --threads 2 --seed 7 --require-loss-drop 0.5
 
 # Observability smoke: run the profiler and a short serve burst with
-# tracing on, then schema-validate both emitted metrics snapshots
-# (required keys present, per-shard busy-ns sums positive, histogram
-# quantiles ordered). The validator is the checked-in
-# `validate-metrics` subcommand, so the schema contract is enforced by
-# the same code that documents it.
+# tracing on, then schema-validate the emitted metrics snapshots AND
+# the Chrome trace-event timelines (required keys present, per-shard
+# busy-ns sums positive, histogram quantiles ordered, trace events
+# well-formed). The validator is the checked-in `validate-metrics`
+# subcommand, so the schema contract is enforced by the same code that
+# documents it.
 cargo run --release --bin accel-gcn -- profile --quick --threads 2 --seed 7 \
-    --json results-ci-obs/profile_metrics.json
+    --json results-ci-obs/profile_metrics.json \
+    --trace-out results-ci-obs/profile_trace.json
 cargo run --release --bin accel-gcn -- serve-native \
     --requests 48 --tenants 2 --nodes 200 --threads 2 --seed 7 \
-    --metrics-out results-ci-obs/serve_metrics.json
+    --metrics-out results-ci-obs/serve_metrics.json --metrics-interval-ms 100 \
+    --trace-out results-ci-obs/serve_trace.json
 cargo run --release --bin accel-gcn -- validate-metrics \
-    results-ci-obs/profile_metrics.json results-ci-obs/serve_metrics.json
+    results-ci-obs/profile_metrics.json results-ci-obs/serve_metrics.json \
+    results-ci-obs/profile_trace.json results-ci-obs/serve_trace.json
+
+# Tuning smoke: the closed loop (measure -> fit -> re-cut -> swap) on a
+# skewed power-law graph. The profile command itself exits nonzero if a
+# tuned plan's output is not bit-for-bit identical to the untuned plan,
+# or if the cost-model max/mean shard imbalance increased; the grep
+# pins the printed contract so a silent behavior change still fails.
+cargo run --release --bin accel-gcn -- profile --quick --threads 2 --seed 7 \
+    --tune-every 3 --train-steps 6 \
+    | tee results-ci-obs/tune_smoke.txt
+grep -q "output bit-identical to untuned: true" results-ci-obs/tune_smoke.txt
+
+# Serve-path tuning smoke: tuner runs between fused rounds, swaps land
+# through PlanCache::refresh, responses stay verified against the
+# exact executor (serve-native exits nonzero on any mismatch).
+cargo run --release --bin accel-gcn -- serve-native \
+    --requests 48 --tenants 2 --nodes 200 --threads 2 --seed 7 --tune-every 2
+
+# bench-compare self-check: a report diffed against itself must show
+# zero regressions (and the command must exit zero).
+cargo run --release --bin accel-gcn -- bench-compare \
+    results-ci-delta/BENCH_delta_update.json \
+    results-ci-delta/BENCH_delta_update.json --max-regress 5
 
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`

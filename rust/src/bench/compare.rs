@@ -1,0 +1,319 @@
+//! `bench-compare` — the regression gate between two benchmark reports.
+//!
+//! Successive PRs write `BENCH_*.json` trajectory files (see
+//! [`super::report`]); this module diffs two of them. Both documents are
+//! flattened to their numeric leaves (the injected `meta` section is
+//! skipped — commit hashes and timestamps are not metrics), leaves
+//! present in both are paired, and each pair becomes one table cell
+//! with a speedup factor oriented so **> 1 is always an improvement**:
+//!
+//! * time-like metrics (`*_us`, `*_ns`, `*secs`, `latency`, `p50`, …)
+//!   improve downward — speedup is `old / new`;
+//! * throughput-like metrics (`rps`, `*_per_sec`, `gflops`, `fusion`,
+//!   …) improve upward — speedup is `new / old`;
+//! * everything else (counts, sizes, configuration echoes) is neutral:
+//!   reported as a ratio for context but never flagged.
+//!
+//! A directional cell whose speedup falls below `1 - max_regress/100`
+//! is a regression; the `bench-compare` subcommand exits nonzero if any
+//! exist, which is the whole point — CI pins the serving/training
+//! benches against their previous run without hand-curated thresholds
+//! per metric.
+//!
+//! Array elements are labeled by their identifying fields (`threads`,
+//! `ladder_max`, `graph`, `kernel`, …) rather than position, so
+//! reordered sweep points still pair correctly.
+
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// Which way "better" points for one metric, inferred from its leaf key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Latency-like: smaller new value is an improvement.
+    LowerIsBetter,
+    /// Throughput-like: larger new value is an improvement.
+    HigherIsBetter,
+    /// Counts / config echoes: compared for context, never a regression.
+    Neutral,
+}
+
+/// Classify a flattened path by its leaf key name.
+pub fn direction_of(path: &str) -> Direction {
+    let leaf = path.rsplit('/').next().unwrap_or(path).to_ascii_lowercase();
+    let lower_suffix = ["_us", "_ns", "_ms", "secs", "micros", "nanos"];
+    let lower_sub = ["latency", "time", "imbalance", "overhead", "bytes"];
+    let lower_prefix = ["p50", "p90", "p99", "p999", "max_", "worst"];
+    let higher_sub =
+        ["per_sec", "rps", "gflops", "throughput", "speedup", "fusion", "reuse", "accuracy"];
+    if lower_suffix.iter().any(|s| leaf.ends_with(s))
+        || lower_sub.iter().any(|s| leaf.contains(s))
+        || lower_prefix.iter().any(|s| leaf.starts_with(s))
+    {
+        Direction::LowerIsBetter
+    } else if higher_sub.iter().any(|s| leaf.contains(s)) {
+        Direction::HigherIsBetter
+    } else {
+        Direction::Neutral
+    }
+}
+
+/// One paired metric.
+#[derive(Clone, Debug)]
+pub struct CellDelta {
+    pub path: String,
+    pub direction: Direction,
+    pub old: f64,
+    pub new: f64,
+    /// Improvement factor, oriented so > 1 is better (neutral cells
+    /// carry plain `new / old`).
+    pub speedup: f64,
+    pub regressed: bool,
+}
+
+/// The full diff between two reports.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub cells: Vec<CellDelta>,
+    /// Numeric paths only the old report has (renamed / dropped metrics).
+    pub only_old: Vec<String>,
+    /// Numeric paths only the new report has.
+    pub only_new: Vec<String>,
+    pub max_regress_pct: f64,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> Vec<&CellDelta> {
+        self.cells.iter().filter(|c| c.regressed).collect()
+    }
+
+    /// Paper-style stdout table plus the unmatched-path summary.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(&["metric", "old", "new", "speedup", "dir", ""]);
+        for c in &self.cells {
+            table.row(vec![
+                c.path.clone(),
+                format!("{:.6}", c.old),
+                format!("{:.6}", c.new),
+                format!("{:.3}x", c.speedup),
+                match c.direction {
+                    Direction::LowerIsBetter => "lower".to_string(),
+                    Direction::HigherIsBetter => "higher".to_string(),
+                    Direction::Neutral => "·".to_string(),
+                },
+                if c.regressed { "REGRESSED".to_string() } else { String::new() },
+            ]);
+        }
+        let mut out = table.render();
+        if !self.only_old.is_empty() {
+            out.push_str(&format!(
+                "only in OLD ({}): {}\n",
+                self.only_old.len(),
+                self.only_old.join(", ")
+            ));
+        }
+        if !self.only_new.is_empty() {
+            out.push_str(&format!(
+                "only in NEW ({}): {}\n",
+                self.only_new.len(),
+                self.only_new.join(", ")
+            ));
+        }
+        let n_reg = self.regressions().len();
+        out.push_str(&format!(
+            "{} metrics compared, {} regression(s) beyond {:.1}%\n",
+            self.cells.len(),
+            n_reg,
+            self.max_regress_pct
+        ));
+        out
+    }
+}
+
+/// Fields that identify an array element (a sweep point) better than
+/// its position; used to build stable labels so reordered points pair.
+const ID_KEYS: &[&str] = &[
+    "experiment", "graph", "kernel", "name", "optimizer", "threads", "ladder_max", "coldim",
+    "width", "batch_size",
+];
+
+fn scalar_label(v: &Json) -> Option<String> {
+    match v {
+        Json::Num(n) => Some(format!("{n}")),
+        Json::Str(s) => Some(s.clone()),
+        Json::Bool(b) => Some(b.to_string()),
+        _ => None,
+    }
+}
+
+fn element_label(v: &Json, i: usize) -> String {
+    if let Json::Obj(m) = v {
+        let parts: Vec<String> = ID_KEYS
+            .iter()
+            .filter_map(|k| m.get(*k).and_then(scalar_label).map(|s| format!("{k}={s}")))
+            .collect();
+        if !parts.is_empty() {
+            return format!("[{}]", parts.join(","));
+        }
+    }
+    format!("[{i}]")
+}
+
+fn flatten_into(v: &Json, path: &str, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Num(n) => out.push((path.to_string(), *n)),
+        Json::Obj(m) => {
+            for (k, child) in m {
+                // the report writer injects `meta` (commit, timestamp,
+                // host) into every document — provenance, not metrics
+                if path.is_empty() && k == "meta" {
+                    continue;
+                }
+                let p = if path.is_empty() { k.clone() } else { format!("{path}/{k}") };
+                flatten_into(child, &p, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, it) in items.iter().enumerate() {
+                flatten_into(it, &format!("{path}{}", element_label(it, i)), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Flatten a report to `path → value` pairs, disambiguating any
+/// colliding labels with a positional suffix.
+pub fn flatten_numeric(doc: &Json) -> Vec<(String, f64)> {
+    let mut raw = Vec::new();
+    flatten_into(doc, "", &mut raw);
+    let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    raw.into_iter()
+        .map(|(p, v)| {
+            let n = seen.entry(p.clone()).or_insert(0);
+            *n += 1;
+            if *n == 1 { (p, v) } else { (format!("{p}#{n}"), v) }
+        })
+        .collect()
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den == 0.0 {
+        if num == 0.0 { 1.0 } else { f64::INFINITY }
+    } else {
+        num / den
+    }
+}
+
+/// Diff two benchmark reports. `max_regress_pct` is the tolerated
+/// directional slowdown in percent (e.g. 5.0 ⇒ speedup ≥ 0.95 passes).
+pub fn compare(old: &Json, new: &Json, max_regress_pct: f64) -> CompareReport {
+    let old_flat: std::collections::BTreeMap<String, f64> =
+        flatten_numeric(old).into_iter().collect();
+    let new_flat: std::collections::BTreeMap<String, f64> =
+        flatten_numeric(new).into_iter().collect();
+    let floor = 1.0 - max_regress_pct / 100.0;
+    let mut cells = Vec::new();
+    for (path, &ov) in &old_flat {
+        if let Some(&nv) = new_flat.get(path) {
+            let direction = direction_of(path);
+            let speedup = match direction {
+                Direction::LowerIsBetter => ratio(ov, nv),
+                Direction::HigherIsBetter | Direction::Neutral => ratio(nv, ov),
+            };
+            let regressed = direction != Direction::Neutral && speedup < floor;
+            cells.push(CellDelta { path: path.clone(), direction, old: ov, new: nv, speedup, regressed });
+        }
+    }
+    let only_old =
+        old_flat.keys().filter(|k| !new_flat.contains_key(*k)).cloned().collect();
+    let only_new =
+        new_flat.keys().filter(|k| !old_flat.contains_key(*k)).cloned().collect();
+    CompareReport { cells, only_old, only_new, max_regress_pct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rps: f64, p99: f64, batches: f64) -> Json {
+        let mut point = Json::obj();
+        point.set("threads", 2).set("rps", rps).set("p99_us", p99).set("batches", batches);
+        let mut meta = Json::obj();
+        meta.set("commit", "deadbeef").set("elapsed_secs", 9.0);
+        let mut doc = Json::obj();
+        doc.set("experiment", "serve_native");
+        doc.set("meta", meta);
+        doc.set("points", vec![point]);
+        doc
+    }
+
+    #[test]
+    fn direction_heuristics() {
+        assert_eq!(direction_of("points[0]/p99_us"), Direction::LowerIsBetter);
+        assert_eq!(direction_of("a/step_time_secs"), Direction::LowerIsBetter);
+        assert_eq!(direction_of("a/imbalance_ratio"), Direction::LowerIsBetter);
+        assert_eq!(direction_of("points[0]/rps"), Direction::HigherIsBetter);
+        assert_eq!(direction_of("train/steps_per_sec"), Direction::HigherIsBetter);
+        assert_eq!(direction_of("points[0]/fusion_factor"), Direction::HigherIsBetter);
+        assert_eq!(direction_of("points[0]/batches"), Direction::Neutral);
+        assert_eq!(direction_of("points[0]/threads"), Direction::Neutral);
+    }
+
+    #[test]
+    fn self_compare_is_clean() {
+        let doc = report(100.0, 900.0, 7.0);
+        let r = compare(&doc, &doc, 5.0);
+        assert!(!r.cells.is_empty());
+        assert!(r.cells.iter().all(|c| (c.speedup - 1.0).abs() < 1e-12));
+        assert!(r.regressions().is_empty());
+        assert!(r.only_old.is_empty() && r.only_new.is_empty());
+        assert!(r.render().contains("0 regression(s)"));
+    }
+
+    #[test]
+    fn regressions_flag_in_both_directions() {
+        let old = report(100.0, 900.0, 7.0);
+        // throughput down 20%, latency up 50%, a neutral count moves too
+        let new = report(80.0, 1350.0, 9.0);
+        let r = compare(&old, &new, 10.0);
+        let by_path = |p: &str| r.cells.iter().find(|c| c.path.contains(p)).unwrap();
+        assert!(by_path("rps").regressed, "throughput drop beyond 10% must flag");
+        assert!(by_path("p99_us").regressed, "latency growth beyond 10% must flag");
+        assert!(!by_path("batches").regressed, "neutral metrics never flag");
+        assert_eq!(r.regressions().len(), 2);
+        // a looser gate passes the same diff
+        assert!(compare(&old, &new, 60.0).regressions().is_empty());
+        // meta is provenance, not a metric
+        assert!(r.cells.iter().all(|c| !c.path.starts_with("meta")));
+        assert!(r.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn array_points_pair_by_identity_not_position() {
+        let mk = |threads: usize, rps: f64| {
+            let mut p = Json::obj();
+            p.set("threads", threads).set("rps", rps);
+            p
+        };
+        let mut old = Json::obj();
+        old.set("points", vec![mk(1, 50.0), mk(2, 90.0)]);
+        let mut new = Json::obj();
+        new.set("points", vec![mk(2, 95.0), mk(1, 52.0)]); // reordered, both faster
+        let r = compare(&old, &new, 5.0);
+        assert_eq!(r.cells.iter().filter(|c| c.path.contains("rps")).count(), 2);
+        assert!(r.regressions().is_empty(), "reordered but improved points must pair");
+    }
+
+    #[test]
+    fn unmatched_paths_are_reported_not_compared() {
+        let mut old = Json::obj();
+        old.set("a", 1.0).set("dropped", 2.0);
+        let mut new = Json::obj();
+        new.set("a", 1.0).set("added", 3.0);
+        let r = compare(&old, &new, 5.0);
+        assert_eq!(r.cells.len(), 1);
+        assert_eq!(r.only_old, vec!["dropped".to_string()]);
+        assert_eq!(r.only_new, vec!["added".to_string()]);
+    }
+}

@@ -30,9 +30,13 @@
 //! * [`report`] — the one writer for every `BENCH_*.json` trajectory
 //!   file (out-dir + repo-root duplicate conventions live here, not in
 //!   each experiment).
+//! * [`compare`] — the regression gate: diffs two `BENCH_*.json`
+//!   reports cell-by-cell with direction-aware speedups
+//!   (`accel-gcn bench-compare OLD NEW --max-regress PCT`).
 
 pub mod paper;
 pub mod ablation;
+pub mod compare;
 pub mod delta_update;
 pub mod exec_scaling;
 pub mod microkernel;

@@ -44,6 +44,10 @@ pub struct LoadConfig {
     pub seed: u64,
     /// Check every response against the exact CPU executor.
     pub verify: bool,
+    /// Forwarded to [`ServeConfig::tune_every`]: run the closed-loop
+    /// plan tuner every this many serve rounds (0 = off; effective
+    /// only while the global registry is enabled).
+    pub tune_every: usize,
 }
 
 impl Default for LoadConfig {
@@ -58,6 +62,7 @@ impl Default for LoadConfig {
             gcn_every: 3,
             seed: 42,
             verify: true,
+            tune_every: 0,
         }
     }
 }
@@ -111,6 +116,7 @@ pub fn run_once_with_metrics(cfg: &LoadConfig) -> Result<(ServeNativePoint, Arc<
         threads: cfg.threads,
         queue_capacity: cfg.requests + 8,
         ladder: cfg.ladder.clone(),
+        tune_every: cfg.tune_every,
         ..ServeConfig::default()
     })?;
     let handles: Vec<_> = graphs

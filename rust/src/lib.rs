@@ -35,6 +35,11 @@
 //!   SGD/Adam) entirely on the parallel SpMM pipeline; the backward
 //!   SpMM runs against a cached transposed plan (or the forward plan
 //!   itself when `Â` is symmetric).
+//! * [`tune`] — closed-loop plan tuning: fits a per-kernel cost model
+//!   to the measured per-shard timeline in [`obs`], re-cuts shard
+//!   boundaries against predicted cost, and revisits the dense/sparse
+//!   crossover — swapped through [`pipeline::PlanCache::refresh`]
+//!   with bit-identical output guaranteed.
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
 //! * [`obs`] — unified tracing & profiling: span timers with
 //!   thread-local nesting, typed counters/gauges, fixed log-bucket
@@ -60,4 +65,5 @@ pub mod runtime;
 pub mod coordinator;
 pub mod serve;
 pub mod train;
+pub mod tune;
 pub mod bench;

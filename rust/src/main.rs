@@ -10,9 +10,12 @@
 //! accel-gcn train-native [--steps 200] [--optimizer sgd|adam] [--quick]
 //! accel-gcn serve        --artifacts artifacts/quickstart --requests 64
 //! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
+//!                        [--metrics-interval-ms MS] [--trace-out PATH] [--tune-every K]
 //! accel-gcn update-demo  --batches 8 --batch-size 64 [--edge-list graph.txt]
 //! accel-gcn bench        --out results [--experiment fig5|...|microkernel|train_native]
-//! accel-gcn profile      [--nodes N] [--iters I] [--train-steps S] [--json PATH] [--quick]
+//! accel-gcn bench-compare OLD.json NEW.json [--max-regress PCT]
+//! accel-gcn profile      [--nodes N] [--iters I] [--train-steps S] [--json PATH]
+//!                        [--trace-out PATH] [--tune-every K] [--quick]
 //! accel-gcn validate-metrics FILE [FILE...]
 //! ```
 
@@ -47,6 +50,7 @@ fn main() {
         "serve-native" => cmd_serve_native(rest),
         "update-demo" => cmd_update_demo(rest),
         "bench" => cmd_bench(rest),
+        "bench-compare" => cmd_bench_compare(rest),
         "profile" => cmd_profile(rest),
         "validate-metrics" => cmd_validate_metrics(rest),
         "help" | "--help" | "-h" => {
@@ -84,10 +88,13 @@ fn print_usage() {
          \x20 serve     --artifacts DIR [--requests N] [--coldims 16,32]\n\
          \x20 serve-native [--requests N] [--tenants K] [--nodes N] [--avg-deg D]\n\
          \x20           [--threads T] [--ladder 32,64,128] [--gcn-every K] [--seed S]\n\
-         \x20           [--no-verify] [--metrics-out PATH]\n\
+         \x20           [--no-verify] [--metrics-out PATH] [--metrics-interval-ms MS]\n\
+         \x20           [--trace-out PATH] [--tune-every K]\n\
          \x20           (multi-tenant CPU serving, no artifacts needed; --metrics-out\n\
-         \x20           enables tracing and dumps the metrics snapshot JSON periodically\n\
-         \x20           and at exit)\n\
+         \x20           enables tracing and dumps the metrics snapshot JSON every\n\
+         \x20           --metrics-interval-ms and at exit; --trace-out writes the\n\
+         \x20           Chrome trace-event timeline; --tune-every K runs the\n\
+         \x20           closed-loop plan tuner every K serve rounds)\n\
          \x20 update-demo [--nodes N] [--avg-deg D] [--batches B] [--batch-size K]\n\
          \x20           [--edge-list PATH [--one-based]] [--threads T] [--seed S]\n\
          \x20           (stream edge-update batches; patch plans incrementally,\n\
@@ -95,13 +102,21 @@ fn print_usage() {
          \x20 bench     [--out DIR] [--experiment fig2|fig3|fig5|fig6|fig7|fig8|table1|table2|\n\
          \x20           exec_scaling|microkernel|serve_native|delta_update|train_native|all]\n\
          \x20           [--quick]\n\
+         \x20 bench-compare OLD.json NEW.json [--max-regress PCT]\n\
+         \x20           (diff two BENCH_*.json reports: per-metric speedup table with\n\
+         \x20           direction-aware regressions; exits nonzero if any metric\n\
+         \x20           regresses beyond PCT percent, default 5)\n\
          \x20 profile   [--nodes N] [--avg-deg D] [--feat-dim F] [--iters I]\n\
-         \x20           [--train-steps S] [--threads T] [--seed S] [--json PATH] [--quick]\n\
+         \x20           [--train-steps S] [--threads T] [--seed S] [--json PATH]\n\
+         \x20           [--trace-out PATH] [--tune-every K] [--quick]\n\
          \x20           (run SpMM + training iterations with tracing on; print the\n\
-         \x20           per-shard utilization table, imbalance ratio, and span tree)\n\
+         \x20           per-shard utilization table, imbalance ratio, and span tree;\n\
+         \x20           --tune-every K re-cuts shards from measured cost every K\n\
+         \x20           iters and verifies tuned output bit-for-bit)\n\
          \x20 validate-metrics FILE [FILE...]\n\
          \x20           (schema-check metrics snapshot JSON written by profile --json\n\
-         \x20           or serve-native --metrics-out; exits nonzero on violations)"
+         \x20           or serve-native --metrics-out, and trace-event JSON written\n\
+         \x20           by --trace-out; exits nonzero on violations)"
     );
 }
 
@@ -405,7 +420,7 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
         rest,
         &[
             "requests", "tenants", "nodes", "avg-deg", "threads", "ladder", "gcn-every", "seed",
-            "metrics-out",
+            "metrics-out", "metrics-interval-ms", "trace-out", "tune-every",
         ],
         &["no-verify"],
     )?;
@@ -420,24 +435,40 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
         gcn_every: args.usize_or("gcn-every", defaults.gcn_every)?,
         seed: args.u64_or("seed", defaults.seed)?,
         verify: !args.flag("no-verify"),
+        tune_every: args.usize_or("tune-every", 0)?,
     };
+    let interval_ms = args.u64_or("metrics-interval-ms", 250)?;
+    anyhow::ensure!(interval_ms > 0, "--metrics-interval-ms must be > 0, got {interval_ms}");
     println!(
-        "serve-native: {} requests, {} tenants (~{} nodes each), {} threads, ladder {:?}, verify={}",
-        cfg.requests, cfg.tenants, cfg.nodes, cfg.threads, cfg.ladder, cfg.verify
+        "serve-native: {} requests, {} tenants (~{} nodes each), {} threads, ladder {:?}, \
+         verify={}, tune-every={}",
+        cfg.requests, cfg.tenants, cfg.nodes, cfg.threads, cfg.ladder, cfg.verify, cfg.tune_every
     );
     // --metrics-out turns tracing on and dumps the snapshot both
     // periodically (so an interrupted run still leaves a usable file)
-    // and — with the serve section merged in — at exit
+    // and — with the serve section merged in — at exit; --trace-out and
+    // --tune-every also need the registry recording
     let metrics_out = args.get("metrics-out").map(str::to_string);
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if metrics_out.is_some() || trace_out.is_some() || cfg.tune_every > 0 {
+        accel_gcn::obs::Registry::global().set_enabled(true);
+    }
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let writer = metrics_out.as_ref().map(|path| {
-        accel_gcn::obs::Registry::global().set_enabled(true);
         let path = path.clone();
         let stop = std::sync::Arc::clone(&stop);
-        std::thread::spawn(move || {
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                let _ = write_metrics_snapshot(&path, None);
-                std::thread::sleep(std::time::Duration::from_millis(250));
+        std::thread::spawn(move || loop {
+            let _ = write_metrics_snapshot(&path, None);
+            // wait out the interval in short slices so exit isn't
+            // delayed by a long --metrics-interval-ms
+            let mut waited = 0u64;
+            while waited < interval_ms {
+                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    return;
+                }
+                let step = 100.min(interval_ms - waited);
+                std::thread::sleep(std::time::Duration::from_millis(step));
+                waited += step;
             }
         })
     });
@@ -450,6 +481,10 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
     if let Some(path) = &metrics_out {
         write_metrics_snapshot(path, Some(&metrics))?;
         println!("metrics snapshot written to {path}");
+    }
+    if let Some(path) = &trace_out {
+        write_trace_snapshot(path)?;
+        println!("trace timeline written to {path} (load in Perfetto / chrome://tracing)");
     }
     print!("{}", harness::serve_native::report(std::slice::from_ref(&point)));
     print!("{}", metrics.render());
@@ -467,6 +502,20 @@ fn write_metrics_snapshot(path: &str, serve: Option<&accel_gcn::serve::ServeMetr
     if let Some(m) = serve {
         doc.set("serve", m.snapshot_json());
     }
+    let p = std::path::Path::new(path);
+    if let Some(parent) = p.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(p, doc.to_pretty()).with_context(|| format!("write {path}"))
+}
+
+/// Write the global registry's Chrome trace-event timeline as pretty
+/// JSON at `path` (the `{"traceEvents": [...]}` form Perfetto loads;
+/// also accepted by `validate-metrics`).
+fn write_trace_snapshot(path: &str) -> Result<()> {
+    let doc = accel_gcn::obs::Registry::global().export_trace();
     let p = std::path::Path::new(path);
     if let Some(parent) = p.parent() {
         if !parent.as_os_str().is_empty() {
@@ -602,7 +651,10 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
 
     let args = Args::parse(
         rest,
-        &["nodes", "avg-deg", "feat-dim", "iters", "train-steps", "threads", "seed", "json"],
+        &[
+            "nodes", "avg-deg", "feat-dim", "iters", "train-steps", "threads", "seed", "json",
+            "trace-out", "tune-every",
+        ],
         &["quick"],
     )?;
     let quick = args.flag("quick");
@@ -613,6 +665,7 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
     let train_steps = args.usize_or("train-steps", if quick { 5 } else { 10 })?;
     let threads = args.usize_or("threads", 4)?;
     let seed = args.u64_or("seed", 42)?;
+    let tune_every = args.usize_or("tune-every", 0)?;
     anyhow::ensure!(nodes >= 5, "--nodes must be ≥ 5, got {nodes}");
     anyhow::ensure!(iters >= 1, "--iters must be ≥ 1, got {iters}");
 
@@ -635,13 +688,61 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
         csr.n_rows,
         csr.nnz()
     );
-    let plan = SpmmPlan::build(csr, PartitionParams::default());
+    let mut plan = SpmmPlan::build(csr, PartitionParams::default());
     let pool = ThreadPool::new(threads);
     let x: Vec<f32> = (0..nodes * feat_dim).map(|_| rng.f32() - 0.5).collect();
-    for _ in 0..iters {
+    // untuned reference output — every tuned swap below must stay
+    // bit-for-bit identical to this (the tuner's core contract)
+    let baseline: Vec<u32> = if tune_every > 0 {
+        spmm_block_level_parallel(&plan, &x, feat_dim, &pool).iter().map(|v| v.to_bits()).collect()
+    } else {
+        Vec::new()
+    };
+    let tuner = accel_gcn::tune::PlanTuner::default();
+    let mut swaps = 0usize;
+    for i in 0..iters {
         let _span = reg.span("profile/spmm");
         let y = spmm_block_level_parallel(&plan, &x, feat_dim, &pool);
         drop(y);
+        if tune_every > 0 && (i + 1) % tune_every == 0 {
+            if let Some(tuned) = tuner.maybe_tune(reg, &plan, threads) {
+                plan = tuned;
+                swaps += 1;
+                reg.counter("tune.swaps").inc();
+                // fresh measurement window so the next fit (and the
+                // final shard table) reflects the tuned layout
+                reg.reset_shards();
+            }
+        }
+    }
+    if tune_every > 0 {
+        let tuned_bits: Vec<u32> = spmm_block_level_parallel(&plan, &x, feat_dim, &pool)
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        anyhow::ensure!(
+            tuned_bits == baseline,
+            "tuned plan output diverged bit-for-bit from the untuned plan"
+        );
+        match &plan.tuned {
+            Some(t) => {
+                println!(
+                    "tuning: {swaps} swap(s); cost-model imbalance static {:.3} -> tuned {:.3} \
+                     (crossover deg {}); output bit-identical to untuned: true",
+                    t.predicted_static_imbalance, t.predicted_tuned_imbalance, t.crossover
+                );
+                anyhow::ensure!(
+                    t.predicted_tuned_imbalance <= t.predicted_static_imbalance * (1.0 + 1e-9),
+                    "tuned imbalance {:.3} exceeds static {:.3}",
+                    t.predicted_tuned_imbalance,
+                    t.predicted_static_imbalance
+                );
+            }
+            None => println!(
+                "tuning: tuner declined every window (already balanced within tolerance); \
+                 output bit-identical to untuned: true"
+            ),
+        }
     }
     if train_steps > 0 {
         // no wrapper span here: the trainer opens its own `train_step`
@@ -655,6 +756,7 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
             steps: train_steps,
             threads,
             seed,
+            tune_every,
             ..TrainConfig::default()
         };
         let mut trainer = Trainer::new(&adj, cfg)?;
@@ -681,11 +783,51 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
         write_metrics_snapshot(path, None)?;
         println!("\nmetrics snapshot written to {path}");
     }
+    if let Some(path) = args.get("trace-out") {
+        write_trace_snapshot(path)?;
+        println!("trace timeline written to {path} (load in Perfetto / chrome://tracing)");
+    }
+    Ok(())
+}
+
+/// Diff two `BENCH_*.json` reports ([`harness::compare`]): print the
+/// per-metric speedup table and exit nonzero if any direction-aware
+/// metric regresses beyond `--max-regress` percent.
+fn cmd_bench_compare(rest: &[String]) -> Result<()> {
+    use accel_gcn::util::json::Json;
+    let args = Args::parse(rest, &["max-regress"], &[])?;
+    let files = args.positional();
+    anyhow::ensure!(
+        files.len() == 2,
+        "usage: accel-gcn bench-compare OLD.json NEW.json [--max-regress PCT]"
+    );
+    let max_regress = args.f64_or("max-regress", 5.0)?;
+    anyhow::ensure!(
+        max_regress.is_finite() && max_regress >= 0.0,
+        "--max-regress must be ≥ 0, got {max_regress}"
+    );
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        Json::parse(&text).with_context(|| format!("parse {path}"))
+    };
+    let (old, new) = (read(&files[0])?, read(&files[1])?);
+    let r = harness::compare::compare(&old, &new, max_regress);
+    print!("{}", r.render());
+    let regressed = r.regressions().len();
+    anyhow::ensure!(
+        regressed == 0,
+        "{regressed} metric(s) regressed beyond {max_regress}% (old {}, new {})",
+        files[0],
+        files[1]
+    );
+    println!("bench-compare: no regressions beyond {max_regress:.1}%");
     Ok(())
 }
 
 /// Schema-check metrics snapshot files (CI's validator for the JSON
-/// emitted by `profile --json` and `serve-native --metrics-out`).
+/// emitted by `profile --json` and `serve-native --metrics-out`) and
+/// Chrome trace-event timelines (`--trace-out`); the two formats are
+/// told apart by the `traceEvents` key.
 fn cmd_validate_metrics(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[], &[])?;
     let files = args.positional();
@@ -694,8 +836,14 @@ fn cmd_validate_metrics(rest: &[String]) -> Result<()> {
         let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
         let doc = accel_gcn::util::json::Json::parse(&text)
             .with_context(|| format!("parse {path}"))?;
-        accel_gcn::obs::validate_snapshot(&doc).with_context(|| format!("validate {path}"))?;
-        println!("{path}: OK ({})", accel_gcn::obs::SCHEMA_VERSION);
+        if doc.get("traceEvents").is_some() {
+            accel_gcn::obs::validate_trace(&doc).with_context(|| format!("validate {path}"))?;
+            println!("{path}: OK ({})", accel_gcn::obs::TRACE_SCHEMA_VERSION);
+        } else {
+            accel_gcn::obs::validate_snapshot(&doc)
+                .with_context(|| format!("validate {path}"))?;
+            println!("{path}: OK ({})", accel_gcn::obs::SCHEMA_VERSION);
+        }
     }
     Ok(())
 }

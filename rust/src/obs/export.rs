@@ -14,6 +14,11 @@ use std::path::Path;
 /// documents. Bump on any breaking schema change.
 pub const SCHEMA_VERSION: &str = "accel-gcn-metrics/v1";
 
+/// Version tag of [`Registry::export_trace`](super::Registry::export_trace)
+/// documents (`--trace-out`). The payload itself is standard Chrome
+/// trace-event JSON; this tag only marks our envelope.
+pub const TRACE_SCHEMA_VERSION: &str = "accel-gcn-trace/v1";
+
 /// Run metadata embedded in every `BENCH_*.json` and metrics snapshot:
 /// `{git_commit, timestamp_utc, threads, simd, schema}`.
 pub fn run_metadata() -> Json {
@@ -127,6 +132,53 @@ pub fn validate_snapshot(doc: &Json) -> Result<()> {
     Ok(())
 }
 
+/// The CI validator for exported trace timelines (`--trace-out`
+/// files): the document must be the Chrome trace-event object form —
+/// a `traceEvents` array whose entries carry the keys the viewers
+/// require (`name`/`cat`/`ph`/`pid`/`tid`, a numeric `ts`, and a
+/// numeric `dur` for complete events). `validate-metrics` routes any
+/// document containing `traceEvents` here instead of
+/// [`validate_snapshot`].
+pub fn validate_trace(doc: &Json) -> Result<()> {
+    if let Some(schema) = doc.get("schema").and_then(Json::as_str) {
+        if schema != TRACE_SCHEMA_VERSION {
+            bail!("trace schema `{schema}` is not the supported `{TRACE_SCHEMA_VERSION}`");
+        }
+    }
+    let events = doc.req_arr("traceEvents").context("trace is missing `traceEvents`")?;
+    if events.is_empty() {
+        bail!("traceEvents is empty — nothing was recorded");
+    }
+    let mut complete = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ctx = || format!("traceEvents[{i}]");
+        e.req_str("name").with_context(ctx)?;
+        e.req_str("cat").with_context(ctx)?;
+        e.req_f64("pid").with_context(ctx)?;
+        e.req_f64("tid").with_context(ctx)?;
+        let ph = e.req_str("ph").with_context(ctx)?;
+        match ph {
+            "X" => {
+                complete += 1;
+                let ts = e.req_f64("ts").with_context(ctx)?;
+                let dur = e.req_f64("dur").with_context(ctx)?;
+                if ts < 0.0 || dur < 0.0 {
+                    bail!("traceEvents[{i}]: negative ts/dur ({ts}, {dur})");
+                }
+            }
+            "i" => {
+                e.req_f64("ts").with_context(ctx)?;
+            }
+            "M" => {} // metadata (process/thread names) — no timestamp required
+            other => bail!("traceEvents[{i}]: unsupported phase `{other}`"),
+        }
+    }
+    if complete == 0 {
+        bail!("trace has no complete ('X') events — no durations were recorded");
+    }
+    Ok(())
+}
+
 fn validate_histogram_map(map: &Json, what: &str) -> Result<()> {
     let Json::Obj(entries) = map else {
         bail!("`{what}` must be an object");
@@ -198,5 +250,39 @@ mod tests {
         // inverted quantiles must fail
         let inverted = Json::parse(&text.replace(r#""p50": 1.0"#, r#""p50": 3.0"#)).unwrap();
         assert!(validate_snapshot(&inverted).is_err());
+    }
+
+    #[test]
+    fn trace_validator_accepts_chrome_shape_and_rejects_broken() {
+        let good = r#"{
+          "traceEvents": [
+            {"name": "process_name", "cat": "__metadata", "ph": "M", "pid": 1, "tid": 0,
+             "args": {"name": "timeline"}},
+            {"name": "serve_round/fuse", "cat": "span", "ph": "X", "pid": 1, "tid": 3,
+             "ts": 12.5, "dur": 80.0, "args": {"traces": [1, 2]}},
+            {"name": "plan_tune", "cat": "tune", "ph": "i", "pid": 1, "tid": 3, "ts": 100.0, "s": "p"}
+          ]
+        }"#;
+        validate_trace(&Json::parse(good).unwrap()).expect("well-formed trace validates");
+        // empty event list
+        assert!(validate_trace(&Json::parse(r#"{"traceEvents": []}"#).unwrap()).is_err());
+        // not a trace document at all
+        assert!(validate_trace(&Json::obj()).is_err());
+        // complete event missing `dur`
+        let no_dur = good.replace(r#""dur": 80.0, "#, "");
+        assert!(validate_trace(&Json::parse(&no_dur).unwrap()).is_err());
+        // unsupported phase letter
+        let bad_ph = good.replace(r#""ph": "i""#, r#""ph": "Q""#);
+        assert!(validate_trace(&Json::parse(&bad_ph).unwrap()).is_err());
+        // instants alone are not a usable timeline
+        let only_instant = r#"{"traceEvents": [
+            {"name": "m", "cat": "t", "ph": "i", "pid": 1, "tid": 1, "ts": 1.0}
+        ]}"#;
+        assert!(validate_trace(&Json::parse(only_instant).unwrap()).is_err());
+        // wrong envelope schema tag
+        let wrong_schema = r#"{"schema": "bogus/v9", "traceEvents": [
+            {"name": "a", "cat": "s", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0, "dur": 1.0}
+        ]}"#;
+        assert!(validate_trace(&Json::parse(wrong_schema).unwrap()).is_err());
     }
 }

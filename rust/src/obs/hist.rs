@@ -221,6 +221,54 @@ mod tests {
         assert_eq!(s.p99, 1e30, "overflow quantile reports the exact max");
     }
 
+    /// Exact-bucket-edge satellite: a value exactly on a bucket
+    /// boundary (`LO · 2^(k/32)`) must respect the documented one-sided
+    /// bound `v ≤ q̂ ≤ v·(1 + ε)` — the edge cases where `log2`
+    /// rounding could misplace the sample by one bucket.
+    #[test]
+    fn quantile_at_exact_bucket_edges() {
+        for k in [1usize, BUCKETS_PER_OCTAVE, BUCKETS_PER_OCTAVE * 10, N_LOG - 1] {
+            let v = LO * (k as f64 / BUCKETS_PER_OCTAVE as f64).exp2();
+            let h = Histogram::new();
+            h.record(v);
+            let got = h.quantile(0.5);
+            assert!(
+                got >= v - 1e-24 && got <= v * (1.0 + QUANTILE_REL_ERROR) + 1e-24,
+                "edge k={k}: value {v} reported {got}"
+            );
+            assert_eq!(h.max(), v, "max is exact at edges");
+        }
+        // the LO edge itself is the underflow boundary: `v > LO` is
+        // false, so it lands underflow and reports exactly LO
+        let h = Histogram::new();
+        h.record(LO);
+        assert_eq!(h.quantile(0.5), LO);
+    }
+
+    /// Single-sample satellite: every quantile of a one-sample
+    /// distribution is that sample (within the bucket bound), and the
+    /// snapshot's exact fields are exactly it.
+    #[test]
+    fn single_sample_quantiles() {
+        let v = 3.7e-4;
+        let h = Histogram::new();
+        h.record(v);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.max, v);
+        assert_eq!(s.sum, v);
+        assert_eq!(s.mean, v);
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            let got = h.quantile(q);
+            assert!(
+                got >= v - 1e-18 && got <= v * (1.0 + QUANTILE_REL_ERROR),
+                "q={q}: reported {got} for single sample {v}"
+            );
+        }
+        // quantiles clamp to the exact max, so p=1.0 is exact
+        assert_eq!(h.quantile(1.0), h.quantile(1.0).min(v));
+    }
+
     #[test]
     fn concurrent_recording_conserves_totals() {
         let h = Arc::new(Histogram::new());

@@ -13,8 +13,13 @@
 //! * the per-shard execution timeline — one [`ShardEvent`] per shard
 //!   per observed SpMM in a bounded [`EventRing`], plus running
 //!   per-shard aggregates and a max/mean busy-ratio histogram
-//!   (`spmm.shard_imbalance`), the input signal for the planned
-//!   AWB-GCN-style `PlanTuner` (ROADMAP).
+//!   (`spmm.shard_imbalance`), the input signal for the AWB-GCN-style
+//!   [`crate::tune::PlanTuner`];
+//! * the wall-clock trace timeline — every recording [`Span`] also
+//!   lands a [`TraceEvent`] (begin + duration against one process
+//!   epoch) in a bounded [`TraceRing`]; [`Registry::export_trace`]
+//!   renders spans, per-shard SpMM lanes, and tuning decisions as
+//!   Chrome trace-event JSON (`chrome://tracing` / Perfetto).
 //!
 //! ## Cost discipline
 //!
@@ -39,11 +44,16 @@ pub mod export;
 pub mod hist;
 pub mod ring;
 pub mod span;
+pub mod trace;
 
-pub use export::{git_commit, iso8601_utc_now, run_metadata, validate_snapshot, SCHEMA_VERSION};
+pub use export::{
+    git_commit, iso8601_utc_now, run_metadata, validate_snapshot, validate_trace,
+    SCHEMA_VERSION, TRACE_SCHEMA_VERSION,
+};
 pub use hist::{HistSnapshot, Histogram, QUANTILE_REL_ERROR};
 pub use ring::{EventRing, ShardEvent};
 pub use span::{render_span_tree, Span, SpanStat};
+pub use trace::{epoch_now_ns, trace_tid, TraceEvent, TraceRing};
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -114,6 +124,9 @@ pub struct ShardSample {
     pub rows: u64,
     /// Nonzeros traversed.
     pub nnz: u64,
+    /// Wall-clock begin of the shard job, ns since the process trace
+    /// epoch ([`epoch_now_ns`]); 0 when the producer did not stamp it.
+    pub start_ns: u64,
     /// Wall time of the shard job, nanoseconds.
     pub busy_ns: u64,
     /// Blocks run through the dense tiled kernel (split chunks
@@ -121,6 +134,10 @@ pub struct ShardSample {
     pub dense_blocks: u64,
     /// Blocks run through the sparse gather kernel.
     pub sparse_blocks: u64,
+    /// Nonzeros traversed by the dense tiled kernel.
+    pub dense_nnz: u64,
+    /// Nonzeros traversed by the sparse gather kernel.
+    pub sparse_nnz: u64,
 }
 
 /// Running totals for one shard index across every observed SpMM.
@@ -132,6 +149,8 @@ pub struct ShardAgg {
     pub busy_ns: u64,
     pub dense_blocks: u64,
     pub sparse_blocks: u64,
+    pub dense_nnz: u64,
+    pub sparse_nnz: u64,
 }
 
 /// Events the snapshot embeds from the ring (the full ring stays
@@ -139,6 +158,9 @@ pub struct ShardAgg {
 const SNAPSHOT_EVENT_TAIL: usize = 128;
 /// Ring capacity of the global registry and [`Registry::new`].
 const DEFAULT_RING_CAPACITY: usize = 4096;
+/// Trace-event ring capacity (spans are coarser than shard events, but
+/// serve rounds emit several each, so keep a deep window).
+const DEFAULT_TRACE_CAPACITY: usize = 16384;
 
 /// The telemetry sink; see the module docs. Constructible for tests and
 /// embedded use, with one process-global instance behind
@@ -152,7 +174,9 @@ pub struct Registry {
     spans: Mutex<BTreeMap<String, SpanStat>>,
     shards: Mutex<Vec<ShardAgg>>,
     ring: EventRing,
+    traces: TraceRing,
     spmm_seq: AtomicU64,
+    trace_ids: AtomicU64,
 }
 
 impl Default for Registry {
@@ -172,7 +196,9 @@ impl Registry {
             spans: Mutex::new(BTreeMap::new()),
             shards: Mutex::new(Vec::new()),
             ring: EventRing::new(DEFAULT_RING_CAPACITY),
+            traces: TraceRing::new(DEFAULT_TRACE_CAPACITY),
             spmm_seq: AtomicU64::new(0),
+            trace_ids: AtomicU64::new(0),
         }
     }
 
@@ -235,6 +261,54 @@ impl Registry {
         self.spans.lock().unwrap().entry(path.to_string()).or_default().merge_ns(ns);
     }
 
+    /// [`Registry::record_span_ns`] plus a timeline entry: for
+    /// cross-thread durations whose wall-clock begin is known (e.g.
+    /// queue wait measured from enqueue on another thread).
+    pub fn record_span_interval(&self, path: &str, begin_ns: u64, dur_ns: u64, args: Option<Json>) {
+        if !self.enabled() {
+            return;
+        }
+        self.spans.lock().unwrap().entry(path.to_string()).or_default().merge_ns(dur_ns);
+        self.traces.push(TraceEvent {
+            name: path.to_string(),
+            cat: "span".to_string(),
+            ph: 'X',
+            begin_ns,
+            dur_ns,
+            tid: trace::trace_tid(),
+            args,
+        });
+    }
+
+    /// Append one event to the trace timeline (gated on
+    /// [`Registry::enabled`], like every event path).
+    pub fn push_trace_event(&self, ev: TraceEvent) {
+        if !self.enabled() {
+            return;
+        }
+        self.traces.push(ev);
+    }
+
+    /// An instant marker (tuning decisions, epoch swaps) with payload.
+    pub fn record_instant(&self, name: &str, cat: &str, args: Json) {
+        if !self.enabled() {
+            return;
+        }
+        self.traces.push(TraceEvent::instant(name, cat).with_args(args));
+    }
+
+    /// The newest `limit` timeline events, oldest first.
+    pub fn trace_events(&self, limit: usize) -> Vec<TraceEvent> {
+        self.traces.tail(limit)
+    }
+
+    /// A fresh, process-unique request trace id (never 0 — 0 means
+    /// "untraced"). Allocated by `Server::submit` and threaded through
+    /// fuse/execute/split span annotations.
+    pub fn next_trace_id(&self) -> u64 {
+        self.trace_ids.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
     /// All span paths with their aggregates, lexicographic (parents
     /// immediately before children).
     pub fn span_stats(&self) -> Vec<(String, SpanStat)> {
@@ -263,6 +337,8 @@ impl Registry {
                 a.busy_ns += s.busy_ns;
                 a.dense_blocks += s.dense_blocks;
                 a.sparse_blocks += s.sparse_blocks;
+                a.dense_nnz += s.dense_nnz;
+                a.sparse_nnz += s.sparse_nnz;
             }
         }
         let busy = self.histogram("spmm.shard_busy");
@@ -273,9 +349,12 @@ impl Registry {
                 shard: i as u32,
                 rows: s.rows,
                 nnz: s.nnz,
+                start_ns: s.start_ns,
                 busy_ns: s.busy_ns,
                 dense_blocks: s.dense_blocks,
                 sparse_blocks: s.sparse_blocks,
+                dense_nnz: s.dense_nnz,
+                sparse_nnz: s.sparse_nnz,
             });
             busy.record(s.busy_ns as f64 * 1e-9);
         }
@@ -292,6 +371,14 @@ impl Registry {
     /// Per-shard running totals (index == shard index).
     pub fn shard_aggregates(&self) -> Vec<ShardAgg> {
         self.shards.lock().unwrap().clone()
+    }
+
+    /// Clear the per-shard running totals (the event ring and
+    /// histograms are untouched). The tuner calls this after a plan
+    /// swap so the next warmup window measures only the new sharding;
+    /// the tuning smoke calls it between its untuned/tuned windows.
+    pub fn reset_shards(&self) {
+        self.shards.lock().unwrap().clear();
     }
 
     /// The newest `limit` timeline events, oldest first.
@@ -352,6 +439,8 @@ impl Registry {
                 o.set("busy_ns", a.busy_ns);
                 o.set("dense_blocks", a.dense_blocks);
                 o.set("sparse_blocks", a.sparse_blocks);
+                o.set("dense_nnz", a.dense_nnz);
+                o.set("sparse_nnz", a.sparse_nnz);
                 o
             })
             .collect();
@@ -366,15 +455,81 @@ impl Registry {
                 o.set("shard", e.shard);
                 o.set("rows", e.rows);
                 o.set("nnz", e.nnz);
+                o.set("start_ns", e.start_ns);
                 o.set("busy_ns", e.busy_ns);
                 o.set("dense_blocks", e.dense_blocks);
                 o.set("sparse_blocks", e.sparse_blocks);
+                o.set("dense_nnz", e.dense_nnz);
+                o.set("sparse_nnz", e.sparse_nnz);
                 o
             })
             .collect();
         shards.set("events", events);
         shards.set("events_recorded", self.ring.total_recorded());
         doc.set("shards", shards);
+        doc
+    }
+
+    /// Everything on the timeline as one Chrome trace-event JSON
+    /// document (the `{"traceEvents": [...]}` object form —
+    /// `chrome://tracing` and Perfetto both load it). Lanes: pid 1 is
+    /// the span/tuning timeline (tid = dense per-thread lane id), pid 2
+    /// is the per-shard SpMM timeline (tid = shard index), synthesized
+    /// from retained [`ShardEvent`]s whose producers stamped
+    /// `start_ns`. Validated by [`validate_trace`] / the
+    /// `validate-metrics` subcommand.
+    pub fn export_trace(&self) -> Json {
+        fn base(name: &str, cat: &str, ph: &str, pid: usize, tid: u64) -> Json {
+            let mut o = Json::obj();
+            o.set("name", name).set("cat", cat).set("ph", ph);
+            o.set("pid", pid).set("tid", tid);
+            o
+        }
+        let mut events: Vec<Json> = Vec::new();
+        for (pid, pname) in [(1usize, "timeline"), (2usize, "spmm shards")] {
+            let mut meta = base("process_name", "__metadata", "M", pid, 0);
+            meta.set("ts", 0.0);
+            let mut args = Json::obj();
+            args.set("name", pname);
+            meta.set("args", args);
+            events.push(meta);
+        }
+        for ev in self.traces.tail(usize::MAX) {
+            let mut o = base(&ev.name, &ev.cat, &ev.ph.to_string(), 1, ev.tid);
+            o.set("ts", ev.begin_ns as f64 / 1e3);
+            if ev.ph == 'X' {
+                o.set("dur", ev.dur_ns as f64 / 1e3);
+            } else {
+                o.set("s", "p"); // process-scoped instant
+            }
+            if let Some(args) = &ev.args {
+                o.set("args", args.clone());
+            }
+            events.push(o);
+        }
+        for e in self.shard_events(usize::MAX) {
+            if e.start_ns == 0 {
+                continue; // producer predates wall-clock capture
+            }
+            let mut o = base(&format!("spmm#{}", e.spmm), "shard", "X", 2, e.shard as u64);
+            o.set("ts", e.start_ns as f64 / 1e3);
+            o.set("dur", e.busy_ns as f64 / 1e3);
+            let mut args = Json::obj();
+            args.set("seq", e.seq)
+                .set("rows", e.rows)
+                .set("nnz", e.nnz)
+                .set("dense_blocks", e.dense_blocks)
+                .set("sparse_blocks", e.sparse_blocks)
+                .set("dense_nnz", e.dense_nnz)
+                .set("sparse_nnz", e.sparse_nnz);
+            o.set("args", args);
+            events.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("schema", TRACE_SCHEMA_VERSION);
+        doc.set("meta", run_metadata());
+        doc.set("displayTimeUnit", "ms");
+        doc.set("traceEvents", events);
         doc
     }
 
@@ -520,12 +675,48 @@ mod tests {
         let reg = Registry::new();
         reg.counter("spmm.executions"); // exists even before traffic
         reg.record_spmm_shards(&[
-            ShardSample { rows: 10, nnz: 100, busy_ns: 5_000, dense_blocks: 3, sparse_blocks: 1 },
-            ShardSample { rows: 12, nnz: 90, busy_ns: 7_500, dense_blocks: 2, sparse_blocks: 2 },
+            ShardSample {
+                rows: 10,
+                nnz: 100,
+                busy_ns: 5_000,
+                dense_blocks: 3,
+                sparse_blocks: 1,
+                dense_nnz: 80,
+                sparse_nnz: 20,
+                ..Default::default()
+            },
+            ShardSample {
+                rows: 12,
+                nnz: 90,
+                busy_ns: 7_500,
+                dense_blocks: 2,
+                sparse_blocks: 2,
+                dense_nnz: 60,
+                sparse_nnz: 30,
+                ..Default::default()
+            },
         ]);
         reg.record_spmm_shards(&[
-            ShardSample { rows: 10, nnz: 100, busy_ns: 6_000, dense_blocks: 3, sparse_blocks: 1 },
-            ShardSample { rows: 12, nnz: 90, busy_ns: 6_100, dense_blocks: 2, sparse_blocks: 2 },
+            ShardSample {
+                rows: 10,
+                nnz: 100,
+                busy_ns: 6_000,
+                dense_blocks: 3,
+                sparse_blocks: 1,
+                dense_nnz: 80,
+                sparse_nnz: 20,
+                ..Default::default()
+            },
+            ShardSample {
+                rows: 12,
+                nnz: 90,
+                busy_ns: 6_100,
+                dense_blocks: 2,
+                sparse_blocks: 2,
+                dense_nnz: 60,
+                sparse_nnz: 30,
+                ..Default::default()
+            },
         ]);
         {
             let _s = reg.span("profile");
@@ -539,6 +730,8 @@ mod tests {
         assert_eq!(per.len(), 2);
         assert_eq!(per[0].req_f64("busy_ns").unwrap(), 11_000.0);
         assert_eq!(per[1].req_f64("nnz").unwrap(), 180.0);
+        assert_eq!(per[0].req_f64("dense_nnz").unwrap(), 160.0);
+        assert_eq!(per[1].req_f64("sparse_nnz").unwrap(), 60.0);
         assert_eq!(shards.req_arr("events").unwrap().len(), 4);
         // imbalance: per-dispatch max/mean ratios were recorded
         let imb = back.get("histograms").unwrap().get("spmm.shard_imbalance").unwrap();
@@ -548,14 +741,83 @@ mod tests {
         assert!(reg.render_shard_table().contains("busy ms"));
     }
 
+    /// Trace-export round-trip (obs-edges satellite): spans, a
+    /// cross-thread interval, shard lanes, and a tuning instant all
+    /// land in one document that re-parses and passes
+    /// [`validate_trace`] — the same check `validate-metrics` runs on
+    /// `--trace-out` files.
+    #[test]
+    fn trace_export_roundtrips_through_validation() {
+        let reg = Registry::new();
+        {
+            let mut fuse = reg.span("round/fuse");
+            fuse.annotate("traces", vec![1u64, 2, 3]);
+        }
+        let t0 = epoch_now_ns();
+        reg.record_span_interval("round/queue_wait", t0, 1_500, None);
+        reg.record_spmm_shards(&[
+            ShardSample { nnz: 50, start_ns: epoch_now_ns(), busy_ns: 900, ..Default::default() },
+            ShardSample { nnz: 60, start_ns: epoch_now_ns(), busy_ns: 1_100, ..Default::default() },
+        ]);
+        let mut tune = Json::obj();
+        tune.set("old_imbalance", 1.8).set("new_imbalance", 1.1).set("boundaries_moved", 3usize);
+        reg.record_instant("plan_tune", "tune", tune);
+
+        let text = reg.export_trace().to_pretty();
+        let back = Json::parse(&text).expect("trace is parseable JSON");
+        validate_trace(&back).expect("trace validates against the Chrome trace-event shape");
+        let events = back.req_arr("traceEvents").unwrap();
+        // 2 metadata + fuse span + interval + 2 shard lanes + 1 instant
+        assert_eq!(events.len(), 7);
+        let fuse = events
+            .iter()
+            .find(|e| e.req_str("name").map(|n| n == "round/fuse").unwrap_or(false))
+            .expect("span event present");
+        assert_eq!(fuse.get("args").unwrap().req_arr("traces").unwrap().len(), 3);
+        let shard_lanes = events
+            .iter()
+            .filter(|e| e.req_str("cat").map(|c| c == "shard").unwrap_or(false))
+            .count();
+        assert_eq!(shard_lanes, 2, "one lane event per stamped shard");
+        assert!(
+            events.iter().any(|e| e.req_str("cat").map(|c| c == "tune").unwrap_or(false)),
+            "tuning instant exported"
+        );
+    }
+
+    #[test]
+    fn reset_shards_clears_aggregates_only() {
+        let reg = Registry::new();
+        reg.record_spmm_shards(&[ShardSample { nnz: 10, busy_ns: 100, ..Default::default() }]);
+        assert_eq!(reg.shard_aggregates().len(), 1);
+        let events_before = reg.ring.total_recorded();
+        reg.reset_shards();
+        assert!(reg.shard_aggregates().is_empty(), "aggregates cleared");
+        assert_eq!(reg.ring.total_recorded(), events_before, "timeline untouched");
+        // next window accumulates from zero
+        reg.record_spmm_shards(&[ShardSample { nnz: 7, busy_ns: 50, ..Default::default() }]);
+        assert_eq!(reg.shard_aggregates()[0].nnz, 7);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let reg = Registry::new();
+        let a = reg.next_trace_id();
+        let b = reg.next_trace_id();
+        assert_ne!(a, 0, "0 is reserved for untraced");
+        assert!(b > a, "monotone allocation");
+    }
+
     #[test]
     fn disabled_registry_drops_events_not_counters() {
         let reg = Registry::new();
         reg.set_enabled(false);
         reg.record_spmm_shards(&[ShardSample { busy_ns: 1, ..Default::default() }]);
         reg.record_span_ns("x", 5);
+        reg.push_trace_event(TraceEvent::instant("x", "span"));
         assert!(reg.shard_aggregates().is_empty());
         assert!(reg.span_stats().is_empty());
+        assert!(reg.trace_events(usize::MAX).is_empty());
         // counters handed out by Arc still count — the flag gates the
         // event/span paths the hot loops guard on
         let c = reg.counter("still.works");

@@ -22,6 +22,10 @@ pub struct ShardEvent {
     pub rows: u64,
     /// Nonzeros the shard traversed.
     pub nnz: u64,
+    /// Wall-clock begin of the shard's job, nanoseconds since the
+    /// process trace epoch ([`super::epoch_now_ns`]); 0 when the
+    /// producer predates wall-clock capture.
+    pub start_ns: u64,
     /// Wall time the shard's job ran, nanoseconds.
     pub busy_ns: u64,
     /// Blocks executed through the dense tiled kernel (split-row
@@ -29,6 +33,10 @@ pub struct ShardEvent {
     pub dense_blocks: u64,
     /// Blocks executed through the sparse gather kernel.
     pub sparse_blocks: u64,
+    /// Nonzeros traversed by the dense tiled kernel.
+    pub dense_nnz: u64,
+    /// Nonzeros traversed by the sparse gather kernel.
+    pub sparse_nnz: u64,
 }
 
 /// Bounded ring of [`ShardEvent`]s.
@@ -99,5 +107,48 @@ mod tests {
         let last2 = ring.tail(2);
         assert_eq!(last2.len(), 2);
         assert_eq!(last2[0].seq, 8);
+    }
+
+    /// Wraparound under concurrent writers: sequence numbers stay
+    /// gap-free, the retained window is exactly `capacity`, and the
+    /// tail is the true newest suffix (sorted, contiguous, ending at
+    /// `total - 1`).
+    #[test]
+    fn concurrent_writers_wrap_without_gaps() {
+        use std::sync::Arc;
+        let cap = 64;
+        let ring = Arc::new(EventRing::new(cap));
+        let writers = 8;
+        let per_writer = 200u64; // 1600 events through a 64-slot ring
+        let handles: Vec<_> = (0..writers)
+            .map(|w| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..per_writer {
+                        ring.push(ShardEvent {
+                            spmm: w as u64 * per_writer + i,
+                            shard: w as u32,
+                            ..Default::default()
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = writers as u64 * per_writer;
+        assert_eq!(ring.total_recorded(), total, "every push counted once");
+        let tail = ring.tail(usize::MAX);
+        assert_eq!(tail.len(), cap, "exactly capacity events retained");
+        for (k, pair) in tail.windows(2).enumerate() {
+            assert_eq!(
+                pair[1].seq,
+                pair[0].seq + 1,
+                "retained window is seq-contiguous at offset {k}"
+            );
+        }
+        assert_eq!(tail.last().unwrap().seq, total - 1, "newest event is the last push");
+        assert_eq!(tail.first().unwrap().seq, total - cap as u64);
     }
 }

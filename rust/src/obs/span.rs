@@ -8,8 +8,17 @@
 //! around. When the registry is disabled, `span()` is a single relaxed
 //! atomic load and returns an inert guard: no clock read, no allocation,
 //! no thread-local touch.
+//!
+//! Recording spans additionally capture a wall-clock begin against the
+//! process trace epoch and, on drop, push one [`TraceEvent`] into the
+//! registry's trace ring — so the same guard feeds both the aggregated
+//! span table and the exported Chrome timeline. [`Span::annotate`]
+//! attaches structured payload (e.g. the trace ids fused into a serve
+//! batch) to that timeline event.
 
+use super::trace::{epoch_now_ns, trace_tid, TraceEvent};
 use super::Registry;
+use crate::util::json::Json;
 use std::cell::RefCell;
 use std::time::Instant;
 
@@ -40,7 +49,17 @@ impl SpanStat {
 #[must_use = "a span measures until dropped — bind it to a named `_guard`"]
 pub struct Span<'a> {
     /// `None` when the registry was disabled at entry.
-    inner: Option<(&'a Registry, Instant)>,
+    inner: Option<SpanInner<'a>>,
+}
+
+struct SpanInner<'a> {
+    reg: &'a Registry,
+    start: Instant,
+    /// Wall-clock begin against the process trace epoch.
+    begin_ns: u64,
+    /// Payload attached via [`Span::annotate`], forwarded to the
+    /// timeline event.
+    args: Option<Json>,
 }
 
 impl<'a> Span<'a> {
@@ -49,26 +68,44 @@ impl<'a> Span<'a> {
             return Span { inner: None };
         }
         SPAN_STACK.with(|s| s.borrow_mut().push(name.to_string()));
-        Span { inner: Some((reg, Instant::now())) }
+        let begin_ns = epoch_now_ns();
+        Span { inner: Some(SpanInner { reg, start: Instant::now(), begin_ns, args: None }) }
     }
 
     /// Whether this guard is actually recording.
     pub fn is_recording(&self) -> bool {
         self.inner.is_some()
     }
+
+    /// Attach one `key: value` pair to the trace-event this span emits
+    /// on drop. No-op when the span is inert; repeated keys overwrite.
+    pub fn annotate(&mut self, key: &str, value: impl Into<Json>) {
+        if let Some(inner) = &mut self.inner {
+            inner.args.get_or_insert_with(Json::obj).set(key, value);
+        }
+    }
 }
 
 impl Drop for Span<'_> {
     fn drop(&mut self) {
-        if let Some((reg, start)) = self.inner.take() {
-            let ns = start.elapsed().as_nanos() as u64;
+        if let Some(inner) = self.inner.take() {
+            let ns = inner.start.elapsed().as_nanos() as u64;
             let path = SPAN_STACK.with(|s| {
                 let mut stack = s.borrow_mut();
                 let path = stack.join("/");
                 stack.pop();
                 path
             });
-            reg.record_span_ns(&path, ns);
+            inner.reg.record_span_ns(&path, ns);
+            inner.reg.push_trace_event(TraceEvent {
+                name: path,
+                cat: "span".to_string(),
+                ph: 'X',
+                begin_ns: inner.begin_ns,
+                dur_ns: ns,
+                tid: trace_tid(),
+                args: inner.args,
+            });
         }
     }
 }
@@ -122,6 +159,23 @@ mod tests {
         assert_eq!(step.1.count, 2, "two top-level step spans");
         assert!(step.1.total_ns >= step.1.max_ns);
         assert!(render_span_tree(&stats).contains("spmm"));
+    }
+
+    #[test]
+    fn spans_emit_trace_events_with_annotations() {
+        let reg = Registry::new();
+        {
+            let mut s = reg.span("fuse");
+            s.annotate("traces", vec![7u64, 8, 9]);
+            s.annotate("width", 64u64);
+        }
+        let evs = reg.trace_events(usize::MAX);
+        assert_eq!(evs.len(), 1, "one timeline event per recording span");
+        assert_eq!(evs[0].name, "fuse");
+        assert_eq!(evs[0].ph, 'X');
+        let args = evs[0].args.as_ref().expect("annotations attached");
+        assert_eq!(args.req_arr("traces").unwrap().len(), 3);
+        assert_eq!(args.req_usize("width").unwrap(), 64);
     }
 
     #[test]

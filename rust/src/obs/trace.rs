@@ -1,0 +1,173 @@
+//! Wall-clock trace timeline: the process trace epoch, per-thread lane
+//! ids, and a bounded ring of [`TraceEvent`]s that
+//! [`Registry::export_trace`](super::Registry::export_trace) renders as
+//! Chrome trace-event JSON (loadable in `chrome://tracing` and
+//! Perfetto).
+//!
+//! The aggregated span table ([`super::span`]) answers "where does time
+//! go on average"; the trace ring answers "what happened *when*" —
+//! every span drop, every cross-thread interval, and every tuning
+//! decision lands here with a wall-clock begin relative to one shared
+//! process epoch, so lanes from different threads line up on a common
+//! axis. Per-shard SpMM lanes are not duplicated into this ring: the
+//! exporter synthesizes them from the [`ShardEvent`](super::ShardEvent)
+//! ring's `start_ns`/`busy_ns` at export time.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Nanoseconds since the process trace epoch. The epoch is pinned on
+/// first call (process-wide, monotonic), so every timestamp in one
+/// exported trace shares a single origin.
+pub fn epoch_now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Small dense lane id for the calling thread. `std::thread::ThreadId`
+/// is opaque; trace viewers want small stable integers per lane.
+pub fn trace_tid() -> u64 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// One timeline entry. `ph` follows the Chrome trace-event phase
+/// alphabet — only the subset the exporter emits: `'X'` (complete
+/// event, `dur_ns` meaningful) and `'i'` (instant event).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event name (span path, tuning decision, ...).
+    pub name: String,
+    /// Category: `"span"`, `"serve"`, `"tune"`, ... — filterable in
+    /// the viewer.
+    pub cat: String,
+    /// Chrome phase: `'X'` or `'i'`.
+    pub ph: char,
+    /// Wall-clock begin, ns since [`epoch_now_ns`]'s epoch.
+    pub begin_ns: u64,
+    /// Duration in ns (0 for instants).
+    pub dur_ns: u64,
+    /// Lane (thread) id, from [`trace_tid`].
+    pub tid: u64,
+    /// Optional structured payload (trace ids, tuning deltas, ...).
+    pub args: Option<Json>,
+}
+
+impl TraceEvent {
+    /// A complete ('X') event.
+    pub fn complete(name: &str, cat: &str, begin_ns: u64, dur_ns: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: 'X',
+            begin_ns,
+            dur_ns,
+            tid: trace_tid(),
+            args: None,
+        }
+    }
+
+    /// An instant ('i') event stamped now.
+    pub fn instant(name: &str, cat: &str) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: 'i',
+            begin_ns: epoch_now_ns(),
+            dur_ns: 0,
+            tid: trace_tid(),
+            args: None,
+        }
+    }
+
+    pub fn with_args(mut self, args: Json) -> TraceEvent {
+        self.args = Some(args);
+        self
+    }
+}
+
+/// Bounded ring of [`TraceEvent`]s: constant memory for a process that
+/// runs forever, newest-window semantics like
+/// [`EventRing`](super::EventRing).
+#[derive(Debug)]
+pub struct TraceRing {
+    capacity: usize,
+    inner: Mutex<TraceInner>,
+}
+
+#[derive(Debug, Default)]
+struct TraceInner {
+    total: u64,
+    buf: VecDeque<TraceEvent>,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing { capacity: capacity.max(1), inner: Mutex::new(TraceInner::default()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        let mut g = self.inner.lock().unwrap();
+        g.total += 1;
+        if g.buf.len() == self.capacity {
+            g.buf.pop_front();
+        }
+        g.buf.push_back(ev);
+    }
+
+    /// Events recorded so far (including evicted ones).
+    pub fn total_recorded(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// The retained timeline, oldest first, at most `limit` newest.
+    pub fn tail(&self, limit: usize) -> Vec<TraceEvent> {
+        let g = self.inner.lock().unwrap();
+        let skip = g.buf.len().saturating_sub(limit);
+        g.buf.iter().skip(skip).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_monotone_and_shared() {
+        let a = epoch_now_ns();
+        let b = epoch_now_ns();
+        assert!(b >= a, "one shared monotone epoch");
+    }
+
+    #[test]
+    fn tids_are_stable_per_thread_and_distinct_across() {
+        let here = trace_tid();
+        assert_eq!(here, trace_tid(), "stable within a thread");
+        let other = std::thread::spawn(trace_tid).join().unwrap();
+        assert_ne!(here, other, "distinct lanes across threads");
+    }
+
+    #[test]
+    fn ring_bounds_and_orders() {
+        let ring = TraceRing::new(3);
+        for i in 0..5u64 {
+            ring.push(TraceEvent::complete(&format!("e{i}"), "span", i * 10, 1));
+        }
+        assert_eq!(ring.total_recorded(), 5);
+        let tail = ring.tail(usize::MAX);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[0].name, "e2", "oldest retained after eviction");
+        assert_eq!(tail[2].name, "e4");
+        assert_eq!(ring.tail(1)[0].name, "e4");
+    }
+}

@@ -190,6 +190,19 @@ impl PlanCache {
         key
     }
 
+    /// Snapshot of every resident `(key, plan)` pair, in unspecified
+    /// order. The tuning loop enumerates these to re-cut each tenant's
+    /// shard boundaries against measured cost; LRU positions and
+    /// counters are untouched.
+    pub fn entries(&self) -> Vec<(GraphKey, Arc<SpmmPlan>)> {
+        self.plans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (*k, Arc::clone(&e.plan)))
+            .collect()
+    }
+
     /// Cached plan count.
     pub fn len(&self) -> usize {
         self.plans.lock().unwrap().len()

@@ -45,8 +45,8 @@ pub mod parallel;
 pub use cache::{GraphKey, PlanCache};
 pub use exec::{AdaptiveBlockLevel, BlockLevel, CsrReference, Executor, WarpLevel};
 pub use parallel::{
-    spmm_block_level_parallel, spmm_block_level_parallel_into,
+    shard_ranges_for_plan, spmm_block_level_parallel, spmm_block_level_parallel_into,
     spmm_block_level_parallel_into_with, spmm_block_level_parallel_scalar,
     spmm_block_level_parallel_with, ParallelBlockLevel,
 };
-pub use plan::{GraphFingerprint, KernelSchedule, SpmmPlan};
+pub use plan::{GraphFingerprint, KernelSchedule, SpmmPlan, TunedSharding};

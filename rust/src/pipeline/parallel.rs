@@ -21,12 +21,16 @@
 //!    permutation (`y[perm[sorted_row]]`), fusing the former
 //!    `unpermute_rows` pass into the store itself.
 //! 3. **Split rows** (`deg > deg_bound`) — a long row's chunks may land
-//!    in different shards. Each shard accumulates its chunks into one
-//!    reused per-shard arena ([`SplitPartials`]); after the scoped join,
-//!    the partials are summed into the output **in shard order**. This
-//!    mirrors the kernel's third cache level (global `atomicAdd`) with
-//!    the atomics replaced by a deterministic post-join reduction, which
-//!    keeps the result bit-stable for a given shard layout.
+//!    in different shards. Each chunk accumulates into its own window of
+//!    a reused per-shard arena ([`SplitPartials`]); after the scoped
+//!    join, the windows are summed into the output in **global block
+//!    order** (shards are contiguous block ranges, so shard-major
+//!    window-minor iteration *is* block order). This mirrors the
+//!    kernel's third cache level (global `atomicAdd`) with the atomics
+//!    replaced by a deterministic post-join reduction — and because the
+//!    reduction grouping never depends on where the shard cuts fall,
+//!    the result is bit-stable across **any** contiguous shard layout
+//!    (the property the tuner's re-cut relies on).
 //!
 //! Inputs are borrowed (`&[f32]`), jobs run via
 //! [`ThreadPool::scoped_run`], and the result comes back already in the
@@ -42,6 +46,12 @@
 //! a lookahead that caps every shard near the target, instead of the
 //! greedy accumulate-past-target rule that systematically overshot and
 //! starved (or dropped) the trailing shards on skewed plans.
+//!
+//! Plans the [`PlanTuner`](crate::tune::PlanTuner) has annotated carry
+//! measured per-block cost weights
+//! ([`TunedSharding`](super::plan::TunedSharding)); for those,
+//! [`shard_ranges_for_plan`] cuts against predicted nanoseconds instead
+//! of raw nonzeros — same nearest-boundary rule, different weights.
 //!
 //! [`spmm_block_level_parallel_scalar`] preserves the pre-tiling
 //! execution path — scalar bounds-checked inner loop, per-block `vec!`
@@ -91,13 +101,16 @@ impl OutPtr {
 }
 
 /// Per-shard arena for split-row partial sums: one growable buffer
-/// reused across all split rows the shard touches (`rows[k]`'s partial
-/// lives at `buf[k*f..(k+1)*f]`), instead of one `vec!` per row.
+/// holding one `f`-wide window **per split chunk** the shard executes
+/// (chunk `k`'s partial lives at `buf[k*f..(k+1)*f]`), instead of one
+/// `vec!` per chunk. A row with several chunks in the shard repeats in
+/// `rows` — the reduction sums windows in block order, so the grouping
+/// of a row's chunks never depends on where the shard cuts fall.
 #[derive(Default)]
 struct SplitPartials {
-    /// Sorted-domain row ids, in first-touch (block) order.
+    /// Sorted-domain row id per chunk, in block order (may repeat).
     rows: Vec<u32>,
-    /// Concatenated `f`-wide partials, parallel to `rows`.
+    /// Concatenated `f`-wide windows, parallel to `rows`.
     buf: Vec<f32>,
 }
 
@@ -119,16 +132,26 @@ fn block_nnz(m: &BlockMeta, deg_bound: usize) -> usize {
 /// cut-at-`acc ≥ target` rule could stack its overshoot into a wildly
 /// over- or under-sized tail shard on skewed plans.
 fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
-    let n_blocks = bp.meta.len();
+    let deg_bound = bp.params.deg_bound();
+    let weights: Vec<u64> = bp.meta.iter().map(|m| block_nnz(m, deg_bound) as u64).collect();
+    cut_by_weights(&weights, n_shards)
+}
+
+/// The weighted core of [`shard_ranges`]: slice `weights.len()` blocks
+/// into at most `n_shards` contiguous ranges of approximately equal
+/// total weight, each cut on the boundary nearest its ideal prefix.
+/// Static sharding passes nonzero counts; tuned plans pass predicted
+/// per-block cost ([`super::plan::TunedSharding::block_cost`]).
+pub(crate) fn cut_by_weights(weights: &[u64], n_shards: usize) -> Vec<Range<usize>> {
+    let n_blocks = weights.len();
     if n_blocks == 0 {
         return Vec::new();
     }
     let n_shards = n_shards.clamp(1, n_blocks);
-    let deg_bound = bp.params.deg_bound();
     let mut prefix = Vec::with_capacity(n_blocks + 1);
-    prefix.push(0usize);
-    for m in &bp.meta {
-        prefix.push(prefix[prefix.len() - 1] + block_nnz(m, deg_bound));
+    prefix.push(0u128);
+    for &w in weights {
+        prefix.push(prefix[prefix.len() - 1] + w as u128);
     }
     let total = prefix[n_blocks];
     let mut ranges = Vec::with_capacity(n_shards);
@@ -136,7 +159,7 @@ fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
     for s in 1..n_shards {
         let lo = start + 1; // shard s-1 keeps ≥ 1 block
         let hi = n_blocks - (n_shards - s); // ≥ 1 block per remaining shard
-        let ideal = ((total as u128 * s as u128) / n_shards as u128) as usize;
+        let ideal = total * s as u128 / n_shards as u128;
         // first boundary at or past the ideal, then the nearer of it and
         // its predecessor (the lookahead)
         let mut cut = prefix.partition_point(|&p| p < ideal).clamp(lo, hi);
@@ -150,13 +173,30 @@ fn shard_ranges(bp: &BlockPartition, n_shards: usize) -> Vec<Range<usize>> {
     ranges
 }
 
+/// The shard layout the parallel executor runs `plan` under: tuned
+/// cost-weighted cuts when the [`PlanTuner`](crate::tune::PlanTuner)
+/// annotated the plan (and its weights still match the partition),
+/// static nnz-balanced cuts otherwise. Pure partitioning — every
+/// layout produces bit-identical output (split-row reduction is in
+/// block order, independent of the cuts).
+pub fn shard_ranges_for_plan(plan: &SpmmPlan, n_shards: usize) -> Vec<Range<usize>> {
+    if let Some(t) = &plan.tuned {
+        if t.block_cost.len() == plan.block.meta.len() {
+            return cut_by_weights(&t.block_cost, n_shards);
+        }
+        debug_assert!(false, "TunedSharding weights out of sync with the partition");
+    }
+    shard_ranges(&plan.block, n_shards)
+}
+
 /// Execute one contiguous block range through the microkernels at the
 /// given lane strategy. Non-split rows are finished in place (scattered
 /// to original order through `perm`) via the kernel shape the plan's
 /// [`KernelSchedule`](super::plan::KernelSchedule) selected for their
 /// block (when `adaptive`; always the dense tiled kernel otherwise);
 /// split-row chunks carry `deg_bound` nonzeros each and accumulate into
-/// `partials` through the dense kernel unconditionally.
+/// one `partials` window per chunk through the dense kernel
+/// unconditionally.
 fn exec_shard(
     plan: &SpmmPlan,
     x: &[f32],
@@ -175,12 +215,13 @@ fn exec_shard(
         let m = bp.meta[b];
         let loc = m.loc as usize;
         if m.is_split(deg_bound) {
-            // chunks of one row are contiguous in block order, so the
-            // shard keeps at most one open arena window per split row
-            if partials.rows.last() != Some(&m.row) {
-                partials.rows.push(m.row);
-                partials.buf.resize(partials.buf.len() + f, 0.0);
-            }
+            // one window per chunk: the post-join reduction then sums
+            // chunks in global block order whatever the shard layout,
+            // keeping the output bit-identical across re-cuts (merging
+            // a shard's chunks here would bake the cut positions into
+            // the f32 grouping)
+            partials.rows.push(m.row);
+            partials.buf.resize(partials.buf.len() + f, 0.0);
             let w = partials.buf.len() - f;
             let nzs = m.split_nzs();
             microkernel::accumulate_row_with(
@@ -267,7 +308,7 @@ fn exec_into_zeroed(
 ) {
     assert_eq!(x.len(), plan.sorted.csr.n_cols * f, "X shape mismatch");
     assert_eq!(y.len(), plan.sorted.csr.n_rows * f, "Y shape mismatch");
-    let ranges = shard_ranges(&plan.block, pool.size());
+    let ranges = shard_ranges_for_plan(plan, pool.size());
     if ranges.is_empty() {
         return;
     }
@@ -287,9 +328,11 @@ fn exec_into_zeroed(
             .map(|((range, part), slot)| {
                 let out = &out;
                 Box::new(move || {
+                    let start_ns = crate::obs::epoch_now_ns();
                     let t0 = Instant::now();
                     exec_shard(plan, x, f, range.clone(), out, part, level, adaptive);
                     *slot = sample_shard(plan, range, adaptive, t0.elapsed());
+                    slot.start_ns = start_ns;
                 }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
@@ -308,7 +351,9 @@ fn exec_into_zeroed(
         pool.scoped_run(jobs);
     }
     // the "global atomic" level: split-row partials reduced
-    // deterministically in shard order, scattered to original rows
+    // deterministically in global block order (shards are contiguous
+    // block ranges, walked shard-major then window-minor), scattered to
+    // original rows — the sum's grouping is invariant to the cuts
     let perm = &plan.sorted.perm;
     for part in &partials {
         for (k, &srow) in part.rows.iter().enumerate() {
@@ -335,15 +380,23 @@ fn sample_shard(
     let mut s = ShardSample { busy_ns: busy.as_nanos() as u64, ..Default::default() };
     for b in blocks {
         let m = bp.meta[b];
-        s.nnz += block_nnz(&m, deg_bound) as u64;
+        let nnz = block_nnz(&m, deg_bound) as u64;
+        s.nnz += nnz;
         if m.is_split(deg_bound) {
             s.dense_blocks += 1; // split chunks always run the dense kernel
+            s.dense_nnz += nnz;
         } else {
             s.rows += m.block_rows() as u64;
             let kern = if adaptive { plan.kernels.kernel_for(b) } else { RowKernel::DenseTiled };
             match kern {
-                RowKernel::DenseTiled => s.dense_blocks += 1,
-                RowKernel::SparseGather => s.sparse_blocks += 1,
+                RowKernel::DenseTiled => {
+                    s.dense_blocks += 1;
+                    s.dense_nnz += nnz;
+                }
+                RowKernel::SparseGather => {
+                    s.sparse_blocks += 1;
+                    s.sparse_nnz += nnz;
+                }
             }
         }
     }
@@ -631,6 +684,55 @@ mod tests {
             let got = ParallelBlockLevel::new(threads).execute(&plan, &x, f);
             assert_allclose(&got, &want, 1e-4, 1e-4, "split straddle");
         }
+    }
+
+    /// The tuning bit-identity guarantee: a [`TunedSharding`] annotation
+    /// moves shard cuts but must never move a bit of output — the
+    /// split-row reduction runs in global block order regardless of the
+    /// layout, and non-split rows are written whole by exactly one
+    /// shard. Exercised with deliberately pathological weights (the
+    /// inverse-ish of nnz) so the tuned cuts genuinely differ.
+    #[test]
+    fn tuned_sharding_is_bit_identical_to_static() {
+        use super::super::plan::TunedSharding;
+        let mut rng = Pcg::seed_from(0x7E57);
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let plan = random_plan(&mut rng, 48, params);
+        assert!(plan.block.meta.len() > 8, "need enough blocks to re-cut");
+        // anti-correlated weights: heavy blocks get cost 1, light get 97
+        let deg_bound = params.deg_bound();
+        let block_cost: Vec<u64> = plan
+            .block
+            .meta
+            .iter()
+            .map(|m| 1 + 97 / (block_nnz(m, deg_bound) as u64 + 1))
+            .collect();
+        let mut tuned_plan = (*plan).clone();
+        tuned_plan.tuned = Some(TunedSharding {
+            dense_ns_per_nnz: 1.0,
+            sparse_ns_per_nnz: 1.0,
+            crossover: crate::spmm::microkernel::SPARSE_DEG_MAX,
+            block_cost,
+            predicted_static_imbalance: 1.0,
+            predicted_tuned_imbalance: 1.0,
+            n_shards: 3,
+        });
+        let tuned_plan = Arc::new(tuned_plan);
+        let f = 9;
+        let x: Vec<f32> = (0..48 * f).map(|_| rng.f32() - 0.5).collect();
+        let mut layouts_differed = false;
+        for threads in [1usize, 3, 8] {
+            let static_ranges = shard_ranges_for_plan(&plan, threads);
+            let tuned_ranges = shard_ranges_for_plan(&tuned_plan, threads);
+            layouts_differed |= static_ranges != tuned_ranges;
+            let exec = ParallelBlockLevel::new(threads);
+            let want = exec.execute(&plan, &x, f);
+            let got = exec.execute(&tuned_plan, &x, f);
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "lane {j} at {threads} threads");
+            }
+        }
+        assert!(layouts_differed, "weights were supposed to move at least one cut");
     }
 
     #[test]

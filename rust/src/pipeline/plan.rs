@@ -24,7 +24,7 @@ use crate::graph::degree::DegreeSorted;
 use crate::partition::block_level::BlockPartition;
 use crate::partition::patterns::PartitionParams;
 use crate::partition::warp_level::WarpPartition;
-use crate::spmm::microkernel::{select_kernel, RowKernel, SimdLevel};
+use crate::spmm::microkernel::{RowKernel, SimdLevel};
 use std::sync::OnceLock;
 
 /// The sparsity-adaptive kernel schedule: which kernel shape
@@ -50,16 +50,30 @@ pub struct KernelSchedule {
 
 impl KernelSchedule {
     /// Select a kernel shape for every block from its degree metadata
-    /// ([`select_kernel`] on non-split blocks, dense for split rows).
+    /// ([`crate::spmm::microkernel::select_kernel`] on non-split
+    /// blocks, dense for split rows).
     pub fn derive(block: &BlockPartition) -> KernelSchedule {
+        // identical to `derive_with` at the static crossover — pinned by
+        // the `derive_with_default_crossover_equals_derive` test
+        Self::derive_with(block, crate::spmm::microkernel::SPARSE_DEG_MAX)
+    }
+
+    /// [`KernelSchedule::derive`] with an explicit dense/sparse degree
+    /// crossover instead of the static
+    /// [`SPARSE_DEG_MAX`](crate::spmm::microkernel::SPARSE_DEG_MAX) —
+    /// the [`PlanTuner`](crate::tune::PlanTuner)'s per-graph revisit of
+    /// that threshold. Both kernel shapes accumulate nonzeros in the
+    /// same order into a zeroed destination, so moving a block across
+    /// the crossover changes performance, never bits.
+    pub fn derive_with(block: &BlockPartition, crossover: usize) -> KernelSchedule {
         let deg_bound = block.params.deg_bound();
         let mut per_block = Vec::with_capacity(block.meta.len());
         let mut n_sparse = 0usize;
         for m in &block.meta {
-            let k = if m.is_split(deg_bound) {
+            let k = if m.is_split(deg_bound) || m.deg as usize > crossover {
                 RowKernel::DenseTiled
             } else {
-                select_kernel(m.deg as usize)
+                RowKernel::SparseGather
             };
             if k == RowKernel::SparseGather {
                 n_sparse += 1;
@@ -95,6 +109,37 @@ impl KernelSchedule {
             self.n_sparse
         )
     }
+}
+
+/// Measurement-derived sharding weights attached to a plan by the
+/// [`PlanTuner`](crate::tune::PlanTuner).
+///
+/// When present, the parallel executor cuts `shard_ranges` against
+/// `block_cost` (predicted nanoseconds per block, from the fitted
+/// per-nonzero kernel costs) instead of the static nonzero prefix —
+/// the boundaries move, but every block still runs the same
+/// accumulation order into the same rows, and split-row chunks reduce
+/// in block order regardless of where the cuts fall, so tuned plans
+/// are output-bit-for-bit identical to untuned ones.
+#[derive(Clone, Debug)]
+pub struct TunedSharding {
+    /// Fitted dense-tiled kernel cost, ns per nonzero.
+    pub dense_ns_per_nnz: f64,
+    /// Fitted sparse-gather kernel cost, ns per nonzero.
+    pub sparse_ns_per_nnz: f64,
+    /// The dense/sparse degree crossover the tuned [`KernelSchedule`]
+    /// was derived with.
+    pub crossover: usize,
+    /// Predicted cost per block (ns, ≥ 1), parallel to
+    /// `BlockPartition::meta` — the weights the executor cuts against.
+    pub block_cost: Vec<u64>,
+    /// Predicted max/mean shard-cost imbalance of the static
+    /// nnz-balanced cuts, at the shard count the tuner evaluated.
+    pub predicted_static_imbalance: f64,
+    /// Predicted max/mean shard-cost imbalance of the tuned cuts.
+    pub predicted_tuned_imbalance: f64,
+    /// Shard count the prediction was evaluated at.
+    pub n_shards: usize,
 }
 
 /// Cheap identity of a CSR matrix: dimensions, nonzero count, and a
@@ -175,6 +220,11 @@ pub struct SpmmPlan {
     /// path's `from_parts` — same pure rule, same schedule).
     pub kernels: KernelSchedule,
     pub params: PartitionParams,
+    /// Measurement-derived sharding weights, attached by the
+    /// [`PlanTuner`](crate::tune::PlanTuner) (`None` on every freshly
+    /// built plan). Only partitioning — never math — so outputs stay
+    /// bit-for-bit identical with or without it.
+    pub tuned: Option<TunedSharding>,
     /// Lazily computed (only cache lookups need it); see
     /// [`SpmmPlan::fingerprint`].
     fingerprint: OnceLock<GraphFingerprint>,
@@ -196,7 +246,16 @@ impl SpmmPlan {
         let block = BlockPartition::build(&sorted.csr, params);
         let warp = WarpPartition::build(&csr, params.max_warp_nzs);
         let kernels = KernelSchedule::derive(&block);
-        SpmmPlan { original: csr, sorted, block, warp, kernels, params, fingerprint: OnceLock::new() }
+        SpmmPlan {
+            original: csr,
+            sorted,
+            block,
+            warp,
+            kernels,
+            params,
+            tuned: None,
+            fingerprint: OnceLock::new(),
+        }
     }
 
     /// The graph's fingerprint, computed on first use and cached.
@@ -237,7 +296,16 @@ impl SpmmPlan {
         // selection rule is pure in the block stats, so this is exactly
         // what a from-scratch rebuild would pick
         let kernels = KernelSchedule::derive(&block);
-        SpmmPlan { original, sorted, block, warp, kernels, params, fingerprint: OnceLock::new() }
+        SpmmPlan {
+            original,
+            sorted,
+            block,
+            warp,
+            kernels,
+            params,
+            tuned: None,
+            fingerprint: OnceLock::new(),
+        }
     }
 
     pub fn n_rows(&self) -> usize {
@@ -324,6 +392,29 @@ mod tests {
         assert!((0.0..=1.0).contains(&frac));
         let summary = plan.kernels.summary(SimdLevel::Scalar);
         assert!(summary.starts_with("scalar+adaptive("), "{summary}");
+    }
+
+    /// The tuner's generalized crossover must collapse to the static
+    /// rule at the default threshold — `derive` (and therefore the
+    /// delta patch path) is pinned to `derive_with(_, SPARSE_DEG_MAX)`.
+    #[test]
+    fn derive_with_default_crossover_equals_derive() {
+        use crate::spmm::microkernel::SPARSE_DEG_MAX;
+        let csr = random_csr(13, 70);
+        let plan = SpmmPlan::build(csr, PartitionParams { max_block_warps: 2, max_warp_nzs: 2 });
+        assert_eq!(plan.kernels, KernelSchedule::derive_with(&plan.block, SPARSE_DEG_MAX));
+        // widening the crossover can only move blocks dense → sparse
+        let wide = KernelSchedule::derive_with(&plan.block, SPARSE_DEG_MAX * 2);
+        assert!(wide.n_sparse >= plan.kernels.n_sparse);
+        // crossover 0 sends every non-split block with deg ≥ 1 dense;
+        // deg-0 blocks (empty rows) stay on the gather (no-op) kernel
+        let narrow = KernelSchedule::derive_with(&plan.block, 0);
+        let deg_bound = plan.params.deg_bound();
+        for (b, m) in plan.block.meta.iter().enumerate() {
+            if !m.is_split(deg_bound) && m.deg > 0 {
+                assert_eq!(narrow.kernel_for(b), RowKernel::DenseTiled);
+            }
+        }
     }
 
     /// The selection-stability satellite: building the same graph twice

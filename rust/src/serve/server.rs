@@ -76,6 +76,11 @@ pub struct ServeConfig {
     pub params: PartitionParams,
     /// Max resident `SpmmPlan`s (LRU-evicted beyond this).
     pub plan_capacity: usize,
+    /// Run the [`PlanTuner`](crate::tune::PlanTuner) over every
+    /// resident plan after this many worker rounds (0 = tuning off).
+    /// Effective only while the global observability registry is
+    /// enabled — the tuner consumes its per-shard timeline.
+    pub tune_every: usize,
 }
 
 impl Default for ServeConfig {
@@ -86,6 +91,7 @@ impl Default for ServeConfig {
             ladder: vec![32, 64, 128],
             params: PartitionParams::default(),
             plan_capacity: 8,
+            tune_every: 0,
         }
     }
 }
@@ -138,6 +144,13 @@ struct ComputePending {
     payload: Payload,
     reply: Sender<Result<Response>>,
     enqueued: Instant,
+    /// Per-request trace id
+    /// ([`Registry::next_trace_id`](crate::obs::Registry::next_trace_id));
+    /// 0 when the registry was disabled at submit (untraced).
+    trace: u64,
+    /// Wall-clock enqueue stamp against the process trace epoch; 0 when
+    /// untraced.
+    enqueued_ns: u64,
 }
 
 struct UpdatePending {
@@ -201,7 +214,16 @@ impl Server {
             .name("accel-gcn-serve".into())
             .spawn(move || {
                 let pool = ThreadPool::new(config.threads);
-                worker_loop(shared, registry, metrics, batcher, pool, cache, config.params);
+                worker_loop(
+                    shared,
+                    registry,
+                    metrics,
+                    batcher,
+                    pool,
+                    cache,
+                    config.params,
+                    config.tune_every,
+                );
             })
             .expect("spawn serve worker");
         server.worker = Some(worker);
@@ -318,12 +340,19 @@ impl Server {
             return Err(e);
         }
         let (reply, rx) = channel();
+        // allocate the request's trace identity at the door: every span
+        // the request touches downstream carries this id in its args
+        let reg = crate::obs::Registry::global();
+        let (trace, enqueued_ns) =
+            if reg.enabled() { (reg.next_trace_id(), crate::obs::epoch_now_ns()) } else { (0, 0) };
         self.enqueue(QueuedRequest::Compute(ComputePending {
             graph: req.graph,
             entry,
             payload: req.payload,
             reply,
             enqueued: Instant::now(),
+            trace,
+            enqueued_ns,
         }))?;
         Ok(rx)
     }
@@ -451,6 +480,7 @@ impl Drop for Server {
 // ---------------------------------------------------------------------
 // worker side
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     shared: Arc<SharedQueue>,
     registry: Arc<GraphRegistry>,
@@ -459,7 +489,9 @@ fn worker_loop(
     pool: ThreadPool,
     cache: Arc<PlanCache>,
     params: PartitionParams,
+    tune_every: usize,
 ) {
+    let mut rounds: usize = 0;
     loop {
         let round: Vec<QueuedRequest> = {
             let mut st = shared.state.lock().unwrap();
@@ -480,8 +512,21 @@ fn worker_loop(
             metrics.queue_wait.record(wait.as_secs_f64());
             // queue wait spans submit → pickup across threads, so it is
             // recorded by path rather than by guard (self-gating when
-            // the registry is disabled)
-            reg.record_span_ns("serve_round/queue_wait", wait.as_nanos() as u64);
+            // the registry is disabled); traced requests additionally
+            // land on the timeline with their begin at enqueue
+            match p {
+                QueuedRequest::Compute(c) if c.enqueued_ns != 0 => {
+                    let mut args = crate::util::json::Json::obj();
+                    args.set("trace", c.trace);
+                    reg.record_span_interval(
+                        "serve_round/queue_wait",
+                        c.enqueued_ns,
+                        wait.as_nanos() as u64,
+                        Some(args),
+                    );
+                }
+                _ => reg.record_span_ns("serve_round/queue_wait", wait.as_nanos() as u64),
+            }
         }
         // compute groups run first, updates apply at round end: every
         // compute request executes against the entry it captured at
@@ -517,6 +562,37 @@ fn worker_loop(
         for u in updates {
             apply_update(u, &registry, &metrics, &cache, params);
         }
+        rounds += 1;
+        if tune_every > 0 && rounds % tune_every == 0 {
+            tune_resident_plans(&cache, pool.size());
+        }
+    }
+}
+
+/// One closed-loop tuning pass over every resident plan: fit the cost
+/// model to the registry's per-shard aggregates, re-cut where the
+/// predicted imbalance improves, and swap tuned plans in place under
+/// their unchanged cache keys ([`PlanCache::refresh`] with the same
+/// fingerprint). Swaps count on the `tune.swaps` registry counter —
+/// deliberately separate from `ServeMetrics::plan_swaps`, which counts
+/// *topology* (epoch) swaps. After any swap the shard aggregates are
+/// reset so the next warmup window measures only the new layout.
+fn tune_resident_plans(cache: &PlanCache, n_shards: usize) {
+    let reg = crate::obs::Registry::global();
+    if !reg.enabled() {
+        return;
+    }
+    let tuner = crate::tune::PlanTuner::default();
+    let mut swapped = false;
+    for (key, plan) in cache.entries() {
+        if let Some(tuned) = tuner.maybe_tune(reg, &plan, n_shards) {
+            cache.refresh(&key, Arc::new(tuned));
+            reg.counter("tune.swaps").inc();
+            swapped = true;
+        }
+    }
+    if swapped {
+        reg.reset_shards();
     }
 }
 
@@ -618,11 +694,12 @@ fn run_spmm_group(
     for bp in &plans {
         // fuse: copy member columns into the padded fused matrix while
         // permuting rows into the relabeled domain (single pass)
-        let fuse_span = reg.span("serve_round/fuse");
+        let mut fuse_span = reg.span("serve_round/fuse");
         let aw = bp.artifact_width;
         let mut fused = vec![0f32; n * aw];
         let mut col = 0usize;
         let mut widths = Vec::with_capacity(bp.members.len());
+        let mut traces = Vec::with_capacity(bp.members.len());
         for &m in &bp.members {
             let p = members[m].as_ref().expect("each request fused once");
             let x = match &p.payload {
@@ -635,17 +712,32 @@ fn run_spmm_group(
                 fused[i * aw + col..i * aw + col + c].copy_from_slice(&x[o * c..(o + 1) * c]);
             }
             widths.push(c);
+            traces.push(p.trace);
             col += c;
+        }
+        if fuse_span.is_recording() {
+            fuse_span.annotate("traces", traces.clone());
         }
         drop(fuse_span);
         // zero-copy: the fused matrix is borrowed by the scoped shard
         // jobs directly — no Arc wrap, no input copy. The plan is built
         // FROM the relabeled matrix, so the executor's original-row-order
         // result is already in the relabeled domain.
+        let exec_begin = crate::obs::epoch_now_ns();
         let t0 = Instant::now();
         let y = crate::pipeline::spmm_block_level_parallel(&plan, &fused, aw, pool);
         let spmm_secs = t0.elapsed().as_secs_f64();
-        reg.record_span_ns("serve_round/execute", (spmm_secs * 1e9) as u64);
+        let exec_args = reg.enabled().then(|| {
+            let mut a = crate::util::json::Json::obj();
+            a.set("traces", traces.clone());
+            a
+        });
+        reg.record_span_interval(
+            "serve_round/execute",
+            exec_begin,
+            (spmm_secs * 1e9) as u64,
+            exec_args,
+        );
         metrics.spmm_stage.record(spmm_secs);
         let gflops = crate::spmm::spmm_gflops(plan.nnz(), aw, spmm_secs);
         metrics.note_kernel(&entry.name, plan.kernels.summary(crate::spmm::SimdLevel::best()));
@@ -653,7 +745,8 @@ fn run_spmm_group(
         metrics.fused_requests.add(bp.members.len() as u64);
         // split: copy each member's columns back out, unpermuting rows
         // to the original node order
-        let split_span = reg.span("serve_round/split");
+        let mut split_span = reg.span("serve_round/split");
+        split_span.annotate("traces", traces);
         let mut col = 0usize;
         for (slot, &m) in bp.members.iter().enumerate() {
             let c = widths[slot];
@@ -725,12 +818,25 @@ fn run_gcn_group(
             })
             .collect();
         let fw = GcnForward { plan: plan.as_ref(), pool };
+        let exec_begin = crate::obs::epoch_now_ns();
         match fw.forward(&model, &xs, Some(&entry.perm)) {
             Ok((outs, timings)) => {
                 let reg = crate::obs::Registry::global();
-                reg.record_span_ns(
+                let exec_args = reg.enabled().then(|| {
+                    let traces: Vec<u64> = bp
+                        .members
+                        .iter()
+                        .map(|&m| members[m].as_ref().map_or(0, |p| p.trace))
+                        .collect();
+                    let mut a = crate::util::json::Json::obj();
+                    a.set("traces", traces);
+                    a
+                });
+                reg.record_span_interval(
                     "serve_round/execute",
+                    exec_begin,
                     ((timings.spmm_secs + timings.dense_secs) * 1e9) as u64,
+                    exec_args,
                 );
                 metrics.spmm_stage.record(timings.spmm_secs);
                 metrics.dense_stage.record(timings.dense_secs);
@@ -1074,5 +1180,43 @@ mod tests {
             );
         }
         assert_eq!(server.metrics().plan_swaps.get(), 3);
+    }
+
+    /// The closed-loop satellite at serve scope: with tuning enabled on
+    /// every round, responses stay correct across any plan swap the
+    /// tuner performs (tuned plans are bit-identical by construction),
+    /// and the tuner's analysis shows up on the shared timeline.
+    #[test]
+    fn tuning_rounds_keep_serving_correctly() {
+        let reg = crate::obs::Registry::global();
+        reg.set_enabled(true);
+        let server = Server::start(ServeConfig {
+            threads: 2,
+            ladder: vec![32],
+            tune_every: 1,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(40, 60);
+        let h = server.register_graph("g", &g).unwrap();
+        let mut rng = Pcg::seed_from(77);
+        for i in 0..8 {
+            let x = features(&mut rng, 60, 8);
+            let want = g.spmm_dense(x.as_f32().unwrap(), 8);
+            let resp = server.submit_spmm(h, x).unwrap().recv().unwrap().unwrap();
+            assert_allclose(
+                resp.y.as_f32().unwrap(),
+                &want,
+                1e-3,
+                1e-3,
+                &format!("tuned round {i}"),
+            );
+        }
+        drop(server); // join the worker: every round's tune pass has run
+        let evs = reg.trace_events(usize::MAX);
+        assert!(
+            evs.iter().any(|e| e.name == "plan_tune"),
+            "the tuner must have analyzed at least once after warmup"
+        );
     }
 }

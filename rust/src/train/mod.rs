@@ -103,6 +103,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Print a progress line every `log_every` steps; 0 silences.
     pub log_every: usize,
+    /// Run the [`PlanTuner`](crate::tune::PlanTuner) over the trainer's
+    /// plans every this many steps (0 = tuning off). Effective only
+    /// while the global observability registry is enabled; tuned plans
+    /// are bit-identical, so losses never change — only steps/sec.
+    pub tune_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -117,6 +122,7 @@ impl Default for TrainConfig {
             threads: 4,
             seed: 42,
             log_every: 0,
+            tune_every: 0,
         }
     }
 }
@@ -217,6 +223,42 @@ impl Trainer {
     /// The model's output dimension (class count).
     fn out_dim(&self) -> usize {
         self.cfg.model.out_dim
+    }
+
+    /// One closed-loop tuning pass over the trainer's plans (forward
+    /// and, when distinct, transpose): re-cut shard boundaries against
+    /// the cost measured in the registry's per-shard timeline. Swapped
+    /// plans are bit-identical to the old ones, so training trajectories
+    /// are untouched — only steps/sec moves. The symmetric fast path's
+    /// invariant (`plan_t` is the same `Arc` as `plan`) is preserved
+    /// across swaps.
+    fn tune_plans(&mut self) {
+        let reg = crate::obs::Registry::global();
+        if !reg.enabled() {
+            return;
+        }
+        let tuner = crate::tune::PlanTuner::default();
+        let n_shards = self.pool.size();
+        let mut swapped = false;
+        if let Some(tuned) = tuner.maybe_tune(reg, &self.plan, n_shards) {
+            let tuned = Arc::new(tuned);
+            if self.transpose_reused {
+                self.plan_t = Arc::clone(&tuned);
+            }
+            self.plan = tuned;
+            reg.counter("tune.swaps").inc();
+            swapped = true;
+        }
+        if !self.transpose_reused {
+            if let Some(tuned) = tuner.maybe_tune(reg, &self.plan_t, n_shards) {
+                self.plan_t = Arc::new(tuned);
+                reg.counter("tune.swaps").inc();
+                swapped = true;
+            }
+        }
+        if swapped {
+            reg.reset_shards();
+        }
     }
 
     /// Forward only: logits in original row order.
@@ -332,6 +374,9 @@ impl Trainer {
                 loss::masked_softmax_xent_loss(&logits, &data.labels, &data.val_mask, self.out_dim());
             losses.push(loss);
             val_losses.push(val_loss);
+            if self.cfg.tune_every > 0 && (step + 1) % self.cfg.tune_every == 0 {
+                self.tune_plans();
+            }
             if self.cfg.log_every > 0 && (step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps) {
                 println!("step {step:>5}  train loss {loss:.4}  val loss {val_loss:.4}");
             }
@@ -705,6 +750,41 @@ mod tests {
         assert!(report.stopped_early, "expected early stop; ran {} steps", report.losses.len());
         assert!(report.losses.len() < 400);
         assert_eq!(report.losses.len(), report.val_losses.len());
+    }
+
+    /// The tuner's contract inside training: re-cutting shards between
+    /// steps must not move the loss trajectory by a single bit —
+    /// identical seeds with tuning on vs off produce *exactly* equal
+    /// losses. (Whether a given window's fit applies is timing-
+    /// dependent; bit-identity holds either way, which is exactly what
+    /// makes this assertion robust.)
+    #[test]
+    fn tuning_between_steps_keeps_losses_bit_identical() {
+        let reg = crate::obs::Registry::global();
+        reg.set_enabled(true);
+        let data = labeled_synthetic_with(120, 3, 12, 6.0, 0.85, 13);
+        let adj = data.csr.gcn_normalize();
+        let run = |tune_every: usize| {
+            let mut c = cfg(ModelConfig::gcn(12, 8, 3, 2).with_lr(0.1), "sgd", 12);
+            c.tune_every = tune_every;
+            let mut trainer = Trainer::with_cache(&adj, c, &PlanCache::new()).unwrap();
+            let report = trainer.train(&data).unwrap();
+            let shared = Arc::ptr_eq(&trainer.plan, &trainer.plan_t);
+            assert_eq!(
+                trainer.transpose_reused, shared,
+                "tuning must preserve the symmetric single-plan invariant"
+            );
+            report.losses
+        };
+        let untuned = run(0);
+        let tuned = run(1);
+        assert_eq!(untuned.len(), tuned.len());
+        for (i, (a, b)) in untuned.iter().zip(&tuned).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "step {i}: tuned loss {b} != untuned loss {a} (bitwise)"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,560 @@
+//! Closed-loop plan tuning: measured cost in, re-cut shards out.
+//!
+//! The static pipeline balances shards by **nonzero count** — the same
+//! proxy Accel-GCN's block-level partition uses at preprocessing time.
+//! That proxy is wrong exactly when the kernel mix is skewed: a
+//! gather-kernel nonzero and a dense-tile nonzero do not cost the same,
+//! so an nnz-balanced cut can leave one shard holding the expensive
+//! mix. This module closes the loop with the [`obs`](crate::obs)
+//! timeline:
+//!
+//! 1. **Measure** — the parallel executor records per-shard
+//!    `{busy_ns, dense_nnz, sparse_nnz}` aggregates into the global
+//!    [`Registry`](crate::obs::Registry) whenever observability is on.
+//! 2. **Fit** — [`CostModel::fit`] solves the 2×2 least-squares system
+//!    `busy ≈ c_d·dense_nnz + c_s·sparse_nnz` over the shard samples
+//!    (with single-kernel and uniform fallbacks when the system is
+//!    degenerate), clamped to a sane band around the uniform cost.
+//! 3. **Decide** — [`PlanTuner::analyze`] prices every block under the
+//!    fitted model, revisits the dense/sparse crossover among
+//!    [`CROSSOVER_CANDIDATES`], and re-cuts the shard boundaries
+//!    against predicted cost
+//!    ([`cut_by_weights`](crate::pipeline::parallel::cut_by_weights)).
+//!    The re-cut is applied only when it is predicted to improve the
+//!    max/mean shard-cost imbalance by at least
+//!    [`TuneConfig::min_improvement`].
+//! 4. **Swap** — [`PlanTuner::maybe_tune`] clones the plan, attaches
+//!    the [`TunedSharding`] annotation (and the re-derived
+//!    [`KernelSchedule`] when the crossover moved), and the caller
+//!    swaps it through [`PlanCache::refresh`](crate::pipeline::PlanCache::refresh)
+//!    (serve) or a direct `Arc` replacement (train). Every analysis
+//!    emits a `plan_tune` instant event into the trace timeline.
+//!
+//! ## What tuning may and may not change
+//!
+//! Tuning only ever moves **partitioning** decisions whose output is
+//! bit-for-bit identical by construction: shard cuts (the split-row
+//! reduction runs in global block order, independent of the cuts) and
+//! the per-block kernel choice (both microkernels accumulate a row's
+//! nonzeros in the same order at every SIMD level). The partition
+//! parameters themselves (`deg_bound` via `PartitionParams`) are
+//! **advisory only**: changing them would re-chunk the graph, change
+//! the plan's cache key, and break bit-identity — the tuner reports on
+//! them but never applies them.
+
+use crate::obs::{Registry, ShardAgg};
+use crate::pipeline::parallel::cut_by_weights;
+use crate::pipeline::plan::{KernelSchedule, SpmmPlan, TunedSharding};
+use crate::spmm::microkernel::SPARSE_DEG_MAX;
+use crate::util::json::Json;
+
+/// Dense/sparse crossover degrees the tuner prices (the static default
+/// [`SPARSE_DEG_MAX`] is always among them, so "no change" is always a
+/// candidate).
+pub const CROSSOVER_CANDIDATES: [usize; 3] = [2, 4, 8];
+
+/// Fitted per-kernel costs are clamped to
+/// `[uniform / COST_CLAMP, uniform × COST_CLAMP]` around the uniform
+/// ns-per-nnz — least squares over a handful of noisy shards can
+/// produce wild coefficients, and a 10× band is already far beyond any
+/// plausible dense/gather cost ratio.
+pub const COST_CLAMP: f64 = 10.0;
+
+/// Per-nanosecond-per-nonzero cost of each kernel shape, fitted from
+/// the measured per-shard timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    pub dense_ns_per_nnz: f64,
+    pub sparse_ns_per_nnz: f64,
+}
+
+impl CostModel {
+    /// Least-squares fit of `busy ≈ c_d·dense_nnz + c_s·sparse_nnz`
+    /// over the per-shard aggregates (normal equations of the 2×2
+    /// system). Degenerate systems fall back gracefully:
+    /// * only one kernel observed → that kernel gets the exact ratio,
+    ///   the unobserved one the uniform cost;
+    /// * collinear samples (every shard has the same mix) → both get
+    ///   the uniform cost.
+    ///
+    /// Returns `None` when there is no signal at all (no nonzeros or no
+    /// busy time recorded).
+    pub fn fit(aggs: &[ShardAgg]) -> Option<CostModel> {
+        let (mut s11, mut s12, mut s22, mut b1, mut b2) = (0f64, 0f64, 0f64, 0f64, 0f64);
+        let (mut sum_x1, mut sum_x2, mut sum_y) = (0f64, 0f64, 0f64);
+        for a in aggs {
+            let x1 = a.dense_nnz as f64;
+            let x2 = a.sparse_nnz as f64;
+            let y = a.busy_ns as f64;
+            s11 += x1 * x1;
+            s12 += x1 * x2;
+            s22 += x2 * x2;
+            b1 += x1 * y;
+            b2 += x2 * y;
+            sum_x1 += x1;
+            sum_x2 += x2;
+            sum_y += y;
+        }
+        let sum_x = sum_x1 + sum_x2;
+        if sum_x <= 0.0 || sum_y <= 0.0 {
+            return None;
+        }
+        let uniform = sum_y / sum_x;
+        let det = s11 * s22 - s12 * s12;
+        // relative determinant test: collinear shard mixes make the
+        // normal equations numerically rank-1
+        let well_posed = s11 > 0.0 && s22 > 0.0 && det > 1e-9 * s11 * s22;
+        let (cd, cs) = if well_posed {
+            let cd = (b1 * s22 - b2 * s12) / det;
+            let cs = (b2 * s11 - b1 * s12) / det;
+            if cd > 0.0 && cs > 0.0 {
+                (cd, cs)
+            } else {
+                (uniform, uniform) // sign flip: noise won, trust the mean
+            }
+        } else if sum_x1 > 0.0 && sum_x2 == 0.0 {
+            (sum_y / sum_x1, uniform)
+        } else if sum_x2 > 0.0 && sum_x1 == 0.0 {
+            (uniform, sum_y / sum_x2)
+        } else {
+            (uniform, uniform)
+        };
+        let clamp = |c: f64| c.clamp(uniform / COST_CLAMP, uniform * COST_CLAMP);
+        Some(CostModel { dense_ns_per_nnz: clamp(cd), sparse_ns_per_nnz: clamp(cs) })
+    }
+
+    /// Predicted cost of one block under this model.
+    fn block_cost(&self, nnz: u64, dense: bool) -> f64 {
+        nnz as f64 * if dense { self.dense_ns_per_nnz } else { self.sparse_ns_per_nnz }
+    }
+}
+
+/// Knobs of the tuning decision (not of the measurement).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneConfig {
+    /// Minimum SpMM executions the warmup window must have aggregated
+    /// before the fit is trusted.
+    pub warmup_spmms: u64,
+    /// Minimum relative improvement of the predicted max/mean shard
+    /// imbalance (or of the predicted total cost, for a crossover
+    /// move) required to apply — hysteresis against swap churn.
+    pub min_improvement: f64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig { warmup_spmms: 4, min_improvement: 0.02 }
+    }
+}
+
+/// One tuning decision, applied or declined — serialized into the
+/// trace timeline as a `plan_tune` instant event.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub applied: bool,
+    pub reason: String,
+    pub dense_ns_per_nnz: f64,
+    pub sparse_ns_per_nnz: f64,
+    pub old_crossover: usize,
+    pub new_crossover: usize,
+    /// Max/mean predicted shard cost under the static nnz-balanced cut.
+    pub predicted_static_imbalance: f64,
+    /// Max/mean predicted shard cost under the cost-balanced cut.
+    pub predicted_tuned_imbalance: f64,
+    /// Shard boundaries that moved between the two layouts.
+    pub boundaries_moved: usize,
+    pub n_shards: usize,
+    /// SpMM executions aggregated in the warmup window.
+    pub spmms_observed: u64,
+}
+
+impl TuneReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("applied", self.applied)
+            .set("reason", self.reason.as_str())
+            .set("dense_ns_per_nnz", self.dense_ns_per_nnz)
+            .set("sparse_ns_per_nnz", self.sparse_ns_per_nnz)
+            .set("old_crossover", self.old_crossover)
+            .set("new_crossover", self.new_crossover)
+            .set("predicted_static_imbalance", self.predicted_static_imbalance)
+            .set("predicted_tuned_imbalance", self.predicted_tuned_imbalance)
+            .set("boundaries_moved", self.boundaries_moved)
+            .set("n_shards", self.n_shards)
+            .set("spmms_observed", self.spmms_observed)
+            .set(
+                "advisory",
+                "partition params (deg_bound) held fixed: re-chunking would \
+                 change the cache key and break bit-identity",
+            );
+        j
+    }
+}
+
+/// The utilization-driven tuner; see the module docs for the loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanTuner {
+    pub cfg: TuneConfig,
+}
+
+impl PlanTuner {
+    pub fn new(cfg: TuneConfig) -> PlanTuner {
+        PlanTuner { cfg }
+    }
+
+    /// Price `plan` under the measured aggregates and decide whether a
+    /// re-cut is worth applying. Returns `None` while the warmup window
+    /// is unmet (or there is nothing to measure); otherwise the report
+    /// plus `Some(annotation)` when the tuned layout clears the
+    /// improvement bar.
+    pub fn analyze(
+        &self,
+        aggs: &[ShardAgg],
+        plan: &SpmmPlan,
+        n_shards: usize,
+    ) -> Option<(TuneReport, Option<TunedSharding>)> {
+        if n_shards == 0 || plan.block.meta.is_empty() {
+            return None;
+        }
+        let spmms = aggs.iter().map(|a| a.spmms).max().unwrap_or(0);
+        if spmms < self.cfg.warmup_spmms {
+            return None;
+        }
+        let model = CostModel::fit(aggs)?;
+        let deg_bound = plan.block.params.deg_bound();
+        let old_crossover =
+            plan.tuned.as_ref().map(|t| t.crossover).unwrap_or(SPARSE_DEG_MAX);
+
+        // (nnz, split, deg) per block — the pricing inputs
+        let blocks: Vec<(u64, bool, usize)> = plan
+            .block
+            .meta
+            .iter()
+            .map(|m| {
+                let split = m.is_split(deg_bound);
+                let nnz =
+                    if split { m.split_nzs() } else { m.deg as usize * m.block_rows() };
+                (nnz as u64, split, m.deg as usize)
+            })
+            .collect();
+        let total_under = |crossover: usize| -> f64 {
+            blocks
+                .iter()
+                .map(|&(nnz, split, deg)| model.block_cost(nnz, split || deg > crossover))
+                .sum()
+        };
+
+        // revisit the crossover: strict improvement over the current
+        // one, ties keep it (no churn)
+        let mut new_crossover = old_crossover;
+        let mut best_total = total_under(old_crossover);
+        for c in CROSSOVER_CANDIDATES {
+            let t = total_under(c);
+            if t < best_total * (1.0 - 1e-9) {
+                best_total = t;
+                new_crossover = c;
+            }
+        }
+
+        let block_cost: Vec<u64> = blocks
+            .iter()
+            .map(|&(nnz, split, deg)| {
+                model.block_cost(nnz, split || deg > new_crossover).round().max(1.0) as u64
+            })
+            .collect();
+        let nnz_weights: Vec<u64> = blocks.iter().map(|&(nnz, _, _)| nnz).collect();
+
+        let imbalance = |ranges: &[std::ops::Range<usize>]| -> f64 {
+            let sums: Vec<u128> = ranges
+                .iter()
+                .map(|r| block_cost[r.clone()].iter().map(|&c| c as u128).sum())
+                .collect();
+            let total: u128 = sums.iter().sum();
+            if total == 0 || sums.is_empty() {
+                return 1.0;
+            }
+            let mean = total as f64 / sums.len() as f64;
+            *sums.iter().max().unwrap() as f64 / mean
+        };
+        let static_ranges = cut_by_weights(&nnz_weights, n_shards);
+        let tuned_ranges = cut_by_weights(&block_cost, n_shards);
+        let static_imb = imbalance(&static_ranges);
+        let tuned_imb = imbalance(&tuned_ranges);
+        let boundaries_moved = static_ranges
+            .iter()
+            .zip(&tuned_ranges)
+            .filter(|(a, b)| a.start != b.start)
+            .count()
+            + static_ranges.len().abs_diff(tuned_ranges.len());
+
+        let sharding_wins = tuned_imb <= static_imb * (1.0 - self.cfg.min_improvement);
+        let crossover_wins = new_crossover != old_crossover
+            && best_total <= total_under(old_crossover) * (1.0 - self.cfg.min_improvement);
+        let applied = sharding_wins || crossover_wins;
+        let reason = if sharding_wins && crossover_wins {
+            "re-cut shards and moved crossover".to_string()
+        } else if sharding_wins {
+            "re-cut shards against measured cost".to_string()
+        } else if crossover_wins {
+            "moved dense/sparse crossover".to_string()
+        } else {
+            format!(
+                "declined: predicted imbalance {tuned_imb:.3} vs static {static_imb:.3} \
+                 below the {:.0}% bar",
+                self.cfg.min_improvement * 100.0
+            )
+        };
+        let report = TuneReport {
+            applied,
+            reason,
+            dense_ns_per_nnz: model.dense_ns_per_nnz,
+            sparse_ns_per_nnz: model.sparse_ns_per_nnz,
+            old_crossover,
+            new_crossover,
+            predicted_static_imbalance: static_imb,
+            predicted_tuned_imbalance: tuned_imb,
+            boundaries_moved,
+            n_shards,
+            spmms_observed: spmms,
+        };
+        let annotation = applied.then(|| TunedSharding {
+            dense_ns_per_nnz: model.dense_ns_per_nnz,
+            sparse_ns_per_nnz: model.sparse_ns_per_nnz,
+            crossover: new_crossover,
+            block_cost,
+            predicted_static_imbalance: static_imb,
+            predicted_tuned_imbalance: tuned_imb,
+            n_shards,
+        });
+        Some((report, annotation))
+    }
+
+    /// The full loop step: read `reg`'s shard aggregates, [`Self::analyze`],
+    /// emit the `plan_tune` trace event, and return the re-tuned plan
+    /// when the decision was to apply. The returned plan is a clone of
+    /// `plan` differing only in its sharding annotation and (possibly)
+    /// kernel schedule — same graph, same fingerprint, bit-identical
+    /// output — ready for `PlanCache::refresh` or a direct `Arc` swap.
+    pub fn maybe_tune(
+        &self,
+        reg: &Registry,
+        plan: &SpmmPlan,
+        n_shards: usize,
+    ) -> Option<SpmmPlan> {
+        let aggs = reg.shard_aggregates();
+        let (report, annotation) = self.analyze(&aggs, plan, n_shards)?;
+        reg.record_instant("plan_tune", "tune", report.to_json());
+        let t = annotation?;
+        let mut tuned = plan.clone();
+        if t.crossover != plan.tuned.as_ref().map(|p| p.crossover).unwrap_or(SPARSE_DEG_MAX)
+        {
+            tuned.kernels = KernelSchedule::derive_with(&tuned.block, t.crossover);
+        }
+        tuned.tuned = Some(t);
+        Some(tuned)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::partition::patterns::PartitionParams;
+    use crate::pipeline::parallel::shard_ranges_for_plan;
+    use crate::pipeline::ParallelBlockLevel;
+    use crate::pipeline::Executor;
+    use crate::obs::ShardSample;
+    use crate::spmm::microkernel::RowKernel;
+    use crate::util::rng::Pcg;
+    use std::sync::Arc;
+
+    fn agg(dense_nnz: u64, sparse_nnz: u64, busy_ns: u64) -> ShardAgg {
+        ShardAgg {
+            spmms: 8,
+            nnz: dense_nnz + sparse_nnz,
+            busy_ns,
+            dense_nnz,
+            sparse_nnz,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cost_fit_recovers_synthetic_costs() {
+        // busy = 3·dense + 1·sparse, non-collinear mixes → exact fit
+        let aggs = [
+            agg(100, 0, 300),
+            agg(0, 100, 100),
+            agg(50, 50, 200),
+            agg(80, 20, 260),
+        ];
+        let m = CostModel::fit(&aggs).unwrap();
+        assert!((m.dense_ns_per_nnz - 3.0).abs() < 1e-6, "dense {}", m.dense_ns_per_nnz);
+        assert!((m.sparse_ns_per_nnz - 1.0).abs() < 1e-6, "sparse {}", m.sparse_ns_per_nnz);
+    }
+
+    #[test]
+    fn cost_fit_falls_back_on_degenerate_systems() {
+        // single kernel observed: exact ratio for it, uniform for the other
+        let m = CostModel::fit(&[agg(100, 0, 500), agg(200, 0, 1000)]).unwrap();
+        assert!((m.dense_ns_per_nnz - 5.0).abs() < 1e-9);
+        assert!((m.sparse_ns_per_nnz - 5.0).abs() < 1e-9, "uniform fallback");
+        // collinear mixes (every shard 2:1): rank-1 system → uniform
+        let m = CostModel::fit(&[agg(100, 50, 450), agg(200, 100, 900)]).unwrap();
+        let uniform = 1350.0 / 450.0;
+        assert!((m.dense_ns_per_nnz - uniform).abs() < 1e-9);
+        assert!((m.sparse_ns_per_nnz - uniform).abs() < 1e-9);
+        // no signal at all
+        assert!(CostModel::fit(&[ShardAgg::default()]).is_none());
+        // clamp: a 100× ratio is capped at COST_CLAMP× the uniform
+        let m = CostModel::fit(&[agg(100, 0, 100), agg(0, 100, 10000), agg(50, 50, 5050)])
+            .unwrap();
+        let uniform = 15150.0 / 300.0;
+        assert!(m.sparse_ns_per_nnz <= uniform * COST_CLAMP + 1e-9);
+        assert!(m.dense_ns_per_nnz >= uniform / COST_CLAMP - 1e-9);
+    }
+
+    /// A graph engineered so nnz-balanced cuts are badly cost-skewed:
+    /// 8 degree-2 rows (gather kernel) and 8 degree-30 rows (dense
+    /// kernel), one block per row.
+    fn mixed_plan() -> Arc<SpmmPlan> {
+        let params = PartitionParams { max_block_warps: 1, max_warp_nzs: 32 };
+        let mut edges = Vec::new();
+        for r in 0..8u32 {
+            edges.push((r, 2 * r, 1.0));
+            edges.push((r, 2 * r + 1, 1.0));
+        }
+        for r in 8..16u32 {
+            for c in 0..30u32 {
+                edges.push((r, c, 0.5));
+            }
+        }
+        let csr = Csr::from_edges(16, 32, &edges).unwrap();
+        Arc::new(SpmmPlan::build(csr, params))
+    }
+
+    /// Synthesize the warmup window the executor would have recorded:
+    /// per-shard dense/sparse nnz from the plan's own dispatch, busy
+    /// time from a ground-truth cost model where gather nonzeros are
+    /// 50× dense ones.
+    fn record_synthetic_window(reg: &Registry, plan: &SpmmPlan, n_shards: usize, reps: u64) {
+        let deg_bound = plan.block.params.deg_bound();
+        let ranges = shard_ranges_for_plan(plan, n_shards);
+        let samples: Vec<ShardSample> = ranges
+            .iter()
+            .map(|r| {
+                let (mut dense, mut sparse) = (0u64, 0u64);
+                for b in r.clone() {
+                    let m = plan.block.meta[b];
+                    let nnz = if m.is_split(deg_bound) {
+                        m.split_nzs()
+                    } else {
+                        m.deg as usize * m.block_rows()
+                    } as u64;
+                    if m.is_split(deg_bound)
+                        || plan.kernels.kernel_for(b) == RowKernel::DenseTiled
+                    {
+                        dense += nnz;
+                    } else {
+                        sparse += nnz;
+                    }
+                }
+                ShardSample {
+                    nnz: dense + sparse,
+                    busy_ns: dense + 50 * sparse,
+                    dense_nnz: dense,
+                    sparse_nnz: sparse,
+                    ..Default::default()
+                }
+            })
+            .collect();
+        for _ in 0..reps {
+            reg.record_spmm_shards(&samples);
+        }
+    }
+
+    #[test]
+    fn warmup_gate_holds_back_the_fit() {
+        let reg = Registry::new();
+        let plan = mixed_plan();
+        record_synthetic_window(&reg, &plan, 4, 2); // default warmup is 4
+        let tuner = PlanTuner::default();
+        assert!(tuner.maybe_tune(&reg, &plan, 4).is_none());
+        assert!(reg.trace_events(usize::MAX).is_empty(), "no event before warmup");
+    }
+
+    #[test]
+    fn maybe_tune_rebalances_and_stays_bit_identical() {
+        let reg = Registry::new();
+        let plan = mixed_plan();
+        assert_eq!(plan.block.meta.len(), 16, "one block per row");
+        record_synthetic_window(&reg, &plan, 4, 6);
+        let tuner = PlanTuner::default();
+        let tuned = tuner.maybe_tune(&reg, &plan, 4).expect("skewed cost must apply");
+        let t = tuned.tuned.as_ref().expect("annotation attached");
+        assert_eq!(t.block_cost.len(), plan.block.meta.len());
+        assert!(
+            t.predicted_tuned_imbalance
+                <= t.predicted_static_imbalance * (1.0 - TuneConfig::default().min_improvement),
+            "tuned {} vs static {}",
+            t.predicted_tuned_imbalance,
+            t.predicted_static_imbalance
+        );
+        // the decision is on the record
+        let evs = reg.trace_events(usize::MAX);
+        let tune_ev = evs.iter().find(|e| e.name == "plan_tune").expect("tune event");
+        assert_eq!(tune_ev.cat, "tune");
+        let args = tune_ev.args.as_ref().unwrap();
+        assert_eq!(args.get("applied").and_then(|v| v.as_bool()), Some(true));
+        // the layouts genuinely differ, the math does not: bit-for-bit
+        let tuned = Arc::new(tuned);
+        assert_ne!(
+            shard_ranges_for_plan(&plan, 4),
+            shard_ranges_for_plan(&tuned, 4),
+            "cuts must move"
+        );
+        let mut rng = Pcg::seed_from(0x7E11);
+        let f = 7;
+        let x: Vec<f32> = (0..32 * f).map(|_| rng.f32() - 0.5).collect();
+        for threads in [1usize, 3, 4] {
+            let exec = ParallelBlockLevel::new(threads);
+            let want = exec.execute(&plan, &x, f);
+            let got = exec.execute(&tuned, &x, f);
+            assert_eq!(want.len(), got.len());
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "lane {j} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_cost_declines_with_a_report() {
+        // all-dense graph, busy exactly proportional to nnz: the static
+        // cut is already cost-balanced, so the tuner must decline (and
+        // say so in the timeline)
+        let params = PartitionParams { max_block_warps: 1, max_warp_nzs: 32 };
+        let edges: Vec<(u32, u32, f32)> = (0..12u32)
+            .flat_map(|r| (0..20u32).map(move |c| (r, c, 1.0)))
+            .collect();
+        let plan =
+            Arc::new(SpmmPlan::build(Csr::from_edges(12, 20, &edges).unwrap(), params));
+        let reg = Registry::new();
+        let ranges = shard_ranges_for_plan(&plan, 3);
+        let samples: Vec<ShardSample> = ranges
+            .iter()
+            .map(|r| {
+                let nnz = (r.len() * 20) as u64;
+                ShardSample { nnz, busy_ns: nnz * 3, dense_nnz: nnz, ..Default::default() }
+            })
+            .collect();
+        for _ in 0..5 {
+            reg.record_spmm_shards(&samples);
+        }
+        let tuner = PlanTuner::default();
+        assert!(tuner.maybe_tune(&reg, &plan, 3).is_none(), "nothing to improve");
+        let evs = reg.trace_events(usize::MAX);
+        let ev = evs.iter().find(|e| e.name == "plan_tune").expect("declined is recorded");
+        let applied = ev.args.as_ref().unwrap().get("applied").and_then(|v| v.as_bool());
+        assert_eq!(applied, Some(false));
+    }
+}
