@@ -89,6 +89,66 @@ cargo run --release --bin accel-gcn -- bench-compare \
     results-ci-delta/BENCH_delta_update.json \
     results-ci-delta/BENCH_delta_update.json --max-regress 5
 
+# Durability smoke (DESIGN §11), part 1: kill-and-recover. A durable
+# serve-native run (snapshot + WAL under --data-dir, fsync always)
+# takes update batches and is SIGKILLed mid-flight — the binary is
+# invoked directly so the kill hits the server, not a cargo wrapper.
+# recover-check must then rebuild every tenant from snapshot + WAL
+# replay and re-verify SpMM through the full pipeline against the
+# dense reference, exiting nonzero on any divergence. Whatever the
+# kill interrupts (a WAL append -> torn tail dropped; a snapshot
+# write -> tmp+rename discards it) is a documented fallback.
+rm -rf results-ci-store
+target/release/accel-gcn serve-native \
+    --requests 32 --tenants 2 --nodes 200 --threads 2 --seed 7 \
+    --rounds 500 --updates 4 --update-size 16 \
+    --data-dir results-ci-store/live &
+SERVE_PID=$!
+sleep 3
+kill -9 "$SERVE_PID" 2>/dev/null || true
+wait "$SERVE_PID" 2>/dev/null || true
+target/release/accel-gcn recover-check \
+    --data-dir results-ci-store/live --verify-spmm
+
+# ... and the killed server's state must be *servable*: a restart over
+# the same directory recovers the tenants and every response verifies
+# against the recovered adjacency.
+target/release/accel-gcn serve-native \
+    --requests 32 --tenants 2 --nodes 200 --threads 2 --seed 7 \
+    --rounds 2 --updates 2 --data-dir results-ci-store/live
+
+# Durability smoke, part 2: fault-injection matrix. Each write-side
+# fault degrades gracefully — the serving run completes (shedding with
+# typed errors where needed, never panicking) and recovery lands on
+# the documented fallback.
+#   torn-tail         -> incomplete final WAL record dropped on replay
+#   snapshot-truncate -> recovery falls back one snapshot generation
+#   disk-full=N       -> appends past the budget shed updates (typed)
+for fault in torn-tail snapshot-truncate disk-full=700; do
+    rm -rf results-ci-store/fault
+    target/release/accel-gcn serve-native \
+        --requests 16 --tenants 2 --nodes 120 --threads 2 --seed 7 \
+        --rounds 3 --updates 2 --update-size 16 \
+        --data-dir results-ci-store/fault --fsync never --snapshot-every 2 \
+        --fault "$fault"
+    target/release/accel-gcn recover-check \
+        --data-dir results-ci-store/fault --verify-spmm
+done
+
+# checksum-flip corrupts a WAL record *mid-log* (later records are
+# intact, so it is not a droppable tail): recovery must refuse with a
+# typed checksum error, and recover-check must exit NONZERO.
+rm -rf results-ci-store/fault
+target/release/accel-gcn serve-native \
+    --requests 16 --tenants 2 --nodes 120 --threads 2 --seed 7 \
+    --rounds 3 --updates 2 --update-size 16 \
+    --data-dir results-ci-store/fault --fsync never --fault checksum-flip
+if target/release/accel-gcn recover-check --data-dir results-ci-store/fault; then
+    echo "ERROR: checksum-flip corruption went undetected by recover-check" >&2
+    exit 1
+fi
+echo "recover-check correctly rejected the checksum-flipped WAL"
+
 # Formatting is checked but advisory for now: parts of the seed tree
 # predate rustfmt enforcement. Flip to a hard failure once `cargo fmt`
 # has been run tree-wide.

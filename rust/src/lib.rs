@@ -30,6 +30,12 @@
 //!   server executing column-fused SpMM/GCN batches through
 //!   [`pipeline`] on CPU — the request path that works offline. Tenants
 //!   accept `UpdateGraph` requests with epoch-versioned plan swaps.
+//! * [`store`] — durability layer: per-tenant generational graph
+//!   snapshots plus a delta WAL (every `UpdateGraph` batch logged
+//!   before it applies), crash recovery through the [`delta`] replay
+//!   path with plan-fingerprint assertion, and an env-driven
+//!   fault-injection harness (torn tail, truncated snapshot, checksum
+//!   flip, disk full) — see DESIGN §11.
 //! * [`train`] — native training subsystem: full-graph GCN backprop
 //!   (forward with tape → masked softmax cross-entropy → backward →
 //!   SGD/Adam) entirely on the parallel SpMM pipeline; the backward
@@ -64,6 +70,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;
+pub mod store;
 pub mod train;
 pub mod tune;
 pub mod bench;

@@ -11,6 +11,10 @@
 //! accel-gcn serve        --artifacts artifacts/quickstart --requests 64
 //! accel-gcn serve-native --requests 64 --tenants 2 [--threads T] [--ladder 32,64,128]
 //!                        [--metrics-interval-ms MS] [--trace-out PATH] [--tune-every K]
+//!                        [--data-dir DIR [--fsync always|never] [--snapshot-every K]]
+//!                        [--rounds R] [--updates U] [--update-size K]
+//!                        [--queue-capacity N] [--deadline-ms MS] [--fault SPEC]
+//! accel-gcn recover-check --data-dir DIR [--verify-spmm]
 //! accel-gcn update-demo  --batches 8 --batch-size 64 [--edge-list graph.txt]
 //! accel-gcn bench        --out results [--experiment fig5|...|microkernel|train_native]
 //! accel-gcn bench-compare OLD.json NEW.json [--max-regress PCT]
@@ -48,6 +52,7 @@ fn main() {
         "train-native" => cmd_train_native(rest),
         "serve" => cmd_serve(rest),
         "serve-native" => cmd_serve_native(rest),
+        "recover-check" => cmd_recover_check(rest),
         "update-demo" => cmd_update_demo(rest),
         "bench" => cmd_bench(rest),
         "bench-compare" => cmd_bench_compare(rest),
@@ -90,11 +95,24 @@ fn print_usage() {
          \x20           [--threads T] [--ladder 32,64,128] [--gcn-every K] [--seed S]\n\
          \x20           [--no-verify] [--metrics-out PATH] [--metrics-interval-ms MS]\n\
          \x20           [--trace-out PATH] [--tune-every K]\n\
+         \x20           [--data-dir DIR] [--fsync always|never] [--snapshot-every K]\n\
+         \x20           [--rounds R] [--updates U] [--update-size K]\n\
+         \x20           [--queue-capacity N] [--deadline-ms MS] [--fault SPEC]\n\
          \x20           (multi-tenant CPU serving, no artifacts needed; --metrics-out\n\
          \x20           enables tracing and dumps the metrics snapshot JSON every\n\
          \x20           --metrics-interval-ms and at exit; --trace-out writes the\n\
          \x20           Chrome trace-event timeline; --tune-every K runs the\n\
-         \x20           closed-loop plan tuner every K serve rounds)\n\
+         \x20           closed-loop plan tuner every K serve rounds; --data-dir makes\n\
+         \x20           tenants durable — snapshot + WAL, recovered on restart;\n\
+         \x20           --updates U streams U edge-update batches per round;\n\
+         \x20           --fault arms fault injection: torn-tail, snapshot-truncate,\n\
+         \x20           checksum-flip, disk-full=BYTES, comma-separated)\n\
+         \x20 recover-check --data-dir DIR [--verify-spmm]\n\
+         \x20           (recover every tenant from snapshot + WAL without serving;\n\
+         \x20           print per-tenant epoch/generation/replay table; --verify-spmm\n\
+         \x20           re-executes SpMM through the pipeline against the dense\n\
+         \x20           reference; exits nonzero on corruption or divergence beyond\n\
+         \x20           the documented fallbacks)\n\
          \x20 update-demo [--nodes N] [--avg-deg D] [--batches B] [--batch-size K]\n\
          \x20           [--edge-list PATH [--one-based]] [--threads T] [--seed S]\n\
          \x20           (stream edge-update batches; patch plans incrementally,\n\
@@ -416,14 +434,43 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_serve_native(rest: &[String]) -> Result<()> {
+    use accel_gcn::serve::PersistConfig;
+    use accel_gcn::store::FsyncPolicy;
+
     let args = Args::parse(
         rest,
         &[
             "requests", "tenants", "nodes", "avg-deg", "threads", "ladder", "gcn-every", "seed",
-            "metrics-out", "metrics-interval-ms", "trace-out", "tune-every",
+            "metrics-out", "metrics-interval-ms", "trace-out", "tune-every", "data-dir", "fsync",
+            "snapshot-every", "rounds", "updates", "update-size", "queue-capacity", "deadline-ms",
+            "fault",
         ],
         &["no-verify"],
     )?;
+    let persist = match args.get("data-dir") {
+        Some(dir) => {
+            let fsync = match args.str_or("fsync", "always").as_str() {
+                "always" => FsyncPolicy::Always,
+                "never" => FsyncPolicy::Never,
+                other => bail!("--fsync must be always|never, got `{other}`"),
+            };
+            Some(PersistConfig {
+                data_dir: dir.into(),
+                fsync,
+                snapshot_every: args.usize_or("snapshot-every", 0)?,
+                fault_spec: args.get("fault").map(str::to_string),
+            })
+        }
+        None => {
+            for k in ["fsync", "snapshot-every", "fault"] {
+                anyhow::ensure!(
+                    args.get(k).is_none(),
+                    "--{k} only makes sense together with --data-dir"
+                );
+            }
+            None
+        }
+    };
     let defaults = harness::serve_native::LoadConfig::default();
     let cfg = harness::serve_native::LoadConfig {
         tenants: args.usize_or("tenants", defaults.tenants)?,
@@ -436,13 +483,35 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
         seed: args.u64_or("seed", defaults.seed)?,
         verify: !args.flag("no-verify"),
         tune_every: args.usize_or("tune-every", 0)?,
+        rounds: args.usize_or("rounds", defaults.rounds)?,
+        updates_per_round: args.usize_or("updates", defaults.updates_per_round)?,
+        update_size: args.usize_or("update-size", defaults.update_size)?,
+        queue_capacity: args.usize_or("queue-capacity", defaults.queue_capacity)?,
+        deadline_ms: args.u64_or("deadline-ms", defaults.deadline_ms)?,
+        persist,
     };
     let interval_ms = args.u64_or("metrics-interval-ms", 250)?;
     anyhow::ensure!(interval_ms > 0, "--metrics-interval-ms must be > 0, got {interval_ms}");
     println!(
-        "serve-native: {} requests, {} tenants (~{} nodes each), {} threads, ladder {:?}, \
-         verify={}, tune-every={}",
-        cfg.requests, cfg.tenants, cfg.nodes, cfg.threads, cfg.ladder, cfg.verify, cfg.tune_every
+        "serve-native: {} round(s) × {} requests, {} tenants (~{} nodes each), {} threads, \
+         ladder {:?}, verify={}, tune-every={}{}",
+        cfg.rounds,
+        cfg.requests,
+        cfg.tenants,
+        cfg.nodes,
+        cfg.threads,
+        cfg.ladder,
+        cfg.verify,
+        cfg.tune_every,
+        match &cfg.persist {
+            Some(p) => format!(
+                ", durable under {} (fsync {:?}, snapshot-every {})",
+                p.data_dir.display(),
+                p.fsync,
+                p.snapshot_every
+            ),
+            None => String::new(),
+        }
     );
     // --metrics-out turns tracing on and dumps the snapshot both
     // periodically (so an interrupted run still leaves a usable file)
@@ -477,21 +546,122 @@ fn cmd_serve_native(rest: &[String]) -> Result<()> {
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
         let _ = h.join();
     }
-    let (point, metrics) = run?;
+    // the final authoritative metrics/trace snapshots are written even
+    // when the run failed mid-round — a faulted or interrupted run must
+    // still leave usable observability artifacts behind (the server's
+    // Drop has already drained the queue and flushed the WALs)
     if let Some(path) = &metrics_out {
-        write_metrics_snapshot(path, Some(&metrics))?;
+        let serve = run.as_ref().ok().map(|(_, m)| &**m);
+        write_metrics_snapshot(path, serve)?;
         println!("metrics snapshot written to {path}");
     }
     if let Some(path) = &trace_out {
         write_trace_snapshot(path)?;
         println!("trace timeline written to {path} (load in Perfetto / chrome://tracing)");
     }
+    let (point, metrics) = run?;
     print!("{}", harness::serve_native::report(std::slice::from_ref(&point)));
     print!("{}", metrics.render());
+    if point.recovered_tenants > 0 {
+        println!(
+            "recovered {} tenant(s) from {} ({} WAL batch(es) replayed)",
+            point.recovered_tenants,
+            cfg.persist.as_ref().map(|p| p.data_dir.display().to_string()).unwrap_or_default(),
+            point.replayed_batches
+        );
+    }
     println!(
-        "served {} requests across {} resident graphs: {:.1} req/s, fusion factor {:.2}, verified={}",
-        point.requests, point.tenants, point.requests_per_sec, point.fusion_factor, point.verified
+        "served {} requests ({} shed, {} retries) across {} resident graphs: {:.1} req/s, \
+         fusion factor {:.2}, updates {}/{} applied, verified={}",
+        point.requests,
+        point.shed_requests,
+        point.retries,
+        point.tenants,
+        point.requests_per_sec,
+        point.fusion_factor,
+        point.updates_applied,
+        point.updates_applied + point.updates_shed,
+        point.verified
     );
+    Ok(())
+}
+
+/// Recover every tenant under `--data-dir` **without serving**: load
+/// the newest readable snapshot generation, replay the WAL tail
+/// through the same [`DeltaGraph`](accel_gcn::delta::DeltaGraph) path
+/// live updates take, and report what recovery saw. Documented
+/// fallbacks (torn final record dropped, snapshot generation fallback,
+/// unsealed final epoch) are reported but pass; corruption beyond them
+/// — unreadable snapshots on every generation, a mid-log checksum
+/// mismatch, a sealed fingerprint that diverges — exits nonzero. The
+/// post-SIGKILL CI smoke runs this against a freshly killed server's
+/// directory.
+fn cmd_recover_check(rest: &[String]) -> Result<()> {
+    use accel_gcn::pipeline::spmm_block_level_parallel;
+    use accel_gcn::spmm::verify::allclose;
+    use accel_gcn::store::{recover_tenant, FsyncPolicy, Store};
+    use accel_gcn::util::threadpool::ThreadPool;
+
+    let args = Args::parse(rest, &["data-dir", "threads", "seed"], &["verify-spmm"])?;
+    let dir = args.get("data-dir").context("--data-dir is required")?;
+    let store = Store::open_existing(dir, FsyncPolicy::Never)?;
+    let dirs = store.tenant_dirs()?;
+    anyhow::ensure!(!dirs.is_empty(), "no tenants under {dir}");
+    let verify_spmm = args.flag("verify-spmm");
+    let seed = args.u64_or("seed", 42)?;
+    let pool = ThreadPool::new(args.usize_or("threads", 4)?);
+    let mut table = accel_gcn::util::bench::Table::new(&[
+        "tenant", "epoch", "snap gen", "snap epoch", "replayed", "fell back", "torn tail",
+        "sealed", "spmm",
+    ]);
+    let mut failures = Vec::new();
+    for d in &dirs {
+        let ts = store.tenant_by_dir(d);
+        match recover_tenant(&ts) {
+            Ok(rec) => {
+                let spmm_cell = if verify_spmm {
+                    // re-execute through the full pipeline (relabel +
+                    // partition + block-level executor) against the
+                    // dense reference on the recovered matrix
+                    let plan = SpmmPlan::build(rec.csr.clone(), PartitionParams::default());
+                    let f = 16;
+                    let mut rng = Pcg::seed_from(seed);
+                    let x: Vec<f32> =
+                        (0..rec.csr.n_rows * f).map(|_| rng.f32() - 0.5).collect();
+                    let y = spmm_block_level_parallel(&plan, &x, f, &pool);
+                    if allclose(&y, &rec.csr.spmm_dense(&x, f), 1e-3, 1e-3) {
+                        "ok".to_string()
+                    } else {
+                        failures
+                            .push(format!("{}: recovered SpMM diverged from dense", rec.name));
+                        "DIVERGED".to_string()
+                    }
+                } else {
+                    "-".to_string()
+                };
+                table.row(vec![
+                    rec.name.clone(),
+                    rec.epoch.to_string(),
+                    rec.snapshot_gen.to_string(),
+                    rec.snapshot_epoch.to_string(),
+                    rec.replayed_batches.to_string(),
+                    rec.snapshot_fell_back.to_string(),
+                    rec.torn_tail_dropped.to_string(),
+                    rec.fingerprint_verified.to_string(),
+                    spmm_cell,
+                ]);
+            }
+            Err(e) => failures.push(format!("{d}: {e}")),
+        }
+    }
+    print!("{}", table.render());
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("recover-check FAILED: {f}");
+        }
+        bail!("{} of {} tenant(s) failed recovery", failures.len(), dirs.len());
+    }
+    println!("recover-check: all {} tenant(s) recovered cleanly", dirs.len());
     Ok(())
 }
 

@@ -47,6 +47,19 @@ pub struct ServeMetrics {
     pub patch_latency: LatencyRecorder,
     /// Highest epoch any tenant has reached.
     pub epoch: Gauge,
+    /// Updates shed because their WAL append failed (disk full, I/O) —
+    /// the client got a typed error and the tenant did not advance.
+    pub shed_updates: Counter,
+    /// Compute requests rejected at admission or dropped at pickup
+    /// because their deadline could not be met.
+    pub deadline_expired: Counter,
+    /// WAL records (batch + commit) appended.
+    pub wal_appends: Counter,
+    /// Advisory durability failures (commit seal, periodic snapshot) —
+    /// serving continued, recovery guarantees degraded as documented.
+    pub wal_failures: Counter,
+    /// Periodic snapshot generations written.
+    pub snapshots_written: Counter,
     /// Kernel variant that last served each tenant (graph name →
     /// variant tag, e.g. `"avx2+adaptive(dense 3 / sparse 40 blocks)"`)
     /// — recorded by the worker per executed batch, rendered in the
@@ -115,6 +128,14 @@ impl ServeMetrics {
             self.plan_swaps.get(),
             self.epoch.get(),
         ));
+        s.push_str(&format!(
+            "robustness: shed_updates={} deadline_expired={} wal_appends={} wal_failures={} snapshots={}\n",
+            self.shed_updates.get(),
+            self.deadline_expired.get(),
+            self.wal_appends.get(),
+            self.wal_failures.get(),
+            self.snapshots_written.get(),
+        ));
         s.push_str(&format!("{}\n", self.queue_wait.snapshot().render("queue wait")));
         s.push_str(&format!("{}\n", self.spmm_stage.snapshot().render("spmm stage")));
         let g = self.spmm_gflops.snapshot();
@@ -157,6 +178,11 @@ impl ServeMetrics {
         counters.set("fused_requests", self.fused_requests.get());
         counters.set("updates", self.updates.get());
         counters.set("plan_swaps", self.plan_swaps.get());
+        counters.set("shed_updates", self.shed_updates.get());
+        counters.set("deadline_expired", self.deadline_expired.get());
+        counters.set("wal_appends", self.wal_appends.get());
+        counters.set("wal_failures", self.wal_failures.get());
+        counters.set("snapshots_written", self.snapshots_written.get());
         doc.set("counters", counters);
         let mut gauges = Json::obj();
         gauges.set("queue_depth", self.queue_depth.get());

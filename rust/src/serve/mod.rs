@@ -26,7 +26,13 @@
 //!   captured at submit; see the module docs for the
 //!   queue/worker/epoch semantics.
 //! * [`metrics`] — queue depth, batch occupancy, per-stage latency,
-//!   plan-swap count and patch latency.
+//!   plan-swap count and patch latency — plus the robustness counters
+//!   (shed updates, deadline drops, WAL appends/failures, snapshots).
+//! * [`persist`] — the durability glue over [`crate::store`]: every
+//!   `UpdateGraph` batch WAL-logged before it applies, commit seals
+//!   after, periodic snapshot generations + WAL compaction, and
+//!   [`Server::recover_tenants`] restoring every tenant (and
+//!   pre-warming its plan) after a restart; see DESIGN §11.
 //!
 //! Load-generation and reporting live in
 //! [`bench::serve_native`](crate::bench::serve_native); the dynamic
@@ -35,10 +41,14 @@
 
 pub mod gcn;
 pub mod metrics;
+pub mod persist;
 pub mod registry;
 pub mod server;
 
 pub use gcn::{reference_forward, GcnForward, GcnModel};
 pub use metrics::ServeMetrics;
+pub use persist::{PersistConfig, ServePersist};
 pub use registry::{GraphEntry, GraphHandle, GraphRegistry, GraphUpdate};
-pub use server::{Payload, Request, Response, ServeConfig, Server, UpdateReport};
+pub use server::{
+    Payload, RecoverySummary, Request, Response, ServeConfig, Server, SubmitError, UpdateReport,
+};

@@ -1,0 +1,246 @@
+//! Serve-side durability glue: maps [`GraphHandle`]s to their
+//! [`TenantStore`]s and WAL writers, and enforces the ordering that
+//! makes recovery sound:
+//!
+//! 1. **register** → snapshot generation 1 at epoch 0 is written
+//!    *before* the handle is returned (a registered tenant is always
+//!    recoverable);
+//! 2. **update** → the batch record is appended (and, under
+//!    `--fsync always`, synced) *before*
+//!    [`GraphRegistry::update`](super::GraphRegistry::update) runs —
+//!    the worker applies updates only after the WAL append succeeds,
+//!    so nothing is ever applied that a restart cannot replay;
+//! 3. **after apply** → a commit record seals the new epoch with the
+//!    relabeled fingerprint (advisory: recovery treats a missing final
+//!    seal as "unverified", not fatal);
+//! 4. **periodically** → a fresh snapshot generation + WAL compaction
+//!    keep the replay tail short; the compaction cutoff is the epoch
+//!    of the *older* retained generation so fallback recovery still
+//!    has full coverage.
+
+use super::registry::{GraphEntry, GraphHandle};
+use crate::graph::csr::Csr;
+use crate::pipeline::GraphFingerprint;
+use crate::store::{
+    FaultPlan, FsyncPolicy, Snapshot, Store, StoreError, TenantStore, WalRecord, WalWriter,
+};
+use crate::delta::EdgeUpdate;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Durability configuration carried by
+/// [`ServeConfig`](super::ServeConfig).
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    /// Root data directory (`serve-native --data-dir`).
+    pub data_dir: PathBuf,
+    /// Fsync policy for WAL appends and snapshot writes.
+    pub fsync: FsyncPolicy,
+    /// Write a fresh snapshot generation (and compact the WAL) every
+    /// this many applied updates per tenant; 0 = only the registration
+    /// snapshot.
+    pub snapshot_every: usize,
+    /// Explicit fault-injection spec (same grammar as the
+    /// `ACCEL_GCN_FAULT` env var, see
+    /// [`FaultPlan::parse`](crate::store::FaultPlan::parse)); `None`
+    /// falls back to the env var. Lets tests and `--fault` arm faults
+    /// without mutating process-global state.
+    pub fault_spec: Option<String>,
+}
+
+impl PersistConfig {
+    pub fn new(data_dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig {
+            data_dir: data_dir.into(),
+            fsync: FsyncPolicy::Always,
+            snapshot_every: 0,
+            fault_spec: None,
+        }
+    }
+}
+
+struct TenantPersist {
+    ts: TenantStore,
+    wal: WalWriter,
+    /// Applied updates since the last snapshot generation.
+    updates_since_snapshot: usize,
+}
+
+/// Shared persistence state: the open [`Store`] plus per-handle WAL
+/// writers. Appends happen only on the worker thread; the map lock is
+/// uncontended in steady state.
+pub struct ServePersist {
+    store: Store,
+    snapshot_every: usize,
+    tenants: Mutex<HashMap<GraphHandle, TenantPersist>>,
+}
+
+impl std::fmt::Debug for ServePersist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServePersist")
+            .field("root", &self.store.root())
+            .field("tenants", &self.tenants.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl ServePersist {
+    pub fn open(cfg: &PersistConfig) -> Result<ServePersist, StoreError> {
+        let store = match &cfg.fault_spec {
+            Some(spec) => {
+                Store::open_with_faults(&cfg.data_dir, cfg.fsync, FaultPlan::parse(spec))?
+            }
+            None => Store::open(&cfg.data_dir, cfg.fsync)?,
+        };
+        if store.faults().any() {
+            eprintln!("[store] fault injection armed: {:?}", store.faults());
+        }
+        Ok(ServePersist {
+            store,
+            snapshot_every: cfg.snapshot_every,
+            tenants: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    /// True when the data directory already holds tenant state — the
+    /// caller should recover instead of registering fresh.
+    pub fn has_tenants(&self) -> Result<bool, StoreError> {
+        Ok(!self.store.tenant_dirs()?.is_empty())
+    }
+
+    /// Durably create a **new** tenant: write snapshot generation 1 at
+    /// the entry's epoch, open the WAL. Refuses (typed) when state for
+    /// the name already exists — re-registering over history would
+    /// fork it.
+    pub fn attach_new(&self, handle: GraphHandle, entry: &GraphEntry, csr: &Csr)
+        -> Result<(), StoreError> {
+        let ts = self.store.tenant(&entry.name)?;
+        if ts.exists() {
+            return Err(StoreError::TenantExists { dir: ts.dir().to_path_buf() });
+        }
+        ts.write_snapshot(&Snapshot {
+            name: entry.name.clone(),
+            epoch: entry.epoch,
+            fingerprint: entry.fingerprint,
+            csr: csr.clone(),
+        })?;
+        let wal =
+            WalWriter::open(ts.wal_path(), self.store.fsync(), std::sync::Arc::clone(self.store.faults()))?;
+        self.tenants
+            .lock()
+            .unwrap()
+            .insert(handle, TenantPersist { ts, wal, updates_since_snapshot: 0 });
+        Ok(())
+    }
+
+    /// Adopt a tenant that was just recovered: reuse its on-disk state
+    /// and continue appending to its WAL.
+    pub fn attach_recovered(&self, handle: GraphHandle, dir_name: &str) -> Result<(), StoreError> {
+        let ts = self.store.tenant_by_dir(dir_name);
+        let wal = WalWriter::open(
+            ts.wal_path(),
+            self.store.fsync(),
+            std::sync::Arc::clone(self.store.faults()),
+        )?;
+        self.tenants
+            .lock()
+            .unwrap()
+            .insert(handle, TenantPersist { ts, wal, updates_since_snapshot: 0 });
+        Ok(())
+    }
+
+    /// Step 2 of the ordering contract: log the batch that will take
+    /// `handle` to `epoch`. A typed failure here (disk full, I/O) means
+    /// the caller **must not** apply the batch.
+    pub fn log_batch(
+        &self,
+        handle: GraphHandle,
+        epoch: u64,
+        updates: &[EdgeUpdate],
+    ) -> Result<u64, StoreError> {
+        let mut map = self.tenants.lock().unwrap();
+        let Some(tp) = map.get_mut(&handle) else {
+            return Ok(0); // tenant registered before --data-dir existed: not persisted
+        };
+        tp.wal.append(&WalRecord::Batch { epoch, updates: updates.to_vec() })
+    }
+
+    /// Step 3: seal the applied epoch. Advisory — failures are
+    /// reported to the caller for counting/warning but must not shed
+    /// the (already applied) update.
+    pub fn log_commit(
+        &self,
+        handle: GraphHandle,
+        epoch: u64,
+        fingerprint: GraphFingerprint,
+    ) -> Result<u64, StoreError> {
+        let mut map = self.tenants.lock().unwrap();
+        let Some(tp) = map.get_mut(&handle) else { return Ok(0) };
+        tp.wal.append(&WalRecord::Commit { epoch, fingerprint })
+    }
+
+    /// Step 4: after an applied update, possibly roll a new snapshot
+    /// generation and compact the WAL. `csr` produces the tenant's
+    /// original-domain matrix at `entry`'s epoch — invoked only when a
+    /// snapshot is actually due, so the steady-state per-update cost is
+    /// a counter bump. Returns the new generation when one was written.
+    ///
+    /// Failure ordering keeps recovery sound: a failed snapshot write
+    /// resets nothing (the WAL tail stays long, retried next update); a
+    /// snapshot written but compaction failed leaves a longer-than-
+    /// needed WAL, which replay tolerates (epochs ≤ snapshot are
+    /// skipped).
+    pub fn maybe_snapshot<F>(
+        &self,
+        handle: GraphHandle,
+        entry: &GraphEntry,
+        csr: F,
+    ) -> Result<Option<u64>, StoreError>
+    where
+        F: FnOnce() -> Result<Csr, StoreError>,
+    {
+        let mut map = self.tenants.lock().unwrap();
+        let Some(tp) = map.get_mut(&handle) else { return Ok(None) };
+        tp.updates_since_snapshot += 1;
+        if self.snapshot_every == 0 || tp.updates_since_snapshot < self.snapshot_every {
+            return Ok(None);
+        }
+        let info = tp.ts.write_snapshot(&Snapshot {
+            name: entry.name.clone(),
+            epoch: entry.epoch,
+            fingerprint: entry.fingerprint,
+            csr: csr()?,
+        })?;
+        tp.wal.compact(info.retained_oldest_epoch)?;
+        tp.updates_since_snapshot = 0;
+        Ok(Some(info.gen))
+    }
+
+    /// Does durable state for registry name `name` already exist? Used
+    /// by [`Server::register_graph`](super::Server::register_graph) to
+    /// refuse before allocating a registry handle.
+    pub fn tenant_exists(&self, name: &str) -> Result<bool, StoreError> {
+        Ok(self.store.tenant(name)?.exists())
+    }
+
+    /// Shutdown: force every WAL to disk (after the worker has joined,
+    /// so no appends race this). Errors are returned for logging; all
+    /// writers are flushed regardless.
+    pub fn flush_all(&self) -> Result<(), StoreError> {
+        let mut first_err = None;
+        for tp in self.tenants.lock().unwrap().values_mut() {
+            if let Err(e) = tp.wal.flush() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}

@@ -132,6 +132,14 @@ impl GraphRegistry {
     /// Preprocess `csr` into the relabeled domain and make it resident
     /// at epoch 0. Square adjacencies only (GCN propagation).
     pub fn register(&self, name: &str, csr: &Csr) -> Result<GraphHandle> {
+        self.register_at(name, csr, 0)
+    }
+
+    /// Registration seeded at a non-zero epoch — the recovery path:
+    /// a tenant rebuilt from snapshot + WAL replay re-enters serving
+    /// at the epoch it had reached before the crash, so subsequent
+    /// updates (and their WAL records) continue the same chain.
+    pub fn register_at(&self, name: &str, csr: &Csr, epoch: u64) -> Result<GraphHandle> {
         anyhow::ensure!(
             csr.n_rows == csr.n_cols,
             "adjacency must be square, got {}x{}",
@@ -148,7 +156,7 @@ impl GraphRegistry {
             fingerprint,
             perm: sorted.perm,
             inv: sorted.inv,
-            epoch: 0,
+            epoch,
         });
         let tenant = Arc::new(TenantState {
             name: name.to_string(),
@@ -211,6 +219,26 @@ impl GraphRegistry {
             staged_ops: report.staged_ops,
             compacted: report.compacted,
         })
+    }
+
+    /// Look a tenant up by registry name (recovery resume / tooling;
+    /// O(tenants), registration-order first match).
+    pub fn find(&self, name: &str) -> Option<GraphHandle> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .position(|t| t.name == name)
+            .map(|i| GraphHandle(i as u32))
+    }
+
+    /// The tenant's current original-domain effective adjacency — what
+    /// a snapshot at the current epoch must contain. Materialized from
+    /// the delta overlay; used by the periodic re-snapshot path.
+    pub fn original_snapshot(&self, handle: GraphHandle) -> Result<Csr> {
+        let t = self.tenant(handle)?;
+        let delta = t.delta.lock().unwrap();
+        Ok(delta.snapshot())
     }
 
     /// Number of resident graphs.
@@ -381,6 +409,23 @@ mod tests {
         let new = reg.get(h).unwrap();
         assert_eq!(new.epoch, 1);
         assert_ne!(new.fingerprint, old_fp, "topology change must re-fingerprint");
+    }
+
+    #[test]
+    fn register_at_seeds_epoch_for_recovery() {
+        let reg = GraphRegistry::new();
+        let csr = random_csr(8, 15);
+        let h = reg.register_at("g", &csr, 7).unwrap();
+        assert_eq!(reg.get(h).unwrap().epoch, 7);
+        assert_eq!(reg.find("g"), Some(h));
+        assert_eq!(reg.find("nope"), None);
+        assert_eq!(reg.original_snapshot(h).unwrap(), csr);
+        let batch = vec![EdgeUpdate::Insert { row: 0, col: 9, val: 1.0 }];
+        let up = reg.update(h, &batch).unwrap();
+        assert_eq!(up.new.epoch, 8, "updates continue the recovered chain");
+        let mut dg = crate::delta::DeltaGraph::new(csr);
+        dg.apply(&batch).unwrap();
+        assert_eq!(reg.original_snapshot(h).unwrap(), dg.snapshot());
     }
 
     #[test]

@@ -47,19 +47,22 @@
 
 use super::gcn::{GcnForward, GcnModel};
 use super::metrics::ServeMetrics;
+use super::persist::{PersistConfig, ServePersist};
 use super::registry::{GraphEntry, GraphHandle, GraphRegistry};
 use crate::coordinator::ColumnBatcher;
 use crate::delta::{patch_identity_plan, EdgeUpdate};
 use crate::graph::csr::Csr;
 use crate::partition::patterns::PartitionParams;
-use crate::pipeline::{GraphKey, PlanCache};
+use crate::pipeline::{GraphFingerprint, GraphKey, PlanCache};
 use crate::runtime::HostTensor;
+use crate::store::{recover_tenant, StoreError};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Native-serving configuration (the ladder is virtual: plain widths,
 /// no compiled artifacts behind them).
@@ -81,6 +84,15 @@ pub struct ServeConfig {
     /// Effective only while the global observability registry is
     /// enabled — the tuner consumes its per-shard timeline.
     pub tune_every: usize,
+    /// Durability: snapshot + WAL persistence under a data directory
+    /// (DESIGN §11). `None` = fully in-memory serving (the default).
+    pub persist: Option<PersistConfig>,
+    /// Default compute-request deadline applied by [`Server::submit`];
+    /// `None` = no deadline. Admission rejects a request whose
+    /// predicted queue wait (EWMA of recent waits) already exceeds the
+    /// budget; the worker drops (with a typed reply) requests that
+    /// expired while queued.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -92,6 +104,8 @@ impl Default for ServeConfig {
             params: PartitionParams::default(),
             plan_capacity: 8,
             tune_every: 0,
+            persist: None,
+            deadline: None,
         }
     }
 }
@@ -137,6 +151,87 @@ pub struct UpdateReport {
     pub patch_secs: f64,
 }
 
+/// Why a submission was refused — typed so callers can tell transient
+/// back-pressure (retry with backoff, shed under overload) from a
+/// request that will never be accepted.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity. Transient: retry after
+    /// backoff, or shed. Carries the observed depth so clients can
+    /// scale their backoff to the backlog.
+    Backpressure { depth: usize, capacity: usize },
+    /// The request cannot (admission: predicted from the queue-wait
+    /// EWMA) or did not (worker pickup) meet its deadline. `wait` is
+    /// the predicted or actual queue wait, `depth` the backlog at
+    /// rejection time.
+    Deadline { wait: Duration, depth: usize },
+    /// The server is shutting down; no further work is accepted.
+    ShuttingDown,
+    /// The worker thread is not running (it panicked or was never
+    /// started) — accepted requests would never be served.
+    WorkerDead,
+    /// The request itself is malformed (shape, width, unknown handle,
+    /// out-of-bounds update). Never retryable.
+    Invalid(String),
+}
+
+impl SubmitError {
+    /// True for failures a client may retry after backing off
+    /// (back-pressure); false for permanent ones.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, SubmitError::Backpressure { .. })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure { depth, capacity } => {
+                write!(f, "queue full ({depth} pending, capacity {capacity})")
+            }
+            SubmitError::Deadline { wait, depth } => write!(
+                f,
+                "deadline unmet (queue wait {:.1}ms, {depth} pending)",
+                wait.as_secs_f64() * 1e3
+            ),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+            SubmitError::WorkerDead => write!(f, "serve worker is not running"),
+            SubmitError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// What [`Server::recover_tenants`] rebuilt for one tenant — the
+/// restart-side mirror of [`UpdateReport`].
+#[derive(Clone, Debug)]
+pub struct RecoverySummary {
+    /// Registry name (from the snapshot header).
+    pub name: String,
+    /// The handle the tenant re-entered serving under.
+    pub handle: GraphHandle,
+    /// Epoch after snapshot + WAL replay.
+    pub epoch: u64,
+    /// Epoch of the snapshot generation replay started from.
+    pub snapshot_epoch: u64,
+    /// Which snapshot generation loaded.
+    pub snapshot_gen: u64,
+    /// True if the newest generation was unreadable and recovery fell
+    /// back to an older one.
+    pub snapshot_fell_back: bool,
+    /// WAL batch records replayed on top of the snapshot.
+    pub replayed_batches: usize,
+    /// True if a torn final WAL record was dropped.
+    pub torn_tail_dropped: bool,
+    /// True when every replayed epoch matched its commit seal (false =
+    /// the final batch had no seal; it is applied but unverified).
+    pub fingerprint_verified: bool,
+    /// Fingerprint of the recovered relabeled matrix — the plan-cache
+    /// key, asserted equal to the store's recovered fingerprint.
+    pub fingerprint: GraphFingerprint,
+}
+
 struct ComputePending {
     graph: GraphHandle,
     /// The tenant entry captured at submit — this request's epoch.
@@ -144,6 +239,9 @@ struct ComputePending {
     payload: Payload,
     reply: Sender<Result<Response>>,
     enqueued: Instant,
+    /// Absolute expiry; the worker sheds the request (typed reply) if
+    /// it picks it up past this instant.
+    deadline: Option<Instant>,
     /// Per-request trace id
     /// ([`Registry::next_trace_id`](crate::obs::Registry::next_trace_id));
     /// 0 when the registry was disabled at submit (untraced).
@@ -184,6 +282,10 @@ struct QueueState {
 struct SharedQueue {
     state: Mutex<QueueState>,
     cv: Condvar,
+    /// EWMA of submit → pickup wait in nanoseconds (α = 1/4), updated
+    /// by the worker at pickup and read lock-free by deadline
+    /// admission. 0 until the first request is picked up.
+    ewma_wait_ns: AtomicU64,
 }
 
 /// Handle to the native serving engine; dropping it shuts the worker
@@ -197,15 +299,31 @@ pub struct Server {
     cache: Arc<PlanCache>,
     queue_capacity: usize,
     max_width: usize,
+    /// Partition tunables, kept for recovery-time plan pre-warm (plans
+    /// in the worker path are built with the same params).
+    params: PartitionParams,
+    /// Default deadline applied to [`Server::submit`] (see
+    /// [`ServeConfig::deadline`]).
+    default_deadline: Option<Duration>,
+    /// Durability glue; `None` = in-memory serving.
+    persist: Option<Arc<ServePersist>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Validate the config and start the worker loop.
+    /// Validate the config and start the worker loop. With
+    /// [`ServeConfig::persist`] set, the data directory is opened (and
+    /// created) here; call [`Server::recover_tenants`] before
+    /// registering anything if it may already hold state.
     pub fn start(config: ServeConfig) -> Result<Server> {
         let batcher = ColumnBatcher::from_widths(&config.ladder)?;
         anyhow::ensure!(config.queue_capacity > 0, "queue capacity must be positive");
+        let persist = match &config.persist {
+            Some(pc) => Some(Arc::new(ServePersist::open(pc)?)),
+            None => None,
+        };
         let mut server = Server::front_end(&batcher, &config);
+        server.persist = persist.clone();
         let shared = Arc::clone(&server.shared);
         let registry = Arc::clone(&server.registry);
         let metrics = Arc::clone(&server.metrics);
@@ -223,6 +341,7 @@ impl Server {
                     cache,
                     config.params,
                     config.tune_every,
+                    persist,
                 );
             })
             .expect("spawn serve worker");
@@ -242,11 +361,15 @@ impl Server {
                     shutdown: false,
                 }),
                 cv: Condvar::new(),
+                ewma_wait_ns: AtomicU64::new(0),
             }),
             metrics: Arc::new(ServeMetrics::new()),
             cache: Arc::new(PlanCache::bounded(config.plan_capacity)),
             queue_capacity: config.queue_capacity,
             max_width: batcher.max_width,
+            params: config.params,
+            default_deadline: config.deadline,
+            persist: None,
             worker: None,
         }
     }
@@ -258,9 +381,84 @@ impl Server {
         Ok(Server::front_end(&batcher, &config))
     }
 
-    /// Make a graph resident and get its handle.
+    /// Make a graph resident and get its handle. Under persistence the
+    /// tenant's epoch-0 snapshot is written (and its WAL opened)
+    /// *before* the handle is returned — a registered tenant is always
+    /// recoverable. Refuses (typed [`StoreError::TenantExists`]) when
+    /// the data directory already holds state for `name`: recover it
+    /// instead of forking its history.
     pub fn register_graph(&self, name: &str, csr: &Csr) -> Result<GraphHandle> {
-        self.registry.register(name, csr)
+        if let Some(p) = &self.persist {
+            if p.tenant_exists(name)? {
+                return Err(StoreError::TenantExists {
+                    dir: p.store().tenant(name)?.dir().to_path_buf(),
+                }
+                .into());
+            }
+        }
+        let handle = self.registry.register(name, csr)?;
+        if let Some(p) = &self.persist {
+            let entry = self.registry.get(handle)?;
+            p.attach_new(handle, &entry, csr)?;
+        }
+        Ok(handle)
+    }
+
+    /// Rebuild every tenant found under the data directory: snapshot +
+    /// WAL tail replayed through the same
+    /// [`DeltaGraph::apply`](crate::delta::DeltaGraph::apply) path live
+    /// updates take, re-registered at its recovered epoch, its
+    /// [`SpmmPlan`](crate::pipeline::SpmmPlan) pre-warmed into the
+    /// cache, and its WAL re-opened for appends. The recovered
+    /// relabeled fingerprint (the plan-cache key) is asserted against
+    /// both the store's replay result and the re-registered entry —
+    /// divergence is a typed [`StoreError::FingerprintMismatch`], not a
+    /// silently different plan.
+    pub fn recover_tenants(&self) -> Result<Vec<RecoverySummary>> {
+        let Some(p) = &self.persist else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for dir in p.store().tenant_dirs()? {
+            let ts = p.store().tenant_by_dir(&dir);
+            let rec = recover_tenant(&ts)?;
+            let handle = self.registry.register_at(&rec.name, &rec.csr, rec.epoch)?;
+            let entry = self.registry.get(handle)?;
+            if entry.fingerprint != rec.fingerprint {
+                return Err(StoreError::FingerprintMismatch {
+                    tenant: rec.name.clone(),
+                    epoch: rec.epoch,
+                    detail: format!(
+                        "re-registered entry fingerprints {:?}, recovery produced {:?}",
+                        entry.fingerprint, rec.fingerprint
+                    ),
+                }
+                .into());
+            }
+            // pre-warm: the first post-restart batch must not pay the
+            // from-scratch partition build
+            let _ = self.cache.plan_for_keyed(entry.fingerprint, &entry.relabeled, self.params);
+            p.attach_recovered(handle, &dir)?;
+            self.metrics.epoch.set_max(rec.epoch as i64);
+            out.push(RecoverySummary {
+                name: rec.name,
+                handle,
+                epoch: rec.epoch,
+                snapshot_epoch: rec.snapshot_epoch,
+                snapshot_gen: rec.snapshot_gen,
+                snapshot_fell_back: rec.snapshot_fell_back,
+                replayed_batches: rec.replayed_batches,
+                torn_tail_dropped: rec.torn_tail_dropped,
+                fingerprint_verified: rec.fingerprint_verified,
+                fingerprint: rec.fingerprint,
+            });
+        }
+        Ok(out)
+    }
+
+    /// The durability glue, when persistence is configured.
+    pub fn persist(&self) -> Option<&Arc<ServePersist>> {
+        self.persist.as_ref()
     }
 
     pub fn metrics(&self) -> &Arc<ServeMetrics> {
@@ -287,6 +485,14 @@ impl Server {
         Ok(self.registry.get(graph)?.epoch)
     }
 
+    /// The tenant's current original-domain adjacency (base CSR with
+    /// every applied update folded in). Used by the bench harness and
+    /// recovery checks as the verification oracle after a resume, when
+    /// the caller cannot regenerate the graph from a seed.
+    pub fn graph_snapshot(&self, graph: GraphHandle) -> Result<Csr> {
+        self.registry.original_snapshot(graph)
+    }
+
     /// Hold the worker between rounds: submissions keep queueing (and
     /// will fuse into one wide round on [`Server::resume`]), nothing
     /// executes. Shutdown overrides a pause — queued work still drains.
@@ -301,20 +507,19 @@ impl Server {
         self.shared.cv.notify_all();
     }
 
-    fn enqueue(&self, req: QueuedRequest) -> Result<()> {
+    fn enqueue(&self, req: QueuedRequest) -> Result<(), SubmitError> {
         {
             let mut st = self.shared.state.lock().unwrap();
             if st.shutdown {
                 self.metrics.rejected.inc();
-                return Err(anyhow!("server is shutting down"));
+                return Err(SubmitError::ShuttingDown);
             }
             if st.pending.len() >= self.queue_capacity {
                 self.metrics.rejected.inc();
-                return Err(anyhow!(
-                    "queue full ({} pending, capacity {})",
-                    st.pending.len(),
-                    self.queue_capacity
-                ));
+                return Err(SubmitError::Backpressure {
+                    depth: st.pending.len(),
+                    capacity: self.queue_capacity,
+                });
             }
             st.pending.push(req);
             self.metrics.queue_depth.set(st.pending.len() as i64);
@@ -326,19 +531,60 @@ impl Server {
 
     /// Validate and enqueue; returns the reply channel. Errors on shape
     /// mismatch, widths the ladder cannot carry, a full queue, or a
-    /// server that is shutting down.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+    /// server that is shutting down. Typed-error variant of
+    /// [`Server::submit`] (applies the configured default deadline).
+    pub fn try_submit(&self, req: Request) -> Result<Receiver<Result<Response>>, SubmitError> {
+        self.try_submit_inner(req, self.default_deadline)
+    }
+
+    /// [`Server::try_submit`] with an explicit per-request deadline
+    /// budget (overrides [`ServeConfig::deadline`]).
+    pub fn try_submit_with_deadline(
+        &self,
+        req: Request,
+        budget: Duration,
+    ) -> Result<Receiver<Result<Response>>, SubmitError> {
+        self.try_submit_inner(req, Some(budget))
+    }
+
+    fn try_submit_inner(
+        &self,
+        req: Request,
+        budget: Option<Duration>,
+    ) -> Result<Receiver<Result<Response>>, SubmitError> {
         // a dead worker (e.g. a panic in a batch) must not silently
         // accept requests that will never be served
         if self.worker.as_ref().is_some_and(|h| h.is_finished()) {
             self.metrics.rejected.inc();
-            return Err(anyhow!("serve worker is not running"));
+            return Err(SubmitError::WorkerDead);
         }
-        let entry = self.registry.get(req.graph)?;
+        let entry = match self.registry.get(req.graph) {
+            Ok(e) => e,
+            // unknown handle precedes validation: not counted as a
+            // rejection (matches the pre-typed-error behavior)
+            Err(e) => return Err(SubmitError::Invalid(e.to_string())),
+        };
         if let Err(e) = self.validate(&entry, &req.payload) {
             self.metrics.rejected.inc();
-            return Err(e);
+            return Err(SubmitError::Invalid(format!("{e:#}")));
         }
+        // deadline admission: if recent requests waited longer than
+        // this one's whole budget, it would expire in the queue —
+        // reject at the door instead of queueing doomed work
+        let deadline = match budget {
+            None => None,
+            Some(b) => {
+                let predicted =
+                    Duration::from_nanos(self.shared.ewma_wait_ns.load(Ordering::Relaxed));
+                if predicted > b {
+                    let depth = self.shared.state.lock().unwrap().pending.len();
+                    self.metrics.rejected.inc();
+                    self.metrics.deadline_expired.inc();
+                    return Err(SubmitError::Deadline { wait: predicted, depth });
+                }
+                Some(Instant::now() + b)
+            }
+        };
         let (reply, rx) = channel();
         // allocate the request's trace identity at the door: every span
         // the request touches downstream carries this id in its args
@@ -351,31 +597,45 @@ impl Server {
             payload: req.payload,
             reply,
             enqueued: Instant::now(),
+            deadline,
             trace,
             enqueued_ns,
         }))?;
         Ok(rx)
     }
 
+    /// [`Server::try_submit`] with the typed error erased into
+    /// `anyhow` (messages unchanged — "queue full (…)" etc.).
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        self.try_submit(req).map_err(anyhow::Error::new)
+    }
+
     /// Enqueue an `UpdateGraph` request: apply `updates` to the tenant
     /// and swap in the next epoch. Ordering guarantee: compute requests
     /// submitted *before* this call execute against the pre-update
     /// epoch, ones submitted after the reply observe the new epoch.
-    pub fn submit_update(
+    /// Updates take no deadline — once logged they are authoritative.
+    pub fn try_submit_update(
         &self,
         graph: GraphHandle,
         updates: Vec<EdgeUpdate>,
-    ) -> Result<Receiver<Result<UpdateReport>>> {
+    ) -> Result<Receiver<Result<UpdateReport>>, SubmitError> {
         if self.worker.as_ref().is_some_and(|h| h.is_finished()) {
             self.metrics.rejected.inc();
-            return Err(anyhow!("serve worker is not running"));
+            return Err(SubmitError::WorkerDead);
         }
-        let entry = self.registry.get(graph)?;
+        let entry = match self.registry.get(graph) {
+            Ok(e) => e,
+            Err(e) => return Err(SubmitError::Invalid(e.to_string())),
+        };
         for u in &updates {
             let (r, c) = (u.row() as usize, u.col() as usize);
             if r >= entry.n || c >= entry.n {
                 self.metrics.rejected.inc();
-                return Err(anyhow!("update ({r},{c}) out of bounds for {}-node tenant", entry.n));
+                return Err(SubmitError::Invalid(format!(
+                    "update ({r},{c}) out of bounds for {}-node tenant",
+                    entry.n
+                )));
             }
         }
         let (reply, rx) = channel();
@@ -386,6 +646,16 @@ impl Server {
             enqueued: Instant::now(),
         }))?;
         Ok(rx)
+    }
+
+    /// [`Server::try_submit_update`] with the typed error erased into
+    /// `anyhow`.
+    pub fn submit_update(
+        &self,
+        graph: GraphHandle,
+        updates: Vec<EdgeUpdate>,
+    ) -> Result<Receiver<Result<UpdateReport>>> {
+        self.try_submit_update(graph, updates).map_err(anyhow::Error::new)
     }
 
     /// [`Server::submit_update`] + wait for the swap to complete.
@@ -464,8 +734,14 @@ impl Server {
     }
 }
 
-impl Drop for Server {
-    fn drop(&mut self) {
+impl Server {
+    /// Graceful shutdown with the ordering durability requires:
+    /// **(1) stop admissions and wake the worker** (the shutdown flag
+    /// overrides a pause), **(2) join the worker**, which drains every
+    /// queued request/update and replies — so WAL appends for queued
+    /// updates all happen-before **(3) the final WAL flush**. Safe to
+    /// call mid-round and more than once; `Drop` delegates here.
+    pub fn shutdown(&mut self) {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.shutdown = true;
@@ -474,6 +750,17 @@ impl Drop for Server {
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
+        if let Some(p) = &self.persist {
+            if let Err(e) = p.flush_all() {
+                eprintln!("[store] final WAL flush failed: {e}");
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -490,6 +777,7 @@ fn worker_loop(
     cache: Arc<PlanCache>,
     params: PartitionParams,
     tune_every: usize,
+    persist: Option<Arc<ServePersist>>,
 ) {
     let mut rounds: usize = 0;
     loop {
@@ -510,6 +798,11 @@ fn worker_loop(
         for p in &round {
             let wait = picked_up.duration_since(p.enqueued());
             metrics.queue_wait.record(wait.as_secs_f64());
+            // feed deadline admission: EWMA with α = 1/4, lock-free
+            let w = wait.as_nanos() as u64;
+            let old = shared.ewma_wait_ns.load(Ordering::Relaxed);
+            let ewma = if old == 0 { w } else { old - old / 4 + w / 4 };
+            shared.ewma_wait_ns.store(ewma, Ordering::Relaxed);
             // queue wait spans submit → pickup across threads, so it is
             // recorded by path rather than by guard (self-gating when
             // the registry is disabled); traced requests additionally
@@ -542,15 +835,32 @@ fn worker_loop(
         for q in round {
             match q {
                 QueuedRequest::UpdateGraph(u) => updates.push(u),
-                QueuedRequest::Compute(p) => match &p.payload {
-                    Payload::Spmm { .. } => {
-                        spmm_groups.entry((p.graph, p.entry.epoch)).or_default().push(p)
+                QueuedRequest::Compute(p) => {
+                    // a request that expired while queued is shed here
+                    // with a typed reply — executing it would waste a
+                    // batch slot on an answer the client gave up on
+                    if let Some(d) = p.deadline {
+                        if picked_up > d {
+                            metrics.deadline_expired.inc();
+                            metrics.errors.inc();
+                            let wait = picked_up.duration_since(p.enqueued);
+                            metrics.total.record(p.enqueued.elapsed().as_secs_f64());
+                            let _ = p.reply.send(Err(anyhow::Error::new(
+                                SubmitError::Deadline { wait, depth: 0 },
+                            )));
+                            continue;
+                        }
                     }
-                    Payload::Gcn { model, .. } => {
-                        let key = (p.graph, p.entry.epoch, Arc::as_ptr(model) as usize);
-                        gcn_groups.entry(key).or_default().push(p)
+                    match &p.payload {
+                        Payload::Spmm { .. } => {
+                            spmm_groups.entry((p.graph, p.entry.epoch)).or_default().push(p)
+                        }
+                        Payload::Gcn { model, .. } => {
+                            let key = (p.graph, p.entry.epoch, Arc::as_ptr(model) as usize);
+                            gcn_groups.entry(key).or_default().push(p)
+                        }
                     }
-                },
+                }
             }
         }
         for (_, group) in spmm_groups {
@@ -560,7 +870,7 @@ fn worker_loop(
             run_gcn_group(group, &metrics, &batcher, &pool, &cache, params);
         }
         for u in updates {
-            apply_update(u, &registry, &metrics, &cache, params);
+            apply_update(u, &registry, &metrics, &cache, params, persist.as_deref());
         }
         rounds += 1;
         if tune_every > 0 && rounds % tune_every == 0 {
@@ -600,16 +910,84 @@ fn tune_resident_plans(cache: &PlanCache, n_shards: usize) {
 /// in-place plan patch via [`PlanCache::refresh`]. The expensive work
 /// happens here in the worker; submitters only ever contend on the
 /// registry's pointer-swap lock.
+///
+/// Under persistence the batch is WAL-logged **before** the registry
+/// applies it (DESIGN §11: logged == applied). A typed append failure —
+/// disk full, I/O error — **sheds** the update: the client gets the
+/// error, the registry stays at its epoch, and the WAL holds no record
+/// of a batch that never applied. The converse can't happen either: a
+/// logged batch passed submit-time bounds validation, the only way
+/// [`GraphRegistry::update`] fails, so apply-after-log is infallible.
 fn apply_update(
     u: UpdatePending,
     registry: &GraphRegistry,
     metrics: &ServeMetrics,
     cache: &PlanCache,
     params: PartitionParams,
+    persist: Option<&ServePersist>,
 ) {
     let t0 = Instant::now();
+    if let Some(p) = persist {
+        let epoch = match registry.get(u.graph) {
+            Ok(e) => e.epoch + 1,
+            Err(e) => {
+                metrics.errors.inc();
+                let _ = u.reply.send(Err(e));
+                return;
+            }
+        };
+        match p.log_batch(u.graph, epoch, &u.updates) {
+            Ok(bytes) => {
+                if bytes > 0 {
+                    metrics.wal_appends.inc();
+                }
+            }
+            Err(e) => {
+                metrics.shed_updates.inc();
+                metrics.errors.inc();
+                eprintln!("[store] shedding update for {:?} at epoch {epoch}: {e}", u.graph);
+                let _ = u.reply.send(Err(anyhow::Error::new(e)));
+                return;
+            }
+        }
+    }
     match registry.update(u.graph, &u.updates) {
         Ok(gu) => {
+            if let Some(p) = persist {
+                // seal the applied epoch with the fingerprint recovery
+                // must reproduce. Advisory: a failed seal leaves the
+                // final batch "applied but unverified" on restart, it
+                // must not shed an already-applied update
+                match p.log_commit(u.graph, gu.new.epoch, gu.new.fingerprint) {
+                    Ok(bytes) => {
+                        if bytes > 0 {
+                            metrics.wal_appends.inc();
+                        }
+                    }
+                    Err(e) => {
+                        metrics.wal_failures.inc();
+                        eprintln!(
+                            "[store] commit seal for {:?} epoch {} failed: {e}",
+                            u.graph, gu.new.epoch
+                        );
+                    }
+                }
+                match p.maybe_snapshot(u.graph, &gu.new, || {
+                    registry
+                        .original_snapshot(u.graph)
+                        .map_err(|e| StoreError::Config(format!("registry: {e}")))
+                }) {
+                    Ok(Some(_gen)) => metrics.snapshots_written.inc(),
+                    Ok(None) => {}
+                    Err(e) => {
+                        // the WAL still holds the full tail (compaction
+                        // only runs after a successful snapshot write),
+                        // so recovery is unaffected — warn and count
+                        metrics.wal_failures.inc();
+                        eprintln!("[store] periodic snapshot for {:?} failed: {e}", u.graph);
+                    }
+                }
+            }
             let old_key = GraphKey { fingerprint: gu.old.fingerprint, params };
             let plan_patched = match cache.peek(&old_key) {
                 Some(old_plan) => {
@@ -974,6 +1352,194 @@ mod tests {
         assert_eq!(m.completed.get(), 16);
         assert_eq!(m.batches.get(), 1, "16×8 columns fit one 128-wide batch exactly");
         assert!((m.fusion_factor() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn typed_backpressure_carries_depth_and_capacity() {
+        let server = Server::start_without_worker(ServeConfig {
+            queue_capacity: 2,
+            ladder: vec![32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let h = server.register_graph("g", &random_csr(50, 10)).unwrap();
+        let mut rng = Pcg::seed_from(60);
+        let _a = server.try_submit(Request { graph: h, payload: Payload::Spmm { x: features(&mut rng, 10, 8) } }).unwrap();
+        let _b = server.try_submit(Request { graph: h, payload: Payload::Spmm { x: features(&mut rng, 10, 8) } }).unwrap();
+        let err = server
+            .try_submit(Request { graph: h, payload: Payload::Spmm { x: features(&mut rng, 10, 8) } })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::Backpressure { depth: 2, capacity: 2 });
+        assert!(err.is_retryable(), "back-pressure is the retryable failure");
+        assert_eq!(err.to_string(), "queue full (2 pending, capacity 2)");
+        // malformed requests are typed Invalid and never retryable
+        let err = server
+            .try_submit(Request {
+                graph: GraphHandle(9),
+                payload: Payload::Spmm { x: features(&mut rng, 10, 8) },
+            })
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "{err:?}");
+        assert!(!err.is_retryable());
+    }
+
+    #[test]
+    fn deadline_sheds_at_pickup_then_rejects_at_admission() {
+        let server = Server::start(ServeConfig {
+            threads: 1,
+            ladder: vec![32],
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let g = random_csr(51, 10);
+        let h = server.register_graph("g", &g).unwrap();
+        let mut rng = Pcg::seed_from(61);
+        // queue a request with a 1ms budget, hold the worker past it
+        server.pause();
+        let rx = server
+            .try_submit_with_deadline(
+                Request { graph: h, payload: Payload::Spmm { x: features(&mut rng, 10, 8) } },
+                Duration::from_millis(1),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        server.resume();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("deadline unmet"), "{err}");
+        assert_eq!(server.metrics().deadline_expired.get(), 1);
+        assert_eq!(server.metrics().completed.get(), 0, "expired request never executed");
+        // that ~30ms wait fed the admission EWMA: the same budget is now
+        // rejected at the door, before queueing doomed work
+        let err = server
+            .try_submit_with_deadline(
+                Request { graph: h, payload: Payload::Spmm { x: features(&mut rng, 10, 8) } },
+                Duration::from_millis(1),
+            )
+            .unwrap_err();
+        match err {
+            SubmitError::Deadline { wait, .. } => {
+                assert!(wait >= Duration::from_millis(1), "predicted wait {wait:?}")
+            }
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        assert_eq!(server.metrics().deadline_expired.get(), 2);
+        // a generous budget still serves, correctly
+        let x = features(&mut rng, 10, 8);
+        let want = g.spmm_dense(x.as_f32().unwrap(), 8);
+        let resp = server
+            .try_submit_with_deadline(
+                Request { graph: h, payload: Payload::Spmm { x } },
+                Duration::from_secs(60),
+            )
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_allclose(resp.y.as_f32().unwrap(), &want, 1e-4, 1e-4, "deadline-admitted spmm");
+    }
+
+    #[test]
+    fn persisted_updates_survive_restart() {
+        let dir = crate::store::test_dir("serve-restart");
+        let g = random_csr(52, 30);
+        let batch = vec![
+            EdgeUpdate::Insert { row: 2, col: 17, val: 4.0 },
+            EdgeUpdate::Insert { row: 9, col: 3, val: -1.5 },
+            EdgeUpdate::Delete { row: 0, col: 0 },
+        ];
+        let cfg = || ServeConfig {
+            threads: 1,
+            ladder: vec![32],
+            persist: Some(PersistConfig {
+                fsync: crate::store::FsyncPolicy::Never,
+                ..PersistConfig::new(&dir)
+            }),
+            ..ServeConfig::default()
+        };
+        {
+            let mut server = Server::start(cfg()).unwrap();
+            let h = server.register_graph("g", &g).unwrap();
+            let rep = server.update_graph(h, batch.clone()).unwrap();
+            assert_eq!(rep.epoch, 1);
+            assert!(server.metrics().wal_appends.get() >= 2, "batch + commit seal logged");
+            server.shutdown(); // drain → join → flush, in that order
+        }
+        // restart: recover instead of registering
+        let server2 = Server::start(cfg()).unwrap();
+        let recs = server2.recover_tenants().unwrap();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!((r.name.as_str(), r.epoch, r.replayed_batches), ("g", 1, 1));
+        assert!(r.fingerprint_verified, "sealed epoch must verify");
+        // the recovered fingerprint equals the uncrashed oracle's
+        let mut dg = crate::delta::DeltaGraph::new(g.clone());
+        dg.apply(&batch).unwrap();
+        let updated = dg.snapshot();
+        assert_eq!(r.fingerprint, crate::store::relabeled_fingerprint(&updated));
+        // plan pre-warmed under the recovered fingerprint
+        let key = GraphKey { fingerprint: r.fingerprint, params: PartitionParams::default() };
+        assert!(server2.plan_cache().peek(&key).is_some(), "recovery pre-warms the plan");
+        // recovered tenant serves correctly and continues its chain
+        let mut rng = Pcg::seed_from(62);
+        let x = features(&mut rng, 30, 8);
+        let want = updated.spmm_dense(x.as_f32().unwrap(), 8);
+        let resp = server2.submit_spmm(r.handle, x).unwrap().recv().unwrap().unwrap();
+        assert_allclose(resp.y.as_f32().unwrap(), &want, 1e-4, 1e-4, "post-recovery spmm");
+        let rep = server2
+            .update_graph(r.handle, vec![EdgeUpdate::Insert { row: 1, col: 1, val: 2.0 }])
+            .unwrap();
+        assert_eq!(rep.epoch, 2, "updates continue the recovered epoch chain");
+        // re-registering over recovered history is refused, typed
+        let err = server2.register_graph("g", &g).unwrap_err();
+        assert!(err.to_string().contains("already exists"), "{err}");
+        drop(server2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_full_sheds_update_with_typed_error_and_keeps_serving() {
+        let dir = crate::store::test_dir("serve-diskfull");
+        let g = random_csr(53, 20);
+        let server = Server::start(ServeConfig {
+            threads: 1,
+            ladder: vec![32],
+            persist: Some(PersistConfig {
+                fsync: crate::store::FsyncPolicy::Never,
+                // budget covers the first couple of batch + seal
+                // records, then the device is "full"
+                fault_spec: Some("disk-full=200".into()),
+                ..PersistConfig::new(&dir)
+            }),
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let h = server.register_graph("g", &g).unwrap();
+        let mut epoch = 0u64;
+        let mut shed = 0u64;
+        for i in 0..6 {
+            let batch = vec![EdgeUpdate::Insert { row: i, col: 19 - i, val: 1.0 }];
+            match server.update_graph(h, batch) {
+                Ok(rep) => epoch = rep.epoch,
+                Err(e) => {
+                    assert!(e.to_string().contains("disk full"), "typed DiskFull, got {e}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "the byte budget must eventually shed");
+        assert_eq!(server.metrics().shed_updates.get(), shed);
+        assert_eq!(
+            server.graph_epoch(h).unwrap(),
+            epoch,
+            "shed updates never advance the tenant"
+        );
+        // serving itself is unaffected by a full disk
+        let mut rng = Pcg::seed_from(63);
+        let x = features(&mut rng, 20, 8);
+        let resp = server.submit_spmm(h, x).unwrap().recv().unwrap();
+        assert!(resp.is_ok(), "compute path keeps working under disk-full");
+        drop(server);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

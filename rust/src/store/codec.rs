@@ -1,0 +1,248 @@
+//! Byte-level codec shared by the snapshot and WAL formats: little-
+//! endian primitives over growable buffers, a checked read cursor, the
+//! IEEE CRC-32 both file formats checksum with, and the
+//! [`EdgeUpdate`] wire encoding.
+//!
+//! Everything is explicit-width little-endian — the formats are
+//! byte-identical across architectures.
+
+use crate::delta::EdgeUpdate;
+use crate::pipeline::GraphFingerprint;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------
+// writers
+
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_bytes(buf: &mut Vec<u8>, v: &[u8]) {
+    put_u32(buf, v.len() as u32);
+    buf.extend_from_slice(v);
+}
+
+// ---------------------------------------------------------------------
+// checked reader
+
+/// Bounds-checked little-endian reader; every `take_*` returns `None`
+/// on underflow so callers turn truncation into their own typed error
+/// with the right file/offset context.
+pub struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(data: &'a [u8]) -> Cursor<'a> {
+        Cursor { data, pos: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left.
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    pub fn take_u8(&mut self) -> Option<u8> {
+        let b = *self.data.get(self.pos)?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    pub fn take_u32(&mut self) -> Option<u32> {
+        let raw = self.data.get(self.pos..self.pos + 4)?;
+        self.pos += 4;
+        Some(u32::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Option<u64> {
+        let raw = self.data.get(self.pos..self.pos + 8)?;
+        self.pos += 8;
+        Some(u64::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    pub fn take_f32(&mut self) -> Option<f32> {
+        let raw = self.data.get(self.pos..self.pos + 4)?;
+        self.pos += 4;
+        Some(f32::from_le_bytes(raw.try_into().unwrap()))
+    }
+
+    pub fn take_bytes(&mut self) -> Option<&'a [u8]> {
+        let len = self.take_u32()? as usize;
+        let raw = self.data.get(self.pos..self.pos + len)?;
+        self.pos += len;
+        Some(raw)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, init/xorout 0xFFFFFFFF)
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// IEEE CRC-32 of `data` (the `cksum`/zlib polynomial, reflected).
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// domain encodings
+
+/// Wire tags for [`EdgeUpdate`] (one byte each).
+const TAG_INSERT: u8 = 0;
+const TAG_DELETE: u8 = 1;
+
+/// Append one edge update: `tag u8, row u32, col u32[, val f32]`.
+pub fn put_update(buf: &mut Vec<u8>, u: &EdgeUpdate) {
+    match *u {
+        EdgeUpdate::Insert { row, col, val } => {
+            put_u8(buf, TAG_INSERT);
+            put_u32(buf, row);
+            put_u32(buf, col);
+            put_f32(buf, val);
+        }
+        EdgeUpdate::Delete { row, col } => {
+            put_u8(buf, TAG_DELETE);
+            put_u32(buf, row);
+            put_u32(buf, col);
+        }
+    }
+}
+
+/// Decode one edge update; `None` on truncation or an unknown tag.
+pub fn take_update(cur: &mut Cursor<'_>) -> Option<EdgeUpdate> {
+    match cur.take_u8()? {
+        TAG_INSERT => Some(EdgeUpdate::Insert {
+            row: cur.take_u32()?,
+            col: cur.take_u32()?,
+            val: cur.take_f32()?,
+        }),
+        TAG_DELETE => Some(EdgeUpdate::Delete { row: cur.take_u32()?, col: cur.take_u32()? }),
+        _ => None,
+    }
+}
+
+/// Append a fingerprint as four u64 words (dims, nnz, content hash).
+pub fn put_fingerprint(buf: &mut Vec<u8>, fp: &GraphFingerprint) {
+    put_u64(buf, fp.n_rows as u64);
+    put_u64(buf, fp.n_cols as u64);
+    put_u64(buf, fp.nnz as u64);
+    put_u64(buf, fp.content_hash);
+}
+
+pub fn take_fingerprint(cur: &mut Cursor<'_>) -> Option<GraphFingerprint> {
+    Some(GraphFingerprint {
+        n_rows: cur.take_u64()? as usize,
+        n_cols: cur.take_u64()? as usize,
+        nnz: cur.take_u64()? as usize,
+        content_hash: cur.take_u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_answer() {
+        // the standard check value for CRC-32/ISO-HDLC
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 0xAB);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 7);
+        put_f32(&mut buf, -1.5e-3);
+        put_bytes(&mut buf, b"tenant");
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(cur.take_u8(), Some(0xAB));
+        assert_eq!(cur.take_u32(), Some(0xDEAD_BEEF));
+        assert_eq!(cur.take_u64(), Some(u64::MAX - 7));
+        assert_eq!(cur.take_f32(), Some(-1.5e-3));
+        assert_eq!(cur.take_bytes(), Some(&b"tenant"[..]));
+        assert_eq!(cur.remaining(), 0);
+        assert_eq!(cur.take_u8(), None, "underflow is None, not a panic");
+    }
+
+    #[test]
+    fn updates_roundtrip_including_nan_bits() {
+        let ups = vec![
+            EdgeUpdate::Insert { row: 0, col: u32::MAX, val: f32::NAN },
+            EdgeUpdate::Delete { row: 7, col: 7 },
+            EdgeUpdate::Insert { row: 42, col: 1, val: -0.0 },
+        ];
+        let mut buf = Vec::new();
+        for u in &ups {
+            put_update(&mut buf, u);
+        }
+        let mut cur = Cursor::new(&buf);
+        for u in &ups {
+            let got = take_update(&mut cur).unwrap();
+            // compare by bits: the codec must preserve NaN payloads and
+            // signed zero exactly
+            match (u, &got) {
+                (
+                    EdgeUpdate::Insert { row, col, val },
+                    EdgeUpdate::Insert { row: r2, col: c2, val: v2 },
+                ) => {
+                    assert_eq!((row, col), (r2, c2));
+                    assert_eq!(val.to_bits(), v2.to_bits());
+                }
+                (a, b) => assert_eq!(format!("{a:?}"), format!("{b:?}")),
+            }
+        }
+        assert_eq!(cur.remaining(), 0);
+        // unknown tag decodes to None
+        let bad = [9u8, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert!(take_update(&mut Cursor::new(&bad)).is_none());
+    }
+
+    #[test]
+    fn truncated_bytes_field_is_none() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, b"abcdef");
+        for cut in 0..buf.len() {
+            let mut cur = Cursor::new(&buf[..cut]);
+            assert!(cur.take_bytes().is_none(), "cut at {cut}");
+        }
+    }
+}

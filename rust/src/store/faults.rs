@@ -1,0 +1,130 @@
+//! Env/flag-driven fault injection for the durability layer.
+//!
+//! `ACCEL_GCN_FAULT` is a comma-separated list of faults, each of which
+//! must degrade gracefully (DESIGN §11 fault matrix) — a typed
+//! [`StoreError`](super::StoreError) or a documented fallback, never a
+//! panic:
+//!
+//! | flag                | injection point                              | expected degradation |
+//! |---------------------|----------------------------------------------|----------------------|
+//! | `torn-tail`         | WAL writer close truncates the final record  | tail dropped + warning on replay |
+//! | `checksum-flip`     | first WAL batch record's CRC gets a bit flip | typed `ChecksumMismatch`/`Corrupt` on replay (mid-log) or dropped tail (if last) |
+//! | `snapshot-truncate` | every snapshot generation **after the first** is cut in half | recovery falls back to the previous generation |
+//! | `disk-full=BYTES`   | WAL appends fail once BYTES have been written| update shed with typed `DiskFull`, server keeps serving |
+//!
+//! The plan is shared (`Arc`) across every tenant of a
+//! [`Store`](super::Store) so budget-style faults (`disk-full`) apply
+//! globally, like a real device would.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Active fault switches. The default ([`FaultPlan::none`]) injects
+/// nothing and is what production paths run with.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Truncate the final WAL record mid-payload when the writer
+    /// closes — simulates a crash during the last append.
+    pub torn_tail: bool,
+    /// Flip one bit in the CRC of the first batch record written.
+    checksum_flip: AtomicBool,
+    /// Truncate each snapshot generation after the first to half its
+    /// size right after the atomic rename.
+    pub snapshot_truncate: bool,
+    /// Total WAL bytes allowed before appends report `DiskFull`
+    /// (`None` = unlimited).
+    pub disk_full_after: Option<u64>,
+    /// WAL bytes appended so far under this plan (all tenants).
+    appended: AtomicU64,
+}
+
+impl FaultPlan {
+    /// No faults (production).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse `ACCEL_GCN_FAULT`. Unknown flags are reported on stderr
+    /// and ignored — a typo must not silently disable the whole matrix
+    /// nor crash the server.
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("ACCEL_GCN_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec),
+            _ => FaultPlan::none(),
+        }
+    }
+
+    /// Parse a comma-separated fault spec (see module docs).
+    pub fn parse(spec: &str) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part {
+                "torn-tail" => plan.torn_tail = true,
+                "checksum-flip" => plan.checksum_flip = AtomicBool::new(true),
+                "snapshot-truncate" => plan.snapshot_truncate = true,
+                _ => match part.strip_prefix("disk-full=").and_then(|v| v.parse::<u64>().ok()) {
+                    Some(bytes) => plan.disk_full_after = Some(bytes),
+                    None => eprintln!("[store] ignoring unknown fault flag '{part}'"),
+                },
+            }
+        }
+        plan
+    }
+
+    /// True if any fault is armed (logged at store open).
+    pub fn any(&self) -> bool {
+        self.torn_tail
+            || self.snapshot_truncate
+            || self.disk_full_after.is_some()
+            || self.checksum_flip.load(Ordering::Relaxed)
+    }
+
+    /// Consume the one-shot checksum-flip trigger (first batch record
+    /// only, so the corruption lands mid-log once more records follow).
+    pub(crate) fn take_checksum_flip(&self) -> bool {
+        self.checksum_flip.swap(false, Ordering::Relaxed)
+    }
+
+    /// Account `bytes` of WAL append; `true` means the simulated device
+    /// is full and the append must fail *before* writing.
+    pub(crate) fn wal_append_would_fill(&self, bytes: u64) -> bool {
+        match self.disk_full_after {
+            None => false,
+            Some(limit) => {
+                let before = self.appended.fetch_add(bytes, Ordering::Relaxed);
+                before + bytes > limit
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse("torn-tail, checksum-flip,snapshot-truncate,disk-full=4096");
+        assert!(p.torn_tail);
+        assert!(p.snapshot_truncate);
+        assert_eq!(p.disk_full_after, Some(4096));
+        assert!(p.any());
+        assert!(p.take_checksum_flip(), "armed once");
+        assert!(!p.take_checksum_flip(), "consumed");
+    }
+
+    #[test]
+    fn unknown_flags_are_ignored() {
+        let p = FaultPlan::parse("warp-core-breach,disk-full=oops");
+        assert!(!p.any());
+    }
+
+    #[test]
+    fn disk_full_budget_trips_once_exceeded() {
+        let p = FaultPlan::parse("disk-full=100");
+        assert!(!p.wal_append_would_fill(60));
+        assert!(!p.wal_append_would_fill(40), "exactly at the limit still fits");
+        assert!(p.wal_append_would_fill(1));
+        let none = FaultPlan::none();
+        assert!(!none.wal_append_would_fill(u64::MAX / 2));
+    }
+}

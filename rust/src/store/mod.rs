@@ -1,0 +1,376 @@
+//! Durability layer: per-tenant graph **snapshots** plus a **delta
+//! WAL**, so a restarted server rebuilds every tenant — and its plans —
+//! from disk (DESIGN §11).
+//!
+//! ## Directory layout
+//!
+//! ```text
+//! <data-dir>/
+//!   <tenant-dir>/                  # sanitized tenant name
+//!     snap-<gen>-e<epoch>.bin      # generational checksummed snapshots
+//!     wal.bin                      # delta WAL (batch + commit records)
+//! ```
+//!
+//! * [`snapshot`] — versioned binary CSR + metadata, CRC-checksummed,
+//!   written atomically (tmp + rename). The newest **generation** is
+//!   authoritative; the previous one is retained so a corrupt snapshot
+//!   falls back one generation (the WAL keeps enough tail to replay
+//!   from it).
+//! * [`wal`] — length-prefixed records with a per-record CRC. A
+//!   **batch** record logs an `UpdateGraph` batch *before* it is
+//!   applied; a **commit** record seals the post-apply epoch with the
+//!   relabeled-matrix fingerprint the plan cache keys on. A torn final
+//!   record (crash mid-append) is dropped with a warning on replay;
+//!   corruption anywhere earlier is a typed error.
+//! * [`recover`] — snapshot load + WAL tail replay through the same
+//!   [`DeltaGraph::apply`](crate::delta::DeltaGraph::apply) path the
+//!   live server uses, with the recovered fingerprint asserted against
+//!   the last commit record.
+//! * [`faults`] — env-driven fault injection (torn tail, truncated
+//!   snapshot, checksum flip, disk full) used by tests and the CI
+//!   fault matrix; every fault must degrade to a typed error or a
+//!   documented fallback, never a panic.
+//!
+//! The layer is deliberately serve-agnostic: it knows CSRs, epochs and
+//! fingerprints, not handles or queues. The serve-side glue lives in
+//! [`serve::persist`](crate::serve::persist).
+
+pub mod codec;
+pub mod faults;
+pub mod recover;
+pub mod snapshot;
+pub mod wal;
+
+pub use faults::FaultPlan;
+pub use recover::{recover_tenant, relabeled_fingerprint, RecoveredTenant};
+pub use snapshot::{read_snapshot_file, Snapshot, SnapshotWriteInfo};
+pub use wal::{replay_wal, WalRecord, WalReplay, WalWriter};
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// When the store calls `fsync` on durable writes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fsync` after every WAL append and snapshot write — survives
+    /// power loss, the default for `--data-dir` serving.
+    Always,
+    /// Leave flushing to the OS page cache — survives process crashes
+    /// (SIGKILL) but not power loss; fastest.
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse a `--fsync` flag value.
+    pub fn parse(s: &str) -> Result<FsyncPolicy, StoreError> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "never" => Ok(FsyncPolicy::Never),
+            other => Err(StoreError::Config(format!(
+                "unknown fsync policy '{other}' (expected always|never)"
+            ))),
+        }
+    }
+}
+
+/// Typed durability errors. Every failure mode of the store surfaces
+/// here so callers can distinguish "disk full — shed the update" from
+/// "bytes are corrupt — fall back / refuse to serve".
+#[derive(Debug)]
+pub enum StoreError {
+    /// An OS-level I/O failure that is not disk-full.
+    Io { op: &'static str, path: PathBuf, detail: String },
+    /// The device ran out of space mid-append; the record was not
+    /// committed and the in-memory state must not advance.
+    DiskFull { path: PathBuf },
+    /// Bytes on disk fail structural validation (bad length, bad tag,
+    /// truncation that is not a torn tail).
+    Corrupt { path: PathBuf, offset: u64, detail: String },
+    /// A record or snapshot CRC does not match its payload.
+    ChecksumMismatch { path: PathBuf, want: u32, got: u32 },
+    /// The file does not start with the expected magic.
+    BadMagic { path: PathBuf },
+    /// The format version is newer than this build understands.
+    UnsupportedVersion { path: PathBuf, version: u32 },
+    /// No readable snapshot generation exists for the tenant.
+    NoSnapshot { dir: PathBuf },
+    /// WAL batches do not chain epoch-contiguously from the snapshot.
+    EpochGap { path: PathBuf, want: u64, got: u64 },
+    /// The recovered relabeled-matrix fingerprint diverges from the
+    /// last committed one — replay did not reproduce the pre-crash
+    /// state.
+    FingerprintMismatch { tenant: String, epoch: u64, detail: String },
+    /// Registering a tenant whose directory already holds state (must
+    /// recover instead of overwriting).
+    TenantExists { dir: PathBuf },
+    /// Invalid configuration (flag values, empty names).
+    Config(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io { op, path, detail } => {
+                write!(f, "store io error during {op} on {}: {detail}", path.display())
+            }
+            StoreError::DiskFull { path } => {
+                write!(f, "disk full appending to {}", path.display())
+            }
+            StoreError::Corrupt { path, offset, detail } => {
+                write!(f, "corrupt store file {} at byte {offset}: {detail}", path.display())
+            }
+            StoreError::ChecksumMismatch { path, want, got } => write!(
+                f,
+                "checksum mismatch in {} (stored {want:#010x}, computed {got:#010x})",
+                path.display()
+            ),
+            StoreError::BadMagic { path } => {
+                write!(f, "bad magic in {}", path.display())
+            }
+            StoreError::UnsupportedVersion { path, version } => {
+                write!(f, "unsupported format version {version} in {}", path.display())
+            }
+            StoreError::NoSnapshot { dir } => {
+                write!(f, "no readable snapshot generation under {}", dir.display())
+            }
+            StoreError::EpochGap { path, want, got } => write!(
+                f,
+                "wal {} is not epoch-contiguous: expected batch epoch {want}, found {got}",
+                path.display()
+            ),
+            StoreError::FingerprintMismatch { tenant, epoch, detail } => write!(
+                f,
+                "recovered fingerprint for tenant '{tenant}' diverges at epoch {epoch}: {detail}"
+            ),
+            StoreError::TenantExists { dir } => write!(
+                f,
+                "tenant state already exists under {} (recover it instead of re-registering)",
+                dir.display()
+            ),
+            StoreError::Config(msg) => write!(f, "store config error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl StoreError {
+    /// Map an OS error to the store's typed space: `ENOSPC` (and the
+    /// short-write shape it produces) becomes [`StoreError::DiskFull`],
+    /// everything else [`StoreError::Io`].
+    pub fn from_io(op: &'static str, path: &Path, e: std::io::Error) -> StoreError {
+        // ENOSPC by raw errno (`ErrorKind::StorageFull` is newer than
+        // the minimum toolchain); a zero-length write is the same
+        // condition surfaced through `write_all`
+        if e.raw_os_error() == Some(28) || e.kind() == std::io::ErrorKind::WriteZero {
+            return StoreError::DiskFull { path: path.to_path_buf() };
+        }
+        StoreError::Io { op, path: path.to_path_buf(), detail: e.to_string() }
+    }
+}
+
+/// Root handle over a `--data-dir`: opens per-tenant stores and lists
+/// what is on disk. Cheap to clone paths from; owns the shared
+/// [`FaultPlan`] so injected faults hit every tenant consistently.
+#[derive(Debug)]
+pub struct Store {
+    root: PathBuf,
+    fsync: FsyncPolicy,
+    faults: Arc<FaultPlan>,
+}
+
+impl Store {
+    /// Open (creating if needed) the data directory. Fault injection is
+    /// read from `ACCEL_GCN_FAULT` (see [`FaultPlan::from_env`]).
+    pub fn open(root: impl AsRef<Path>, fsync: FsyncPolicy) -> Result<Store, StoreError> {
+        Store::open_with_faults(root, fsync, FaultPlan::from_env())
+    }
+
+    /// Open with an explicit fault plan (tests).
+    pub fn open_with_faults(
+        root: impl AsRef<Path>,
+        fsync: FsyncPolicy,
+        faults: FaultPlan,
+    ) -> Result<Store, StoreError> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root).map_err(|e| StoreError::from_io("create_dir", &root, e))?;
+        Ok(Store { root, fsync, faults: Arc::new(faults) })
+    }
+
+    /// Open an existing data directory; errors if it is absent
+    /// (`recover-check` must not silently invent an empty store).
+    pub fn open_existing(root: impl AsRef<Path>, fsync: FsyncPolicy) -> Result<Store, StoreError> {
+        let root = root.as_ref().to_path_buf();
+        if !root.is_dir() {
+            return Err(StoreError::Io {
+                op: "open",
+                path: root,
+                detail: "data directory does not exist".into(),
+            });
+        }
+        Ok(Store { root, fsync, faults: Arc::new(FaultPlan::from_env()) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn fsync(&self) -> FsyncPolicy {
+        self.fsync
+    }
+
+    pub fn faults(&self) -> &Arc<FaultPlan> {
+        &self.faults
+    }
+
+    /// The tenant's on-disk store (directory created lazily on first
+    /// write). `name` is the registry name; the directory is its
+    /// sanitized form.
+    pub fn tenant(&self, name: &str) -> Result<TenantStore, StoreError> {
+        if name.is_empty() {
+            return Err(StoreError::Config("tenant name must be non-empty".into()));
+        }
+        Ok(TenantStore {
+            dir: self.root.join(sanitize(name)),
+            fsync: self.fsync,
+            faults: Arc::clone(&self.faults),
+        })
+    }
+
+    /// Sorted tenant directory names currently on disk (sanitized; the
+    /// authoritative registry name lives inside each snapshot).
+    pub fn tenant_dirs(&self) -> Result<Vec<String>, StoreError> {
+        let mut out = Vec::new();
+        let rd = std::fs::read_dir(&self.root)
+            .map_err(|e| StoreError::from_io("read_dir", &self.root, e))?;
+        for ent in rd {
+            let ent = ent.map_err(|e| StoreError::from_io("read_dir", &self.root, e))?;
+            if ent.path().is_dir() {
+                if let Some(n) = ent.file_name().to_str() {
+                    out.push(n.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// A tenant store addressed by its on-disk directory name (what
+    /// [`Store::tenant_dirs`] returns) — used by recovery, which does
+    /// not know registry names yet.
+    pub fn tenant_by_dir(&self, dir_name: &str) -> TenantStore {
+        TenantStore {
+            dir: self.root.join(dir_name),
+            fsync: self.fsync,
+            faults: Arc::clone(&self.faults),
+        }
+    }
+}
+
+/// Map a tenant name to a filesystem-safe directory name. Collisions
+/// between names differing only in exotic characters are accepted (the
+/// snapshot header records the real name).
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+/// One tenant's durable state: its snapshot generations plus its WAL.
+#[derive(Debug, Clone)]
+pub struct TenantStore {
+    dir: PathBuf,
+    fsync: FsyncPolicy,
+    faults: Arc<FaultPlan>,
+}
+
+impl TenantStore {
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn fsync(&self) -> FsyncPolicy {
+        self.fsync
+    }
+
+    pub fn faults(&self) -> &Arc<FaultPlan> {
+        &self.faults
+    }
+
+    /// Path of the tenant's WAL file.
+    pub fn wal_path(&self) -> PathBuf {
+        self.dir.join("wal.bin")
+    }
+
+    /// True once any durable state exists for this tenant.
+    pub fn exists(&self) -> bool {
+        self.dir.is_dir()
+            && (self.wal_path().is_file() || !self.generations().unwrap_or_default().is_empty())
+    }
+
+    pub(crate) fn ensure_dir(&self) -> Result<(), StoreError> {
+        std::fs::create_dir_all(&self.dir)
+            .map_err(|e| StoreError::from_io("create_dir", &self.dir, e))
+    }
+
+    /// Fsync the tenant directory itself (makes renames durable); a
+    /// failure here is ignored — not all filesystems support it.
+    pub(crate) fn sync_dir(&self) {
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "accel-gcn-store-{}-{tag}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        let e = FsyncPolicy::parse("sometimes").unwrap_err();
+        assert!(e.to_string().contains("fsync policy"), "{e}");
+    }
+
+    #[test]
+    fn sanitize_keeps_safe_chars() {
+        assert_eq!(sanitize("tenant-0"), "tenant-0");
+        assert_eq!(sanitize("a/b c"), "a_b_c");
+        assert_eq!(sanitize("g.1_x"), "g.1_x");
+    }
+
+    #[test]
+    fn open_existing_requires_directory() {
+        let d = test_dir("open-existing");
+        assert!(Store::open_existing(&d, FsyncPolicy::Never).is_err());
+        let s = Store::open(&d, FsyncPolicy::Never).unwrap();
+        assert!(s.tenant_dirs().unwrap().is_empty());
+        assert!(Store::open_existing(&d, FsyncPolicy::Never).is_ok());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn disk_full_maps_from_io_kind() {
+        let e = std::io::Error::new(std::io::ErrorKind::WriteZero, "short write");
+        match StoreError::from_io("append", Path::new("/x"), e) {
+            StoreError::DiskFull { .. } => {}
+            other => panic!("expected DiskFull, got {other}"),
+        }
+    }
+}

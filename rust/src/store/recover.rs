@@ -1,0 +1,335 @@
+//! Crash recovery: rebuild one tenant from its newest readable
+//! snapshot plus the WAL tail, replayed through the **same**
+//! [`DeltaGraph::apply`] path the live server uses, then assert the
+//! recovered plan identity against the last commit seal.
+//!
+//! The epoch chain is checked strictly: after skipping batches at or
+//! before the snapshot epoch, the remaining batches must advance the
+//! epoch by exactly one each — a gap means the WAL and snapshot
+//! disagree about history and recovery refuses with a typed error
+//! rather than serving a silently wrong graph.
+
+use super::wal::replay_wal;
+use super::{StoreError, TenantStore};
+use crate::delta::DeltaGraph;
+use crate::graph::csr::Csr;
+use crate::graph::degree::DegreeSorted;
+use crate::pipeline::GraphFingerprint;
+
+/// One tenant rebuilt from disk.
+#[derive(Debug)]
+pub struct RecoveredTenant {
+    /// Registry name (from the snapshot header, not the directory).
+    pub name: String,
+    /// Original-domain effective adjacency at `epoch`.
+    pub csr: Csr,
+    /// Epoch after replaying the WAL tail.
+    pub epoch: u64,
+    /// Fingerprint of the relabeled matrix at `epoch` — the recovered
+    /// plan identity ([`relabeled_fingerprint`]).
+    pub fingerprint: GraphFingerprint,
+    /// True when a commit seal for `epoch` existed and matched; false
+    /// when the crash landed between a batch append and its seal (the
+    /// batch is still applied — it was durably logged — but there is
+    /// nothing to verify against).
+    pub fingerprint_verified: bool,
+    /// Epoch of the snapshot replay started from.
+    pub snapshot_epoch: u64,
+    /// Snapshot generation used.
+    pub snapshot_gen: u64,
+    /// True when the newest generation was unreadable and recovery
+    /// fell back.
+    pub snapshot_fell_back: bool,
+    /// WAL batches replayed on top of the snapshot.
+    pub replayed_batches: usize,
+    /// True when a torn/damaged final WAL record was dropped.
+    pub torn_tail_dropped: bool,
+}
+
+/// The plan identity a CSR would get when registered for serving: the
+/// fingerprint of its degree-relabeled form (`P·A·Pᵀ`), which is what
+/// [`PlanCache`](crate::pipeline::PlanCache) keys on. The incremental
+/// path is proven equal to this fresh sort
+/// (`registry::tests::update_bumps_epoch_and_matches_fresh_registration`),
+/// which is exactly why recovered fingerprints are comparable to live
+/// ones.
+pub fn relabeled_fingerprint(csr: &Csr) -> GraphFingerprint {
+    let sorted = DegreeSorted::new(csr);
+    GraphFingerprint::of(&csr.relabel(&sorted.perm, &sorted.inv))
+}
+
+/// Rebuild one tenant: newest readable snapshot + strict WAL replay +
+/// fingerprint assertion. Every failure is a typed [`StoreError`];
+/// degraded-but-sound outcomes (fallback generation, dropped torn
+/// tail, unverified final epoch) are flagged on the result instead.
+pub fn recover_tenant(ts: &TenantStore) -> Result<RecoveredTenant, StoreError> {
+    let (snap, snapshot_gen, snapshot_fell_back) = ts.load_snapshot()?;
+    let wal_path = ts.wal_path();
+    let replay = replay_wal(&wal_path)?;
+    let mut dg = DeltaGraph::new(snap.csr);
+    let mut epoch = snap.epoch;
+    let mut replayed = 0usize;
+    for (batch_epoch, updates) in replay.batches() {
+        if batch_epoch <= snap.epoch {
+            continue; // already folded into the snapshot
+        }
+        if batch_epoch != epoch + 1 {
+            return Err(StoreError::EpochGap {
+                path: wal_path.clone(),
+                want: epoch + 1,
+                got: batch_epoch,
+            });
+        }
+        dg.apply(updates).map_err(|e| StoreError::Corrupt {
+            path: wal_path.clone(),
+            offset: 0,
+            detail: format!("logged batch for epoch {batch_epoch} fails to apply: {e}"),
+        })?;
+        epoch = batch_epoch;
+        replayed += 1;
+    }
+    let csr = dg.snapshot();
+    let fingerprint = relabeled_fingerprint(&csr);
+    let expected = if epoch == snap.epoch {
+        Some(snap.fingerprint)
+    } else {
+        replay.commit_fingerprint(epoch)
+    };
+    let fingerprint_verified = match expected {
+        Some(want) => {
+            if want != fingerprint {
+                return Err(StoreError::FingerprintMismatch {
+                    tenant: snap.name,
+                    epoch,
+                    detail: format!(
+                        "sealed {:#018x}, replay produced {:#018x}",
+                        want.content_hash, fingerprint.content_hash
+                    ),
+                });
+            }
+            true
+        }
+        None => {
+            eprintln!(
+                "[store] warning: tenant '{}' epoch {epoch} has no commit seal \
+                 (crash between append and apply); replayed state is unverified",
+                snap.name
+            );
+            false
+        }
+    };
+    Ok(RecoveredTenant {
+        name: snap.name,
+        csr,
+        epoch,
+        fingerprint,
+        fingerprint_verified,
+        snapshot_epoch: snap.epoch,
+        snapshot_gen,
+        snapshot_fell_back,
+        replayed_batches: replayed,
+        torn_tail_dropped: replay.torn_tail_dropped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wal::{WalRecord, WalWriter};
+    use super::super::{test_dir, FaultPlan, FsyncPolicy, Snapshot, Store, StoreError};
+    use super::*;
+    use crate::delta::EdgeUpdate;
+    use crate::util::rng::Pcg;
+    use std::sync::Arc;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            for _ in 0..rng.range(1, 6) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    fn random_updates(rng: &mut Pcg, n: usize, k: usize) -> Vec<EdgeUpdate> {
+        (0..k)
+            .map(|_| EdgeUpdate::Insert {
+                row: rng.range(0, n) as u32,
+                col: rng.range(0, n) as u32,
+                val: rng.f32() + 0.1,
+            })
+            .collect()
+    }
+
+    /// Write snapshot at epoch 0 + N sealed WAL batches; recovery must
+    /// land on the exact fingerprint an uncrashed in-memory replay
+    /// produces.
+    #[test]
+    fn snapshot_plus_wal_recovers_to_sealed_fingerprint() {
+        let d = test_dir("recover-e2e");
+        let store = Store::open(&d, FsyncPolicy::Never).unwrap();
+        let ts = store.tenant("g").unwrap();
+        let base = random_csr(1, 40);
+        ts.write_snapshot(&Snapshot {
+            name: "g".into(),
+            epoch: 0,
+            fingerprint: relabeled_fingerprint(&base),
+            csr: base.clone(),
+        })
+        .unwrap();
+        let mut rng = Pcg::seed_from(2);
+        let mut oracle = DeltaGraph::new(base);
+        let mut w =
+            WalWriter::open(ts.wal_path(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                .unwrap();
+        for e in 1..=5u64 {
+            let batch = random_updates(&mut rng, 40, 8);
+            w.append(&WalRecord::Batch { epoch: e, updates: batch.clone() }).unwrap();
+            oracle.apply(&batch).unwrap();
+            let fp = relabeled_fingerprint(&oracle.snapshot());
+            w.append(&WalRecord::Commit { epoch: e, fingerprint: fp }).unwrap();
+        }
+        drop(w);
+        let rec = recover_tenant(&ts).unwrap();
+        assert_eq!(rec.name, "g");
+        assert_eq!(rec.epoch, 5);
+        assert_eq!(rec.replayed_batches, 5);
+        assert!(rec.fingerprint_verified);
+        assert!(!rec.snapshot_fell_back && !rec.torn_tail_dropped);
+        assert_eq!(rec.csr, oracle.snapshot(), "recovered CSR == uncrashed CSR");
+        assert_eq!(rec.fingerprint, relabeled_fingerprint(&oracle.snapshot()));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn unsealed_final_batch_is_applied_but_unverified() {
+        let d = test_dir("recover-unsealed");
+        let store = Store::open(&d, FsyncPolicy::Never).unwrap();
+        let ts = store.tenant("g").unwrap();
+        let base = random_csr(3, 25);
+        ts.write_snapshot(&Snapshot {
+            name: "g".into(),
+            epoch: 0,
+            fingerprint: relabeled_fingerprint(&base),
+            csr: base.clone(),
+        })
+        .unwrap();
+        let mut rng = Pcg::seed_from(4);
+        let batch = random_updates(&mut rng, 25, 5);
+        let mut w =
+            WalWriter::open(ts.wal_path(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                .unwrap();
+        // crash before the commit seal could be appended
+        w.append(&WalRecord::Batch { epoch: 1, updates: batch.clone() }).unwrap();
+        drop(w);
+        let rec = recover_tenant(&ts).unwrap();
+        assert_eq!(rec.epoch, 1);
+        assert!(!rec.fingerprint_verified, "no seal to verify against");
+        let mut oracle = DeltaGraph::new(base);
+        oracle.apply(&batch).unwrap();
+        assert_eq!(rec.csr, oracle.snapshot(), "the logged batch still applies");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn epoch_gap_and_bad_seal_are_typed_errors() {
+        let d = test_dir("recover-gap");
+        let store = Store::open(&d, FsyncPolicy::Never).unwrap();
+        let ts = store.tenant("g").unwrap();
+        let base = random_csr(5, 20);
+        ts.write_snapshot(&Snapshot {
+            name: "g".into(),
+            epoch: 0,
+            fingerprint: relabeled_fingerprint(&base),
+            csr: base.clone(),
+        })
+        .unwrap();
+        let mut rng = Pcg::seed_from(6);
+        {
+            let mut w =
+                WalWriter::open(ts.wal_path(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                    .unwrap();
+            // epoch 2 with no epoch 1 before it
+            w.append(&WalRecord::Batch { epoch: 2, updates: random_updates(&mut rng, 20, 3) })
+                .unwrap();
+        }
+        match recover_tenant(&ts) {
+            Err(StoreError::EpochGap { want: 1, got: 2, .. }) => {}
+            other => panic!("expected EpochGap, got {other:?}"),
+        }
+        // now a contiguous batch whose seal lies about the fingerprint
+        std::fs::remove_file(ts.wal_path()).unwrap();
+        {
+            let mut w =
+                WalWriter::open(ts.wal_path(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                    .unwrap();
+            w.append(&WalRecord::Batch { epoch: 1, updates: random_updates(&mut rng, 20, 3) })
+                .unwrap();
+            let lie = GraphFingerprint { n_rows: 20, n_cols: 20, nnz: 1, content_hash: 0xBAD };
+            w.append(&WalRecord::Commit { epoch: 1, fingerprint: lie }).unwrap();
+        }
+        match recover_tenant(&ts) {
+            Err(StoreError::FingerprintMismatch { epoch: 1, .. }) => {}
+            other => panic!("expected FingerprintMismatch, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn fallback_generation_replays_the_longer_wal_tail() {
+        // gen1 at epoch 0, gen2 at epoch 2 (injected-truncated), WAL
+        // holding epochs 1..=3: recovery must fall back to gen1 and
+        // still reach epoch 3 because compaction kept the tail
+        let d = test_dir("recover-fallback");
+        let store = Store::open_with_faults(
+            &d,
+            FsyncPolicy::Never,
+            FaultPlan::parse("snapshot-truncate"),
+        )
+        .unwrap();
+        let ts = store.tenant("g").unwrap();
+        let base = random_csr(7, 30);
+        ts.write_snapshot(&Snapshot {
+            name: "g".into(),
+            epoch: 0,
+            fingerprint: relabeled_fingerprint(&base),
+            csr: base.clone(),
+        })
+        .unwrap();
+        let mut rng = Pcg::seed_from(8);
+        let mut oracle = DeltaGraph::new(base);
+        let mut w =
+            WalWriter::open(ts.wal_path(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                .unwrap();
+        for e in 1..=3u64 {
+            let batch = random_updates(&mut rng, 30, 6);
+            w.append(&WalRecord::Batch { epoch: e, updates: batch.clone() }).unwrap();
+            oracle.apply(&batch).unwrap();
+            let fp = relabeled_fingerprint(&oracle.snapshot());
+            w.append(&WalRecord::Commit { epoch: e, fingerprint: fp }).unwrap();
+            if e == 2 {
+                // periodic snapshot — injected fault truncates it (gen 2)
+                let info = ts
+                    .write_snapshot(&Snapshot {
+                        name: "g".into(),
+                        epoch: 2,
+                        fingerprint: fp,
+                        csr: oracle.snapshot(),
+                    })
+                    .unwrap();
+                // compaction cutoff = oldest retained gen's epoch (0)
+                w.compact(info.retained_oldest_epoch).unwrap();
+            }
+        }
+        drop(w);
+        let rec = recover_tenant(&ts).unwrap();
+        assert!(rec.snapshot_fell_back, "gen2 is damaged");
+        assert_eq!(rec.snapshot_gen, 1);
+        assert_eq!(rec.epoch, 3);
+        assert_eq!(rec.replayed_batches, 3, "full tail replays from gen1");
+        assert!(rec.fingerprint_verified);
+        assert_eq!(rec.csr, oracle.snapshot());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,391 @@
+//! Generational, checksummed tenant snapshots: the original-domain CSR
+//! plus the metadata recovery needs to rebuild the tenant and verify
+//! its plan identity.
+//!
+//! ## File format (`snap-<gen>-e<epoch>.bin`)
+//!
+//! ```text
+//! header : "AGSN" u32-version | u32 crc32(payload) | u64 payload_len
+//! payload: name (u32-len bytes) | u64 epoch
+//!        | GraphFingerprint (4 × u64, of the *relabeled* matrix)
+//!        | u64 n_rows | u64 n_cols | u64 nnz
+//!        | row_ptr (n_rows+1 × u64) | col_idx (nnz × u32) | vals (nnz × f32)
+//! ```
+//!
+//! Writes are atomic (tmp + rename); generation numbers only grow. The
+//! newest two generations are retained so a snapshot that turns out
+//! corrupt at recovery **falls back to the previous generation** — the
+//! WAL compaction cutoff ([`WalWriter::compact`](super::WalWriter))
+//! guarantees the log still reaches back to it.
+
+use super::codec::{self, Cursor};
+use super::{StoreError, TenantStore};
+use crate::graph::csr::Csr;
+use crate::pipeline::GraphFingerprint;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const SNAP_MAGIC: &[u8; 4] = b"AGSN";
+const SNAP_VERSION: u32 = 1;
+/// magic + version + crc + payload_len
+const SNAP_HEADER_LEN: usize = 20;
+
+/// One durable tenant state: everything needed to re-register the
+/// tenant at `epoch` and verify the rebuilt plan identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Registry tenant name (authoritative — directory names are
+    /// sanitized).
+    pub name: String,
+    /// Epoch this CSR corresponds to.
+    pub epoch: u64,
+    /// Fingerprint of the **relabeled** matrix at `epoch` — the plan
+    /// cache key, asserted on recovery.
+    pub fingerprint: GraphFingerprint,
+    /// Original-domain effective adjacency at `epoch`.
+    pub csr: Csr,
+}
+
+impl Snapshot {
+    fn encode(&self) -> Vec<u8> {
+        let csr = &self.csr;
+        let mut p = Vec::with_capacity(64 + csr.row_ptr.len() * 8 + csr.nnz() * 8);
+        codec::put_bytes(&mut p, self.name.as_bytes());
+        codec::put_u64(&mut p, self.epoch);
+        codec::put_fingerprint(&mut p, &self.fingerprint);
+        codec::put_u64(&mut p, csr.n_rows as u64);
+        codec::put_u64(&mut p, csr.n_cols as u64);
+        codec::put_u64(&mut p, csr.nnz() as u64);
+        for &r in &csr.row_ptr {
+            codec::put_u64(&mut p, r as u64);
+        }
+        for &c in &csr.col_idx {
+            codec::put_u32(&mut p, c);
+        }
+        for &v in &csr.vals {
+            codec::put_f32(&mut p, v);
+        }
+        p
+    }
+
+    fn decode(path: &Path, payload: &[u8]) -> Result<Snapshot, StoreError> {
+        let corrupt = |cur: &Cursor<'_>, what: &str| StoreError::Corrupt {
+            path: path.to_path_buf(),
+            offset: (SNAP_HEADER_LEN + cur.pos()) as u64,
+            detail: format!("snapshot payload truncated in {what}"),
+        };
+        let mut cur = Cursor::new(payload);
+        let name = match cur.take_bytes() {
+            Some(b) => String::from_utf8_lossy(b).into_owned(),
+            None => return Err(corrupt(&cur, "name")),
+        };
+        let epoch = cur.take_u64().ok_or_else(|| corrupt(&cur, "epoch"))?;
+        let fingerprint =
+            codec::take_fingerprint(&mut cur).ok_or_else(|| corrupt(&cur, "fingerprint"))?;
+        let n_rows = cur.take_u64().ok_or_else(|| corrupt(&cur, "dims"))? as usize;
+        let n_cols = cur.take_u64().ok_or_else(|| corrupt(&cur, "dims"))? as usize;
+        let nnz = cur.take_u64().ok_or_else(|| corrupt(&cur, "dims"))? as usize;
+        // sanity before allocating: the arrays must fit the remaining
+        // bytes exactly
+        let want = (n_rows + 1) * 8 + nnz * 4 + nnz * 4;
+        if cur.remaining() != want {
+            return Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                offset: (SNAP_HEADER_LEN + cur.pos()) as u64,
+                detail: format!(
+                    "array bytes mismatch: {} remaining, dims demand {want}",
+                    cur.remaining()
+                ),
+            });
+        }
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        for _ in 0..=n_rows {
+            row_ptr.push(cur.take_u64().ok_or_else(|| corrupt(&cur, "row_ptr"))? as usize);
+        }
+        let mut col_idx = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            col_idx.push(cur.take_u32().ok_or_else(|| corrupt(&cur, "col_idx"))?);
+        }
+        let mut vals = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            vals.push(cur.take_f32().ok_or_else(|| corrupt(&cur, "vals"))?);
+        }
+        let csr = Csr::from_raw(n_rows, n_cols, row_ptr, col_idx, vals).map_err(|e| {
+            StoreError::Corrupt {
+                path: path.to_path_buf(),
+                offset: SNAP_HEADER_LEN as u64,
+                detail: format!("CSR fails structural validation: {e}"),
+            }
+        })?;
+        Ok(Snapshot { name, epoch, fingerprint, csr })
+    }
+}
+
+/// What [`TenantStore::write_snapshot`] did — the generation it wrote
+/// and the WAL-compaction cutoff implied by pruning.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotWriteInfo {
+    /// Generation number just written.
+    pub gen: u64,
+    /// Epoch of the **oldest retained** generation after pruning: the
+    /// WAL may drop records at or before this epoch and fallback
+    /// recovery still has full replay coverage.
+    pub retained_oldest_epoch: u64,
+}
+
+impl TenantStore {
+    /// Snapshot generations on disk, ascending by generation:
+    /// `(gen, epoch, path)`.
+    pub fn generations(&self) -> Result<Vec<(u64, u64, PathBuf)>, StoreError> {
+        let mut out = Vec::new();
+        let rd = match std::fs::read_dir(self.dir()) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(StoreError::from_io("read_dir", self.dir(), e)),
+        };
+        for ent in rd {
+            let ent = ent.map_err(|e| StoreError::from_io("read_dir", self.dir(), e))?;
+            let fname = ent.file_name();
+            let Some(name) = fname.to_str() else { continue };
+            if let Some((gen, epoch)) = parse_snapshot_name(name) {
+                out.push((gen, epoch, ent.path()));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Write `snap` as the next generation (atomic: tmp + rename), then
+    /// prune to the newest two generations. Injected
+    /// `snapshot-truncate` damages every generation after the first —
+    /// recovery must survive it by falling back.
+    pub fn write_snapshot(&self, snap: &Snapshot) -> Result<SnapshotWriteInfo, StoreError> {
+        self.ensure_dir()?;
+        let gens = self.generations()?;
+        let gen = gens.last().map_or(1, |&(g, _, _)| g + 1);
+        let payload = snap.encode();
+        let mut bytes = Vec::with_capacity(SNAP_HEADER_LEN + payload.len());
+        bytes.extend_from_slice(SNAP_MAGIC);
+        codec::put_u32(&mut bytes, SNAP_VERSION);
+        codec::put_u32(&mut bytes, codec::crc32(&payload));
+        codec::put_u64(&mut bytes, payload.len() as u64);
+        bytes.extend_from_slice(&payload);
+        let tmp = self.dir().join(".snap.tmp");
+        let path = self.dir().join(format!("snap-{gen:06}-e{}.bin", snap.epoch));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| StoreError::from_io("create", &tmp, e))?;
+            f.write_all(&bytes).map_err(|e| StoreError::from_io("write", &tmp, e))?;
+            if self.fsync() == super::FsyncPolicy::Always {
+                f.sync_data().map_err(|e| StoreError::from_io("fsync", &tmp, e))?;
+            }
+        }
+        std::fs::rename(&tmp, &path).map_err(|e| StoreError::from_io("rename", &tmp, e))?;
+        self.sync_dir();
+        if self.faults().snapshot_truncate && gen > 1 {
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .map_err(|e| StoreError::from_io("open", &path, e))?;
+            let _ = f.set_len((bytes.len() / 2) as u64);
+            eprintln!("[store] fault: truncated snapshot {}", path.display());
+        }
+        // prune: keep this generation plus its predecessor
+        let mut retained_oldest_epoch = snap.epoch;
+        for &(g, e, ref p) in gens.iter() {
+            if g + 1 < gen {
+                let _ = std::fs::remove_file(p);
+            } else {
+                retained_oldest_epoch = retained_oldest_epoch.min(e);
+            }
+        }
+        Ok(SnapshotWriteInfo { gen, retained_oldest_epoch })
+    }
+
+    /// Load the newest readable snapshot: `(snapshot, gen, fell_back)`.
+    /// A generation that fails validation (bad magic, short file, CRC
+    /// mismatch, structural damage) is skipped with a warning — the
+    /// documented fallback — and only when **no** generation is
+    /// readable does this become a typed error.
+    pub fn load_snapshot(&self) -> Result<(Snapshot, u64, bool), StoreError> {
+        let gens = self.generations()?;
+        let mut fell_back = false;
+        for &(gen, _, ref path) in gens.iter().rev() {
+            match read_snapshot_file(path) {
+                Ok(snap) => return Ok((snap, gen, fell_back)),
+                Err(e) => {
+                    eprintln!(
+                        "[store] warning: snapshot {} unreadable ({e}); falling back a generation",
+                        path.display()
+                    );
+                    fell_back = true;
+                }
+            }
+        }
+        Err(StoreError::NoSnapshot { dir: self.dir().to_path_buf() })
+    }
+}
+
+fn parse_snapshot_name(name: &str) -> Option<(u64, u64)> {
+    let rest = name.strip_prefix("snap-")?.strip_suffix(".bin")?;
+    let (gen, epoch) = rest.split_once("-e")?;
+    Some((gen.parse().ok()?, epoch.parse().ok()?))
+}
+
+/// Decode one snapshot file, checking magic, version, framing and CRC.
+pub fn read_snapshot_file(path: &Path) -> Result<Snapshot, StoreError> {
+    let data = std::fs::read(path).map_err(|e| StoreError::from_io("read", path, e))?;
+    if data.len() < SNAP_HEADER_LEN {
+        return Err(StoreError::Corrupt {
+            path: path.to_path_buf(),
+            offset: 0,
+            detail: format!("{} bytes is shorter than the header", data.len()),
+        });
+    }
+    if &data[..4] != SNAP_MAGIC {
+        return Err(StoreError::BadMagic { path: path.to_path_buf() });
+    }
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version != SNAP_VERSION {
+        return Err(StoreError::UnsupportedVersion { path: path.to_path_buf(), version });
+    }
+    let stored_crc = u32::from_le_bytes(data[8..12].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(data[12..20].try_into().unwrap()) as usize;
+    let payload = match data.get(SNAP_HEADER_LEN..SNAP_HEADER_LEN + payload_len) {
+        Some(p) if data.len() == SNAP_HEADER_LEN + payload_len => p,
+        _ => {
+            return Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                offset: SNAP_HEADER_LEN as u64,
+                detail: format!(
+                    "payload length {payload_len} disagrees with file size {}",
+                    data.len()
+                ),
+            })
+        }
+    };
+    let computed = codec::crc32(payload);
+    if computed != stored_crc {
+        return Err(StoreError::ChecksumMismatch {
+            path: path.to_path_buf(),
+            want: stored_crc,
+            got: computed,
+        });
+    }
+    Snapshot::decode(path, payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{test_dir, FaultPlan, FsyncPolicy, Store, StoreError};
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Pcg::seed_from(seed);
+        let mut edges = vec![(0u32, 0u32, 1.0f32)];
+        for r in 0..n {
+            for _ in 0..rng.range(0, 6) {
+                edges.push((r as u32, rng.range(0, n) as u32, rng.f32() + 0.1));
+            }
+        }
+        Csr::from_edges(n, n, &edges).unwrap()
+    }
+
+    fn snap(seed: u64, epoch: u64) -> Snapshot {
+        let csr = random_csr(seed, 30);
+        let fingerprint = GraphFingerprint::of(&csr);
+        Snapshot { name: format!("tenant/{seed}"), epoch, fingerprint, csr }
+    }
+
+    fn tenant(tag: &str) -> (std::path::PathBuf, TenantStore) {
+        let d = test_dir(tag);
+        let store = Store::open(&d, FsyncPolicy::Never).unwrap();
+        let ts = store.tenant("t0").unwrap();
+        (d, ts)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let (d, ts) = tenant("snap-rt");
+        let s = snap(1, 3);
+        let info = ts.write_snapshot(&s).unwrap();
+        assert_eq!(info.gen, 1);
+        assert_eq!(info.retained_oldest_epoch, 3);
+        let (back, gen, fell_back) = ts.load_snapshot().unwrap();
+        assert_eq!(gen, 1);
+        assert!(!fell_back);
+        assert_eq!(back, s, "snapshot roundtrips bit-exactly (name kept despite sanitizing)");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn generations_grow_and_prune_to_two() {
+        let (d, ts) = tenant("snap-gen");
+        for e in 0..4u64 {
+            let info = ts.write_snapshot(&snap(10 + e, e)).unwrap();
+            assert_eq!(info.gen, e + 1);
+        }
+        let gens = ts.generations().unwrap();
+        assert_eq!(gens.len(), 2, "pruned to the newest two");
+        assert_eq!((gens[0].0, gens[0].1), (3, 2));
+        assert_eq!((gens[1].0, gens[1].1), (4, 3));
+        // compaction cutoff is the *older* retained generation's epoch
+        let info = ts.write_snapshot(&snap(99, 4)).unwrap();
+        assert_eq!(info.retained_oldest_epoch, 3);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_one_generation() {
+        let (d, ts) = tenant("snap-fallback");
+        let older = snap(20, 1);
+        ts.write_snapshot(&older).unwrap();
+        ts.write_snapshot(&snap(21, 2)).unwrap();
+        let gens = ts.generations().unwrap();
+        // flip a payload bit in the newest generation
+        let newest = &gens.last().unwrap().2;
+        let mut bytes = std::fs::read(newest).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x10;
+        std::fs::write(newest, &bytes).unwrap();
+        let (back, gen, fell_back) = ts.load_snapshot().unwrap();
+        assert!(fell_back, "checksum flip must trigger the fallback");
+        assert_eq!(gen, 1);
+        assert_eq!(back, older);
+        // truncation of the newest behaves the same way
+        std::fs::write(newest, &bytes[..n / 2]).unwrap();
+        let (back2, _, fb2) = ts.load_snapshot().unwrap();
+        assert!(fb2);
+        assert_eq!(back2, older);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn no_readable_generation_is_typed() {
+        let (d, ts) = tenant("snap-none");
+        assert!(matches!(ts.load_snapshot(), Err(StoreError::NoSnapshot { .. })));
+        ts.write_snapshot(&snap(30, 0)).unwrap();
+        let gens = ts.generations().unwrap();
+        std::fs::write(&gens[0].2, b"garbage").unwrap();
+        assert!(matches!(ts.load_snapshot(), Err(StoreError::NoSnapshot { .. })));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn snapshot_truncate_fault_spares_the_first_generation() {
+        let d = test_dir("snap-fault");
+        let store =
+            Store::open_with_faults(&d, FsyncPolicy::Never, FaultPlan::parse("snapshot-truncate"))
+                .unwrap();
+        let ts = store.tenant("t0").unwrap();
+        let first = snap(40, 0);
+        ts.write_snapshot(&first).unwrap();
+        ts.write_snapshot(&snap(41, 2)).unwrap();
+        let (back, gen, fell_back) = ts.load_snapshot().unwrap();
+        assert!(fell_back, "gen 2 was injected-truncated");
+        assert_eq!(gen, 1);
+        assert_eq!(back, first);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

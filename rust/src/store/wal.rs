@@ -1,0 +1,592 @@
+//! The delta WAL: an append-only log of `UpdateGraph` batches (written
+//! **before** the in-memory apply) and post-apply **commit** seals.
+//!
+//! ## File format
+//!
+//! ```text
+//! header : "AGWL" u32-version
+//! record : u32 len | u32 crc32(payload) | payload (len bytes)
+//! payload: kind u8
+//!   kind 1 (batch) : u64 epoch | u32 count | count × EdgeUpdate
+//!   kind 2 (commit): u64 epoch | GraphFingerprint (4 × u64)
+//! ```
+//!
+//! A **batch** record at epoch `e` means "the updates that take the
+//! tenant from epoch `e-1` to `e` are durable"; it is appended before
+//! [`GraphRegistry::update`](crate::serve::GraphRegistry::update) runs,
+//! so logged == applied-or-about-to-apply and nothing applies that was
+//! not logged. The **commit** record seals the apply with the
+//! relabeled-matrix fingerprint the plan cache keys on — recovery
+//! replays batches and asserts its recomputed fingerprint against the
+//! last seal.
+//!
+//! ## Torn tails vs corruption
+//!
+//! Appends are a single `write_all`; a crash can only tear a *prefix*
+//! of the final record. Replay therefore drops an incomplete or
+//! CRC-failed **final** record with a warning (the batch never
+//! committed in memory either — see the append-before-apply ordering),
+//! but a CRC failure anywhere earlier means real corruption and is a
+//! typed [`StoreError`].
+
+use super::codec::{self, Cursor};
+use super::faults::FaultPlan;
+use super::{FsyncPolicy, StoreError};
+use crate::delta::EdgeUpdate;
+use crate::pipeline::GraphFingerprint;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const WAL_MAGIC: &[u8; 4] = b"AGWL";
+const WAL_VERSION: u32 = 1;
+const HEADER_LEN: u64 = 8;
+const RECORD_HEADER_LEN: u64 = 8;
+/// Upper bound on one record's payload; anything larger on disk is
+/// corruption, not a real record.
+const MAX_RECORD: u32 = 1 << 26;
+
+const KIND_BATCH: u8 = 1;
+const KIND_COMMIT: u8 = 2;
+
+/// One decoded WAL record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    /// The updates taking the tenant to `epoch` (from `epoch - 1`).
+    Batch { epoch: u64, updates: Vec<EdgeUpdate> },
+    /// Post-apply seal: the relabeled-matrix fingerprint at `epoch`.
+    Commit { epoch: u64, fingerprint: GraphFingerprint },
+}
+
+impl WalRecord {
+    pub fn epoch(&self) -> u64 {
+        match self {
+            WalRecord::Batch { epoch, .. } | WalRecord::Commit { epoch, .. } => *epoch,
+        }
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            WalRecord::Batch { epoch, updates } => {
+                codec::put_u8(&mut p, KIND_BATCH);
+                codec::put_u64(&mut p, *epoch);
+                codec::put_u32(&mut p, updates.len() as u32);
+                for u in updates {
+                    codec::put_update(&mut p, u);
+                }
+            }
+            WalRecord::Commit { epoch, fingerprint } => {
+                codec::put_u8(&mut p, KIND_COMMIT);
+                codec::put_u64(&mut p, *epoch);
+                codec::put_fingerprint(&mut p, fingerprint);
+            }
+        }
+        p
+    }
+
+    fn decode_payload(payload: &[u8]) -> Option<WalRecord> {
+        let mut cur = Cursor::new(payload);
+        let rec = match cur.take_u8()? {
+            KIND_BATCH => {
+                let epoch = cur.take_u64()?;
+                let count = cur.take_u32()? as usize;
+                let mut updates = Vec::with_capacity(count.min(1 << 20));
+                for _ in 0..count {
+                    updates.push(codec::take_update(&mut cur)?);
+                }
+                WalRecord::Batch { epoch, updates }
+            }
+            KIND_COMMIT => WalRecord::Commit {
+                epoch: cur.take_u64()?,
+                fingerprint: codec::take_fingerprint(&mut cur)?,
+            },
+            _ => return None,
+        };
+        (cur.remaining() == 0).then_some(rec)
+    }
+
+    /// Frame the record for disk: `len | crc | payload`.
+    fn encode_frame(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut frame = Vec::with_capacity(payload.len() + RECORD_HEADER_LEN as usize);
+        codec::put_u32(&mut frame, payload.len() as u32);
+        codec::put_u32(&mut frame, codec::crc32(&payload));
+        frame.extend_from_slice(&payload);
+        frame
+    }
+}
+
+/// What a full WAL scan produced.
+#[derive(Debug, Default)]
+pub struct WalReplay {
+    /// Every intact record, in append order.
+    pub records: Vec<WalRecord>,
+    /// True when an incomplete / CRC-failed final record was dropped.
+    pub torn_tail_dropped: bool,
+    /// Bytes of intact log scanned (excludes a dropped tail).
+    pub bytes: u64,
+}
+
+impl WalReplay {
+    /// The batch records in order.
+    pub fn batches(&self) -> impl Iterator<Item = (u64, &[EdgeUpdate])> {
+        self.records.iter().filter_map(|r| match r {
+            WalRecord::Batch { epoch, updates } => Some((*epoch, updates.as_slice())),
+            WalRecord::Commit { .. } => None,
+        })
+    }
+
+    /// The sealed fingerprint at `epoch`, if a commit record survived.
+    pub fn commit_fingerprint(&self, epoch: u64) -> Option<GraphFingerprint> {
+        self.records.iter().rev().find_map(|r| match r {
+            WalRecord::Commit { epoch: e, fingerprint } if *e == epoch => Some(*fingerprint),
+            _ => None,
+        })
+    }
+
+    /// Highest batch epoch in the log (0 when no batches survived).
+    pub fn last_batch_epoch(&self) -> u64 {
+        self.batches().map(|(e, _)| e).max().unwrap_or(0)
+    }
+}
+
+/// Scan a WAL file. A missing file is an empty (valid) log. See the
+/// module docs for the torn-tail-vs-corruption contract.
+pub fn replay_wal(path: &Path) -> Result<WalReplay, StoreError> {
+    let data = match std::fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(WalReplay::default()),
+        Err(e) => return Err(StoreError::from_io("read", path, e)),
+    };
+    let mut out = WalReplay::default();
+    if data.is_empty() {
+        return Ok(out);
+    }
+    if data.len() < HEADER_LEN as usize {
+        // the file was created but the header write itself tore
+        warn_torn(path, 0);
+        out.torn_tail_dropped = true;
+        return Ok(out);
+    }
+    if &data[..4] != WAL_MAGIC {
+        return Err(StoreError::BadMagic { path: path.to_path_buf() });
+    }
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version != WAL_VERSION {
+        return Err(StoreError::UnsupportedVersion { path: path.to_path_buf(), version });
+    }
+    let mut pos = HEADER_LEN as usize;
+    while pos < data.len() {
+        let remaining = data.len() - pos;
+        if remaining < RECORD_HEADER_LEN as usize {
+            warn_torn(path, pos);
+            out.torn_tail_dropped = true;
+            break;
+        }
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
+        let stored_crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+        if len > MAX_RECORD {
+            return Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                offset: pos as u64,
+                detail: format!("record length {len} exceeds the {MAX_RECORD}-byte bound"),
+            });
+        }
+        let body_start = pos + RECORD_HEADER_LEN as usize;
+        let body_end = body_start + len as usize;
+        if body_end > data.len() {
+            // the final append tore mid-payload
+            warn_torn(path, pos);
+            out.torn_tail_dropped = true;
+            break;
+        }
+        let payload = &data[body_start..body_end];
+        let computed = codec::crc32(payload);
+        let at_eof = body_end == data.len();
+        if computed != stored_crc {
+            if at_eof {
+                // a damaged *final* record is indistinguishable from a
+                // torn append — drop it like one
+                warn_torn(path, pos);
+                out.torn_tail_dropped = true;
+                break;
+            }
+            return Err(StoreError::ChecksumMismatch {
+                path: path.to_path_buf(),
+                want: stored_crc,
+                got: computed,
+            });
+        }
+        match WalRecord::decode_payload(payload) {
+            Some(rec) => out.records.push(rec),
+            None => {
+                return Err(StoreError::Corrupt {
+                    path: path.to_path_buf(),
+                    offset: pos as u64,
+                    detail: "record payload fails structural decode despite a valid CRC".into(),
+                })
+            }
+        }
+        pos = body_end;
+        out.bytes = pos as u64;
+    }
+    Ok(out)
+}
+
+fn warn_torn(path: &Path, offset: usize) {
+    eprintln!(
+        "[store] warning: dropping torn/damaged final WAL record in {} at byte {offset}",
+        path.display()
+    );
+}
+
+/// Append handle over one tenant's WAL. The worker thread is the only
+/// appender; recovery uses [`replay_wal`] read-only.
+#[derive(Debug)]
+pub struct WalWriter {
+    file: File,
+    path: PathBuf,
+    fsync: FsyncPolicy,
+    faults: Arc<FaultPlan>,
+    /// Current file length.
+    end: u64,
+    /// Offset of the most recently appended record (== `end` when no
+    /// append has happened through this handle).
+    last_record_start: u64,
+}
+
+impl WalWriter {
+    /// Open (creating + writing the header if new) for appending. An
+    /// existing file gets its header validated — a WAL we cannot parse
+    /// must fail loudly here, not corrupt silently on the next append.
+    pub fn open(
+        path: PathBuf,
+        fsync: FsyncPolicy,
+        faults: Arc<FaultPlan>,
+    ) -> Result<WalWriter, StoreError> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .read(true)
+            .open(&path)
+            .map_err(|e| StoreError::from_io("open", &path, e))?;
+        let mut end =
+            file.metadata().map_err(|e| StoreError::from_io("stat", &path, e))?.len();
+        if end == 0 {
+            let mut header = Vec::with_capacity(HEADER_LEN as usize);
+            header.extend_from_slice(WAL_MAGIC);
+            codec::put_u32(&mut header, WAL_VERSION);
+            (&file).write_all(&header).map_err(|e| StoreError::from_io("write", &path, e))?;
+            end = HEADER_LEN;
+        } else {
+            let mut head = [0u8; HEADER_LEN as usize];
+            let mut reader =
+                File::open(&path).map_err(|e| StoreError::from_io("open", &path, e))?;
+            reader.read_exact(&mut head).map_err(|e| StoreError::from_io("read", &path, e))?;
+            if &head[..4] != WAL_MAGIC {
+                return Err(StoreError::BadMagic { path });
+            }
+            let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+            if version != WAL_VERSION {
+                return Err(StoreError::UnsupportedVersion { path, version });
+            }
+        }
+        Ok(WalWriter { file, path, fsync, faults, end, last_record_start: end })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record; returns the frame size in bytes. On any
+    /// error — including injected disk-full — nothing is considered
+    /// durable and the caller must not apply the logged batch.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<u64, StoreError> {
+        let mut frame = rec.encode_frame();
+        if self.faults.wal_append_would_fill(frame.len() as u64) {
+            return Err(StoreError::DiskFull { path: self.path.clone() });
+        }
+        if matches!(rec, WalRecord::Batch { .. }) && self.faults.take_checksum_flip() {
+            frame[4] ^= 0x01; // one bit of the stored CRC
+        }
+        (&self.file)
+            .write_all(&frame)
+            .map_err(|e| StoreError::from_io("append", &self.path, e))?;
+        if self.fsync == FsyncPolicy::Always {
+            self.file.sync_data().map_err(|e| StoreError::from_io("fsync", &self.path, e))?;
+        }
+        self.last_record_start = self.end;
+        self.end += frame.len() as u64;
+        Ok(frame.len() as u64)
+    }
+
+    /// Force everything appended so far to disk regardless of policy
+    /// (shutdown path).
+    pub fn flush(&mut self) -> Result<(), StoreError> {
+        self.file.sync_data().map_err(|e| StoreError::from_io("fsync", &self.path, e))
+    }
+
+    /// Drop every record with `epoch <= keep_after_epoch` by atomically
+    /// rewriting the file (tmp + rename) and re-opening the append
+    /// handle. Called after a snapshot: the retained tail must still
+    /// cover replay from the *previous* retained generation, so the
+    /// cutoff is that generation's epoch, not the new one's.
+    pub fn compact(&mut self, keep_after_epoch: u64) -> Result<(), StoreError> {
+        let replay = replay_wal(&self.path)?;
+        let tmp = self.path.with_extension("tmp");
+        {
+            let mut f =
+                File::create(&tmp).map_err(|e| StoreError::from_io("create", &tmp, e))?;
+            let mut buf = Vec::new();
+            buf.extend_from_slice(WAL_MAGIC);
+            codec::put_u32(&mut buf, WAL_VERSION);
+            for rec in replay.records.iter().filter(|r| r.epoch() > keep_after_epoch) {
+                buf.extend_from_slice(&rec.encode_frame());
+            }
+            f.write_all(&buf).map_err(|e| StoreError::from_io("write", &tmp, e))?;
+            f.sync_data().map_err(|e| StoreError::from_io("fsync", &tmp, e))?;
+        }
+        std::fs::rename(&tmp, &self.path).map_err(|e| StoreError::from_io("rename", &tmp, e))?;
+        let reopened = OpenOptions::new()
+            .append(true)
+            .read(true)
+            .open(&self.path)
+            .map_err(|e| StoreError::from_io("open", &self.path, e))?;
+        self.end = reopened
+            .metadata()
+            .map_err(|e| StoreError::from_io("stat", &self.path, e))?
+            .len();
+        self.last_record_start = self.end;
+        self.file = reopened;
+        Ok(())
+    }
+}
+
+impl Drop for WalWriter {
+    fn drop(&mut self) {
+        // injected crash-during-final-append: leave a torn prefix of
+        // the last record on disk
+        if self.faults.torn_tail && self.last_record_start < self.end {
+            let body = (self.end - self.last_record_start).saturating_sub(RECORD_HEADER_LEN);
+            let cut = if body > 1 {
+                self.last_record_start + RECORD_HEADER_LEN + body / 2
+            } else {
+                self.last_record_start + RECORD_HEADER_LEN / 2
+            };
+            let _ = self.file.set_len(cut);
+            let _ = self.file.sync_data();
+        } else if self.fsync == FsyncPolicy::Never {
+            // best-effort flush on graceful close
+            let _ = self.file.sync_data();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_dir;
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn tmp_wal(tag: &str) -> PathBuf {
+        let d = test_dir(tag);
+        std::fs::create_dir_all(&d).unwrap();
+        d.join("wal.bin")
+    }
+
+    fn random_batch_rec(rng: &mut Pcg, epoch: u64) -> WalRecord {
+        let n = rng.range(0, 12);
+        let updates = (0..n)
+            .map(|_| {
+                if rng.f64() < 0.3 {
+                    EdgeUpdate::Delete { row: rng.range(0, 500) as u32, col: rng.range(0, 500) as u32 }
+                } else {
+                    EdgeUpdate::Insert {
+                        row: rng.range(0, 500) as u32,
+                        col: rng.range(0, 500) as u32,
+                        val: rng.f32() - 0.5,
+                    }
+                }
+            })
+            .collect();
+        WalRecord::Batch { epoch, updates }
+    }
+
+    fn write_all(path: &Path, records: &[WalRecord]) {
+        let mut w =
+            WalWriter::open(path.to_path_buf(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                .unwrap();
+        for r in records {
+            w.append(r).unwrap();
+        }
+    }
+
+    /// Satellite: proptest encode/decode of random `UpdateGraph`
+    /// batches — every batch written is read back exactly, in order,
+    /// interleaved with commit seals.
+    #[test]
+    fn wal_roundtrip_random_batches() {
+        crate::util::proptest::check("wal_roundtrip", 0x9A17, 30, |rng| {
+            let path = tmp_wal("roundtrip");
+            let n_rec = rng.range(1, 9);
+            let mut records = Vec::new();
+            for e in 1..=n_rec {
+                records.push(random_batch_rec(rng, e as u64));
+                if rng.f64() < 0.5 {
+                    let fp = GraphFingerprint {
+                        n_rows: rng.range(1, 100),
+                        n_cols: rng.range(1, 100),
+                        nnz: rng.range(0, 1000),
+                        content_hash: rng.next_u64(),
+                    };
+                    records.push(WalRecord::Commit { epoch: e as u64, fingerprint: fp });
+                }
+            }
+            write_all(&path, &records);
+            let replay = replay_wal(&path).unwrap();
+            assert!(!replay.torn_tail_dropped);
+            assert_eq!(replay.records, records);
+            let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        });
+    }
+
+    /// Satellite: deterministic truncation at **every byte offset** of
+    /// the final record recovers exactly the earlier records.
+    #[test]
+    fn truncation_at_every_offset_of_final_record() {
+        let path = tmp_wal("torn");
+        let mut rng = Pcg::seed_from(42);
+        let keep = vec![random_batch_rec(&mut rng, 1), random_batch_rec(&mut rng, 2)];
+        let mut all = keep.clone();
+        all.push(random_batch_rec(&mut rng, 3));
+        write_all(&path, &all);
+        let full = std::fs::read(&path).unwrap();
+        let last_frame = all.last().unwrap().encode_frame();
+        let last_start = full.len() - last_frame.len();
+        for cut in last_start + 1..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let replay = replay_wal(&path).unwrap_or_else(|e| panic!("cut at {cut}: {e}"));
+            assert_eq!(replay.records, keep, "cut at {cut}");
+            assert!(replay.torn_tail_dropped, "cut at {cut} must flag the dropped tail");
+        }
+        // untouched file: everything back
+        std::fs::write(&path, &full).unwrap();
+        let replay = replay_wal(&path).unwrap();
+        assert_eq!(replay.records, all);
+        assert!(!replay.torn_tail_dropped);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn midlog_corruption_is_a_typed_error() {
+        let path = tmp_wal("midlog");
+        let mut rng = Pcg::seed_from(7);
+        let recs: Vec<WalRecord> = (1..=3).map(|e| random_batch_rec(&mut rng, e)).collect();
+        write_all(&path, &recs);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload bit of the FIRST record (well before EOF)
+        bytes[HEADER_LEN as usize + RECORD_HEADER_LEN as usize + 1] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        match replay_wal(&path) {
+            Err(StoreError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn damaged_final_record_drops_like_a_torn_tail() {
+        let path = tmp_wal("tail-crc");
+        let mut rng = Pcg::seed_from(8);
+        let recs: Vec<WalRecord> = (1..=2).map(|e| random_batch_rec(&mut rng, e)).collect();
+        write_all(&path, &recs);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let replay = replay_wal(&path).unwrap();
+        assert_eq!(replay.records, recs[..1]);
+        assert!(replay.torn_tail_dropped);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn missing_and_empty_logs_are_valid_and_bad_magic_is_not() {
+        let path = tmp_wal("edge");
+        assert!(replay_wal(&path).unwrap().records.is_empty(), "missing file = empty log");
+        std::fs::write(&path, b"").unwrap();
+        assert!(replay_wal(&path).unwrap().records.is_empty());
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(matches!(replay_wal(&path), Err(StoreError::BadMagic { .. })));
+        std::fs::write(&path, b"AGWL\x63\x00\x00\x00").unwrap();
+        assert!(matches!(replay_wal(&path), Err(StoreError::UnsupportedVersion { .. })));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn compact_drops_only_old_epochs_and_keeps_appending() {
+        let path = tmp_wal("compact");
+        let mut rng = Pcg::seed_from(9);
+        let mut w =
+            WalWriter::open(path.clone(), FsyncPolicy::Never, Arc::new(FaultPlan::none()))
+                .unwrap();
+        for e in 1..=4u64 {
+            w.append(&random_batch_rec(&mut rng, e)).unwrap();
+            let fp = GraphFingerprint { n_rows: 1, n_cols: 1, nnz: 0, content_hash: e };
+            w.append(&WalRecord::Commit { epoch: e, fingerprint: fp }).unwrap();
+        }
+        w.compact(2).unwrap();
+        let tail = random_batch_rec(&mut rng, 5);
+        w.append(&tail).unwrap();
+        drop(w);
+        let replay = replay_wal(&path).unwrap();
+        let epochs: Vec<u64> = replay.records.iter().map(WalRecord::epoch).collect();
+        assert_eq!(epochs, vec![3, 3, 4, 4, 5]);
+        assert_eq!(replay.records.last().unwrap(), &tail, "post-compact appends land intact");
+        assert!(replay.commit_fingerprint(2).is_none());
+        assert_eq!(replay.commit_fingerprint(4).unwrap().content_hash, 4);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn disk_full_fault_sheds_appends_with_typed_error() {
+        let path = tmp_wal("disk-full");
+        let faults = Arc::new(FaultPlan::parse("disk-full=96"));
+        let mut w = WalWriter::open(path.clone(), FsyncPolicy::Never, faults).unwrap();
+        let mut rng = Pcg::seed_from(11);
+        let mut wrote = 0usize;
+        let mut shed = 0usize;
+        for e in 1..=12u64 {
+            match w.append(&random_batch_rec(&mut rng, e)) {
+                Ok(_) => wrote += 1,
+                Err(StoreError::DiskFull { .. }) => shed += 1,
+                Err(other) => panic!("expected DiskFull, got {other}"),
+            }
+        }
+        assert!(wrote > 0 && shed > 0, "budget must admit some and shed some");
+        drop(w);
+        // everything that reported success is replayable
+        assert_eq!(replay_wal(&path).unwrap().records.len(), wrote);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn torn_tail_fault_leaves_a_recoverable_log() {
+        let path = tmp_wal("torn-fault");
+        let faults = Arc::new(FaultPlan::parse("torn-tail"));
+        let mut rng = Pcg::seed_from(13);
+        let recs: Vec<WalRecord> = (1..=3).map(|e| random_batch_rec(&mut rng, e)).collect();
+        {
+            let mut w = WalWriter::open(path.clone(), FsyncPolicy::Never, faults).unwrap();
+            for r in &recs {
+                w.append(r).unwrap();
+            }
+        } // drop tears the final record
+        let replay = replay_wal(&path).unwrap();
+        assert!(replay.torn_tail_dropped, "injected tear must be visible");
+        assert_eq!(replay.records, recs[..2], "only the final record is lost");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

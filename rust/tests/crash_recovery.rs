@@ -1,0 +1,178 @@
+//! End-to-end crash recovery (DESIGN §11): a durable server takes a
+//! snapshot plus N WAL-logged update batches, "crashes" without any
+//! graceful shutdown, and a fresh process recovers every tenant —
+//! plan fingerprint equal to the pre-crash epoch's, SpMM output
+//! **bit-identical** to an uncrashed oracle server at the same epoch,
+//! and the epoch chain continuing seamlessly under new updates.
+
+use accel_gcn::delta::{DeltaGraph, EdgeUpdate};
+use accel_gcn::graph::Csr;
+use accel_gcn::runtime::HostTensor;
+use accel_gcn::serve::{PersistConfig, ServeConfig, Server};
+use accel_gcn::spmm::verify::allclose;
+use accel_gcn::store::relabeled_fingerprint;
+use accel_gcn::util::rng::Pcg;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("accel_gcn_crash_recovery")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn test_graph(n: usize, seed: u64) -> Csr {
+    let mut rng = Pcg::seed_from(seed);
+    let degs = accel_gcn::graph::generator::degree_sequence(
+        accel_gcn::graph::generator::DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.1 },
+        n,
+        n * 5,
+        &mut rng,
+    );
+    accel_gcn::graph::generator::from_degree_sequence(n, &degs, &mut rng)
+}
+
+/// Deterministic mixed insert/delete batches, all in bounds for `n`.
+fn update_batches(n: usize, count: usize, seed: u64) -> Vec<Vec<EdgeUpdate>> {
+    let mut rng = Pcg::seed_from(seed);
+    (0..count)
+        .map(|_| {
+            (0..6)
+                .map(|_| {
+                    let (r, c) = (rng.range(0, n) as u32, rng.range(0, n) as u32);
+                    if rng.f64() < 0.3 {
+                        EdgeUpdate::Delete { row: r, col: c }
+                    } else {
+                        EdgeUpdate::Insert { row: r, col: c, val: rng.f32() * 2.0 - 1.0 }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn durable_config(dir: &PathBuf) -> ServeConfig {
+    ServeConfig {
+        threads: 2,
+        persist: Some(PersistConfig::new(dir)),
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn crash_without_shutdown_recovers_bit_identical_to_uncrashed_server() {
+    let dir = tmpdir("bit-identical");
+    let n = 64;
+    let base = test_graph(n, 7);
+    let batches = update_batches(n, 4, 11);
+
+    // --- phase 1: durable server applies the batches, then "crashes".
+    // `mem::forget` skips Drop entirely: no queue drain, no worker
+    // join, no final WAL flush — everything the process would lose to
+    // SIGKILL. Durability must come from the WAL-before-apply ordering
+    // (fsync Always is PersistConfig's default) alone.
+    {
+        let server = Server::start(durable_config(&dir)).unwrap();
+        let h = server.register_graph("t0", &base).unwrap();
+        for b in &batches {
+            server.update_graph(h, b.clone()).unwrap();
+        }
+        assert_eq!(server.graph_epoch(h).unwrap(), batches.len() as u64);
+        std::mem::forget(server);
+    }
+
+    // --- uncrashed oracle: in-memory server at the same epoch
+    let oracle = Server::start(ServeConfig { threads: 2, ..ServeConfig::default() }).unwrap();
+    let oh = oracle.register_graph("t0", &base).unwrap();
+    for b in &batches {
+        oracle.update_graph(oh, b.clone()).unwrap();
+    }
+
+    // --- phase 2: restart + recover
+    let server2 = Server::start(durable_config(&dir)).unwrap();
+    let sums = server2.recover_tenants().unwrap();
+    assert_eq!(sums.len(), 1);
+    let rec = &sums[0];
+    assert_eq!(rec.name, "t0");
+    assert_eq!(rec.epoch, batches.len() as u64, "every logged batch replays");
+    assert_eq!(rec.replayed_batches, batches.len());
+    assert!(rec.fingerprint_verified, "final epoch was sealed before the crash");
+
+    // fingerprint identical to the pre-crash epoch's: the plan-cache
+    // key recomputed from a CPU-side application of the same batches
+    let mut dg = DeltaGraph::new(base.clone());
+    for b in &batches {
+        dg.apply(b).unwrap();
+    }
+    let want_csr = dg.snapshot();
+    assert_eq!(rec.fingerprint, relabeled_fingerprint(&want_csr));
+    assert_eq!(server2.graph_snapshot(rec.handle).unwrap(), want_csr);
+    // recovery pre-warmed the tenant's plan under that fingerprint
+    assert!(server2
+        .plan_cache()
+        .peek(&accel_gcn::pipeline::GraphKey {
+            fingerprint: rec.fingerprint,
+            params: accel_gcn::partition::patterns::PartitionParams::default(),
+        })
+        .is_some());
+
+    // --- same SpMM through both servers: bit-identical outputs, and
+    // both match the dense reference on the recovered matrix
+    let w = 16;
+    let mut rng = Pcg::seed_from(23);
+    let x = HostTensor::f32(&[n, w], (0..n * w).map(|_| rng.f32() - 0.5).collect());
+    let y_rec = server2
+        .submit_spmm(rec.handle, x.clone())
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    let y_ora = oracle.submit_spmm(oh, x.clone()).unwrap().recv().unwrap().unwrap();
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(
+        bits(y_rec.y.as_f32().unwrap()),
+        bits(y_ora.y.as_f32().unwrap()),
+        "recovered server's SpMM must be bit-identical to the uncrashed server's"
+    );
+    let dense = want_csr.spmm_dense(x.as_f32().unwrap(), w);
+    assert!(allclose(y_rec.y.as_f32().unwrap(), &dense, 1e-3, 1e-3));
+
+    // --- the epoch chain continues where the crash left it
+    let rep = server2
+        .update_graph(rec.handle, vec![EdgeUpdate::Insert { row: 1, col: 2, val: 0.5 }])
+        .unwrap();
+    assert_eq!(rep.epoch, batches.len() as u64 + 1);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recovery_is_idempotent_across_repeated_crashes() {
+    // crash → recover → crash again (no new updates) → recover: the
+    // second recovery must see the exact same state
+    let dir = tmpdir("idempotent");
+    let n = 48;
+    let base = test_graph(n, 3);
+    let batches = update_batches(n, 3, 5);
+    {
+        let server = Server::start(durable_config(&dir)).unwrap();
+        let h = server.register_graph("g", &base).unwrap();
+        for b in &batches {
+            server.update_graph(h, b.clone()).unwrap();
+        }
+        std::mem::forget(server);
+    }
+    let fp1 = {
+        let server = Server::start(durable_config(&dir)).unwrap();
+        let sums = server.recover_tenants().unwrap();
+        assert_eq!(sums[0].epoch, 3);
+        std::mem::forget(server);
+        sums[0].fingerprint
+    };
+    let server = Server::start(durable_config(&dir)).unwrap();
+    let sums = server.recover_tenants().unwrap();
+    assert_eq!(sums[0].epoch, 3);
+    assert_eq!(sums[0].fingerprint, fp1);
+    std::fs::remove_dir_all(&dir).ok();
+}
