@@ -89,6 +89,21 @@ cargo run --release --bin accel-gcn -- bench-compare \
     results-ci-delta/BENCH_delta_update.json \
     results-ci-delta/BENCH_delta_update.json --max-regress 5
 
+# Roofline smoke (DESIGN §12): quick STREAM/FMA calibration (cached as
+# versioned JSON), then the SpMM roofline on a power-law graph. The
+# roofline command itself hard-errors if the analytic traffic model
+# and the instrumented counting executor disagree by even one byte,
+# and validate-metrics re-checks the written report: achieved GB/s
+# must not exceed the calibrated peak, per-bucket nnz must sum to the
+# graph's, and the bandwidth- vs compute-bound verdict must match the
+# intensity-vs-machine-balance rule.
+cargo run --release --bin accel-gcn -- roofline --quick --threads 2 --seed 7 \
+    --nodes 1500 --coldims 16,64 \
+    --calibration results-ci-obs/calibration.json \
+    --json results-ci-obs/roofline.json
+cargo run --release --bin accel-gcn -- validate-metrics \
+    results-ci-obs/roofline.json results-ci-obs/calibration.json
+
 # Durability smoke (DESIGN §11), part 1: kill-and-recover. A durable
 # serve-native run (snapshot + WAL under --data-dir, fsync always)
 # takes update batches and is SIGKILLed mid-flight — the binary is

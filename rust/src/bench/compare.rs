@@ -44,8 +44,10 @@ pub fn direction_of(path: &str) -> Direction {
     let lower_suffix = ["_us", "_ns", "_ms", "secs", "micros", "nanos"];
     let lower_sub = ["latency", "time", "imbalance", "overhead", "bytes"];
     let lower_prefix = ["p50", "p90", "p99", "p999", "max_", "worst"];
-    let higher_sub =
-        ["per_sec", "rps", "gflops", "throughput", "speedup", "fusion", "reuse", "accuracy"];
+    let higher_sub = [
+        "per_sec", "rps", "gflops", "gbps", "pct_peak", "throughput", "speedup", "fusion",
+        "reuse", "accuracy",
+    ];
     if lower_suffix.iter().any(|s| leaf.ends_with(s))
         || lower_sub.iter().any(|s| leaf.contains(s))
         || lower_prefix.iter().any(|s| leaf.starts_with(s))
@@ -134,7 +136,7 @@ impl CompareReport {
 /// its position; used to build stable labels so reordered points pair.
 const ID_KEYS: &[&str] = &[
     "experiment", "graph", "kernel", "name", "optimizer", "threads", "ladder_max", "coldim",
-    "width", "batch_size",
+    "width", "batch_size", "variant", "deg",
 ];
 
 fn scalar_label(v: &Json) -> Option<String> {
@@ -256,8 +258,43 @@ mod tests {
         assert_eq!(direction_of("points[0]/rps"), Direction::HigherIsBetter);
         assert_eq!(direction_of("train/steps_per_sec"), Direction::HigherIsBetter);
         assert_eq!(direction_of("points[0]/fusion_factor"), Direction::HigherIsBetter);
+        // bandwidth metrics improve upward: a drop in achieved GB/s or
+        // % of calibrated peak is a regression, not a win
+        assert_eq!(direction_of("points[0]/achieved_gbps"), Direction::HigherIsBetter);
+        assert_eq!(direction_of("points[0]/pct_peak"), Direction::HigherIsBetter);
+        assert_eq!(direction_of("calibration/peak_gbps"), Direction::HigherIsBetter);
+        // ...while traffic volume improves downward
+        assert_eq!(direction_of("points[0]/bytes_per_nnz"), Direction::LowerIsBetter);
         assert_eq!(direction_of("points[0]/batches"), Direction::Neutral);
         assert_eq!(direction_of("points[0]/threads"), Direction::Neutral);
+    }
+
+    #[test]
+    fn bandwidth_points_pair_by_variant_and_regress_downward() {
+        // two microkernel-style cells sharing (graph, coldim, threads)
+        // but differing in `variant`: they must pair by identity, and a
+        // drop in achieved_gbps must flag as a regression (it used to
+        // be Neutral — silently waved through)
+        let mk = |variant: &str, gbps: f64| {
+            let mut p = Json::obj();
+            p.set("graph", "collab").set("coldim", 16).set("threads", 1);
+            p.set("variant", variant).set("achieved_gbps", gbps);
+            p
+        };
+        let mut old = Json::obj();
+        old.set("points", vec![mk("scalar+fixed", 10.0), mk("scalar+adaptive", 12.0)]);
+        let mut new = Json::obj();
+        // reordered AND the adaptive cell lost 25% of its bandwidth
+        new.set("points", vec![mk("scalar+adaptive", 9.0), mk("scalar+fixed", 10.0)]);
+        let r = compare(&old, &new, 10.0);
+        let cell = r
+            .cells
+            .iter()
+            .find(|c| c.path.contains("variant=scalar+adaptive") && c.path.contains("gbps"))
+            .expect("adaptive cell pairs by variant label");
+        assert_eq!(cell.direction, Direction::HigherIsBetter);
+        assert!(cell.regressed, "25% bandwidth drop beyond a 10% gate must flag");
+        assert_eq!(r.regressions().len(), 1, "the fixed cell is unchanged");
     }
 
     #[test]

@@ -33,7 +33,8 @@ use crate::graph::datasets::{by_name, materialize, ScalePolicy};
 use crate::graph::generator::{degree_sequence, from_degree_sequence, DegreeModel};
 use crate::partition::patterns::PartitionParams;
 use crate::pipeline::{
-    spmm_block_level_parallel_scalar, spmm_block_level_parallel_with, SpmmPlan,
+    spmm_block_level_parallel_scalar, spmm_block_level_parallel_with, KernelSchedule, SpmmPlan,
+    TrafficModel,
 };
 use crate::spmm::verify::allclose;
 use crate::spmm::{spmm_gflops, SimdLevel, SPARSE_DEG_MAX};
@@ -80,6 +81,16 @@ pub struct MicroPoint {
     /// gather kernel (a property of the graph+params, constant across
     /// the cell's variants).
     pub sparse_frac: f64,
+    /// Analytic traffic-model bytes this variant moves per nonzero at
+    /// this coldim (fixed dispatch is priced under an all-dense
+    /// schedule, adaptive under the plan's).
+    pub bytes_per_nnz: f64,
+    /// Analytic bytes over measured wall time, GB/s.
+    pub achieved_gbps: f64,
+    /// `achieved_gbps` as % of the calibrated peak — 0 when no
+    /// calibration has been published this process
+    /// ([`crate::obs::calibrate::global`]).
+    pub pct_peak: f64,
     /// This variant matched the dense CSR reference on this input.
     pub verified: bool,
 }
@@ -142,6 +153,11 @@ pub fn run(
     let nnz = csr.nnz();
     let plan = Arc::new(SpmmPlan::build(csr, PartitionParams::default()));
     let sparse_frac = plan.kernels.sparse_frac();
+    // fixed dispatch (and the legacy path) run every block dense: price
+    // their traffic under an all-dense schedule (crossover 0), adaptive
+    // cells under the plan's own model
+    let fixed_traffic =
+        TrafficModel::derive(&plan.block, &KernelSchedule::derive_with(&plan.block, 0));
     let mut rng = Pcg::seed_from(seed ^ 0x71c7_0e);
     let vs = variants();
 
@@ -152,7 +168,8 @@ pub fn run(
         for &t in threads {
             let pool = ThreadPool::new(t);
             // verify first: a fast wrong kernel is worse than no kernel
-            let mut cells: Vec<(String, bool, f64)> = Vec::new(); // (variant, verified, secs)
+            // (variant, verified, secs, traffic-model bytes)
+            let mut cells: Vec<(String, bool, f64, u64)> = Vec::new();
             let mut baseline_s = f64::NAN;
             for &(level, adaptive) in &vs {
                 let y = spmm_block_level_parallel_with(&plan, &x, coldim, &pool, level, adaptive);
@@ -168,7 +185,12 @@ pub fn run(
                 if level == SimdLevel::Scalar && !adaptive {
                     baseline_s = secs; // the PR 4 tiled path
                 }
-                cells.push((name, verified, secs));
+                let bytes = if adaptive {
+                    plan.traffic.bytes_total(coldim)
+                } else {
+                    fixed_traffic.bytes_total(coldim)
+                };
+                cells.push((name, verified, secs, bytes));
             }
             // the pre-tiling legacy path, for cross-PR continuity
             {
@@ -180,9 +202,16 @@ pub fn run(
                         &plan, &x, coldim, &pool,
                     ));
                 });
-                cells.push(("legacy-scalar".to_string(), verified, m.p50()));
+                cells.push((
+                    "legacy-scalar".to_string(),
+                    verified,
+                    m.p50(),
+                    fixed_traffic.bytes_total(coldim),
+                ));
             }
-            for (variant, verified, secs) in cells {
+            let cal = crate::obs::calibrate::global();
+            for (variant, verified, secs, bytes) in cells {
+                let achieved_gbps = bytes as f64 / secs.max(1e-12) / 1e9;
                 points.push(MicroPoint {
                     graph: graph.to_string(),
                     coldim,
@@ -192,6 +221,9 @@ pub fn run(
                     gflops: spmm_gflops(nnz, coldim, secs),
                     speedup_vs_baseline: baseline_s / secs.max(1e-12),
                     sparse_frac,
+                    bytes_per_nnz: bytes as f64 / nnz.max(1) as f64,
+                    achieved_gbps,
+                    pct_peak: cal.map_or(0.0, |c| c.pct_of_peak(achieved_gbps)),
                     verified,
                 });
             }
@@ -218,8 +250,8 @@ pub fn run_graphs(
 /// Render the paper-style table.
 pub fn report(points: &[MicroPoint]) -> String {
     let mut table = Table::new(&[
-        "graph", "coldim", "threads", "variant", "µs", "GF/s", "vs scalar+fixed", "sparse frac",
-        "verified",
+        "graph", "coldim", "threads", "variant", "µs", "GF/s", "GB/s", "B/nnz",
+        "vs scalar+fixed", "sparse frac", "verified",
     ]);
     for p in points {
         table.row(vec![
@@ -229,6 +261,8 @@ pub fn report(points: &[MicroPoint]) -> String {
             p.variant.clone(),
             format!("{:.1}", p.us),
             format!("{:.2}", p.gflops),
+            format!("{:.2}", p.achieved_gbps),
+            format!("{:.1}", p.bytes_per_nnz),
             format!("{:.2}x", p.speedup_vs_baseline),
             format!("{:.2}", p.sparse_frac),
             p.verified.to_string(),
@@ -251,6 +285,9 @@ pub fn to_json(points: &[MicroPoint]) -> Json {
             o.set("gflops", p.gflops);
             o.set("speedup_vs_baseline", p.speedup_vs_baseline);
             o.set("sparse_frac", p.sparse_frac);
+            o.set("bytes_per_nnz", p.bytes_per_nnz);
+            o.set("achieved_gbps", p.achieved_gbps);
+            o.set("pct_peak", p.pct_peak);
             o.set("verified", p.verified);
             o
         })
@@ -280,7 +317,17 @@ mod tests {
             assert!(p.us > 0.0 && p.gflops.is_finite(), "{p:?}");
             assert!(p.speedup_vs_baseline > 0.0, "{p:?}");
             assert!((0.0..=1.0).contains(&p.sparse_frac), "{p:?}");
+            // the traffic model always charges ≥ 8 B/nnz (col idx +
+            // value) and the cell ran for nonzero wall time
+            assert!(p.bytes_per_nnz >= 8.0, "{p:?}");
+            assert!(p.achieved_gbps > 0.0 && p.achieved_gbps.is_finite(), "{p:?}");
+            assert!((0.0..=100.0).contains(&p.pct_peak), "{p:?}");
         }
+        // the gather kernel pays one dst RMW per *nonzero* where dense
+        // pays one per *row*: an adaptive schedule can only add traffic
+        // relative to all-dense (it wins on time, not bytes)
+        let by = |v: &str| pts.iter().find(|p| p.variant == v).unwrap().bytes_per_nnz;
+        assert!(by("scalar+adaptive") >= by("scalar+fixed") - 1e-9);
         // the baseline cell's speedup is exactly 1 by definition
         let base = pts.iter().find(|p| p.variant == "scalar+fixed").unwrap();
         assert!((base.speedup_vs_baseline - 1.0).abs() < 1e-9);

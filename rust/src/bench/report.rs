@@ -25,7 +25,16 @@ use std::path::Path;
 /// should be a bare `BENCH_<experiment>.json` name.
 pub fn write_report(out_dir: &Path, filename: &str, doc: &Json) -> Result<()> {
     let mut doc = doc.clone();
-    doc.set("meta", crate::obs::run_metadata());
+    let mut meta = crate::obs::run_metadata();
+    // when a bandwidth calibration has been published this process,
+    // stamp it too: a trajectory row quoting achieved GB/s is only
+    // comparable against the peak it was measured under
+    if let Some(cal) = crate::obs::calibrate::global() {
+        meta.set("peak_gbps", cal.peak_gbps);
+        meta.set("calibration_threads", cal.best_threads);
+        meta.set("calibration_simd", cal.simd.as_str());
+    }
+    doc.set("meta", meta);
     let doc = &doc;
     write_one(&out_dir.join(filename), doc)?;
     let cwd_is_repo_root = Path::new("ROADMAP.md").exists() || Path::new(".git").exists();
@@ -71,5 +80,25 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         // if the test ever runs from a repo root, clean the duplicate
         let _ = std::fs::remove_file("BENCH_unit.json");
+    }
+
+    #[test]
+    fn calibration_meta_is_stamped_when_published() {
+        // publish *a* calibration (first-write-wins; any valid one has
+        // peak > 0) and check the stamp rides the meta block
+        let cal = crate::obs::calibrate::calibrate_with(&[1], &[64], 1, 1, true);
+        crate::obs::calibrate::set_global(&cal);
+        let dir = std::env::temp_dir().join(format!("accel-report-cal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut doc = Json::obj();
+        doc.set("experiment", "unit-test-cal").set("points", Vec::<Json>::new());
+        write_report(&dir, "BENCH_unit_cal.json", &doc).unwrap();
+        let text = std::fs::read_to_string(dir.join("BENCH_unit_cal.json")).unwrap();
+        let meta = Json::parse(&text).unwrap().get("meta").cloned().expect("meta");
+        assert!(meta.req_f64("peak_gbps").unwrap() > 0.0);
+        assert!(meta.req_usize("calibration_threads").unwrap() >= 1);
+        assert!(!meta.req_str("calibration_simd").unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file("BENCH_unit_cal.json");
     }
 }

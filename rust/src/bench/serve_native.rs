@@ -147,6 +147,13 @@ pub struct ServeNativePoint {
     pub recovered_tenants: usize,
     /// WAL batches replayed across all recovered tenants.
     pub replayed_batches: u64,
+    /// Mean achieved SpMM bandwidth across served requests, GB/s —
+    /// the plan's analytic traffic-model bytes over batch wall time,
+    /// as recorded by [`ServeMetrics::spmm_gbps`].
+    pub achieved_gbps: f64,
+    /// `achieved_gbps` as % of the calibrated peak (0 when no
+    /// calibration has been published this process).
+    pub pct_peak: f64,
 }
 
 /// Synthetic power-law tenant graphs, sizes staggered so the tenants
@@ -431,6 +438,7 @@ pub fn run_once_with_metrics(cfg: &LoadConfig) -> Result<(ServeNativePoint, Arc<
         reg.gauge("serve.plan_cache.invalidations").set(cache.invalidations() as i64);
     }
     let total = m.total.snapshot();
+    let achieved_gbps = m.spmm_gbps.snapshot().mean;
     let point = ServeNativePoint {
         threads: cfg.threads,
         ladder_max: max_w,
@@ -449,6 +457,9 @@ pub fn run_once_with_metrics(cfg: &LoadConfig) -> Result<(ServeNativePoint, Arc<
         updates_shed,
         recovered_tenants,
         replayed_batches,
+        achieved_gbps,
+        pct_peak: crate::obs::calibrate::global()
+            .map_or(0.0, |c| c.pct_of_peak(achieved_gbps)),
     };
     Ok((point, m))
 }
@@ -474,7 +485,7 @@ pub fn run_sweep(cfg: &LoadConfig, threads: &[usize]) -> Result<Vec<ServeNativeP
 pub fn report(points: &[ServeNativePoint]) -> String {
     let mut table = Table::new(&[
         "threads", "ladder max", "tenants", "served", "shed", "retried", "updates", "batches",
-        "fusion", "req/s", "p50 µs", "p99 µs", "verified",
+        "fusion", "req/s", "GB/s", "p50 µs", "p99 µs", "verified",
     ]);
     for p in points {
         table.row(vec![
@@ -488,6 +499,7 @@ pub fn report(points: &[ServeNativePoint]) -> String {
             p.batches.to_string(),
             format!("{:.2}", p.fusion_factor),
             format!("{:.1}", p.requests_per_sec),
+            format!("{:.2}", p.achieved_gbps),
             format!("{:.0}", p.p50_us),
             format!("{:.0}", p.p99_us),
             p.verified.to_string(),
@@ -519,6 +531,8 @@ pub fn to_json(points: &[ServeNativePoint]) -> Json {
             o.set("updates_shed", p.updates_shed as usize);
             o.set("recovered_tenants", p.recovered_tenants);
             o.set("replayed_batches", p.replayed_batches as usize);
+            o.set("achieved_gbps", p.achieved_gbps);
+            o.set("pct_peak", p.pct_peak);
             o
         })
         .collect();
@@ -558,6 +572,12 @@ mod tests {
         );
         assert!(p.requests_per_sec > 0.0);
         assert!(p.p50_us >= 0.0 && p.p99_us >= p.p50_us);
+        assert!(
+            p.achieved_gbps > 0.0 && p.achieved_gbps.is_finite(),
+            "served batches must record traffic-model bandwidth ({})",
+            p.achieved_gbps
+        );
+        assert!((0.0..=100.0).contains(&p.pct_peak));
     }
 
     #[test]

@@ -49,9 +49,13 @@
 //! * [`runtime`] — PJRT wrapper loading AOT artifacts (`*.hlo.txt`).
 //! * [`obs`] — unified tracing & profiling: span timers with
 //!   thread-local nesting, typed counters/gauges, fixed log-bucket
-//!   histograms, the per-shard SpMM execution timeline, and the
-//!   versioned JSON metrics snapshot (`accel-gcn profile`,
-//!   `serve-native --metrics-out`).
+//!   histograms, the per-shard SpMM execution timeline (busy time
+//!   **and** bytes moved, so shards report achieved GB/s), the
+//!   STREAM-style peak-bandwidth calibration ([`obs::calibrate`],
+//!   cached JSON), and the versioned JSON metrics/roofline snapshots
+//!   (`accel-gcn profile`, `accel-gcn roofline`,
+//!   `serve-native --metrics-out`). The analytic side of the roofline
+//!   lives in [`pipeline::TrafficModel`], attached to every plan.
 //! * [`metrics`] — serving-facing facade over [`obs`] (counters and
 //!   histogram-backed latency recorders).
 //! * [`util`] — zero-dependency substrates (RNG, JSON, NPY, CLI, stats,

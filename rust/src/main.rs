@@ -20,6 +20,8 @@
 //! accel-gcn bench-compare OLD.json NEW.json [--max-regress PCT]
 //! accel-gcn profile      [--nodes N] [--iters I] [--train-steps S] [--json PATH]
 //!                        [--trace-out PATH] [--tune-every K] [--quick]
+//! accel-gcn roofline     [--json PATH] [--calibration PATH] [--recalibrate]
+//!                        [--coldims 16,64] [--quick]
 //! accel-gcn validate-metrics FILE [FILE...]
 //! ```
 
@@ -57,6 +59,7 @@ fn main() {
         "bench" => cmd_bench(rest),
         "bench-compare" => cmd_bench_compare(rest),
         "profile" => cmd_profile(rest),
+        "roofline" => cmd_roofline(rest),
         "validate-metrics" => cmd_validate_metrics(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -131,10 +134,21 @@ fn print_usage() {
          \x20           per-shard utilization table, imbalance ratio, and span tree;\n\
          \x20           --tune-every K re-cuts shards from measured cost every K\n\
          \x20           iters and verifies tuned output bit-for-bit)\n\
+         \x20 roofline  [--json PATH] [--calibration PATH] [--recalibrate] [--quick]\n\
+         \x20           [--nodes N] [--avg-deg D] [--coldims 16,64] [--threads T]\n\
+         \x20           [--iters I] [--seed S]\n\
+         \x20           (calibrate STREAM/FMA machine roofs — cached at --calibration,\n\
+         \x20           default results/calibration.json — then run the SpMM roofline\n\
+         \x20           on a power-law sweep: analytic traffic-model bytes are checked\n\
+         \x20           exactly against the instrumented counting executor, achieved\n\
+         \x20           GB/s and GFLOP/s are reported per degree bucket against the\n\
+         \x20           calibrated peak with a bandwidth- vs compute-bound verdict;\n\
+         \x20           --json writes the accel-gcn-roofline/v1 document)\n\
          \x20 validate-metrics FILE [FILE...]\n\
          \x20           (schema-check metrics snapshot JSON written by profile --json\n\
-         \x20           or serve-native --metrics-out, and trace-event JSON written\n\
-         \x20           by --trace-out; exits nonzero on violations)"
+         \x20           or serve-native --metrics-out, trace-event JSON written by\n\
+         \x20           --trace-out, roofline JSON written by roofline --json, and\n\
+         \x20           calibration JSON; exits nonzero on violations)"
     );
 }
 
@@ -947,6 +961,22 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
         "per-dispatch imbalance: p50 {:.3}  p99 {:.3}  worst {:.3} over {} dispatches",
         imb.p50, imb.p99, imb.max, imb.count
     );
+    // bytes sampled per shard by the executor (the analytic per-block
+    // model applied to each dispatch) over mean shard busy time —
+    // shards run concurrently, so the wall-clock denominator is the
+    // mean, not the sum
+    let bytes_total: u64 = agg.iter().map(|a| a.bytes_read + a.bytes_written).sum();
+    if bytes_total > 0 && busy_total > 0 {
+        let mean_busy_s = busy_total as f64 / agg.len().max(1) as f64 / 1e9;
+        let gbps = bytes_total as f64 / mean_busy_s.max(1e-12) / 1e9;
+        let peak = accel_gcn::obs::calibrate::global()
+            .map(|c| format!(" ({:.1}% of the {:.2} GB/s calibrated peak)", c.pct_of_peak(gbps), c.peak_gbps))
+            .unwrap_or_default();
+        println!(
+            "memory traffic: {:.1} MB sampled across shards, achieved {gbps:.2} GB/s{peak}",
+            bytes_total as f64 / 1e6
+        );
+    }
     println!("\nspan tree:");
     print!("{}", accel_gcn::obs::render_span_tree(&reg.span_stats()));
     if let Some(path) = args.get("json") {
@@ -956,6 +986,224 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
     if let Some(path) = args.get("trace-out") {
         write_trace_snapshot(path)?;
         println!("trace timeline written to {path} (load in Perfetto / chrome://tracing)");
+    }
+    Ok(())
+}
+
+/// Roofline analysis of the SpMM stack against calibrated machine
+/// roofs. Two halves:
+///
+/// 1. **Calibration** — [`accel_gcn::obs::calibrate`] measures the
+///    achievable memory bandwidth (STREAM copy/scale/triad across
+///    thread counts and working-set sizes, L1-resident through
+///    DRAM-sized) and peak FLOP rate (FMA chains), cached as versioned
+///    JSON at `--calibration` so repeat runs skip the ~seconds-long
+///    sweep; `--recalibrate` forces a fresh one.
+/// 2. **Roofline** — builds a power-law graph, runs the parallel SpMM
+///    at each `--coldims` width, and reports achieved GB/s, GFLOP/s,
+///    arithmetic intensity, and the bandwidth- vs compute-bound
+///    verdict, per graph and per `(split, kernel, degree)` traffic
+///    bucket. The plan's analytic byte count is cross-checked **byte
+///    for byte** against the instrumented counting executor — any
+///    drift between model and code is a hard error, and the emitted
+///    JSON re-encodes both so `validate-metrics` re-checks it in CI.
+fn cmd_roofline(rest: &[String]) -> Result<()> {
+    use accel_gcn::obs::calibrate;
+    use accel_gcn::pipeline::spmm_block_level_parallel;
+    use accel_gcn::spmm::microkernel::spmm_gflops;
+    use accel_gcn::spmm::verify::allclose;
+    use accel_gcn::spmm::spmm_block_level_counting;
+    use accel_gcn::util::json::Json;
+    use accel_gcn::util::threadpool::ThreadPool;
+
+    let args = Args::parse(
+        rest,
+        &["json", "calibration", "nodes", "avg-deg", "coldims", "threads", "iters", "seed"],
+        &["quick", "recalibrate"],
+    )?;
+    let quick = args.flag("quick");
+    let threads = args.usize_or("threads", 4)?;
+    let nodes = args.usize_or("nodes", if quick { 2_000 } else { 20_000 })?;
+    let avg_deg = args.f64_or("avg-deg", 8.0)?;
+    let coldims = args.usize_list_or("coldims", &[16, 64])?;
+    let iters = args.usize_or("iters", if quick { 5 } else { 20 })?;
+    let seed = args.u64_or("seed", 42)?;
+    anyhow::ensure!(nodes >= 5, "--nodes must be ≥ 5, got {nodes}");
+    anyhow::ensure!(iters >= 1, "--iters must be ≥ 1, got {iters}");
+    anyhow::ensure!(
+        !coldims.is_empty() && coldims.iter().all(|&f| f > 0),
+        "--coldims needs at least one positive width"
+    );
+
+    let cal_path = args.str_or("calibration", "results/calibration.json");
+    let (cal, was_cached) = calibrate::load_or_run(
+        std::path::Path::new(&cal_path),
+        quick,
+        threads,
+        args.flag("recalibrate"),
+    )?;
+    calibrate::set_global(&cal);
+    println!(
+        "calibration ({} {cal_path}): {}",
+        if was_cached { "cached at" } else { "measured, cached to" },
+        cal.summary()
+    );
+
+    // the same skewed power-law shape `profile` uses — the degree mix
+    // that exercises both kernel variants and the split path at once
+    let mut rng = Pcg::seed_from(seed);
+    let degs = generator::degree_sequence(
+        generator::DegreeModel::PowerLaw { alpha: 2.1, dmax_frac: 0.05 },
+        nodes,
+        (nodes as f64 * avg_deg) as usize,
+        &mut rng,
+    );
+    let csr = generator::from_degree_sequence(nodes, &degs, &mut rng);
+    let nnz = csr.nnz();
+    let plan = SpmmPlan::build(csr, PartitionParams::default());
+    let pool = ThreadPool::new(threads);
+    println!(
+        "roofline: power-law graph {nodes} nodes / {nnz} nnz, coldims {coldims:?}, \
+         {threads} threads, min over {iters} iters"
+    );
+
+    let mut graphs: Vec<Json> = Vec::new();
+    for &f in &coldims {
+        let x: Vec<f32> = (0..nodes * f).map(|_| rng.f32() - 0.5).collect();
+        // warm-up run doubles as the reference for the counting check
+        let y_ref = spmm_block_level_parallel(&plan, &x, f, &pool);
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            let y = spmm_block_level_parallel(&plan, &x, f, &pool);
+            best = best.min(t0.elapsed().as_secs_f64());
+            drop(y);
+        }
+        // the instrumented scalar executor replays the exact schedule
+        // and counts every byte; its total must equal the analytic
+        // model's, and its output must match the parallel executor's
+        let (y_counted, counts) = spmm_block_level_counting(&plan, &x, f);
+        anyhow::ensure!(
+            allclose(&y_counted, &y_ref, 1e-3, 1e-3),
+            "counting executor diverged from the parallel executor at f={f}"
+        );
+        let analytic = plan.traffic.bytes_total(f);
+        let instrumented = counts.bytes_read + counts.bytes_written;
+        anyhow::ensure!(
+            instrumented == analytic,
+            "traffic model drifted from the executor at f={f}: \
+             analytic {analytic} bytes != instrumented {instrumented} bytes"
+        );
+        let achieved_gbps = analytic as f64 / best.max(1e-12) / 1e9;
+        let achieved_gflops = spmm_gflops(nnz, f, best);
+        let intensity = plan.traffic.arithmetic_intensity(f);
+        let verdict = cal.verdict(intensity);
+        let pct = cal.pct_of_peak(achieved_gbps);
+        println!(
+            "\nf={f}: {:.0} µs/SpMM (best), {analytic} bytes ({:.1} B/nnz, verified against \
+             the counting executor), {achieved_gbps:.2} GB/s achieved = {pct:.1}% of the \
+             {:.2} GB/s peak, {achieved_gflops:.2} GFLOP/s, intensity {intensity:.4} \
+             flops/byte → {verdict}",
+            best * 1e6,
+            plan.traffic.bytes_per_nnz(f),
+            cal.peak_gbps,
+        );
+        println!(
+            "  storage what-if: f16-storage {:.2}x, i8-storage {:.2}x fewer bytes \
+             (a direct throughput multiplier while bandwidth-bound)",
+            plan.traffic.quantized_speedup(f, accel_gcn::pipeline::ElemWidths::F16_STORAGE),
+            plan.traffic.quantized_speedup(f, accel_gcn::pipeline::ElemWidths::I8_STORAGE),
+        );
+
+        // per-bucket table, heaviest traffic first — a power-law graph
+        // can have hundreds of distinct-degree buckets, so cap the
+        // human table and say what was elided (the JSON has them all)
+        let mut order: Vec<&accel_gcn::pipeline::BucketTraffic> =
+            plan.traffic.buckets.iter().collect();
+        order.sort_by(|a, b| b.bytes_total(f).cmp(&a.bytes_total(f)));
+        let shown = order.len().min(12);
+        let mut table = accel_gcn::util::bench::Table::new(&[
+            "deg", "kernel", "split", "blocks", "rows", "nnz", "KB", "B/nnz", "flops/B",
+        ]);
+        for b in &order[..shown] {
+            table.row(vec![
+                b.deg.to_string(),
+                b.kernel.name().to_string(),
+                b.split.to_string(),
+                b.blocks.to_string(),
+                b.rows.to_string(),
+                b.nnz.to_string(),
+                format!("{:.1}", b.bytes_total(f) as f64 / 1e3),
+                format!("{:.1}", b.bytes_per_nnz(f)),
+                format!("{:.4}", b.arithmetic_intensity(f)),
+            ]);
+        }
+        print!("{}", table.render());
+        if order.len() > shown {
+            println!("  … {} more buckets (all in the JSON report)", order.len() - shown);
+        }
+
+        let buckets: Vec<Json> = plan
+            .traffic
+            .buckets
+            .iter()
+            .map(|b| {
+                let mut j = Json::obj();
+                j.set("deg", b.deg)
+                    .set("split", b.split)
+                    .set("kernel", b.kernel.name())
+                    .set("blocks", b.blocks)
+                    .set("rows", b.rows)
+                    .set("nnz", b.nnz)
+                    .set("bytes_total", b.bytes_total(f))
+                    .set("bytes_per_nnz", b.bytes_per_nnz(f))
+                    .set("intensity", b.arithmetic_intensity(f));
+                j
+            })
+            .collect();
+        let mut g = Json::obj();
+        g.set("graph", "powerlaw")
+            .set("n", nodes)
+            .set("nnz", nnz)
+            .set("f", f)
+            .set("threads", threads)
+            .set("spmm_secs", best)
+            .set("analytic_bytes", analytic)
+            .set("instrumented_bytes", instrumented)
+            .set("bytes_per_nnz", plan.traffic.bytes_per_nnz(f))
+            .set("arithmetic_intensity", intensity)
+            .set("achieved_gbps", achieved_gbps)
+            .set("achieved_gflops", achieved_gflops)
+            .set("pct_peak", pct)
+            .set("verdict", verdict)
+            .set("buckets", buckets);
+        graphs.push(g);
+    }
+
+    let mut doc = Json::obj();
+    let mut cal_j = Json::obj();
+    cal_j
+        .set("peak_gbps", cal.peak_gbps)
+        .set("peak_gflops", cal.peak_gflops)
+        .set("machine_balance", cal.machine_balance())
+        .set("threads", cal.best_threads)
+        .set("simd", cal.simd.as_str());
+    doc.set("schema", accel_gcn::obs::ROOFLINE_SCHEMA_VERSION)
+        .set("meta", accel_gcn::obs::run_metadata())
+        .set("calibration", cal_j)
+        .set("graphs", graphs);
+    // the emitter must pass its own validator — the same check CI
+    // re-runs on the written file via `validate-metrics`
+    accel_gcn::obs::validate_roofline(&doc).context("roofline self-validation")?;
+    if let Some(path) = args.get("json") {
+        let p = std::path::Path::new(path);
+        if let Some(parent) = p.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(p, doc.to_pretty()).with_context(|| format!("write {path}"))?;
+        println!("\nroofline report written to {path}");
     }
     Ok(())
 }
@@ -994,10 +1242,14 @@ fn cmd_bench_compare(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Schema-check metrics snapshot files (CI's validator for the JSON
-/// emitted by `profile --json` and `serve-native --metrics-out`) and
-/// Chrome trace-event timelines (`--trace-out`); the two formats are
-/// told apart by the `traceEvents` key.
+/// Schema-check observability JSON files (CI's validator for the four
+/// formats the stack emits): metrics snapshots (`profile --json`,
+/// `serve-native --metrics-out`), Chrome trace-event timelines
+/// (`--trace-out`), roofline reports (`roofline --json`), and
+/// bandwidth calibrations (the `roofline --calibration` cache).
+/// Roofline and calibration files carry their own `schema` string and
+/// are routed on it; the remaining two are told apart by the
+/// `traceEvents` key.
 fn cmd_validate_metrics(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[], &[])?;
     let files = args.positional();
@@ -1006,7 +1258,16 @@ fn cmd_validate_metrics(rest: &[String]) -> Result<()> {
         let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
         let doc = accel_gcn::util::json::Json::parse(&text)
             .with_context(|| format!("parse {path}"))?;
-        if doc.get("traceEvents").is_some() {
+        let schema = doc.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+        if schema == accel_gcn::obs::ROOFLINE_SCHEMA_VERSION {
+            accel_gcn::obs::validate_roofline(&doc)
+                .with_context(|| format!("validate {path}"))?;
+            println!("{path}: OK ({schema})");
+        } else if schema == accel_gcn::obs::CALIBRATION_SCHEMA_VERSION {
+            accel_gcn::obs::validate_calibration(&doc)
+                .with_context(|| format!("validate {path}"))?;
+            println!("{path}: OK ({schema})");
+        } else if doc.get("traceEvents").is_some() {
             accel_gcn::obs::validate_trace(&doc).with_context(|| format!("validate {path}"))?;
             println!("{path}: OK ({})", accel_gcn::obs::TRACE_SCHEMA_VERSION);
         } else {

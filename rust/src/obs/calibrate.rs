@@ -1,0 +1,467 @@
+//! One-shot STREAM-style peak-bandwidth (and FMA peak-compute)
+//! calibration — the machine-specific roof every roofline number is
+//! reported against.
+//!
+//! ## Methodology
+//!
+//! The classic STREAM kernels — **copy** (`b[i] = a[i]`, 8 B/elem),
+//! **scale** (`b[i] = s·a[i]`, 8 B/elem) and **triad**
+//! (`a[i] = b[i] + s·c[i]`, 12 B/elem) — are swept across thread-pool
+//! sizes *and* working-set sizes, from cache-resident to DRAM-sized
+//! buffers, with each configuration timed over several repetitions and
+//! the best (minimum) time kept. `peak_gbps` is the **max over the
+//! whole sweep**: the SpMM hot loop often runs partially cache-resident,
+//! so a DRAM-only roof would let "achieved > peak" happen legitimately;
+//! taking the cache-side max keeps the CI invariant *achieved ≤ peak*
+//! meaningful. A register-resident FMA chain sweep provides
+//! `peak_gflops`, and `machine_balance = peak_gflops / peak_gbps`
+//! (FLOPs/byte) is the compute/bandwidth verdict threshold.
+//!
+//! ## Caching
+//!
+//! Calibration is expensive relative to everything else observability
+//! does, so the result is persisted as a versioned JSON document
+//! ([`CALIBRATION_SCHEMA_VERSION`]) and [`load_or_run`] reuses a valid
+//! cached file. A process-global copy ([`set_global`]/[`global`]) lets
+//! `bench::report::write_report` stamp calibration meta into every
+//! bench JSON without re-measuring.
+
+use super::export::{
+    run_metadata, validate_calibration, CALIBRATION_SCHEMA_VERSION,
+};
+use crate::spmm::microkernel::SimdLevel;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::hint::black_box;
+use std::path::Path;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// One measured configuration of the sweep. `gbps` is 0 for the `fma`
+/// kernel; `gflops` is 0 for the STREAM kernels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalPoint {
+    /// `copy` | `scale` | `triad` | `fma`.
+    pub kernel: String,
+    pub threads: usize,
+    /// Total working-set size in MiB (0 for `fma`: register-resident).
+    pub mb: f64,
+    pub gbps: f64,
+    pub gflops: f64,
+}
+
+/// The calibrated machine roofs; see the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Best STREAM bandwidth anywhere in the sweep, GB/s.
+    pub peak_gbps: f64,
+    /// Best FMA throughput anywhere in the sweep, GFLOP/s.
+    pub peak_gflops: f64,
+    /// Thread count that achieved `peak_gbps`.
+    pub best_threads: usize,
+    /// SIMD level the process ran at during calibration.
+    pub simd: String,
+    /// Whether this was a `--quick` (reduced-sweep) calibration.
+    pub quick: bool,
+    pub points: Vec<CalPoint>,
+}
+
+impl Calibration {
+    /// `peak_gflops / peak_gbps`, FLOPs per byte — kernels below this
+    /// arithmetic intensity are bandwidth-bound on this machine.
+    pub fn machine_balance(&self) -> f64 {
+        if self.peak_gbps <= 0.0 {
+            return 0.0;
+        }
+        self.peak_gflops / self.peak_gbps
+    }
+
+    /// `gbps` as a percentage of the calibrated peak, clamped to
+    /// [0, 100] so float jitter can never push a report out of range.
+    pub fn pct_of_peak(&self, gbps: f64) -> f64 {
+        if self.peak_gbps <= 0.0 {
+            return 0.0;
+        }
+        (100.0 * gbps / self.peak_gbps).clamp(0.0, 100.0)
+    }
+
+    /// The bandwidth-bound vs compute-bound verdict for a kernel of the
+    /// given arithmetic intensity (FLOPs/byte).
+    pub fn verdict(&self, intensity: f64) -> &'static str {
+        if intensity < self.machine_balance() {
+            "bandwidth-bound"
+        } else {
+            "compute-bound"
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("schema", CALIBRATION_SCHEMA_VERSION);
+        doc.set("meta", run_metadata());
+        doc.set("quick", self.quick);
+        doc.set("simd", self.simd.as_str());
+        doc.set("peak_gbps", self.peak_gbps);
+        doc.set("peak_gflops", self.peak_gflops);
+        doc.set("machine_balance", self.machine_balance());
+        doc.set("best_threads", self.best_threads);
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("kernel", p.kernel.as_str());
+                o.set("threads", p.threads);
+                o.set("mb", p.mb);
+                o.set("gbps", p.gbps);
+                o.set("gflops", p.gflops);
+                o
+            })
+            .collect();
+        doc.set("points", points);
+        doc
+    }
+
+    /// Parse a calibration document (validated first, so a stale or
+    /// corrupt cache file is rejected rather than half-read).
+    pub fn from_json(doc: &Json) -> Result<Calibration> {
+        validate_calibration(doc)?;
+        let points = doc
+            .req_arr("points")?
+            .iter()
+            .map(|p| {
+                Ok(CalPoint {
+                    kernel: p.req_str("kernel")?.to_string(),
+                    threads: p.req_usize("threads")?,
+                    mb: p.req_f64("mb")?,
+                    gbps: p.req_f64("gbps")?,
+                    gflops: p.req_f64("gflops")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Calibration {
+            peak_gbps: doc.req_f64("peak_gbps")?,
+            peak_gflops: doc.req_f64("peak_gflops")?,
+            best_threads: doc.req_usize("best_threads")?,
+            simd: doc.req_str("simd")?.to_string(),
+            quick: doc.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            points,
+        })
+    }
+
+    /// One-line summary for footers and report meta.
+    pub fn summary(&self) -> String {
+        format!(
+            "peak {:.1} GB/s ({} threads, {}), {:.1} GFLOP/s, balance {:.2} flops/B{}",
+            self.peak_gbps,
+            self.best_threads,
+            self.simd,
+            self.peak_gflops,
+            self.machine_balance(),
+            if self.quick { " [quick]" } else { "" }
+        )
+    }
+}
+
+/// Time `passes` executions of `run` and return the best per-pass
+/// seconds (min over `reps` timed repetitions).
+fn best_secs(reps: usize, passes: usize, mut run: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        for _ in 0..passes.max(1) {
+            run();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / passes.max(1) as f64);
+    }
+    best.max(1e-12)
+}
+
+fn stream_pass(pool: &ThreadPool, chunk: usize, kernel: &str, a: &mut [f32], b: &mut [f32], c: &[f32]) {
+    let s = 1.000_1f32;
+    match kernel {
+        "copy" => {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = b
+                .chunks_mut(chunk)
+                .zip(a.chunks(chunk))
+                .map(|(bc, ac)| {
+                    Box::new(move || {
+                        bc.copy_from_slice(ac);
+                        black_box(&bc[0]);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scoped_run(jobs);
+        }
+        "scale" => {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = b
+                .chunks_mut(chunk)
+                .zip(a.chunks(chunk))
+                .map(|(bc, ac)| {
+                    Box::new(move || {
+                        for (x, y) in bc.iter_mut().zip(ac) {
+                            *x = s * *y;
+                        }
+                        black_box(&bc[0]);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scoped_run(jobs);
+        }
+        "triad" => {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = a
+                .chunks_mut(chunk)
+                .zip(b.chunks(chunk))
+                .zip(c.chunks(chunk))
+                .map(|((ac, bc), cc)| {
+                    Box::new(move || {
+                        for ((x, y), z) in ac.iter_mut().zip(bc).zip(cc) {
+                            *x = *y + s * *z;
+                        }
+                        black_box(&ac[0]);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scoped_run(jobs);
+        }
+        other => unreachable!("unknown STREAM kernel {other}"),
+    }
+}
+
+/// Bytes moved per element by each STREAM kernel (read + write, f32).
+fn stream_bytes_per_elem(kernel: &str) -> u64 {
+    match kernel {
+        "copy" | "scale" => 8, // 1 read + 1 write
+        "triad" => 12,         // 2 reads + 1 write
+        other => unreachable!("unknown STREAM kernel {other}"),
+    }
+}
+
+/// Register-resident FMA chains: `chains` independent accumulators per
+/// thread, `iters` steps each → `2 · iters · chains` FLOPs per thread.
+fn fma_pass(pool: &ThreadPool, threads: usize, iters: usize) {
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..threads)
+        .map(|t| {
+            Box::new(move || {
+                const CHAINS: usize = 16;
+                let mut acc = [0.0f32; CHAINS];
+                for (k, a) in acc.iter_mut().enumerate() {
+                    *a = 1.0 + (t * CHAINS + k) as f32 * 1e-6;
+                }
+                let m = black_box(1.000_000_1f32);
+                let add = black_box(1e-9f32);
+                for _ in 0..iters {
+                    for a in acc.iter_mut() {
+                        *a = *a * m + add;
+                    }
+                }
+                black_box(acc[0]);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.scoped_run(jobs);
+}
+
+const FMA_CHAINS: usize = 16;
+
+/// Run the full calibration sweep with explicit knobs (the `calibrate`
+/// wrapper picks them from `quick`): thread counts × working-set sizes
+/// × {copy, scale, triad}, plus the FMA compute roof per thread count.
+pub fn calibrate_with(
+    thread_counts: &[usize],
+    sizes_kb: &[usize],
+    reps: usize,
+    passes: usize,
+    quick: bool,
+) -> Calibration {
+    let mut points = Vec::new();
+    let mut peak_gbps = 0.0f64;
+    let mut peak_gflops = 0.0f64;
+    let mut best_threads = thread_counts.first().copied().unwrap_or(1).max(1);
+    for &threads in thread_counts {
+        let threads = threads.max(1);
+        let pool = ThreadPool::new(threads);
+        for &kb in sizes_kb {
+            let elems = (kb * 1024 / 4).max(threads);
+            let chunk = elems.div_ceil(threads);
+            let mut a = vec![1.0f32; elems];
+            let mut b = vec![0.0f32; elems];
+            let c = vec![2.0f32; elems];
+            for kernel in ["copy", "scale", "triad"] {
+                let secs = best_secs(reps, passes, || {
+                    stream_pass(&pool, chunk, kernel, &mut a, &mut b, &c)
+                });
+                let bytes = stream_bytes_per_elem(kernel) * elems as u64;
+                let gbps = bytes as f64 / secs / 1e9;
+                if gbps > peak_gbps {
+                    peak_gbps = gbps;
+                    best_threads = threads;
+                }
+                points.push(CalPoint {
+                    kernel: kernel.to_string(),
+                    threads,
+                    mb: elems as f64 * 4.0 / (1024.0 * 1024.0),
+                    gbps,
+                    gflops: 0.0,
+                });
+            }
+        }
+        // compute roof: enough iterations to dwarf pool dispatch cost
+        let iters = if quick { 2_000_000 } else { 8_000_000 };
+        let secs = best_secs(reps, 1, || fma_pass(&pool, threads, iters));
+        let flops = 2.0 * iters as f64 * FMA_CHAINS as f64 * threads as f64;
+        let gflops = flops / secs / 1e9;
+        peak_gflops = peak_gflops.max(gflops);
+        points.push(CalPoint {
+            kernel: "fma".to_string(),
+            threads,
+            mb: 0.0,
+            gbps: 0.0,
+            gflops,
+        });
+    }
+    Calibration {
+        peak_gbps,
+        peak_gflops,
+        best_threads,
+        simd: SimdLevel::best().effective().name().to_string(),
+        quick,
+        points,
+    }
+}
+
+/// The standard sweep: thread counts {1, 2, 4, …, max_threads},
+/// working sets from L1-resident (64 KiB) to DRAM-sized. `quick`
+/// halves the sweep for CI smokes.
+pub fn calibrate(quick: bool, max_threads: usize) -> Calibration {
+    let max_threads = max_threads.max(1);
+    let mut threads = vec![1usize];
+    let mut t = 2;
+    while t < max_threads {
+        threads.push(t);
+        t *= 2;
+    }
+    if max_threads > 1 {
+        threads.push(max_threads);
+    }
+    if quick {
+        // endpoints only: serial + full pool
+        threads = vec![1, max_threads];
+        threads.dedup();
+    }
+    // the 64 KiB point is L1-resident on purpose: a tiny graph's SpMM
+    // can run entirely out of L1, and the peak must bound that too or
+    // the CI invariant "achieved ≤ peak" fails legitimately
+    let sizes_kb: &[usize] =
+        if quick { &[64, 512, 8 * 1024] } else { &[64, 512, 4 * 1024, 32 * 1024] };
+    let (reps, passes) = if quick { (2, 2) } else { (3, 4) };
+    calibrate_with(&threads, sizes_kb, reps, passes, quick)
+}
+
+/// Load a cached calibration from `path` if present and valid,
+/// otherwise run the sweep and cache it there. `force` re-runs even
+/// when a valid cache exists (`roofline --recalibrate`).
+pub fn load_or_run(path: &Path, quick: bool, max_threads: usize, force: bool) -> Result<(Calibration, bool)> {
+    if !force {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(doc) = Json::parse(&text) {
+                if let Ok(cal) = Calibration::from_json(&doc) {
+                    return Ok((cal, true));
+                }
+            }
+            // unreadable / stale cache: fall through and re-measure
+        }
+    }
+    let cal = calibrate(quick, max_threads);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating calibration dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, cal.to_json().to_pretty())
+        .with_context(|| format!("writing calibration cache {}", path.display()))?;
+    Ok((cal, false))
+}
+
+static GLOBAL_CAL: OnceLock<Calibration> = OnceLock::new();
+
+/// Publish a calibration process-wide so report writers
+/// ([`crate::bench::report::write_report`]) can stamp its meta without
+/// re-measuring. First write wins; later calls are no-ops.
+pub fn set_global(cal: &Calibration) {
+    let _ = GLOBAL_CAL.set(cal.clone());
+}
+
+/// The process-wide calibration, if one was loaded or run this process.
+pub fn global() -> Option<&'static Calibration> {
+    GLOBAL_CAL.get()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The smallest possible sweep still yields positive, consistent
+    /// roofs and a document that validates + round-trips.
+    #[test]
+    fn tiny_sweep_roundtrips() {
+        let cal = calibrate_with(&[1], &[64], 1, 1, true);
+        assert!(cal.peak_gbps > 0.0, "copy/scale/triad must measure something");
+        assert!(cal.peak_gflops > 0.0);
+        assert!(cal.machine_balance() > 0.0);
+        assert_eq!(cal.points.len(), 4, "3 STREAM kernels + 1 FMA point");
+        assert!(cal.points.iter().filter(|p| p.kernel != "fma").all(|p| p.gbps <= cal.peak_gbps));
+        let doc = cal.to_json();
+        validate_calibration(&doc).expect("emitted calibration validates");
+        let back = Calibration::from_json(&Json::parse(&doc.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.points.len(), cal.points.len());
+        assert_eq!(back.best_threads, cal.best_threads);
+        assert!((back.peak_gbps - cal.peak_gbps).abs() < 1e-9);
+        assert!(cal.summary().contains("GB/s"));
+    }
+
+    #[test]
+    fn pct_and_verdict_helpers() {
+        let cal = Calibration {
+            peak_gbps: 10.0,
+            peak_gflops: 40.0,
+            best_threads: 2,
+            simd: "scalar".to_string(),
+            quick: true,
+            points: vec![],
+        };
+        assert_eq!(cal.machine_balance(), 4.0);
+        assert_eq!(cal.pct_of_peak(5.0), 50.0);
+        assert_eq!(cal.pct_of_peak(1e9), 100.0, "clamped");
+        assert_eq!(cal.verdict(0.5), "bandwidth-bound");
+        assert_eq!(cal.verdict(17.0), "compute-bound");
+    }
+
+    #[test]
+    fn cache_file_roundtrip_and_force() {
+        let dir = std::env::temp_dir().join(format!("accel-gcn-cal-test-{}", std::process::id()));
+        let path = dir.join("calibration.json");
+        let _ = std::fs::remove_file(&path);
+        let (first, was_cached) = load_or_run(&path, true, 1, false).unwrap();
+        assert!(!was_cached, "first run measures");
+        let (second, was_cached) = load_or_run(&path, true, 1, false).unwrap();
+        assert!(was_cached, "second run loads the cache");
+        assert!((first.peak_gbps - second.peak_gbps).abs() < 1e-9);
+        // corrupt cache falls back to a fresh run
+        std::fs::write(&path, "{not json").unwrap();
+        let (_third, was_cached) = load_or_run(&path, true, 1, false).unwrap();
+        assert!(!was_cached, "corrupt cache is re-measured");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn global_publish_is_idempotent() {
+        let cal = calibrate_with(&[1], &[16], 1, 1, true);
+        set_global(&cal);
+        set_global(&cal);
+        let g = global().expect("global set");
+        assert!(g.peak_gbps > 0.0);
+    }
+}

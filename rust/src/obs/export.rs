@@ -19,6 +19,13 @@ pub const SCHEMA_VERSION: &str = "accel-gcn-metrics/v1";
 /// trace-event JSON; this tag only marks our envelope.
 pub const TRACE_SCHEMA_VERSION: &str = "accel-gcn-trace/v1";
 
+/// Version tag of `accel-gcn roofline --json` reports.
+pub const ROOFLINE_SCHEMA_VERSION: &str = "accel-gcn-roofline/v1";
+
+/// Version tag of the cached STREAM/FMA calibration document
+/// ([`super::calibrate`]).
+pub const CALIBRATION_SCHEMA_VERSION: &str = "accel-gcn-calibration/v1";
+
 /// Run metadata embedded in every `BENCH_*.json` and metrics snapshot:
 /// `{git_commit, timestamp_utc, threads, simd, schema}`.
 pub fn run_metadata() -> Json {
@@ -179,6 +186,131 @@ pub fn validate_trace(doc: &Json) -> Result<()> {
     Ok(())
 }
 
+/// The CI validator for cached calibration documents
+/// (`accel-gcn-calibration/v1`): peaks positive, points present, and
+/// no STREAM point above the peak the document claims (the peak is
+/// defined as their max).
+pub fn validate_calibration(doc: &Json) -> Result<()> {
+    let schema = doc.req_str("schema").context("calibration is missing `schema`")?;
+    if schema != CALIBRATION_SCHEMA_VERSION {
+        bail!("schema `{schema}` is not the supported `{CALIBRATION_SCHEMA_VERSION}`");
+    }
+    let peak_gbps = doc.req_f64("peak_gbps")?;
+    let peak_gflops = doc.req_f64("peak_gflops")?;
+    if !(peak_gbps > 0.0) || !(peak_gflops > 0.0) {
+        bail!("calibration peaks must be positive (gbps {peak_gbps}, gflops {peak_gflops})");
+    }
+    let balance = doc.req_f64("machine_balance")?;
+    if !(balance > 0.0) {
+        bail!("machine_balance {balance} must be positive");
+    }
+    if doc.req_usize("best_threads")? == 0 {
+        bail!("best_threads must be ≥ 1");
+    }
+    doc.req_str("simd").context("calibration is missing `simd`")?;
+    let points = doc.req_arr("points").context("calibration.points")?;
+    if points.is_empty() {
+        bail!("calibration has no measurement points");
+    }
+    for (i, p) in points.iter().enumerate() {
+        let ctx = || format!("points[{i}]");
+        let kernel = p.req_str("kernel").with_context(ctx)?;
+        p.req_usize("threads").with_context(ctx)?;
+        p.req_f64("mb").with_context(ctx)?;
+        let gbps = p.req_f64("gbps").with_context(ctx)?;
+        let gflops = p.req_f64("gflops").with_context(ctx)?;
+        if gbps < 0.0 || gflops < 0.0 {
+            bail!("points[{i}]: negative measurement");
+        }
+        if kernel != "fma" && gbps > peak_gbps * (1.0 + 1e-9) {
+            bail!("points[{i}]: {kernel} at {gbps} GB/s exceeds the claimed peak {peak_gbps}");
+        }
+    }
+    Ok(())
+}
+
+/// The CI validator for `accel-gcn roofline --json` reports
+/// (`accel-gcn-roofline/v1`). Beyond shape, it enforces the two
+/// invariants the roofline smoke gates on: **achieved GB/s never
+/// exceeds the calibrated peak**, and on every graph where the
+/// instrumented counting executor ran, its byte count **equals** the
+/// analytic model's.
+pub fn validate_roofline(doc: &Json) -> Result<()> {
+    let schema = doc.req_str("schema").context("roofline is missing `schema`")?;
+    if schema != ROOFLINE_SCHEMA_VERSION {
+        bail!("schema `{schema}` is not the supported `{ROOFLINE_SCHEMA_VERSION}`");
+    }
+    let cal = doc.get("calibration").context("roofline is missing `calibration`")?;
+    let peak_gbps = cal.req_f64("peak_gbps").context("calibration.peak_gbps")?;
+    if !(peak_gbps > 0.0) {
+        bail!("calibration.peak_gbps {peak_gbps} must be positive");
+    }
+    let balance = cal.req_f64("machine_balance").context("calibration.machine_balance")?;
+    let graphs = doc.req_arr("graphs").context("roofline.graphs")?;
+    if graphs.is_empty() {
+        bail!("roofline has no graphs");
+    }
+    for (gi, g) in graphs.iter().enumerate() {
+        let ctx = || format!("graphs[{gi}]");
+        g.req_str("graph").with_context(ctx)?;
+        let nnz = g.req_f64("nnz").with_context(ctx)?;
+        g.req_usize("f").with_context(ctx)?;
+        let analytic = g.req_f64("analytic_bytes").with_context(ctx)?;
+        if let Some(instr) = g.get("instrumented_bytes").and_then(Json::as_f64) {
+            if instr != analytic {
+                bail!(
+                    "graphs[{gi}]: instrumented bytes {instr} != analytic {analytic} — \
+                     the traffic model drifted from the executor"
+                );
+            }
+        }
+        let achieved = g.req_f64("achieved_gbps").with_context(ctx)?;
+        if achieved > peak_gbps * (1.0 + 1e-9) {
+            bail!(
+                "graphs[{gi}]: achieved {achieved} GB/s exceeds the calibrated peak \
+                 {peak_gbps} GB/s — calibration or byte accounting is wrong"
+            );
+        }
+        let pct = g.req_f64("pct_peak").with_context(ctx)?;
+        if !(0.0..=100.0 + 1e-9).contains(&pct) {
+            bail!("graphs[{gi}]: pct_peak {pct} out of range");
+        }
+        let intensity = g.req_f64("arithmetic_intensity").with_context(ctx)?;
+        let verdict = g.req_str("verdict").with_context(ctx)?;
+        match verdict {
+            "bandwidth-bound" | "compute-bound" => {}
+            other => bail!("graphs[{gi}]: unknown verdict `{other}`"),
+        }
+        // the verdict must be consistent with the intensity-vs-balance rule
+        let expect = if intensity < balance { "bandwidth-bound" } else { "compute-bound" };
+        if verdict != expect {
+            bail!("graphs[{gi}]: verdict `{verdict}` contradicts intensity {intensity} vs balance {balance}");
+        }
+        let buckets = g.req_arr("buckets").with_context(ctx)?;
+        if buckets.is_empty() {
+            bail!("graphs[{gi}] has no traffic buckets");
+        }
+        let mut bucket_nnz = 0.0;
+        for (bi, b) in buckets.iter().enumerate() {
+            let bctx = || format!("graphs[{gi}].buckets[{bi}]");
+            b.req_f64("deg").with_context(bctx)?;
+            let kernel = b.req_str("kernel").with_context(bctx)?;
+            // RowKernel::name() spellings
+            if kernel != "dense-tiled" && kernel != "sparse-gather" {
+                bail!("graphs[{gi}].buckets[{bi}]: unknown kernel `{kernel}`");
+            }
+            b.req_f64("blocks").with_context(bctx)?;
+            bucket_nnz += b.req_f64("nnz").with_context(bctx)?;
+            b.req_f64("bytes_total").with_context(bctx)?;
+            b.req_f64("bytes_per_nnz").with_context(bctx)?;
+        }
+        if bucket_nnz != nnz {
+            bail!("graphs[{gi}]: bucket nnz {bucket_nnz} != graph nnz {nnz}");
+        }
+    }
+    Ok(())
+}
+
 fn validate_histogram_map(map: &Json, what: &str) -> Result<()> {
     let Json::Obj(entries) = map else {
         bail!("`{what}` must be an object");
@@ -284,5 +416,84 @@ mod tests {
             {"name": "a", "cat": "s", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0, "dur": 1.0}
         ]}"#;
         assert!(validate_trace(&Json::parse(wrong_schema).unwrap()).is_err());
+    }
+
+    #[test]
+    fn calibration_validator_enforces_peak_consistency() {
+        let good = format!(
+            r#"{{
+              "schema": "{CALIBRATION_SCHEMA_VERSION}",
+              "quick": true, "simd": "scalar",
+              "peak_gbps": 20.0, "peak_gflops": 40.0, "machine_balance": 2.0,
+              "best_threads": 4,
+              "points": [
+                {{"kernel": "copy", "threads": 1, "mb": 8.0, "gbps": 15.0, "gflops": 0.0}},
+                {{"kernel": "triad", "threads": 4, "mb": 8.0, "gbps": 20.0, "gflops": 0.0}},
+                {{"kernel": "fma", "threads": 4, "mb": 0.0, "gbps": 0.0, "gflops": 40.0}}
+              ]
+            }}"#
+        );
+        validate_calibration(&Json::parse(&good).unwrap()).expect("well-formed calibration");
+        // a STREAM point above the claimed peak is inconsistent
+        let over = good.replace(r#""gbps": 15.0"#, r#""gbps": 25.0"#);
+        assert!(validate_calibration(&Json::parse(&over).unwrap())
+            .unwrap_err()
+            .to_string()
+            .contains("exceeds"));
+        // zero peak is not a calibration
+        let zero = good.replace(r#""peak_gbps": 20.0"#, r#""peak_gbps": 0.0"#);
+        assert!(validate_calibration(&Json::parse(&zero).unwrap()).is_err());
+        assert!(validate_calibration(&Json::obj()).is_err());
+    }
+
+    fn roofline_fixture() -> String {
+        format!(
+            r#"{{
+              "schema": "{ROOFLINE_SCHEMA_VERSION}",
+              "calibration": {{"peak_gbps": 20.0, "peak_gflops": 40.0,
+                               "machine_balance": 2.0, "threads": 4, "simd": "scalar"}},
+              "graphs": [
+                {{"graph": "powerlaw-1k", "n": 1000, "nnz": 8000, "f": 32, "threads": 4,
+                  "analytic_bytes": 3300000.0, "instrumented_bytes": 3300000.0,
+                  "bytes_per_nnz": 412.5, "arithmetic_intensity": 0.155,
+                  "achieved_gbps": 9.5, "achieved_gflops": 1.5, "pct_peak": 47.5,
+                  "verdict": "bandwidth-bound",
+                  "buckets": [
+                    {{"deg": 3, "split": false, "kernel": "sparse-gather", "blocks": 100,
+                      "rows": 500, "nnz": 1500, "bytes_total": 800000.0,
+                      "bytes_per_nnz": 533.3, "intensity": 0.12}},
+                    {{"deg": 13, "split": false, "kernel": "dense-tiled", "blocks": 300,
+                      "rows": 500, "nnz": 6500, "bytes_total": 2500000.0,
+                      "bytes_per_nnz": 384.6, "intensity": 0.17}}
+                  ]}}
+              ]
+            }}"#
+        )
+    }
+
+    #[test]
+    fn roofline_validator_enforces_smoke_invariants() {
+        validate_roofline(&Json::parse(&roofline_fixture()).unwrap())
+            .expect("well-formed roofline");
+        // achieved above peak must fail — the CI smoke's core invariant
+        let over = roofline_fixture().replace(r#""achieved_gbps": 9.5"#, r#""achieved_gbps": 21.0"#);
+        assert!(validate_roofline(&Json::parse(&over).unwrap())
+            .unwrap_err()
+            .to_string()
+            .contains("exceeds the calibrated peak"));
+        // instrumented bytes diverging from the analytic model must fail
+        let drift =
+            roofline_fixture().replace(r#""instrumented_bytes": 3300000.0"#, r#""instrumented_bytes": 3300001.0"#);
+        assert!(validate_roofline(&Json::parse(&drift).unwrap())
+            .unwrap_err()
+            .to_string()
+            .contains("drifted"));
+        // bucket nnz must tile the graph nnz
+        let holes = roofline_fixture().replace(r#""nnz": 1500"#, r#""nnz": 1000"#);
+        assert!(validate_roofline(&Json::parse(&holes).unwrap()).is_err());
+        // verdict must match the intensity-vs-balance rule
+        let lie = roofline_fixture().replace("bandwidth-bound", "compute-bound");
+        assert!(validate_roofline(&Json::parse(&lie).unwrap()).is_err());
+        assert!(validate_roofline(&Json::obj()).is_err());
     }
 }

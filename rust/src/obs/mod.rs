@@ -40,14 +40,17 @@
 //! `accel-gcn validate-metrics` ([`validate_snapshot`]), and embedded
 //! (as [`run_metadata`]) in every `BENCH_*.json`.
 
+pub mod calibrate;
 pub mod export;
 pub mod hist;
 pub mod ring;
 pub mod span;
 pub mod trace;
 
+pub use calibrate::{Calibration, CalPoint};
 pub use export::{
-    git_commit, iso8601_utc_now, run_metadata, validate_snapshot, validate_trace,
+    git_commit, iso8601_utc_now, run_metadata, validate_calibration, validate_roofline,
+    validate_snapshot, validate_trace, CALIBRATION_SCHEMA_VERSION, ROOFLINE_SCHEMA_VERSION,
     SCHEMA_VERSION, TRACE_SCHEMA_VERSION,
 };
 pub use hist::{HistSnapshot, Histogram, QUANTILE_REL_ERROR};
@@ -138,6 +141,13 @@ pub struct ShardSample {
     pub dense_nnz: u64,
     /// Nonzeros traversed by the sparse gather kernel.
     pub sparse_nnz: u64,
+    /// Bytes read by the shard under the analytic traffic-model
+    /// convention ([`crate::pipeline::traffic`]) — computed from the
+    /// plan metadata by the same per-block rule the model uses, so
+    /// shard sums always equal the plan totals.
+    pub bytes_read: u64,
+    /// Bytes written by the shard (same convention).
+    pub bytes_written: u64,
 }
 
 /// Running totals for one shard index across every observed SpMM.
@@ -151,6 +161,19 @@ pub struct ShardAgg {
     pub sparse_blocks: u64,
     pub dense_nnz: u64,
     pub sparse_nnz: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl ShardAgg {
+    /// Achieved bandwidth of this shard: traffic-model bytes over busy
+    /// time, GB/s (0 before any observation).
+    pub fn achieved_gbps(&self) -> f64 {
+        if self.busy_ns == 0 {
+            return 0.0;
+        }
+        (self.bytes_read + self.bytes_written) as f64 / self.busy_ns as f64
+    }
 }
 
 /// Events the snapshot embeds from the ring (the full ring stays
@@ -339,6 +362,8 @@ impl Registry {
                 a.sparse_blocks += s.sparse_blocks;
                 a.dense_nnz += s.dense_nnz;
                 a.sparse_nnz += s.sparse_nnz;
+                a.bytes_read += s.bytes_read;
+                a.bytes_written += s.bytes_written;
             }
         }
         let busy = self.histogram("spmm.shard_busy");
@@ -441,6 +466,9 @@ impl Registry {
                 o.set("sparse_blocks", a.sparse_blocks);
                 o.set("dense_nnz", a.dense_nnz);
                 o.set("sparse_nnz", a.sparse_nnz);
+                o.set("bytes_read", a.bytes_read);
+                o.set("bytes_written", a.bytes_written);
+                o.set("achieved_gbps", a.achieved_gbps());
                 o
             })
             .collect();
@@ -543,7 +571,8 @@ impl Registry {
         }
         let max_busy = agg.iter().map(|a| a.busy_ns).max().unwrap_or(0).max(1);
         let mut table = crate::util::bench::Table::new(&[
-            "shard", "spmms", "rows", "nnz", "busy ms", "util %", "dense blk", "sparse blk",
+            "shard", "spmms", "rows", "nnz", "busy ms", "util %", "GB/s", "dense blk",
+            "sparse blk",
         ]);
         for (i, a) in agg.iter().enumerate() {
             table.row(vec![
@@ -553,6 +582,7 @@ impl Registry {
                 a.nnz.to_string(),
                 format!("{:.3}", a.busy_ns as f64 / 1e6),
                 format!("{:.1}", 100.0 * a.busy_ns as f64 / max_busy as f64),
+                format!("{:.2}", a.achieved_gbps()),
                 a.dense_blocks.to_string(),
                 a.sparse_blocks.to_string(),
             ]);
@@ -797,6 +827,32 @@ mod tests {
         // next window accumulates from zero
         reg.record_spmm_shards(&[ShardSample { nnz: 7, busy_ns: 50, ..Default::default() }]);
         assert_eq!(reg.shard_aggregates()[0].nnz, 7);
+    }
+
+    /// Byte traffic aggregates per shard and lands in the snapshot with
+    /// the derived GB/s (bytes/ns ≡ GB/s, so 2000 B over 1000 ns = 2).
+    #[test]
+    fn shard_bytes_aggregate_and_export() {
+        let reg = Registry::new();
+        let s = ShardSample {
+            nnz: 10,
+            busy_ns: 500,
+            bytes_read: 800,
+            bytes_written: 200,
+            ..Default::default()
+        };
+        reg.record_spmm_shards(&[s]);
+        reg.record_spmm_shards(&[s]);
+        let a = reg.shard_aggregates()[0];
+        assert_eq!((a.bytes_read, a.bytes_written, a.busy_ns), (1600, 400, 1000));
+        assert!((a.achieved_gbps() - 2.0).abs() < 1e-12);
+        assert_eq!(ShardAgg::default().achieved_gbps(), 0.0, "guarded before observation");
+        let doc = reg.snapshot();
+        let per = doc.get("shards").unwrap().req_arr("per_shard").unwrap();
+        assert_eq!(per[0].req_f64("bytes_read").unwrap(), 1600.0);
+        assert_eq!(per[0].req_f64("bytes_written").unwrap(), 400.0);
+        assert!((per[0].req_f64("achieved_gbps").unwrap() - 2.0).abs() < 1e-12);
+        assert!(reg.render_shard_table().contains("GB/s"));
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub mod plan;
 pub mod cache;
 pub mod exec;
 pub mod parallel;
+pub mod traffic;
 
 pub use cache::{GraphKey, PlanCache};
 pub use exec::{AdaptiveBlockLevel, BlockLevel, CsrReference, Executor, WarpLevel};
@@ -50,3 +51,4 @@ pub use parallel::{
     spmm_block_level_parallel_with, ParallelBlockLevel,
 };
 pub use plan::{GraphFingerprint, KernelSchedule, SpmmPlan, TunedSharding};
+pub use traffic::{block_traffic, BlockTraffic, BucketTraffic, ElemWidths, TrafficModel};

@@ -331,7 +331,7 @@ fn exec_into_zeroed(
                     let start_ns = crate::obs::epoch_now_ns();
                     let t0 = Instant::now();
                     exec_shard(plan, x, f, range.clone(), out, part, level, adaptive);
-                    *slot = sample_shard(plan, range, adaptive, t0.elapsed());
+                    *slot = sample_shard(plan, range, adaptive, f, t0.elapsed());
                     slot.start_ns = start_ns;
                 }) as Box<dyn FnOnce() + Send + '_>
             })
@@ -366,15 +366,21 @@ fn exec_into_zeroed(
 }
 
 /// What one shard did, for the per-shard execution timeline: nonzeros
-/// and rows from the plan metadata, kernel mix from the same dispatch
-/// rule [`exec_shard`] applied, wall time from the shard job itself.
+/// and rows from the plan metadata, kernel mix and byte traffic from
+/// the same dispatch rule [`exec_shard`] applied (bytes via the shared
+/// per-block rule [`block_traffic`], so shard sums always equal the
+/// plan's analytic [`TrafficModel`](super::traffic::TrafficModel)
+/// totals; a split chunk's post-join reduction traffic is attributed to
+/// the shard that ran the chunk), wall time from the shard job itself.
 /// Runs inside the shard job, only when the registry is enabled.
 fn sample_shard(
     plan: &SpmmPlan,
     blocks: Range<usize>,
     adaptive: bool,
+    f: usize,
     busy: std::time::Duration,
 ) -> ShardSample {
+    use super::traffic::{block_traffic, ElemWidths};
     let bp = &plan.block;
     let deg_bound = bp.params.deg_bound();
     let mut s = ShardSample { busy_ns: busy.as_nanos() as u64, ..Default::default() };
@@ -382,12 +388,16 @@ fn sample_shard(
         let m = bp.meta[b];
         let nnz = block_nnz(&m, deg_bound) as u64;
         s.nnz += nnz;
+        let kern = if m.is_split(deg_bound) || !adaptive {
+            RowKernel::DenseTiled
+        } else {
+            plan.kernels.kernel_for(b)
+        };
         if m.is_split(deg_bound) {
             s.dense_blocks += 1; // split chunks always run the dense kernel
             s.dense_nnz += nnz;
         } else {
             s.rows += m.block_rows() as u64;
-            let kern = if adaptive { plan.kernels.kernel_for(b) } else { RowKernel::DenseTiled };
             match kern {
                 RowKernel::DenseTiled => {
                     s.dense_blocks += 1;
@@ -399,6 +409,9 @@ fn sample_shard(
                 }
             }
         }
+        let t = block_traffic(&m, kern, deg_bound);
+        s.bytes_read += t.bytes_read_with(f, ElemWidths::F32);
+        s.bytes_written += t.bytes_written_with(f, ElemWidths::F32);
     }
     s
 }

@@ -25,6 +25,7 @@ use crate::partition::block_level::BlockPartition;
 use crate::partition::patterns::PartitionParams;
 use crate::partition::warp_level::WarpPartition;
 use crate::spmm::microkernel::{RowKernel, SimdLevel};
+use super::traffic::TrafficModel;
 use std::sync::OnceLock;
 
 /// The sparsity-adaptive kernel schedule: which kernel shape
@@ -219,6 +220,11 @@ pub struct SpmmPlan {
     /// `block` at construction (both [`SpmmPlan::build`] and the delta
     /// path's `from_parts` — same pure rule, same schedule).
     pub kernels: KernelSchedule,
+    /// Analytic memory-traffic model — bytes read/written per degree
+    /// bucket and per kernel variant, derived from `block` + `kernels`
+    /// at construction by the same pure rule on both the build and
+    /// delta-patch paths (see [`TrafficModel`]).
+    pub traffic: TrafficModel,
     pub params: PartitionParams,
     /// Measurement-derived sharding weights, attached by the
     /// [`PlanTuner`](crate::tune::PlanTuner) (`None` on every freshly
@@ -246,12 +252,14 @@ impl SpmmPlan {
         let block = BlockPartition::build(&sorted.csr, params);
         let warp = WarpPartition::build(&csr, params.max_warp_nzs);
         let kernels = KernelSchedule::derive(&block);
+        let traffic = TrafficModel::derive(&block, &kernels);
         SpmmPlan {
             original: csr,
             sorted,
             block,
             warp,
             kernels,
+            traffic,
             params,
             tuned: None,
             fingerprint: OnceLock::new(),
@@ -294,14 +302,17 @@ impl SpmmPlan {
         // re-run kernel selection on the patched partition: the patch
         // may have moved rows across the dense/sparse crossover, and the
         // selection rule is pure in the block stats, so this is exactly
-        // what a from-scratch rebuild would pick
+        // what a from-scratch rebuild would pick; ditto the traffic
+        // model, which is pure in (block, kernels)
         let kernels = KernelSchedule::derive(&block);
+        let traffic = TrafficModel::derive(&block, &kernels);
         SpmmPlan {
             original,
             sorted,
             block,
             warp,
             kernels,
+            traffic,
             params,
             tuned: None,
             fingerprint: OnceLock::new(),
@@ -365,6 +376,8 @@ mod tests {
         assert_eq!(plan.warp.nnz, csr.nnz());
         assert_eq!(plan.fingerprint(), GraphFingerprint::of(&csr));
         assert_eq!(plan.fingerprint(), plan.fingerprint(), "stable across calls");
+        assert_eq!(plan.traffic.nnz() as usize, csr.nnz(), "traffic model covers all nonzeros");
+        assert_eq!(plan.traffic, TrafficModel::derive(&plan.block, &plan.kernels));
         for r in 1..50 {
             assert!(plan.sorted.csr.degree(r - 1) <= plan.sorted.csr.degree(r));
         }

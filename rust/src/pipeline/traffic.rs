@@ -1,0 +1,523 @@
+//! Analytic memory-traffic model of the block-level SpMM schedule —
+//! the byte-side twin of the FLOP accounting in
+//! [`crate::spmm::microkernel`].
+//!
+//! Accel-GCN's central claim is *memory* efficiency; this module turns
+//! that from an assertion into a measurement. A [`TrafficModel`] is
+//! attached to every [`SpmmPlan`](super::plan::SpmmPlan) at build time
+//! and predicts, exactly, the bytes the parallel executor moves per
+//! degree bucket and per [`RowKernel`] variant. The model is derived
+//! from the same pure inputs as the kernel schedule — `BlockPartition`
+//! metadata plus the per-block [`RowKernel`] choice — so `build()` and
+//! the delta path's `from_parts()` produce identical models by
+//! construction, and delta-patched plans stay correct.
+//!
+//! ## The counting convention
+//!
+//! Bytes are counted at the *instruction* level — every load and store
+//! the executor's inner loops issue against the plan's arrays and the
+//! X/Y matrices — not at the cache-line level. Per non-empty block:
+//!
+//! * one 16-byte [`BlockMeta`] read ([`BLOCK_META_BYTES`]);
+//! * per nonzero: a 4-byte column index, a 4-byte value, and one
+//!   gathered `f`-wide X row (`f · 4` bytes at f32);
+//! * destination traffic by kernel shape:
+//!   - **dense tiled, non-split** — the tile accumulator lives in
+//!     registers, so the destination row is touched once per *row*:
+//!     one `f`-wide read-modify-write (`+=` reads then writes `dst`);
+//!   - **sparse gather** — each nonzero axpys straight into the
+//!     destination row: one `f`-wide RMW per *nonzero*;
+//!   - **split chunk** (`deg > deg_bound`, always dense) — one `f`-wide
+//!     RMW into the chunk's partial window during execution, then the
+//!     post-join reduction reads the window and RMWs the final Y row:
+//!     3 `f`-wide reads + 2 `f`-wide writes per chunk in total.
+//!
+//! Buffer *zeroing* (the `y.fill(0.0)` pass and the partial-arena
+//! growth) is deliberately excluded — it is a property of the calling
+//! convention (`beta = 0`), not of the schedule, and the instrumented
+//! counting executor ([`crate::spmm::verify::spmm_block_level_counting`])
+//! applies the identical exclusion so the two agree **byte-for-byte**,
+//! split rows included (split chunks carry their actual nonzero count
+//! in [`BlockMeta::split_nzs`], so even ragged tail chunks are exact).
+//!
+//! Empty blocks (`deg == 0` rows) contribute only their metadata read:
+//! both kernels early-return before touching the destination.
+//!
+//! ## Width model
+//!
+//! Every per-bucket quantity is a *component count* (index loads, value
+//! loads, X-row gathers, `f`-wide destination vector ops), so
+//! `bytes(f)` is an exact linear function of `f` and of the element
+//! widths. [`ElemWidths`] prices the same counts under hypothetical
+//! storage types — the report-only i8/f16 "what-if" the tuner and the
+//! roofline report print (LW-GCN, PAPERS.md: storage-quantized values
+//! and features, f32 index/accumulator/Y traffic).
+
+use crate::partition::block_level::BlockPartition;
+use crate::partition::metadata::{BlockMeta, BLOCK_META_BYTES};
+use crate::spmm::microkernel::RowKernel;
+use std::collections::BTreeMap;
+
+/// Storage width, in bytes, of each traffic component class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElemWidths {
+    /// Column index loads (`col_idx`).
+    pub idx: usize,
+    /// Matrix value loads (`vals`).
+    pub val: usize,
+    /// Gathered X-row elements.
+    pub x: usize,
+    /// Destination / partial-arena vector elements (accumulator side).
+    pub acc: usize,
+}
+
+impl ElemWidths {
+    /// The shipped f32 path: everything 4 bytes.
+    pub const F32: ElemWidths = ElemWidths { idx: 4, val: 4, x: 4, acc: 4 };
+    /// f16-storage what-if: values and features halved, indices and
+    /// accumulator/Y traffic still 4 bytes (f32 accumulate).
+    pub const F16_STORAGE: ElemWidths = ElemWidths { idx: 4, val: 2, x: 2, acc: 4 };
+    /// i8-storage what-if: values and features quartered (per-bucket
+    /// affine scales assumed amortized), f32 accumulate.
+    pub const I8_STORAGE: ElemWidths = ElemWidths { idx: 4, val: 1, x: 1, acc: 4 };
+
+    pub fn name(self) -> &'static str {
+        if self == Self::F32 {
+            "f32"
+        } else if self == Self::F16_STORAGE {
+            "f16-storage"
+        } else if self == Self::I8_STORAGE {
+            "i8-storage"
+        } else {
+            "custom"
+        }
+    }
+}
+
+#[inline]
+fn bytes_read_of(meta_bytes: u64, nnz: u64, y_vec_reads: u64, f: usize, w: ElemWidths) -> u64 {
+    meta_bytes
+        + nnz * (w.idx + w.val) as u64
+        + nnz * (f * w.x) as u64
+        + y_vec_reads * (f * w.acc) as u64
+}
+
+#[inline]
+fn bytes_written_of(y_vec_writes: u64, f: usize, w: ElemWidths) -> u64 {
+    y_vec_writes * (f * w.acc) as u64
+}
+
+/// The component counts of one block under one kernel shape — the
+/// shared per-block rule both [`TrafficModel::derive`] and the parallel
+/// executor's shard sampler apply, so analytic plan totals and measured
+/// per-shard bytes can never drift apart.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BlockTraffic {
+    /// Non-split output rows the block finishes.
+    pub rows: u64,
+    /// Nonzeros the block traverses.
+    pub nnz: u64,
+    /// `f`-wide destination/partial vector reads.
+    pub y_vec_reads: u64,
+    /// `f`-wide destination/partial vector writes.
+    pub y_vec_writes: u64,
+    /// Metadata bytes ([`BLOCK_META_BYTES`] per block).
+    pub meta_bytes: u64,
+}
+
+impl BlockTraffic {
+    pub fn bytes_read_with(&self, f: usize, w: ElemWidths) -> u64 {
+        bytes_read_of(self.meta_bytes, self.nnz, self.y_vec_reads, f, w)
+    }
+
+    pub fn bytes_written_with(&self, f: usize, w: ElemWidths) -> u64 {
+        bytes_written_of(self.y_vec_writes, f, w)
+    }
+
+    /// f32 read + written bytes at column width `f`.
+    pub fn bytes_total(&self, f: usize) -> u64 {
+        self.bytes_read_with(f, ElemWidths::F32) + self.bytes_written_with(f, ElemWidths::F32)
+    }
+}
+
+/// Component counts of block `m` executed through `kern` — the pure
+/// per-block traffic rule (see the module docs for the convention).
+/// Split chunks always run dense regardless of `kern`, mirroring the
+/// executor's dispatch.
+pub fn block_traffic(m: &BlockMeta, kern: RowKernel, deg_bound: usize) -> BlockTraffic {
+    let mut t = BlockTraffic { meta_bytes: BLOCK_META_BYTES as u64, ..Default::default() };
+    if m.is_split(deg_bound) {
+        // chunk RMW into the partial window (1R+1W) + post-join
+        // reduction (read window, RMW the final Y row: 2R+1W)
+        t.nnz = m.split_nzs() as u64;
+        t.y_vec_reads = 3;
+        t.y_vec_writes = 2;
+    } else {
+        let deg = m.deg as u64;
+        let rows = m.block_rows() as u64;
+        t.rows = rows;
+        t.nnz = deg * rows;
+        if deg > 0 {
+            match kern {
+                // register-tile accumulator: one dst RMW per row
+                RowKernel::DenseTiled => {
+                    t.y_vec_reads = rows;
+                    t.y_vec_writes = rows;
+                }
+                // direct axpy: one dst RMW per nonzero
+                RowKernel::SparseGather => {
+                    t.y_vec_reads = t.nnz;
+                    t.y_vec_writes = t.nnz;
+                }
+            }
+        }
+        // deg == 0: both kernels early-return — metadata read only
+    }
+    t
+}
+
+/// Aggregated traffic of every block sharing one
+/// `(split, kernel, degree)` bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BucketTraffic {
+    /// Row degree of the bucket (for split buckets: the full row degree
+    /// whose chunks this bucket holds).
+    pub deg: u32,
+    /// Whether these are split-row chunks (`deg > deg_bound`).
+    pub split: bool,
+    /// Kernel shape the bucket's blocks run (split chunks: dense).
+    pub kernel: RowKernel,
+    /// Blocks aggregated into this bucket.
+    pub blocks: u64,
+    pub rows: u64,
+    pub nnz: u64,
+    pub y_vec_reads: u64,
+    pub y_vec_writes: u64,
+    pub meta_bytes: u64,
+}
+
+impl BucketTraffic {
+    pub fn bytes_read_with(&self, f: usize, w: ElemWidths) -> u64 {
+        bytes_read_of(self.meta_bytes, self.nnz, self.y_vec_reads, f, w)
+    }
+
+    pub fn bytes_written_with(&self, f: usize, w: ElemWidths) -> u64 {
+        bytes_written_of(self.y_vec_writes, f, w)
+    }
+
+    pub fn bytes_total_with(&self, f: usize, w: ElemWidths) -> u64 {
+        self.bytes_read_with(f, w) + self.bytes_written_with(f, w)
+    }
+
+    /// f32 total at column width `f`.
+    pub fn bytes_total(&self, f: usize) -> u64 {
+        self.bytes_total_with(f, ElemWidths::F32)
+    }
+
+    /// Bytes moved per nonzero at column width `f` (f32).
+    pub fn bytes_per_nnz(&self, f: usize) -> f64 {
+        if self.nnz == 0 {
+            return 0.0;
+        }
+        self.bytes_total(f) as f64 / self.nnz as f64
+    }
+
+    /// FLOPs / byte at column width `f` (f32): `2·nnz·f` over the
+    /// bucket's total traffic.
+    pub fn arithmetic_intensity(&self, f: usize) -> f64 {
+        let b = self.bytes_total(f);
+        if b == 0 {
+            return 0.0;
+        }
+        crate::spmm::microkernel::spmm_flops(self.nnz as usize, f) / b as f64
+    }
+}
+
+/// The plan-level analytic traffic model: one [`BucketTraffic`] per
+/// `(split, kernel, degree)` class, derived at plan build (and by the
+/// delta patch path) from the partition metadata and the kernel
+/// schedule. Immutable, like everything else on the plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficModel {
+    /// Buckets sorted by (split, kernel, degree) — non-split gather
+    /// first, then non-split dense, then split chunks.
+    pub buckets: Vec<BucketTraffic>,
+    /// The partition's `deg_bound` (split threshold) the model was
+    /// derived under.
+    pub deg_bound: usize,
+}
+
+impl TrafficModel {
+    /// Derive the model from a partition and its kernel schedule — the
+    /// same pure inputs [`KernelSchedule::derive`] consumed, so the
+    /// build and delta-patch paths agree by construction. Also the hook
+    /// the tuner re-runs when it moves the dense/sparse crossover.
+    ///
+    /// [`KernelSchedule::derive`]: super::plan::KernelSchedule::derive
+    pub fn derive(
+        block: &BlockPartition,
+        kernels: &super::plan::KernelSchedule,
+    ) -> TrafficModel {
+        debug_assert_eq!(kernels.per_block.len(), block.meta.len());
+        let deg_bound = block.params.deg_bound();
+        let mut map: BTreeMap<(bool, u8, u32), BucketTraffic> = BTreeMap::new();
+        for (b, m) in block.meta.iter().enumerate() {
+            let split = m.is_split(deg_bound);
+            let kern = if split { RowKernel::DenseTiled } else { kernels.kernel_for(b) };
+            let t = block_traffic(m, kern, deg_bound);
+            let key = (split, matches!(kern, RowKernel::DenseTiled) as u8, m.deg);
+            let e = map.entry(key).or_insert(BucketTraffic {
+                deg: m.deg,
+                split,
+                kernel: kern,
+                blocks: 0,
+                rows: 0,
+                nnz: 0,
+                y_vec_reads: 0,
+                y_vec_writes: 0,
+                meta_bytes: 0,
+            });
+            e.blocks += 1;
+            e.rows += t.rows;
+            e.nnz += t.nnz;
+            e.y_vec_reads += t.y_vec_reads;
+            e.y_vec_writes += t.y_vec_writes;
+            e.meta_bytes += t.meta_bytes;
+        }
+        TrafficModel { buckets: map.into_values().collect(), deg_bound }
+    }
+
+    /// Total nonzeros across all buckets (== the plan's nnz).
+    pub fn nnz(&self) -> u64 {
+        self.buckets.iter().map(|b| b.nnz).sum()
+    }
+
+    pub fn bytes_read_with(&self, f: usize, w: ElemWidths) -> u64 {
+        self.buckets.iter().map(|b| b.bytes_read_with(f, w)).sum()
+    }
+
+    pub fn bytes_written_with(&self, f: usize, w: ElemWidths) -> u64 {
+        self.buckets.iter().map(|b| b.bytes_written_with(f, w)).sum()
+    }
+
+    pub fn bytes_total_with(&self, f: usize, w: ElemWidths) -> u64 {
+        self.bytes_read_with(f, w) + self.bytes_written_with(f, w)
+    }
+
+    /// f32 bytes read at column width `f`.
+    pub fn bytes_read(&self, f: usize) -> u64 {
+        self.bytes_read_with(f, ElemWidths::F32)
+    }
+
+    /// f32 bytes written at column width `f`.
+    pub fn bytes_written(&self, f: usize) -> u64 {
+        self.bytes_written_with(f, ElemWidths::F32)
+    }
+
+    /// f32 total bytes (read + written) at column width `f`.
+    pub fn bytes_total(&self, f: usize) -> u64 {
+        self.bytes_read(f) + self.bytes_written(f)
+    }
+
+    /// Bytes moved per nonzero at column width `f` (f32) — the metric
+    /// the quantized-path ROADMAP item wants halved.
+    pub fn bytes_per_nnz(&self, f: usize) -> f64 {
+        let n = self.nnz();
+        if n == 0 {
+            return 0.0;
+        }
+        self.bytes_total(f) as f64 / n as f64
+    }
+
+    /// Arithmetic intensity at column width `f` (f32): `2·nnz·f` FLOPs
+    /// over total bytes. Compared against the calibrated machine
+    /// balance (peak GFLOP/s ÷ peak GB/s) for the bandwidth-bound vs
+    /// compute-bound verdict.
+    pub fn arithmetic_intensity(&self, f: usize) -> f64 {
+        let b = self.bytes_total(f);
+        if b == 0 {
+            return 0.0;
+        }
+        crate::spmm::microkernel::spmm_flops(self.nnz() as usize, f) / b as f64
+    }
+
+    /// Invert the (exactly linear) `bytes_total(f)` to recover the
+    /// effective column width behind an observed average bytes/SpMM —
+    /// how the tuner prices blocks in ns/byte without threading `f`
+    /// through the aggregate. `None` when the plan moves no
+    /// `f`-dependent bytes (empty graph).
+    pub fn solve_width(&self, bytes_per_spmm: f64) -> Option<f64> {
+        let a = self.bytes_total(0) as f64;
+        let slope = self.bytes_total(1) as f64 - a;
+        if slope <= 0.0 {
+            return None;
+        }
+        Some(((bytes_per_spmm - a) / slope).max(0.0))
+    }
+
+    /// Predicted bandwidth win of a storage-quantized path versus f32
+    /// at column width `f`: `bytes_f32 / bytes_quantized` (> 1 means
+    /// the quantized path moves fewer bytes — a direct throughput
+    /// multiplier when bandwidth-bound).
+    pub fn quantized_speedup(&self, f: usize, w: ElemWidths) -> f64 {
+        let q = self.bytes_total_with(f, w);
+        if q == 0 {
+            return 1.0;
+        }
+        self.bytes_total(f) as f64 / q as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::partition::patterns::PartitionParams;
+    use crate::pipeline::plan::SpmmPlan;
+
+    fn plan_of(edges: &[(u32, u32, f32)], n: usize, params: PartitionParams) -> SpmmPlan {
+        SpmmPlan::build(Csr::from_edges(n, n, edges).unwrap(), params)
+    }
+
+    /// Hand-counted tiny graph: 3 rows of degree 2 (gather territory at
+    /// the default crossover) — every component count is checkable on
+    /// paper.
+    #[test]
+    fn hand_counted_gather_bucket() {
+        let edges: Vec<(u32, u32, f32)> =
+            (0..3u32).flat_map(|r| [(r, 0, 1.0f32), (r, 1, 1.0)]).collect();
+        let plan = plan_of(&edges, 3, PartitionParams::default());
+        let t = &plan.traffic;
+        assert_eq!(t.nnz(), 6);
+        let gather: Vec<_> =
+            t.buckets.iter().filter(|b| b.kernel == RowKernel::SparseGather).collect();
+        assert_eq!(gather.len(), 1, "one degree-2 gather bucket");
+        let b = gather[0];
+        assert_eq!((b.deg, b.rows, b.nnz), (2, 3, 6));
+        assert!(!b.split);
+        // gather: one f-wide dst RMW per nonzero
+        assert_eq!((b.y_vec_reads, b.y_vec_writes), (6, 6));
+        let f = 4;
+        // meta + nnz·(4+4) + nnz·f·4 + reads·f·4  /  writes·f·4
+        let want_read = b.meta_bytes + 6 * 8 + 6 * (f as u64) * 4 + 6 * (f as u64) * 4;
+        assert_eq!(t.bytes_read(f), want_read);
+        assert_eq!(t.bytes_written(f), 6 * (f as u64) * 4);
+    }
+
+    #[test]
+    fn dense_rows_pay_one_rmw_per_row() {
+        // one row of degree 8 (dense at crossover 4), never split at
+        // the default deg_bound
+        let edges: Vec<(u32, u32, f32)> = (0..8u32).map(|c| (0, c % 9, 1.0)).collect();
+        let plan = plan_of(&edges, 9, PartitionParams::default());
+        let dense: Vec<_> = plan
+            .traffic
+            .buckets
+            .iter()
+            .filter(|b| b.kernel == RowKernel::DenseTiled && !b.split)
+            .collect();
+        let rows: u64 = dense.iter().map(|b| b.rows).sum();
+        let reads: u64 = dense.iter().map(|b| b.y_vec_reads).sum();
+        let writes: u64 = dense.iter().map(|b| b.y_vec_writes).sum();
+        assert_eq!(reads, rows, "dense tiled: one dst read per row");
+        assert_eq!(writes, rows, "dense tiled: one dst write per row");
+    }
+
+    #[test]
+    fn split_chunks_pay_three_reads_two_writes() {
+        // one degree-10 row under deg_bound 4 → chunks 4, 4, 2 — the
+        // ragged tail chunk must be priced at its ACTUAL size
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let edges: Vec<(u32, u32, f32)> = (0..10u32).map(|c| (0, c, 1.0)).collect();
+        let plan = plan_of(&edges, 10, params);
+        let split: Vec<_> = plan.traffic.buckets.iter().filter(|b| b.split).collect();
+        assert_eq!(split.len(), 1);
+        let b = split[0];
+        assert_eq!((b.deg, b.blocks, b.nnz), (10, 3, 10), "4+4+2 chunks, exact nnz");
+        assert_eq!(b.y_vec_reads, 3 * b.blocks);
+        assert_eq!(b.y_vec_writes, 2 * b.blocks);
+        assert_eq!(b.rows, 0, "split rows finish in the reduction, not the shard");
+    }
+
+    #[test]
+    fn empty_rows_cost_metadata_only() {
+        let plan = plan_of(&[], 4, PartitionParams::default());
+        let t = &plan.traffic;
+        assert_eq!(t.nnz(), 0);
+        assert_eq!(t.bytes_written(16), 0);
+        // whatever deg-0 blocks exist contribute only their meta reads
+        assert_eq!(t.bytes_read(16), t.buckets.iter().map(|b| b.meta_bytes).sum::<u64>());
+        assert_eq!(t.bytes_read(16), t.bytes_read(1), "no f-dependent traffic");
+    }
+
+    /// `bytes_total(f)` is exactly linear in `f` — the property
+    /// `solve_width` inverts.
+    #[test]
+    fn bytes_linear_in_f_and_solve_width_roundtrips() {
+        let mut edges = Vec::new();
+        for r in 0..40u32 {
+            for c in 0..(r % 13) {
+                edges.push((r, c, 1.0));
+            }
+        }
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let plan = plan_of(&edges, 40, params);
+        let t = &plan.traffic;
+        let a = t.bytes_total(0) as f64;
+        let slope = t.bytes_total(1) as f64 - a;
+        for f in [3usize, 16, 17, 33] {
+            assert_eq!(t.bytes_total(f) as f64, a + slope * f as f64, "linear at f={f}");
+            let solved = t.solve_width(t.bytes_total(f) as f64).unwrap();
+            assert!((solved - f as f64).abs() < 1e-9, "solve_width({f}) = {solved}");
+        }
+    }
+
+    #[test]
+    fn quantized_widths_shrink_traffic() {
+        let edges: Vec<(u32, u32, f32)> =
+            (0..30u32).flat_map(|r| (0..6u32).map(move |c| (r, c, 1.0))).collect();
+        let plan = plan_of(&edges, 30, PartitionParams::default());
+        let t = &plan.traffic;
+        let f = 32;
+        let f32b = t.bytes_total_with(f, ElemWidths::F32);
+        let f16b = t.bytes_total_with(f, ElemWidths::F16_STORAGE);
+        let i8b = t.bytes_total_with(f, ElemWidths::I8_STORAGE);
+        assert!(f32b > f16b && f16b > i8b);
+        assert!(t.quantized_speedup(f, ElemWidths::I8_STORAGE) > 1.0);
+        assert_eq!(t.quantized_speedup(f, ElemWidths::F32), 1.0);
+        assert_eq!(ElemWidths::F32.name(), "f32");
+        assert_eq!(ElemWidths::I8_STORAGE.name(), "i8-storage");
+    }
+
+    /// The delta-patch contract: `from_parts` (exercised through a
+    /// fresh build of identical parts) derives the identical model.
+    #[test]
+    fn derive_is_pure_in_partition_and_schedule() {
+        let mut edges = Vec::new();
+        for r in 0..25u32 {
+            for c in 0..(r % 7) {
+                edges.push((r, c, 0.5));
+            }
+        }
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let a = plan_of(&edges, 25, params);
+        let b = plan_of(&edges, 25, params);
+        assert_eq!(a.traffic, b.traffic);
+        assert_eq!(a.traffic, TrafficModel::derive(&a.block, &a.kernels));
+        assert_eq!(a.traffic.nnz() as usize, a.nnz());
+    }
+
+    #[test]
+    fn intensity_grows_with_f_toward_kernel_limit() {
+        let edges: Vec<(u32, u32, f32)> =
+            (0..50u32).flat_map(|r| (0..8u32).map(move |c| (r, c, 1.0))).collect();
+        let plan = plan_of(&edges, 50, PartitionParams::default());
+        let t = &plan.traffic;
+        let i16 = t.arithmetic_intensity(16);
+        let i128 = t.arithmetic_intensity(128);
+        assert!(i128 > i16, "per-nonzero overheads amortize with f");
+        // SpMM upper bound: 2 flops per gathered x element → at f32,
+        // intensity can never reach 0.5 flops/byte
+        assert!(i128 < 0.5, "intensity {i128} must stay under the SpMM bound");
+    }
+}

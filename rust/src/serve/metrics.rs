@@ -35,6 +35,11 @@ pub struct ServeMetrics {
     /// fused batch's rate is credited to every member riding it —
     /// 2·nnz·width flops over the batch's spmm wall time).
     pub spmm_gflops: LatencyRecorder,
+    /// Achieved SpMM memory bandwidth, GB/s, recorded **per request**
+    /// like [`Self::spmm_gflops`] — the plan's analytic
+    /// [`TrafficModel`](crate::pipeline::TrafficModel) bytes at the
+    /// batch's width over the batch's spmm wall time.
+    pub spmm_gbps: LatencyRecorder,
     /// dense affine stage (per fused batch; GCN requests only).
     pub dense_stage: LatencyRecorder,
     /// submit → reply.
@@ -65,6 +70,11 @@ pub struct ServeMetrics {
     /// — recorded by the worker per executed batch, rendered in the
     /// footer. BTreeMap for deterministic footer order.
     tenant_kernels: Mutex<BTreeMap<String, String>>,
+    /// Achieved GB/s of each tenant's last executed batch (graph name
+    /// → GB/s) — same lifecycle as `tenant_kernels`: overwritten per
+    /// batch, cleared by [`Self::clear_kernel`] on eviction or epoch
+    /// bump so the footer never reports a retired plan's bandwidth.
+    tenant_gbps: Mutex<BTreeMap<String, f64>>,
 }
 
 impl ServeMetrics {
@@ -86,14 +96,22 @@ impl ServeMetrics {
         }
     }
 
-    /// Forget `tenant`'s kernel-variant footer line. Called when a
-    /// tenant's plan is evicted or replaced by an epoch bump: the noted
-    /// variant described the *old* plan, and a footer that keeps
-    /// rendering it would report a kernel mix no live plan uses. The
-    /// line reappears (with the fresh variant) on the tenant's next
+    /// Record the achieved bandwidth of `tenant`'s last executed batch
+    /// (overwrites, like [`Self::note_kernel`]).
+    pub fn note_gbps(&self, tenant: &str, gbps: f64) {
+        self.tenant_gbps.lock().unwrap().insert(tenant.to_string(), gbps);
+    }
+
+    /// Forget `tenant`'s kernel-variant footer line *and* its achieved
+    /// GB/s. Called when a tenant's plan is evicted or replaced by an
+    /// epoch bump: the noted variant and bandwidth described the *old*
+    /// plan (the new graph has different traffic), and a footer that
+    /// keeps rendering them would report a kernel mix and byte rate no
+    /// live plan uses. Both lines reappear (fresh) on the tenant's next
     /// executed batch.
     pub fn clear_kernel(&self, tenant: &str) {
         self.tenant_kernels.lock().unwrap().remove(tenant);
+        self.tenant_gbps.lock().unwrap().remove(tenant);
     }
 
     /// Mean requests fused per executed batch (> 1 means the column
@@ -143,9 +161,23 @@ impl ServeMetrics {
             "spmm throughput: mean {:.3} GFLOP/s, max {:.3} GFLOP/s over {} requests\n",
             g.mean, g.max, g.count
         ));
-        for (tenant, variant) in self.tenant_kernels.lock().unwrap().iter() {
-            s.push_str(&format!("spmm kernel [{tenant}]: {variant}\n"));
+        let b = self.spmm_gbps.snapshot();
+        if b.count > 0 {
+            s.push_str(&format!(
+                "spmm bandwidth: mean {:.3} GB/s, max {:.3} GB/s over {} requests\n",
+                b.mean, b.max, b.count
+            ));
         }
+        let gbps = self.tenant_gbps.lock().unwrap();
+        for (tenant, variant) in self.tenant_kernels.lock().unwrap().iter() {
+            match gbps.get(tenant) {
+                Some(r) => s.push_str(&format!(
+                    "spmm kernel [{tenant}]: {variant} @ {r:.2} GB/s\n"
+                )),
+                None => s.push_str(&format!("spmm kernel [{tenant}]: {variant}\n")),
+            }
+        }
+        drop(gbps);
         s.push_str(&format!("{}\n", self.dense_stage.snapshot().render("dense stage")));
         s.push_str(&format!("{}\n", self.patch_latency.snapshot().render("plan patch")));
         s.push_str(&format!("{}\n", self.total.snapshot().render("total")));
@@ -193,6 +225,7 @@ impl ServeMetrics {
         latencies.set("queue_wait", lat(&self.queue_wait.snapshot()));
         latencies.set("spmm_stage", lat(&self.spmm_stage.snapshot()));
         latencies.set("spmm_gflops", lat(&self.spmm_gflops.snapshot()));
+        latencies.set("spmm_gbps", lat(&self.spmm_gbps.snapshot()));
         latencies.set("dense_stage", lat(&self.dense_stage.snapshot()));
         latencies.set("patch_latency", lat(&self.patch_latency.snapshot()));
         latencies.set("total", lat(&self.total.snapshot()));
@@ -202,6 +235,11 @@ impl ServeMetrics {
             kernels.set(tenant, variant.as_str());
         }
         doc.set("kernels", kernels);
+        let mut gbps = Json::obj();
+        for (tenant, rate) in self.tenant_gbps.lock().unwrap().iter() {
+            gbps.set(tenant, *rate);
+        }
+        doc.set("tenant_gbps", gbps);
         doc
     }
 }
@@ -260,6 +298,37 @@ mod tests {
         // the next executed batch brings the line back, fresh
         m.note_kernel("g", "scalar+adaptive(dense 0 / sparse 3 blocks)".into());
         assert!(m.render().contains("spmm kernel [g]: scalar+adaptive(dense 0 / sparse 3 blocks)"));
+    }
+
+    #[test]
+    fn epoch_bump_clears_tenant_gbps_with_kernel() {
+        // PR 7 fixed stale kernel-variant lines surviving epoch bumps;
+        // the GB/s footer state must ride the same lifecycle, or the
+        // footer keeps quoting the *old* graph's bandwidth after an
+        // UpdateGraph swap.
+        let m = ServeMetrics::new();
+        m.note_kernel("g", "scalar+adaptive(dense 1 / sparse 2 blocks)".into());
+        m.note_gbps("g", 12.5);
+        m.note_kernel("h", "scalar+adaptive(dense 4 / sparse 0 blocks)".into());
+        m.note_gbps("h", 7.25);
+        let r = m.render();
+        assert!(r.contains("spmm kernel [g]") && r.contains("@ 12.50 GB/s"), "{r}");
+        assert!(r.contains("@ 7.25 GB/s"), "{r}");
+        // epoch bump on g: both its footer lines go; h's survive
+        m.clear_kernel("g");
+        let r = m.render();
+        assert!(!r.contains("spmm kernel [g]"), "{r}");
+        assert!(!r.contains("12.50"), "stale bandwidth must be cleared: {r}");
+        assert!(r.contains("@ 7.25 GB/s"), "{r}");
+        let doc = m.snapshot_json();
+        assert!(doc.get("tenant_gbps").unwrap().get("g").is_none());
+        assert!(
+            (doc.get("tenant_gbps").unwrap().req_f64("h").unwrap() - 7.25).abs() < 1e-12
+        );
+        // next executed batch re-notes, fresh
+        m.note_gbps("g", 3.0);
+        m.note_kernel("g", "scalar+adaptive(dense 0 / sparse 3 blocks)".into());
+        assert!(m.render().contains("@ 3.00 GB/s"));
     }
 
     #[test]

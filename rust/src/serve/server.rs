@@ -1118,7 +1118,11 @@ fn run_spmm_group(
         );
         metrics.spmm_stage.record(spmm_secs);
         let gflops = crate::spmm::spmm_gflops(plan.nnz(), aw, spmm_secs);
+        // achieved bandwidth: the plan's analytic traffic-model bytes
+        // at the fused width over the same wall time the GFLOP/s use
+        let gbps = plan.traffic.bytes_total(aw) as f64 / spmm_secs.max(1e-12) / 1e9;
         metrics.note_kernel(&entry.name, plan.kernels.summary(crate::spmm::SimdLevel::best()));
+        metrics.note_gbps(&entry.name, gbps);
         metrics.batches.inc();
         metrics.fused_requests.add(bp.members.len() as u64);
         // split: copy each member's columns back out, unpermuting rows
@@ -1137,6 +1141,7 @@ fn run_spmm_group(
             let p = members[m].take().expect("each request split once");
             metrics.completed.inc();
             metrics.spmm_gflops.record(gflops);
+            metrics.spmm_gbps.record(gbps);
             metrics.total.record(p.enqueued.elapsed().as_secs_f64());
             let _ = p.reply.send(Ok(Response { y: HostTensor::f32(&[n, c], out) }));
         }
@@ -1222,14 +1227,25 @@ fn run_gcn_group(
                     model.spmm_flops(plan.nnz(), bp.members.len()),
                     timings.spmm_secs,
                 );
+                // GCN traffic: one propagate per layer at fused width
+                // k·d_in, summed via the plan's analytic traffic model
+                let k = bp.members.len();
+                let bytes: u64 = model
+                    .dims()
+                    .iter()
+                    .map(|&(din, _)| plan.traffic.bytes_total(k * din))
+                    .sum();
+                let gbps = bytes as f64 / timings.spmm_secs.max(1e-12) / 1e9;
                 metrics
                     .note_kernel(&entry.name, plan.kernels.summary(crate::spmm::SimdLevel::best()));
+                metrics.note_gbps(&entry.name, gbps);
                 metrics.batches.inc();
                 metrics.fused_requests.add(bp.members.len() as u64);
                 for (&m, out) in bp.members.iter().zip(outs) {
                     let p = members[m].take().expect("each request replied once");
                     metrics.completed.inc();
                     metrics.spmm_gflops.record(gflops);
+                    metrics.spmm_gbps.record(gbps);
                     metrics.total.record(p.enqueued.elapsed().as_secs_f64());
                     let _ =
                         p.reply.send(Ok(Response { y: HostTensor::f32(&[n, out_dim], out) }));

@@ -23,5 +23,5 @@ pub use microkernel::{
     accumulate_row, accumulate_row_select, accumulate_row_with, gather_row_with, gflops,
     select_kernel, spmm_flops, spmm_gflops, RowKernel, SimdLevel, LANES, SPARSE_DEG_MAX, TILE,
 };
-pub use verify::{allclose, max_abs_diff};
+pub use verify::{allclose, max_abs_diff, spmm_block_level_counting, TrafficCounts};
 pub use warp_exec::{spmm_warp_level, spmm_warp_level_adaptive};

@@ -1,4 +1,12 @@
-//! Numeric comparison helpers shared by executor and integration tests.
+//! Numeric comparison helpers shared by executor and integration tests,
+//! plus the instrumented *counting* executor that ground-truths the
+//! analytic [`TrafficModel`](crate::pipeline::traffic::TrafficModel):
+//! a scalar mirror of the parallel block-level schedule that counts
+//! every load and store its inner loops actually issue.
+
+use crate::partition::metadata::BLOCK_META_BYTES;
+use crate::pipeline::plan::SpmmPlan;
+use crate::spmm::microkernel::RowKernel;
 
 /// Maximum absolute element difference.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -27,9 +35,141 @@ pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, context: &str
     }
 }
 
+/// Loads and stores observed by the instrumented counting executor, in
+/// bytes, under the traffic-model convention (see
+/// [`crate::pipeline::traffic`]): instruction-level accesses to the
+/// plan arrays and the X/Y matrices; buffer zeroing excluded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficCounts {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl TrafficCounts {
+    pub fn total(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+}
+
+/// Debug scalar executor mirroring the parallel block-level schedule —
+/// same block walk, same adaptive kernel dispatch, same split-row
+/// partial windows and post-join reduction — with a byte counter on
+/// every load and store the inner loops issue. The numerics come back
+/// in original row order, identical in accumulation order to one shard
+/// covering every block.
+///
+/// This is the measurement side of the analytic-vs-instrumented
+/// equivalence tests: on any plan (split rows included — chunks carry
+/// their actual nonzero count in the metadata), the counts must equal
+/// [`SpmmPlan::traffic`]'s `bytes_read(f)`/`bytes_written(f)` exactly.
+/// Debug/test tooling, not a hot path.
+pub fn spmm_block_level_counting(
+    plan: &SpmmPlan,
+    x: &[f32],
+    f: usize,
+) -> (Vec<f32>, TrafficCounts) {
+    let sorted = &plan.sorted.csr;
+    let perm = &plan.sorted.perm;
+    let bp = &plan.block;
+    let deg_bound = bp.params.deg_bound();
+    assert_eq!(x.len(), sorted.n_cols * f, "X shape mismatch");
+    let mut y = vec![0f32; sorted.n_rows * f];
+    let mut c = TrafficCounts::default();
+    let fw = (f * 4) as u64; // one f-wide f32 vector access
+    // split-row partial windows, reduced after the block walk
+    let mut split_rows: Vec<u32> = Vec::new();
+    let mut buf: Vec<f32> = Vec::new();
+    for b in 0..bp.meta.len() {
+        let m = bp.meta[b];
+        let loc = m.loc as usize;
+        c.bytes_read += BLOCK_META_BYTES as u64; // the int4 metadata record
+        if m.is_split(deg_bound) {
+            split_rows.push(m.row);
+            buf.resize(buf.len() + f, 0.0); // zeroing: not counted
+            let w = buf.len() - f;
+            let nzs = m.split_nzs();
+            // dense-shaped chunk: accumulate in registers, then one
+            // f-wide RMW into the partial window
+            let mut acc = vec![0f32; f];
+            for i in loc..loc + nzs {
+                c.bytes_read += 4 + 4; // col index + value
+                let col = sorted.col_idx[i] as usize;
+                let v = sorted.vals[i];
+                c.bytes_read += fw; // gathered X row
+                for k in 0..f {
+                    acc[k] += v * x[col * f + k];
+                }
+            }
+            c.bytes_read += fw; // partial window RMW: read …
+            c.bytes_written += fw; // … and write back
+            for k in 0..f {
+                buf[w + k] += acc[k];
+            }
+        } else {
+            let kern = plan.kernels.kernel_for(b);
+            let deg = m.deg as usize;
+            for row_i in 0..m.block_rows() {
+                let s = loc + row_i * deg;
+                let dst = perm[m.row as usize + row_i] as usize * f;
+                if deg == 0 {
+                    continue; // both kernels early-return: no dst touch
+                }
+                match kern {
+                    RowKernel::DenseTiled => {
+                        // register-tile accumulate, one dst RMW per row
+                        let mut acc = vec![0f32; f];
+                        for i in s..s + deg {
+                            c.bytes_read += 4 + 4;
+                            let col = sorted.col_idx[i] as usize;
+                            let v = sorted.vals[i];
+                            c.bytes_read += fw;
+                            for k in 0..f {
+                                acc[k] += v * x[col * f + k];
+                            }
+                        }
+                        c.bytes_read += fw;
+                        c.bytes_written += fw;
+                        for k in 0..f {
+                            y[dst + k] += acc[k];
+                        }
+                    }
+                    RowKernel::SparseGather => {
+                        // direct axpy: one dst RMW per nonzero
+                        for i in s..s + deg {
+                            c.bytes_read += 4 + 4;
+                            let col = sorted.col_idx[i] as usize;
+                            let v = sorted.vals[i];
+                            c.bytes_read += fw;
+                            c.bytes_read += fw;
+                            c.bytes_written += fw;
+                            for k in 0..f {
+                                y[dst + k] += v * x[col * f + k];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // post-join reduction: read each partial window, RMW the final row
+    for (k, &srow) in split_rows.iter().enumerate() {
+        let dst = perm[srow as usize] as usize * f;
+        c.bytes_read += fw; // partial window
+        c.bytes_read += fw; // y row RMW: read …
+        c.bytes_written += fw; // … and write
+        for j in 0..f {
+            y[dst + j] += buf[k * f + j];
+        }
+    }
+    (y, c)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::csr::Csr;
+    use crate::partition::patterns::PartitionParams;
+    use crate::util::rng::Pcg;
 
     #[test]
     fn exact_equal() {
@@ -53,5 +193,75 @@ mod tests {
     #[should_panic(expected = "element 1")]
     fn assert_reports_index() {
         assert_allclose(&[1.0, 5.0], &[1.0, 1.0], 1e-6, 0.0, "test");
+    }
+
+    const WIDTHS: [usize; 5] = [1, 3, 16, 17, 33];
+
+    fn x_of(n: usize, f: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::seed_from(seed);
+        (0..n * f).map(|_| rng.f32() - 0.5).collect()
+    }
+
+    fn check_counts_match(plan: &SpmmPlan, label: &str) {
+        for f in WIDTHS {
+            let x = x_of(plan.original.n_cols, f, 42 + f as u64);
+            let (y, counts) = spmm_block_level_counting(plan, &x, f);
+            // the analytic model must match the instrumented executor
+            // byte-for-byte — split rows included (chunk sizes are
+            // exact in the metadata), so the documented bound is zero
+            assert_eq!(
+                counts.bytes_read,
+                plan.traffic.bytes_read(f),
+                "{label}: bytes_read at f={f}"
+            );
+            assert_eq!(
+                counts.bytes_written,
+                plan.traffic.bytes_written(f),
+                "{label}: bytes_written at f={f}"
+            );
+            assert_eq!(counts.total(), plan.traffic.bytes_total(f), "{label}: total at f={f}");
+            // and the counting executor must still be a correct SpMM
+            assert_allclose(&y, &plan.original.spmm_dense(&x, f), 1e-4, 1e-4, label);
+        }
+    }
+
+    /// Split-free plan exercising BOTH kernel variants (degrees straddle
+    /// the gather crossover) plus empty rows, across all widths.
+    #[test]
+    fn analytic_model_matches_instrumented_executor_split_free() {
+        let mut edges = Vec::new();
+        for r in 0..60u32 {
+            for c in 0..(r % 11) {
+                edges.push((r, c, 0.5 + (c as f32) * 0.1));
+            }
+        }
+        let plan = SpmmPlan::build(
+            Csr::from_edges(60, 60, &edges).unwrap(),
+            PartitionParams::default(),
+        );
+        let deg_bound = plan.params.deg_bound();
+        assert!(plan.block.meta.iter().all(|m| !m.is_split(deg_bound)), "must be split-free");
+        assert!(plan.kernels.n_sparse > 0 && plan.kernels.n_dense > 0, "need both variants");
+        check_counts_match(&plan, "split-free");
+    }
+
+    /// Split rows under a tight partition (ragged tail chunks included):
+    /// the model stays exact because each chunk's actual nonzero count
+    /// is in the metadata.
+    #[test]
+    fn analytic_model_matches_instrumented_executor_with_splits() {
+        let mut edges = Vec::new();
+        let mut rng = Pcg::seed_from(7);
+        for r in 0..50u32 {
+            let deg = if r % 9 == 0 { 23 } else { rng.range(0, 6) as u32 };
+            for _ in 0..deg {
+                edges.push((r, rng.range(0, 50) as u32, rng.f32() + 0.1));
+            }
+        }
+        let params = PartitionParams { max_block_warps: 2, max_warp_nzs: 2 };
+        let plan = SpmmPlan::build(Csr::from_edges(50, 50, &edges).unwrap(), params);
+        let deg_bound = plan.params.deg_bound();
+        assert!(plan.block.meta.iter().any(|m| m.is_split(deg_bound)), "need split rows");
+        check_counts_match(&plan, "with-splits");
     }
 }

@@ -43,9 +43,11 @@
 //! them but never applies them.
 
 use crate::obs::{Registry, ShardAgg};
+use crate::partition::metadata::BlockMeta;
 use crate::pipeline::parallel::cut_by_weights;
 use crate::pipeline::plan::{KernelSchedule, SpmmPlan, TunedSharding};
-use crate::spmm::microkernel::SPARSE_DEG_MAX;
+use crate::pipeline::traffic::{block_traffic, ElemWidths, TrafficModel};
+use crate::spmm::microkernel::{RowKernel, SPARSE_DEG_MAX};
 use crate::util::json::Json;
 
 /// Dense/sparse crossover degrees the tuner prices (the static default
@@ -166,6 +168,19 @@ pub struct TuneReport {
     pub n_shards: usize,
     /// SpMM executions aggregated in the warmup window.
     pub spmms_observed: u64,
+    /// Measured bandwidth of the window: traffic-model bytes over busy
+    /// time, GB/s (0 when the window carried no byte accounting).
+    pub achieved_gbps: f64,
+    /// Measured bytes moved per nonzero over the window (0 without
+    /// byte accounting).
+    pub bytes_per_nnz: f64,
+    /// The fitted bandwidth cost: ns per traffic-model byte (0 without
+    /// byte accounting) — the floor under every block's predicted cost.
+    pub ns_per_byte: f64,
+    /// Report-only storage-quantization what-if (LW-GCN): predicted
+    /// bytes/nnz and bandwidth win at i8/f16 storage widths. Empty
+    /// without byte accounting; never applied.
+    pub whatif: String,
 }
 
 impl TuneReport {
@@ -182,6 +197,10 @@ impl TuneReport {
             .set("boundaries_moved", self.boundaries_moved)
             .set("n_shards", self.n_shards)
             .set("spmms_observed", self.spmms_observed)
+            .set("achieved_gbps", self.achieved_gbps)
+            .set("bytes_per_nnz", self.bytes_per_nnz)
+            .set("ns_per_byte", self.ns_per_byte)
+            .set("whatif", self.whatif.as_str())
             .set(
                 "advisory",
                 "partition params (deg_bound) held fixed: re-chunking would \
@@ -225,23 +244,49 @@ impl PlanTuner {
         let old_crossover =
             plan.tuned.as_ref().map(|t| t.crossover).unwrap_or(SPARSE_DEG_MAX);
 
-        // (nnz, split, deg) per block — the pricing inputs
-        let blocks: Vec<(u64, bool, usize)> = plan
-            .block
-            .meta
-            .iter()
-            .map(|m| {
-                let split = m.is_split(deg_bound);
-                let nnz =
-                    if split { m.split_nzs() } else { m.deg as usize * m.block_rows() };
-                (nnz as u64, split, m.deg as usize)
-            })
-            .collect();
+        // bandwidth term: when the window carried traffic-model bytes
+        // (PR 10), fit ns/byte over the whole window and use it as a
+        // floor under the per-kernel nnz cost — a block can never be
+        // predicted cheaper than the bytes it moves at memory speed.
+        // Windows without byte accounting (bytes == 0) degrade to the
+        // pure nnz model.
+        let total_bytes: u64 =
+            aggs.iter().map(|a| a.bytes_read + a.bytes_written).sum();
+        let total_busy: u64 = aggs.iter().map(|a| a.busy_ns).sum();
+        let total_nnz: u64 = aggs.iter().map(|a| a.nnz).sum();
+        let ns_per_byte = (total_bytes > 0 && total_busy > 0)
+            .then(|| total_busy as f64 / total_bytes as f64);
+        // recover the effective feature width from the bytes one SpMM
+        // moved — the traffic model is exactly linear in f
+        let eff_f = ns_per_byte.and_then(|_| {
+            plan.traffic.solve_width(total_bytes as f64 / spmms.max(1) as f64)
+        });
+
+        let nnz_of = |m: &BlockMeta| -> u64 {
+            if m.is_split(deg_bound) {
+                m.split_nzs() as u64
+            } else {
+                m.deg as u64 * m.block_rows() as u64
+            }
+        };
+        let price = |m: &BlockMeta, crossover: usize| -> f64 {
+            let dense = m.is_split(deg_bound) || m.deg as usize > crossover;
+            let kern_cost = model.block_cost(nnz_of(m), dense);
+            if let (Some(nspb), Some(f)) = (ns_per_byte, eff_f) {
+                let kern =
+                    if dense { RowKernel::DenseTiled } else { RowKernel::SparseGather };
+                let bt = block_traffic(m, kern, deg_bound);
+                // bytes at the (fractional) effective width, via the
+                // model's linearity in f
+                let base = bt.bytes_total(0) as f64;
+                let slope = bt.bytes_total(1) as f64 - base;
+                kern_cost.max(nspb * (base + slope * f))
+            } else {
+                kern_cost
+            }
+        };
         let total_under = |crossover: usize| -> f64 {
-            blocks
-                .iter()
-                .map(|&(nnz, split, deg)| model.block_cost(nnz, split || deg > crossover))
-                .sum()
+            plan.block.meta.iter().map(|m| price(m, crossover)).sum()
         };
 
         // revisit the crossover: strict improvement over the current
@@ -256,13 +301,13 @@ impl PlanTuner {
             }
         }
 
-        let block_cost: Vec<u64> = blocks
+        let block_cost: Vec<u64> = plan
+            .block
+            .meta
             .iter()
-            .map(|&(nnz, split, deg)| {
-                model.block_cost(nnz, split || deg > new_crossover).round().max(1.0) as u64
-            })
+            .map(|m| price(m, new_crossover).round().max(1.0) as u64)
             .collect();
-        let nnz_weights: Vec<u64> = blocks.iter().map(|&(nnz, _, _)| nnz).collect();
+        let nnz_weights: Vec<u64> = plan.block.meta.iter().map(nnz_of).collect();
 
         let imbalance = |ranges: &[std::ops::Range<usize>]| -> f64 {
             let sums: Vec<u128> = ranges
@@ -304,6 +349,27 @@ impl PlanTuner {
                 self.cfg.min_improvement * 100.0
             )
         };
+        // report-only quantized-storage what-if: what the same plan
+        // would move per nonzero at f16/i8 storage widths (LW-GCN
+        // style); advisory text, never applied to the plan
+        let whatif = match eff_f {
+            Some(f) if plan.traffic.nnz() > 0 => {
+                let fw = (f.round().max(1.0)) as usize;
+                let f16x = plan.traffic.quantized_speedup(fw, ElemWidths::F16_STORAGE);
+                let i8x = plan.traffic.quantized_speedup(fw, ElemWidths::I8_STORAGE);
+                format!(
+                    "storage what-if at f={fw}: f32 {:.1} B/nnz; f16-storage \
+                     {:.1} B/nnz ({f16x:.2}x less traffic); i8-storage {:.1} \
+                     B/nnz ({i8x:.2}x less traffic)",
+                    plan.traffic.bytes_per_nnz(fw),
+                    plan.traffic.bytes_total_with(fw, ElemWidths::F16_STORAGE) as f64
+                        / plan.traffic.nnz() as f64,
+                    plan.traffic.bytes_total_with(fw, ElemWidths::I8_STORAGE) as f64
+                        / plan.traffic.nnz() as f64,
+                )
+            }
+            _ => String::new(),
+        };
         let report = TuneReport {
             applied,
             reason,
@@ -316,6 +382,18 @@ impl PlanTuner {
             boundaries_moved,
             n_shards,
             spmms_observed: spmms,
+            achieved_gbps: if total_busy > 0 {
+                total_bytes as f64 / total_busy as f64
+            } else {
+                0.0
+            },
+            bytes_per_nnz: if total_nnz > 0 {
+                total_bytes as f64 / total_nnz as f64
+            } else {
+                0.0
+            },
+            ns_per_byte: ns_per_byte.unwrap_or(0.0),
+            whatif,
         };
         let annotation = applied.then(|| TunedSharding {
             dense_ns_per_nnz: model.dense_ns_per_nnz,
@@ -349,6 +427,9 @@ impl PlanTuner {
         if t.crossover != plan.tuned.as_ref().map(|p| p.crossover).unwrap_or(SPARSE_DEG_MAX)
         {
             tuned.kernels = KernelSchedule::derive_with(&tuned.block, t.crossover);
+            // the traffic model is pure in (block, kernels): a moved
+            // crossover changes per-bucket y traffic, so re-derive
+            tuned.traffic = TrafficModel::derive(&tuned.block, &tuned.kernels);
         }
         tuned.tuned = Some(t);
         Some(tuned)
@@ -524,6 +605,101 @@ mod tests {
             for (j, (a, b)) in got.iter().zip(&want).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "lane {j} at {threads} threads");
             }
+        }
+    }
+
+    #[test]
+    fn byte_accounting_feeds_the_bandwidth_term() {
+        // same skewed window as above, but with the traffic-model bytes
+        // the parallel executor now records: the report must carry the
+        // measured GB/s, recover the feature width, and print the
+        // quantized-storage what-if
+        let plan = mixed_plan();
+        let deg_bound = plan.block.params.deg_bound();
+        let f = 16usize;
+        let reg = Registry::new();
+        let ranges = shard_ranges_for_plan(&plan, 4);
+        let samples: Vec<ShardSample> = ranges
+            .iter()
+            .map(|r| {
+                let (mut dense, mut sparse) = (0u64, 0u64);
+                let (mut br, mut bw) = (0u64, 0u64);
+                for b in r.clone() {
+                    let m = plan.block.meta[b];
+                    let split = m.is_split(deg_bound);
+                    let nnz = if split {
+                        m.split_nzs()
+                    } else {
+                        m.deg as usize * m.block_rows()
+                    } as u64;
+                    let dispatch_dense =
+                        split || plan.kernels.kernel_for(b) == RowKernel::DenseTiled;
+                    let kern = if dispatch_dense {
+                        RowKernel::DenseTiled
+                    } else {
+                        RowKernel::SparseGather
+                    };
+                    if dispatch_dense {
+                        dense += nnz;
+                    } else {
+                        sparse += nnz;
+                    }
+                    let t = block_traffic(&m, kern, deg_bound);
+                    br += t.bytes_read_with(f, ElemWidths::F32);
+                    bw += t.bytes_written_with(f, ElemWidths::F32);
+                }
+                ShardSample {
+                    nnz: dense + sparse,
+                    busy_ns: dense + 50 * sparse,
+                    dense_nnz: dense,
+                    sparse_nnz: sparse,
+                    bytes_read: br,
+                    bytes_written: bw,
+                    ..Default::default()
+                }
+            })
+            .collect();
+        for _ in 0..6 {
+            reg.record_spmm_shards(&samples);
+        }
+        let tuner = PlanTuner::default();
+        let aggs = reg.shard_aggregates();
+        let (report, _) = tuner.analyze(&aggs, &plan, 4).expect("past warmup");
+
+        let total_bytes = plan.traffic.bytes_total(f);
+        let total_busy: u64 = samples.iter().map(|s| s.busy_ns).sum();
+        assert!(
+            (report.achieved_gbps - total_bytes as f64 / total_busy as f64).abs() < 1e-9,
+            "gbps {}",
+            report.achieved_gbps
+        );
+        assert!(
+            (report.ns_per_byte * report.achieved_gbps - 1.0).abs() < 1e-9,
+            "ns/byte is the reciprocal of GB/s (bytes/ns)"
+        );
+        assert!(
+            (report.bytes_per_nnz - plan.traffic.bytes_per_nnz(f)).abs() < 1e-9,
+            "measured bytes/nnz {} vs model {}",
+            report.bytes_per_nnz,
+            plan.traffic.bytes_per_nnz(f)
+        );
+        // the model is linear in f, so the window's bytes pin f exactly
+        // — and the what-if line reports at that width
+        assert!(report.whatif.contains("f=16"), "whatif: {}", report.whatif);
+        assert!(report.whatif.contains("i8-storage"), "whatif: {}", report.whatif);
+        assert!(
+            report.to_json().get("whatif").and_then(|v| v.as_str()).is_some(),
+            "what-if exported"
+        );
+
+        // when a tuned plan comes back, its traffic model must match
+        // its (possibly re-derived) kernel schedule
+        if let Some(tuned) = tuner.maybe_tune(&reg, &plan, 4) {
+            assert_eq!(
+                tuned.traffic,
+                TrafficModel::derive(&tuned.block, &tuned.kernels),
+                "traffic model stale after tune"
+            );
         }
     }
 
